@@ -1,0 +1,90 @@
+//! Autotuning walk-through on one matrix: enumerate the transformation
+//! tree, benchmark every generated variant and all 7 library routines,
+//! and report the winner — the per-matrix specialization the paper's
+//! framework delivers.
+//!
+//! ```bash
+//! cargo run --release --example autotune -- [matrix-name] [--quick]
+//! ```
+
+use forelem::baselines::{Kernel, ALL_ROUTINES};
+use forelem::bench::harness::{black_box, time_fn, BenchConfig};
+use forelem::concretize;
+use forelem::matrix::suite;
+use forelem::search::tree;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let name = args.get(1).map(|s| s.as_str()).filter(|s| !s.starts_with("--")).unwrap_or("Raj1");
+    let quick = args.iter().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::from_env() };
+
+    let entry = suite::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown matrix '{name}'; available:");
+        for e in &suite::SUITE {
+            eprintln!("  {}", e.name);
+        }
+        std::process::exit(2);
+    });
+    let m = entry.build();
+    println!(
+        "matrix {name}: {}×{}, nnz {}, max row {}, mean row {:.1}",
+        m.nrows,
+        m.ncols,
+        m.nnz(),
+        m.max_row_nnz(),
+        m.nnz() as f64 / m.nrows as f64
+    );
+
+    let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.013).sin()).collect();
+    let want = m.spmv_ref(&x);
+
+    let mut results: Vec<(String, f64, String)> = Vec::new();
+
+    // Generated variants.
+    let t = tree::enumerate(Kernel::Spmv);
+    println!("benchmarking {} generated variants + {} library routines ...", t.variants.len(), 7);
+    for v in &t.variants {
+        let p = concretize::prepare(v.plan, &m);
+        let mut y = vec![0.0; m.nrows];
+        p.spmv(&x, &mut y);
+        for (i, (g, w)) in y.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() <= 1e-9 * w.abs().max(1.0), "{} wrong at {i}", v.id);
+        }
+        let s = time_fn(&cfg, || {
+            p.spmv(&x, &mut y);
+            black_box(&y);
+        });
+        results.push((format!("{} {}", v.id, v.name()), s.median, v.derivation.clone()));
+    }
+
+    // Library baselines.
+    for r in ALL_ROUTINES {
+        let inst = r.prepare(&m);
+        let mut y = vec![0.0; m.nrows];
+        let s = time_fn(&cfg, || {
+            inst.spmv(&x, &mut y);
+            black_box(&y);
+        });
+        results.push((format!("[lib] {}", r.label()), s.median, "hand-written library".into()));
+    }
+
+    results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    println!("\n{:<52} {:>12} {:>9}", "routine", "median", "vs best");
+    let best = results[0].1;
+    for (name, t, _) in &results {
+        println!("{name:<52} {:>9.2} µs {:>8.2}x", t * 1e6, t / best);
+    }
+    let (winner, tbest, derivation) = &results[0];
+    println!("\nwinner: {winner}");
+    println!("derivation: {derivation}");
+    let best_lib = results
+        .iter()
+        .find(|(n, ..)| n.starts_with("[lib]"))
+        .expect("library routines present");
+    println!(
+        "reduction vs best library routine ({}): {:.1}%",
+        best_lib.0,
+        100.0 * (1.0 - tbest / best_lib.1)
+    );
+}

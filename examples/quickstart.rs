@@ -1,0 +1,53 @@
+//! Quickstart: express SpMV as a forelem program over a tuple reservoir,
+//! let the framework derive a data structure + routine, and run it.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use forelem::baselines::Kernel;
+use forelem::concretize;
+use forelem::forelem::ir::{NStarMat, Orth};
+use forelem::forelem::{build, pretty};
+use forelem::matrix::TriMat;
+use forelem::transforms::{apply_chain, Step};
+
+fn main() {
+    // 1. A sparse matrix is just a reservoir of ⟨row, col⟩_A tuples.
+    let mut a = TriMat::new(4, 4);
+    a.push(0, 0, 2.0);
+    a.push(0, 3, 1.0);
+    a.push(1, 1, 3.0);
+    a.push(2, 0, -1.0);
+    a.push(2, 2, 4.0);
+    a.push(3, 3, 5.0);
+
+    // 2. The computation, specified with no data structure and no
+    //    iteration order — the forelem normal form.
+    let initial = apply_chain(Kernel::Spmv, &[]).unwrap();
+    println!("== specification ==\n{}", pretty::render(&build::program(&initial)));
+
+    // 3. Apply a transformation chain; the compiler derives CSR.
+    let chain = [
+        Step::Orthogonalize(Orth::Row),
+        Step::Materialize,
+        Step::Split,
+        Step::NStar(NStarMat::Exact),
+        Step::DimReduce,
+    ];
+    let state = apply_chain(Kernel::Spmv, &chain).unwrap();
+    println!("== after {} ==\n{}", state.history.join(" → "), pretty::render(&build::program(&state)));
+
+    // 4. Concretize: physical storage + executable routine.
+    let plan = concretize::plans(&state).unwrap()[0];
+    println!("derived data structure: {}", plan.layout.literature_name());
+    println!("{}", concretize::codegen::emit(Kernel::Spmv, &plan));
+
+    let prepared = concretize::prepare(plan, &a);
+    let x = vec![1.0, 2.0, 3.0, 4.0];
+    let mut y = vec![0.0; 4];
+    prepared.spmv(&x, &mut y);
+    println!("y = A x = {y:?}");
+    assert_eq!(y, a.spmv_ref(&x));
+    println!("matches the tuple-reservoir oracle ✓");
+}

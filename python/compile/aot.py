@@ -1,0 +1,97 @@
+"""AOT pipeline: lower the Layer-2 jax functions (which embed the Layer-1
+Pallas kernels) to HLO *text* artifacts the Rust runtime loads via the
+`xla` crate's PJRT CPU client.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Artifacts are shape-*bucketed*: the Rust coordinator pads a matrix's
+generated ELL storage up to the nearest (nrows, K) bucket — padding is
+exactly the paper's "padded ℕ* materialization", so bucketing is itself
+a forelem transformation. One executable per (kernel, bucket).
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--quick]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (nrows == ncols) buckets × slot-width buckets. SpMM kcols is fixed at
+# 100 (the paper's "sparse matrix times 100-column dense matrix").
+NROW_BUCKETS = [2048, 8192, 32768]
+K_BUCKETS = [8, 16, 32, 64]
+SPMM_KCOLS = 100
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spmv(nrows: int, k: int) -> str:
+    specs = model.specs_spmv(nrows, k, nrows)
+    return to_hlo_text(jax.jit(model.spmv_ell).lower(*specs))
+
+
+def lower_spmm(nrows: int, k: int, kcols: int) -> str:
+    specs = model.specs_spmm(nrows, k, nrows, kcols)
+    return to_hlo_text(jax.jit(model.spmm_ell).lower(*specs))
+
+
+def build(out_dir: str, quick: bool = False) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = NROW_BUCKETS[:1] if quick else NROW_BUCKETS
+    ks = K_BUCKETS[:1] if quick else K_BUCKETS
+    manifest = []
+    for n in rows:
+        for k in ks:
+            name = f"ell_spmv_n{n}_k{k}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            print(f"[aot] lowering {name} ...", flush=True)
+            with open(path, "w") as f:
+                f.write(lower_spmv(n, k))
+            manifest.append((f"{name}.hlo.txt", "spmv", n, k, n, 1))
+
+            name = f"ell_spmm_n{n}_k{k}_c{SPMM_KCOLS}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            print(f"[aot] lowering {name} ...", flush=True)
+            with open(path, "w") as f:
+                f.write(lower_spmm(n, k, SPMM_KCOLS))
+            manifest.append((f"{name}.hlo.txt", "spmm", n, k, n, SPMM_KCOLS))
+
+    mpath = os.path.join(out_dir, "manifest.txt")
+    with open(mpath, "w") as f:
+        f.write("# file kernel nrows k ncols kcols\n")
+        for row in manifest:
+            f.write(" ".join(str(x) for x in row) + "\n")
+    print(f"[aot] wrote {len(manifest)} artifacts + manifest to {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--out", default=None, help="(compat) ignored; use --out-dir")
+    ap.add_argument("--quick", action="store_true", help="single small bucket (tests)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or out_dir
+    build(out_dir, quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,117 @@
+"""Layer-1 Pallas kernels: SpMV / SpMM over the *generated* padded
+ITPACK/ELLPACK layout.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the forelem chain
+`orthogonalize(row) → materialize → split → padded ℕ*` produces exactly
+the rectangular, unit-stride layout a TPU wants. The kernels tile the
+`(nrows × K)` value/column planes into VMEM row-blocks via `BlockSpec`;
+the dense `x` / `B` operand stays resident per tile; the K-reduction runs
+on the VPU (SpMV) or feeds `(tile×K)·(K×kcols)` contractions toward the
+MXU (SpMM).
+
+All kernels use ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO so the AOT
+artifacts run anywhere (see /opt/xla-example/README.md).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size: 8 sublanes × 16 — a multiple of the f32 (8, 128) VPU
+# tile when K is folded in; also divides every AOT bucket size.
+TILE_ROWS = 128
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, o_ref):
+    """One row-tile of padded-ELL SpMV.
+
+    vals_ref: (TILE, K) f32 — padded row values (0.0 in padding slots)
+    cols_ref: (TILE, K) i32 — padded column indices (0 in padding slots)
+    x_ref:    (ncols,)  f32 — dense operand, whole-array resident
+    o_ref:    (TILE,)   f32
+    """
+    vals = vals_ref[...]
+    cols = cols_ref[...]
+    x = x_ref[...]
+    # Gather x per slot; padding gathers x[0] but multiplies by 0.0.
+    gathered = jnp.take(x, cols, axis=0)
+    o_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+def ell_spmv(vals, cols, x, *, tile=TILE_ROWS):
+    """Padded-ELL SpMV via Pallas. vals/cols are (nrows, K); x is (ncols,)."""
+    nrows, k = vals.shape
+    assert cols.shape == (nrows, k)
+    assert nrows % tile == 0, f"nrows {nrows} must be a multiple of {tile}"
+    ncols = x.shape[0]
+    grid = (nrows // tile,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((ncols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nrows,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x)
+
+
+def _spmm_kernel(vals_ref, cols_ref, b_ref, o_ref, *, k):
+    """One row-tile of padded-ELL SpMM against dense B (ncols × kcols).
+
+    The K (slot) reduction is a fori_loop so the emitted HLO stays small
+    for large K; each step is a rank-1 update `o += vals[:, p] ⊗ B[cols[:, p], :]`
+    — tile-shaped work the VPU/MXU pipelines well.
+    """
+    vals = vals_ref[...]
+    cols = cols_ref[...]
+    b = b_ref[...]
+
+    def body(p, acc):
+        brows = jnp.take(b, cols[:, p], axis=0)  # (TILE, kcols)
+        return acc + vals[:, p][:, None] * brows
+
+    acc0 = jnp.zeros(o_ref.shape, dtype=vals.dtype)
+    o_ref[...] = jax.lax.fori_loop(0, k, body, acc0)
+
+
+def ell_spmm(vals, cols, b, *, tile=TILE_ROWS):
+    """Padded-ELL SpMM via Pallas. b is (ncols, kcols) dense, row-major."""
+    nrows, k = vals.shape
+    assert cols.shape == (nrows, k)
+    assert nrows % tile == 0, f"nrows {nrows} must be a multiple of {tile}"
+    ncols, kcols = b.shape
+    grid = (nrows // tile,)
+    return pl.pallas_call(
+        partial(_spmm_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((ncols, kcols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, kcols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrows, kcols), vals.dtype),
+        interpret=True,
+    )(vals, cols, b)
+
+
+def vmem_estimate_bytes(tile, k, ncols, kcols=None, dtype_bytes=4):
+    """Static VMEM footprint estimate for one grid step (DESIGN §Perf):
+    value+column tiles, the resident dense operand, and the output tile.
+    Used to pick `tile` so the working set fits the ~16 MiB VMEM budget.
+    """
+    vals_cols = 2 * tile * k * dtype_bytes
+    if kcols is None:  # spmv
+        operand = ncols * dtype_bytes
+        out = tile * dtype_bytes
+    else:
+        operand = ncols * kcols * dtype_bytes
+        out = tile * kcols * dtype_bytes
+    return vals_cols + operand + out

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Layer-1 kernels — the correctness reference
+pytest checks every Pallas kernel against (and itself checked against a
+plain-Python dense computation in the tests)."""
+
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(vals, cols, x):
+    """Reference padded-ELL SpMV: sum_p vals[i, p] * x[cols[i, p]]."""
+    return jnp.sum(vals * jnp.take(x, cols, axis=0), axis=1)
+
+
+def ell_spmm_ref(vals, cols, b):
+    """Reference padded-ELL SpMM: C[i, :] = sum_p vals[i, p] * B[cols[i, p], :]."""
+    # (nrows, K, kcols) gather — fine at oracle scale.
+    gathered = jnp.take(b, cols, axis=0)
+    return jnp.einsum("rk,rkc->rc", vals, gathered)
+
+
+def dense_of_ell(vals, cols, ncols):
+    """Expand padded ELL to a dense matrix (for oracle cross-checks).
+
+    Padding slots (val == 0) contribute nothing by construction.
+    """
+    nrows, k = vals.shape
+    dense = jnp.zeros((nrows, ncols), dtype=vals.dtype)
+    rows = jnp.repeat(jnp.arange(nrows), k)
+    return dense.at[rows, cols.reshape(-1)].add(vals.reshape(-1))

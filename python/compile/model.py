@@ -1,0 +1,48 @@
+"""Layer-2: the jax compute graphs the coordinator executes, built on the
+Layer-1 Pallas kernels. Each function is shape-specialized at AOT time
+(`aot.py`) into one PJRT executable per bucket (DESIGN.md §3).
+
+Python never runs on the request path: these functions exist to be
+`jax.jit(...).lower(...)`-ed once into `artifacts/*.hlo.txt`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ell
+
+
+def spmv_ell(vals, cols, x):
+    """SpMV over generated padded-ELL storage (f32)."""
+    return (ell.ell_spmv(vals, cols, x),)
+
+
+def spmm_ell(vals, cols, b):
+    """SpMM over generated padded-ELL storage against dense B (f32)."""
+    return (ell.ell_spmm(vals, cols, b),)
+
+
+def spmv_ell_fused_axpy(vals, cols, x, alpha, y0):
+    """`y = alpha * A x + y0` — the fused form XLA produces when the
+    surrounding L2 graph composes the kernel with scaling/accumulation;
+    exercises that the Pallas call fuses into a larger computation."""
+    (ax,) = spmv_ell(vals, cols, x)
+    return (alpha * ax + y0,)
+
+
+def specs_spmv(nrows, k, ncols, dtype=jnp.float32):
+    """ShapeDtypeStructs for lowering spmv_ell at a bucket shape."""
+    return (
+        jax.ShapeDtypeStruct((nrows, k), dtype),
+        jax.ShapeDtypeStruct((nrows, k), jnp.int32),
+        jax.ShapeDtypeStruct((ncols,), dtype),
+    )
+
+
+def specs_spmm(nrows, k, ncols, kcols, dtype=jnp.float32):
+    """ShapeDtypeStructs for lowering spmm_ell at a bucket shape."""
+    return (
+        jax.ShapeDtypeStruct((nrows, k), dtype),
+        jax.ShapeDtypeStruct((nrows, k), jnp.int32),
+        jax.ShapeDtypeStruct((ncols, kcols), dtype),
+    )

@@ -1,0 +1,113 @@
+"""Layer-1 correctness: Pallas ELL kernels vs the pure-jnp oracle, with
+hypothesis sweeping shapes and row-fill patterns (the oracle itself is
+cross-checked against a dense matmul)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ell, ref
+
+
+def make_ell(rng, nrows, ncols, k, fill):
+    """Random padded-ELL planes: per-row lengths ≤ k, padding = (0, col 0)."""
+    vals = np.zeros((nrows, k), dtype=np.float32)
+    cols = np.zeros((nrows, k), dtype=np.int32)
+    for i in range(nrows):
+        length = rng.integers(0, k + 1) if fill == "ragged" else k
+        if length > 0:
+            # duplicates within a row are legal (they accumulate)
+            cols[i, :length] = rng.choice(ncols, size=length, replace=True)
+            vals[i, :length] = rng.uniform(0.1, 2.0, size=length).astype(np.float32)
+    return jnp.asarray(vals), jnp.asarray(cols)
+
+
+@st.composite
+def ell_case(draw):
+    tile = 8
+    nrows = tile * draw(st.integers(1, 6))
+    ncols = draw(st.integers(1, 96))
+    k = draw(st.integers(1, 9))
+    fill = draw(st.sampled_from(["ragged", "full"]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return nrows, ncols, k, fill, seed
+
+
+@settings(max_examples=40, deadline=None)
+@given(ell_case())
+def test_spmv_matches_ref(case):
+    nrows, ncols, k, fill, seed = case
+    rng = np.random.default_rng(seed)
+    vals, cols = make_ell(rng, nrows, ncols, k, fill)
+    x = jnp.asarray(rng.uniform(-1, 1, size=ncols).astype(np.float32))
+    got = ell.ell_spmv(vals, cols, x, tile=8)
+    want = ref.ell_spmv_ref(vals, cols, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ell_case(), st.integers(1, 12))
+def test_spmm_matches_ref(case, kcols):
+    nrows, ncols, k, fill, seed = case
+    rng = np.random.default_rng(seed)
+    vals, cols = make_ell(rng, nrows, ncols, k, fill)
+    b = jnp.asarray(rng.uniform(-1, 1, size=(ncols, kcols)).astype(np.float32))
+    got = ell.ell_spmm(vals, cols, b, tile=8)
+    want = ref.ell_spmm_ref(vals, cols, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ell_case())
+def test_ref_matches_dense(case):
+    """The oracle itself against a dense matmul."""
+    nrows, ncols, k, fill, seed = case
+    rng = np.random.default_rng(seed)
+    vals, cols = make_ell(rng, nrows, ncols, k, fill)
+    x = jnp.asarray(rng.uniform(-1, 1, size=ncols).astype(np.float32))
+    dense = ref.dense_of_ell(vals, cols, ncols)
+    np.testing.assert_allclose(
+        ref.ell_spmv_ref(vals, cols, x), dense @ x, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_spmv_empty_rows():
+    vals = jnp.zeros((8, 3), dtype=jnp.float32)
+    cols = jnp.zeros((8, 3), dtype=jnp.int32)
+    x = jnp.ones((5,), dtype=jnp.float32)
+    got = ell.ell_spmv(vals, cols, x, tile=8)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(8, dtype=np.float32))
+
+
+def test_spmv_rejects_unaligned_rows():
+    vals = jnp.zeros((7, 2), dtype=jnp.float32)
+    cols = jnp.zeros((7, 2), dtype=jnp.int32)
+    x = jnp.ones((4,), dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        ell.ell_spmv(vals, cols, x, tile=8)
+
+
+def test_spmm_kcols_one_equals_spmv():
+    rng = np.random.default_rng(7)
+    vals, cols = make_ell(rng, 16, 20, 4, "ragged")
+    x = rng.uniform(-1, 1, size=20).astype(np.float32)
+    y1 = ell.ell_spmv(vals, cols, jnp.asarray(x), tile=8)
+    y2 = ell.ell_spmm(vals, cols, jnp.asarray(x[:, None]), tile=8)[:, 0]
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+
+def test_duplicate_columns_accumulate():
+    # Two slots of the same row referencing the same column must sum.
+    vals = jnp.asarray([[1.0, 2.0]] * 8, dtype=jnp.float32)
+    cols = jnp.asarray([[3, 3]] * 8, dtype=jnp.int32)
+    x = jnp.asarray([0.0, 0.0, 0.0, 5.0], dtype=jnp.float32)
+    got = ell.ell_spmv(vals, cols, x, tile=8)
+    np.testing.assert_allclose(np.asarray(got), np.full(8, 15.0), rtol=1e-6)
+
+
+def test_vmem_estimate_monotone():
+    a = ell.vmem_estimate_bytes(128, 16, 4096)
+    b = ell.vmem_estimate_bytes(256, 16, 4096)
+    c = ell.vmem_estimate_bytes(128, 64, 4096)
+    assert b > a and c > a

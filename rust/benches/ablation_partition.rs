@@ -1,0 +1,43 @@
+//! Ablation (paper §6.2.4): data-distribution generation via different
+//! partitionings of the blocked iteration domain — even row blocks vs
+//! nonzero-balanced blocks vs a 2-D balanced grid — measuring load
+//! imbalance and parallel SpMV time on skewed suite matrices.
+use forelem::bench::harness::{black_box, time_fn, BenchConfig};
+use forelem::distrib::{self, grid_2d, rows_balanced, rows_even, PartitionedSpmv};
+use forelem::matrix::suite;
+
+fn main() {
+    let cfg = if std::env::var("FORELEM_QUICK").is_ok() {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::from_env()
+    };
+    println!("## Ablation — partitioning strategies for parallel SpMV (§6.2.4)");
+    for name in ["Raj1", "net150", "consph", "or2010"] {
+        let m = suite::by_name(name).unwrap().build();
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.002).cos()).collect();
+        println!("\n{name}: n={} nnz={}", m.nrows, m.nnz());
+        for parts in [2usize, 4, 8] {
+            for (label, p) in
+                [("even rows", rows_even(&m, parts)), ("balanced nnz", rows_balanced(&m, parts))]
+            {
+                let exec = PartitionedSpmv::new(&m, &p);
+                let imb = distrib::imbalance(&exec.nnz_per_part());
+                let mut y = vec![0.0; m.nrows];
+                let t = time_fn(&cfg, || {
+                    exec.spmv(&x, &mut y);
+                    black_box(&y);
+                });
+                println!(
+                    "  {parts} parts {label:<14} imbalance {imb:>5.2}  spmv {:>9.2} µs",
+                    t.median * 1e6
+                );
+            }
+        }
+        // 2-D grid balance report (distribution quality, Vastenhouw–Bisseling-style)
+        let g = grid_2d(&m, 2);
+        let nnz = forelem::distrib::partition::grid_block_nnz(&m, &g);
+        let imb = distrib::imbalance(&nnz);
+        println!("  4x4 grid (2-D balanced splits)   block-nnz imbalance {imb:.2}");
+    }
+}

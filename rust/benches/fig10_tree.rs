@@ -1,0 +1,15 @@
+//! Regenerates paper Figure 10: the transformation tree / search-space
+//! report (chains, executables, distinct data structures per kernel),
+//! plus one sample derivation per generated layout.
+use forelem::baselines::Kernel;
+use forelem::bench::tables;
+use forelem::search::tree;
+
+fn main() {
+    println!("{}", tables::fig10());
+    let t = tree::enumerate(Kernel::Spmv);
+    println!("## sample derivations (SpMV)");
+    for v in &t.variants {
+        println!("{} {:<45} {}", v.id, v.name(), v.derivation);
+    }
+}

@@ -1,0 +1,19 @@
+//! Regenerates paper Figure 11: coverage curves vs t% for the Blaze-only
+//! and all-library collections against the combined optimum, plus the
+//! generated collection, on both architectures (SpMV).
+use forelem::baselines::Kernel;
+use forelem::bench::tables;
+use forelem::coordinator::sweep::{Arch, SweepConfig};
+
+fn main() {
+    let cfg = if std::env::var("FORELEM_QUICK").is_ok() {
+        SweepConfig::quick()
+    } else {
+        SweepConfig::default()
+    };
+    let xla = tables::try_xla();
+    for arch in [Arch::HostSmall, Arch::HostLarge] {
+        let s = tables::run_sweep(Kernel::Spmv, arch, &cfg, xla.as_ref());
+        println!("{}", tables::fig11(&s));
+    }
+}

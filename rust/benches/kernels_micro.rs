@@ -1,0 +1,42 @@
+//! Micro-benchmarks of the generated kernels per format on one matrix
+//! class — the profiling entry point for the L3 §Perf pass (DESIGN §7).
+use forelem::baselines::Kernel;
+use forelem::bench::harness::{black_box, time_fn, BenchConfig};
+use forelem::concretize;
+use forelem::matrix::suite;
+use forelem::search::tree;
+
+fn main() {
+    let cfg = if std::env::var("FORELEM_QUICK").is_ok() {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::from_env()
+    };
+    let names = ["Erdos971", "blckhole", "consph", "Raj1", "net150"];
+    let t = tree::enumerate(Kernel::Spmv);
+    for name in names {
+        let m = suite::by_name(name).unwrap().build();
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.01).sin()).collect();
+        println!(
+            "## {name}: n={} nnz={} maxrow={}",
+            m.nrows,
+            m.nnz(),
+            m.max_row_nnz()
+        );
+        let mut rows: Vec<(String, f64, usize)> = Vec::new();
+        for v in &t.variants {
+            let p = concretize::prepare(v.plan, &m);
+            let mut y = vec![0.0; m.nrows];
+            let s = time_fn(&cfg, || {
+                p.spmv(&x, &mut y);
+                black_box(&y);
+            });
+            rows.push((format!("{} {}", v.id, v.name()), s.median, p.storage.bytes()));
+        }
+        rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for (name, median, bytes) in rows {
+            let gflops = 2.0 * m.nnz() as f64 / median / 1e9;
+            println!("  {name:<48} {:>10.2} µs  {gflops:>6.2} GF/s  {:>8} B", median * 1e6, bytes);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Table 2 (run: cargo bench --bench table2_*).
+//! Honors FORELEM_BENCH_REPEATS / FORELEM_QUICK=1 for smoke runs.
+use forelem::bench::tables;
+use forelem::coordinator::sweep::SweepConfig;
+
+fn main() {
+    let cfg = if std::env::var("FORELEM_QUICK").is_ok() {
+        SweepConfig::quick()
+    } else {
+        SweepConfig::default()
+    };
+    let xla = tables::try_xla();
+    let (txt, ..) = tables::table2(&cfg, xla.as_ref());
+    println!("{txt}");
+}

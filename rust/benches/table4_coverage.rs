@@ -1,0 +1,22 @@
+//! Regenerates paper Table 4: coverage of the library-routine collection
+//! for increasing t%, across all three kernels and both architectures.
+use forelem::baselines::Kernel;
+use forelem::bench::tables;
+use forelem::coordinator::sweep::{Arch, SweepConfig};
+
+fn main() {
+    let cfg = if std::env::var("FORELEM_QUICK").is_ok() {
+        SweepConfig::quick()
+    } else {
+        SweepConfig::default()
+    };
+    let xla = tables::try_xla();
+    let mut sweeps = Vec::new();
+    for kernel in [Kernel::Spmv, Kernel::Spmm, Kernel::Trsv] {
+        for arch in [Arch::HostSmall, Arch::HostLarge] {
+            sweeps.push(tables::run_sweep(kernel, arch, &cfg, xla.as_ref()));
+        }
+    }
+    let refs: Vec<&_> = sweeps.iter().collect();
+    println!("{}", tables::table4(&refs));
+}

@@ -1,0 +1,186 @@
+//! Library baselines: the 7 routine/data-structure combinations the
+//! paper benchmarks against (§6.4.1) — Blaze CRS/CCS, MTL4 CRS/CCS,
+//! SparseLib++ COO/CRS/CCS — re-implemented in each library's idiom
+//! (see DESIGN.md §5 Substitutions). SpMM exists only for Blaze and
+//! MTL4; TrSv only for MTL4 and SparseLib++ — exactly the support
+//! matrix of the paper's tables.
+
+pub mod blaze;
+pub mod mtl4;
+pub mod sparselib;
+
+use crate::matrix::TriMat;
+
+/// Which computational kernel (paper §6.4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    Spmv,
+    Spmm,
+    Trsv,
+}
+
+impl Kernel {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Kernel::Spmv => "SPMV",
+            Kernel::Spmm => "SPMM",
+            Kernel::Trsv => "TrSv",
+        }
+    }
+}
+
+/// Identity of a library routine (a column of Tables 1–3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LibRoutine {
+    BlazeCrs,
+    BlazeCcs,
+    Mtl4Crs,
+    Mtl4Ccs,
+    SlppCoo,
+    SlppCrs,
+    SlppCcs,
+}
+
+pub const ALL_ROUTINES: [LibRoutine; 7] = [
+    LibRoutine::BlazeCrs,
+    LibRoutine::BlazeCcs,
+    LibRoutine::Mtl4Crs,
+    LibRoutine::Mtl4Ccs,
+    LibRoutine::SlppCoo,
+    LibRoutine::SlppCrs,
+    LibRoutine::SlppCcs,
+];
+
+impl LibRoutine {
+    pub fn library(&self) -> &'static str {
+        match self {
+            LibRoutine::BlazeCrs | LibRoutine::BlazeCcs => "Blaze",
+            LibRoutine::Mtl4Crs | LibRoutine::Mtl4Ccs => "MTL4",
+            _ => "SL++",
+        }
+    }
+
+    pub fn format(&self) -> &'static str {
+        match self {
+            LibRoutine::BlazeCrs | LibRoutine::Mtl4Crs | LibRoutine::SlppCrs => "CRS",
+            LibRoutine::BlazeCcs | LibRoutine::Mtl4Ccs | LibRoutine::SlppCcs => "CCS",
+            LibRoutine::SlppCoo => "COO",
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} {}", self.library(), self.format())
+    }
+
+    /// The paper's support matrix: SpMM only in Blaze+MTL4 ("SparseLib++
+    /// did not contain API for this computation"); TrSv only in
+    /// MTL4+SL++.
+    pub fn supports(&self, kernel: Kernel) -> bool {
+        match kernel {
+            Kernel::Spmv => true,
+            Kernel::Spmm => matches!(
+                self,
+                LibRoutine::BlazeCrs | LibRoutine::BlazeCcs | LibRoutine::Mtl4Crs | LibRoutine::Mtl4Ccs
+            ),
+            Kernel::Trsv => matches!(
+                self,
+                LibRoutine::Mtl4Crs | LibRoutine::Mtl4Ccs | LibRoutine::SlppCrs | LibRoutine::SlppCcs
+            ),
+        }
+    }
+
+    /// Build the routine's data structure for matrix `m`.
+    pub fn prepare(&self, m: &TriMat) -> LibInstance {
+        match self {
+            LibRoutine::BlazeCrs => LibInstance::BlazeCrs(blaze::BlazeCrs::new(m)),
+            LibRoutine::BlazeCcs => LibInstance::BlazeCcs(blaze::BlazeCcs::new(m)),
+            LibRoutine::Mtl4Crs => LibInstance::Mtl4Crs(mtl4::Mtl4Crs::new(m)),
+            LibRoutine::Mtl4Ccs => LibInstance::Mtl4Ccs(mtl4::Mtl4Ccs::new(m)),
+            LibRoutine::SlppCoo => LibInstance::SlppCoo(sparselib::SlppCoo::new(m)),
+            LibRoutine::SlppCrs => LibInstance::SlppCrs(sparselib::SlppCrs::new(m)),
+            LibRoutine::SlppCcs => LibInstance::SlppCcs(sparselib::SlppCcs::new(m)),
+        }
+    }
+}
+
+/// A prepared library routine bound to a concrete matrix.
+pub enum LibInstance {
+    BlazeCrs(blaze::BlazeCrs),
+    BlazeCcs(blaze::BlazeCcs),
+    Mtl4Crs(mtl4::Mtl4Crs),
+    Mtl4Ccs(mtl4::Mtl4Ccs),
+    SlppCoo(sparselib::SlppCoo),
+    SlppCrs(sparselib::SlppCrs),
+    SlppCcs(sparselib::SlppCcs),
+}
+
+impl LibInstance {
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            LibInstance::BlazeCrs(r) => r.spmv(x, y),
+            LibInstance::BlazeCcs(r) => r.spmv(x, y),
+            LibInstance::Mtl4Crs(r) => r.spmv(x, y),
+            LibInstance::Mtl4Ccs(r) => r.spmv(x, y),
+            LibInstance::SlppCoo(r) => r.spmv(x, y),
+            LibInstance::SlppCrs(r) => r.spmv(x, y),
+            LibInstance::SlppCcs(r) => r.spmv(x, y),
+        }
+    }
+
+    pub fn spmm(&self, b: &[f64], k: usize, c: &mut [f64]) {
+        match self {
+            LibInstance::BlazeCrs(r) => r.spmm(b, k, c),
+            LibInstance::BlazeCcs(r) => r.spmm(b, k, c),
+            LibInstance::Mtl4Crs(r) => r.spmm(b, k, c),
+            LibInstance::Mtl4Ccs(r) => r.spmm(b, k, c),
+            _ => panic!("SpMM not supported by this library routine (as in the paper)"),
+        }
+    }
+
+    pub fn trsv(&self, b: &[f64], x: &mut [f64]) {
+        match self {
+            LibInstance::Mtl4Crs(r) => r.trsv(b, x),
+            LibInstance::Mtl4Ccs(r) => r.trsv(b, x),
+            LibInstance::SlppCrs(r) => r.trsv(b, x),
+            LibInstance::SlppCcs(r) => r.trsv(b, x),
+            _ => panic!("TrSv not supported by this library routine (as in the paper)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn support_matrix_matches_paper() {
+        let spmm: Vec<_> = ALL_ROUTINES.iter().filter(|r| r.supports(Kernel::Spmm)).collect();
+        assert_eq!(spmm.len(), 4);
+        let trsv: Vec<_> = ALL_ROUTINES.iter().filter(|r| r.supports(Kernel::Trsv)).collect();
+        assert_eq!(trsv.len(), 4);
+        assert!(ALL_ROUTINES.iter().all(|r| r.supports(Kernel::Spmv)));
+    }
+
+    #[test]
+    fn all_routines_spmv_agree() {
+        let m = gen::powerlaw(40, 2.0, 20, 57);
+        let x: Vec<f64> = (0..40).map(|i| 0.3 * i as f64 - 4.0).collect();
+        let want = m.spmv_ref(&x);
+        for r in ALL_ROUTINES {
+            let inst = r.prepare(&m);
+            let mut y = vec![0.0; 40];
+            inst.spmv(&x, &mut y);
+            assert_close(&y, &want, 1e-10).unwrap_or_else(|e| panic!("{}: {e}", r.label()));
+        }
+    }
+
+    #[test]
+    fn labels_unique() {
+        let mut labels: Vec<String> = ALL_ROUTINES.iter().map(|r| r.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 7);
+    }
+}

@@ -1,0 +1,185 @@
+//! MTL4-style baselines. MTL4 (Gottschling et al., ICS 2007) is built on
+//! *representation-transparent generic programming*: algorithms are
+//! written against cursors and property maps, not concrete storage. The
+//! abstraction compiles away only partially in practice; we mirror the
+//! idiom with a cursor trait driven through dynamic dispatch per row/
+//! column segment — the moderate abstraction-overhead class the paper's
+//! MTL4 numbers exhibit.
+
+use crate::matrix::TriMat;
+use crate::storage::{Csc, Csr};
+
+/// Generic nonzero cursor: yields (minor_index, value) along one major
+/// slice (a row of CRS or a column of CCS).
+pub trait NnzCursor {
+    fn next_nz(&mut self) -> Option<(usize, f64)>;
+}
+
+struct SliceCursor<'a> {
+    idx: &'a [u32],
+    val: &'a [f64],
+    pos: usize,
+}
+
+impl<'a> NnzCursor for SliceCursor<'a> {
+    #[inline]
+    fn next_nz(&mut self) -> Option<(usize, f64)> {
+        if self.pos < self.idx.len() {
+            let p = self.pos;
+            self.pos += 1;
+            Some((self.idx[p] as usize, self.val[p]))
+        } else {
+            None
+        }
+    }
+}
+
+pub struct Mtl4Crs {
+    pub a: Csr,
+}
+
+pub struct Mtl4Ccs {
+    pub a: Csc,
+}
+
+impl Mtl4Crs {
+    pub fn new(m: &TriMat) -> Self {
+        Self { a: Csr::from_tuples(m) }
+    }
+
+    fn row_cursor(&self, i: usize) -> Box<dyn NnzCursor + '_> {
+        let (s, e) = (self.a.row_ptr[i] as usize, self.a.row_ptr[i + 1] as usize);
+        Box::new(SliceCursor { idx: &self.a.cols[s..e], val: &self.a.vals[s..e], pos: 0 })
+    }
+
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        for i in 0..self.a.nrows {
+            let mut cur = self.row_cursor(i);
+            let mut sum = 0.0;
+            while let Some((c, v)) = cur.next_nz() {
+                sum += v * x[c];
+            }
+            y[i] = sum;
+        }
+    }
+
+    pub fn spmm(&self, b: &[f64], k: usize, c: &mut [f64]) {
+        for i in 0..self.a.nrows {
+            let crow = &mut c[i * k..i * k + k];
+            crow.fill(0.0);
+            let mut cur = self.row_cursor(i);
+            while let Some((col, v)) = cur.next_nz() {
+                let brow = &b[col * k..col * k + k];
+                for j in 0..k {
+                    crow[j] += v * brow[j];
+                }
+            }
+        }
+    }
+
+    /// Unit-lower forward substitution (strictly-lower storage).
+    pub fn trsv(&self, b: &[f64], x: &mut [f64]) {
+        x.copy_from_slice(b);
+        for i in 0..self.a.nrows {
+            let mut cur = self.row_cursor(i);
+            let mut sum = 0.0;
+            while let Some((c, v)) = cur.next_nz() {
+                sum += v * x[c];
+            }
+            x[i] -= sum;
+        }
+    }
+}
+
+impl Mtl4Ccs {
+    pub fn new(m: &TriMat) -> Self {
+        Self { a: Csc::from_tuples(m) }
+    }
+
+    fn col_cursor(&self, j: usize) -> Box<dyn NnzCursor + '_> {
+        let (s, e) = (self.a.col_ptr[j] as usize, self.a.col_ptr[j + 1] as usize);
+        Box::new(SliceCursor { idx: &self.a.rows[s..e], val: &self.a.vals[s..e], pos: 0 })
+    }
+
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        for j in 0..self.a.ncols {
+            let xj = x[j];
+            let mut cur = self.col_cursor(j);
+            while let Some((r, v)) = cur.next_nz() {
+                y[r] += v * xj;
+            }
+        }
+    }
+
+    pub fn spmm(&self, b: &[f64], k: usize, c: &mut [f64]) {
+        c.fill(0.0);
+        for j in 0..self.a.ncols {
+            let brow = &b[j * k..j * k + k];
+            let mut cur = self.col_cursor(j);
+            while let Some((r, v)) = cur.next_nz() {
+                let crow = &mut c[r * k..r * k + k];
+                for jj in 0..k {
+                    crow[jj] += v * brow[jj];
+                }
+            }
+        }
+    }
+
+    /// Unit-lower forward substitution, scatter form.
+    pub fn trsv(&self, b: &[f64], x: &mut [f64]) {
+        x.copy_from_slice(b);
+        for j in 0..self.a.ncols {
+            let xj = x[j];
+            let mut cur = self.col_cursor(j);
+            while let Some((r, v)) = cur.next_nz() {
+                x[r] -= v * xj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn mtl4_spmv_matches() {
+        let m = gen::banded(35, 5, 0.6, 52);
+        let x: Vec<f64> = (0..35).map(|i| (i as f64 * 0.3).cos()).collect();
+        let want = m.spmv_ref(&x);
+        let mut y = vec![0.0; 35];
+        Mtl4Crs::new(&m).spmv(&x, &mut y);
+        assert_close(&y, &want, 1e-10).unwrap();
+        Mtl4Ccs::new(&m).spmv(&x, &mut y);
+        assert_close(&y, &want, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn mtl4_spmm_matches() {
+        let m = gen::uniform_random(20, 25, 120, 53);
+        let k = 4;
+        let b: Vec<f64> = (0..25 * k).map(|i| i as f64 * 0.02).collect();
+        let want = m.spmm_ref(&b, k);
+        let mut c = vec![0.0; 20 * k];
+        Mtl4Crs::new(&m).spmm(&b, k, &mut c);
+        assert_close(&c, &want, 1e-10).unwrap();
+        Mtl4Ccs::new(&m).spmm(&b, k, &mut c);
+        assert_close(&c, &want, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn mtl4_trsv_matches() {
+        let m = gen::uniform_random(30, 30, 180, 54);
+        let l = m.strictly_lower();
+        let b: Vec<f64> = (0..30).map(|i| (i as f64) * 0.1 - 1.0).collect();
+        let want = l.trsv_unit_lower_ref(&b);
+        let mut x = vec![0.0; 30];
+        Mtl4Crs::new(&l).trsv(&b, &mut x);
+        assert_close(&x, &want, 1e-9).unwrap();
+        Mtl4Ccs::new(&l).trsv(&b, &mut x);
+        assert_close(&x, &want, 1e-9).unwrap();
+    }
+}

@@ -1,0 +1,125 @@
+//! Measurement harness (criterion is unavailable offline; DESIGN.md §5).
+//!
+//! Protocol, following the paper's §6.4.1 ("the computation performed by
+//! each variant or library is repeated 10 times"): auto-calibrate an
+//! inner iteration count so one sample lasts ≥ `min_sample`, warm up,
+//! take `repeats` samples, summarize with the median.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Outer samples (the paper uses 10).
+    pub repeats: usize,
+    /// Minimum duration of one calibrated sample.
+    pub min_sample_secs: f64,
+    /// Warmup samples discarded before measuring.
+    pub warmup: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { repeats: 10, min_sample_secs: 2e-3, warmup: 2 }
+    }
+}
+
+impl BenchConfig {
+    /// Fast config for tests / smoke runs.
+    pub fn quick() -> Self {
+        BenchConfig { repeats: 3, min_sample_secs: 2e-4, warmup: 1 }
+    }
+
+    pub fn from_env() -> Self {
+        let mut c = BenchConfig::default();
+        if let Ok(r) = std::env::var("FORELEM_BENCH_REPEATS") {
+            if let Ok(r) = r.parse() {
+                c.repeats = r;
+            }
+        }
+        if let Ok(s) = std::env::var("FORELEM_BENCH_MIN_SAMPLE") {
+            if let Ok(s) = s.parse() {
+                c.min_sample_secs = s;
+            }
+        }
+        c
+    }
+}
+
+/// Time `f` under the protocol; returns per-invocation seconds.
+pub fn time_fn<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Summary {
+    // Calibrate inner iterations.
+    let mut iters = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= cfg.min_sample_secs || iters >= 1 << 24 {
+            break;
+        }
+        // Aim slightly past the floor to limit re-calibration rounds.
+        let scale = (cfg.min_sample_secs / dt.max(1e-9) * 1.3).ceil() as usize;
+        iters = (iters * scale.max(2)).min(1 << 24);
+    }
+    for _ in 0..cfg.warmup {
+        for _ in 0..iters {
+            f();
+        }
+    }
+    let mut samples = Vec::with_capacity(cfg.repeats);
+    for _ in 0..cfg.repeats {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    Summary::of(&samples)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let cfg = BenchConfig::quick();
+        let mut acc = 0.0f64;
+        let s = time_fn(&cfg, || {
+            for i in 0..1000 {
+                acc += (i as f64).sqrt();
+            }
+            black_box(acc);
+        });
+        assert!(s.median > 0.0);
+        assert_eq!(s.n, cfg.repeats);
+    }
+
+    #[test]
+    fn longer_work_measures_longer() {
+        let cfg = BenchConfig::quick();
+        let mut sink = 0.0f64;
+        let short = time_fn(&cfg, || {
+            for i in 0..500 {
+                sink += (i as f64).sqrt();
+            }
+            black_box(sink);
+        });
+        let long = time_fn(&cfg, || {
+            for i in 0..50_000 {
+                sink += (i as f64).sqrt();
+            }
+            black_box(sink);
+        });
+        assert!(long.median > short.median * 5.0, "short {} long {}", short.median, long.median);
+    }
+}

@@ -1,0 +1,6 @@
+//! Benchmark substrate: the measurement harness and paper-style table
+//! rendering. The actual sweeps live in `coordinator::sweep`; the bench
+//! binaries under `rust/benches/` drive them.
+
+pub mod harness;
+pub mod tables;

@@ -1,0 +1,241 @@
+//! Concretization, stage 2: build the physical storage from the tuple
+//! reservoir and bind the generated loop nest as an executor. A
+//! `Prepared` value is "the automatically instantiated routine +
+//! reassembled data structure" of the paper — ready to run on the
+//! native backend.
+
+use crate::baselines::Kernel;
+use crate::concretize::layout::{Layout, Plan, Traversal};
+use crate::kernels::{spmm, spmv, trsv};
+use crate::matrix::TriMat;
+use crate::storage::*;
+
+/// Physical storage instance for a plan.
+pub enum Storage {
+    CooAos(CooAos),
+    CooSoa(CooSoa),
+    Csr(Csr),
+    CsrAos(CsrAos),
+    Csc(Csc),
+    CscAos(CscAos),
+    Ell(Ell),
+    Jds(Jds, JdsRows),
+    Bcsr(Bcsr),
+    Hybrid(HybridEllCoo),
+    Sell(Sell),
+    Dia(Dia),
+}
+
+impl Storage {
+    pub fn bytes(&self) -> usize {
+        match self {
+            Storage::CooAos(s) => s.bytes(),
+            Storage::CooSoa(s) => s.bytes(),
+            Storage::Csr(s) => s.bytes(),
+            Storage::CsrAos(s) => s.bytes(),
+            Storage::Csc(s) => s.bytes(),
+            Storage::CscAos(s) => s.bytes(),
+            Storage::Ell(s) => s.bytes(),
+            Storage::Jds(s, r) => s.bytes() + r.rows.iter().map(|v| v.len() * 4).sum::<usize>(),
+            Storage::Bcsr(s) => s.bytes(),
+            Storage::Hybrid(s) => s.bytes(),
+            Storage::Sell(s) => s.bytes(),
+            Storage::Dia(s) => s.bytes(),
+        }
+    }
+}
+
+/// A concretized routine + data structure, bound to a matrix.
+pub struct Prepared {
+    pub plan: Plan,
+    pub storage: Storage,
+    pub nrows: usize,
+    pub ncols: usize,
+}
+
+/// Which kernels a plan's generated loop nest supports (TrSv requires a
+/// dependence-respecting traversal; SpMM is generated for every layout
+/// the SpMV nest covers except DIA, which the tree prunes for SpMM).
+pub fn supports(plan: &Plan, kernel: Kernel) -> bool {
+    match kernel {
+        Kernel::Spmv => true,
+        Kernel::Spmm => !matches!(plan.layout, Layout::Dia),
+        Kernel::Trsv => matches!(
+            (plan.layout, plan.traversal),
+            (Layout::Csr, Traversal::RowWise)
+                | (Layout::CsrAos, Traversal::RowWise)
+                | (Layout::Csc, Traversal::ColScatter)
+                | (Layout::CscAos, Traversal::ColScatter)
+                | (Layout::CooAos(CooOrder::RowMajor), Traversal::Flat)
+                | (Layout::Ell(_), Traversal::RowWise)
+                | (Layout::HybridEllCoo, Traversal::RowWise)
+        ),
+    }
+}
+
+/// Build the storage for a plan from the tuple reservoir.
+pub fn prepare(plan: Plan, m: &TriMat) -> Prepared {
+    let storage = match plan.layout {
+        Layout::CooAos(order) => Storage::CooAos(CooAos::from_tuples(m, order)),
+        Layout::CooSoa(order) => Storage::CooSoa(CooSoa::from_tuples(m, order)),
+        Layout::Csr => Storage::Csr(Csr::from_tuples(m)),
+        Layout::CsrAos => Storage::CsrAos(CsrAos::from_tuples(m)),
+        Layout::Csc => Storage::Csc(Csc::from_tuples(m)),
+        Layout::CscAos => Storage::CscAos(CscAos::from_tuples(m)),
+        Layout::Ell(order) => Storage::Ell(Ell::from_tuples(m, order)),
+        Layout::Jds { permuted } => {
+            let j = Jds::from_tuples(m, permuted);
+            let r = JdsRows::build(&j, m);
+            Storage::Jds(j, r)
+        }
+        Layout::Bcsr { br, bc } => Storage::Bcsr(Bcsr::from_tuples(m, br, bc)),
+        Layout::HybridEllCoo => {
+            Storage::Hybrid(HybridEllCoo::from_tuples(m, None, EllOrder::ColMajor))
+        }
+        Layout::Sell { s } => Storage::Sell(Sell::from_tuples(m, s)),
+        Layout::Dia => Storage::Dia(Dia::from_tuples(m)),
+    };
+    Prepared { plan, storage, nrows: m.nrows, ncols: m.ncols }
+}
+
+impl Prepared {
+    /// Run the generated SpMV.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        match (&self.storage, self.plan.traversal) {
+            (Storage::CooAos(s), _) => spmv::coo_aos(s, x, y),
+            (Storage::CooSoa(s), _) => spmv::coo_soa(s, x, y),
+            (Storage::Csr(s), _) => spmv::csr(s, x, y),
+            (Storage::CsrAos(s), _) => spmv::csr_aos(s, x, y),
+            (Storage::Csc(s), _) => spmv::csc(s, x, y),
+            (Storage::CscAos(s), _) => spmv::csc_aos(s, x, y),
+            (Storage::Ell(s), Traversal::RowWisePadded) => spmv::ell_rowwise_padded(s, x, y),
+            (Storage::Ell(s), Traversal::PlaneWise) => spmv::ell_planewise(s, x, y),
+            (Storage::Ell(s), _) => spmv::ell_rowwise(s, x, y),
+            (Storage::Jds(s, _), _) if s.permuted => spmv::jds_permuted(s, x, y),
+            (Storage::Jds(s, r), _) => spmv::jds(s, r, x, y),
+            (Storage::Bcsr(s), _) => spmv::bcsr(s, x, y),
+            (Storage::Hybrid(s), _) => spmv::hybrid(s, x, y),
+            (Storage::Sell(s), _) => crate::storage::sell::spmv(s, x, y),
+            (Storage::Dia(s), _) => spmv::dia(s, x, y),
+        }
+    }
+
+    /// Run the generated SpMM (`b` is ncols×k row-major).
+    pub fn spmm(&self, b: &[f64], k: usize, c: &mut [f64]) {
+        match (&self.storage, self.plan.traversal) {
+            (Storage::CooAos(s), _) => spmm::coo_aos(s, b, k, c),
+            (Storage::CooSoa(s), _) => spmm::coo_soa(s, b, k, c),
+            (Storage::Csr(s), _) => spmm::csr(s, b, k, c),
+            (Storage::CsrAos(s), _) => spmm::csr_aos(s, b, k, c),
+            (Storage::Csc(s), _) => spmm::csc(s, b, k, c),
+            (Storage::CscAos(s), _) => spmm::csc_aos(s, b, k, c),
+            (Storage::Ell(s), Traversal::PlaneWise) => spmm::ell_planewise(s, b, k, c),
+            (Storage::Ell(s), _) => spmm::ell_rowwise(s, b, k, c),
+            (Storage::Jds(s, r), _) => spmm::jds(s, r, b, k, c),
+            (Storage::Bcsr(s), _) => spmm::bcsr(s, b, k, c),
+            (Storage::Hybrid(s), _) => spmm::hybrid(s, b, k, c),
+            (Storage::Sell(s), _) => crate::storage::sell::spmm(s, b, k, c),
+            (Storage::Dia(_), _) => panic!("SpMM over DIA pruned by the tree"),
+        }
+    }
+
+    /// Run the generated unit-lower TrSv (storage holds strictly-lower L).
+    pub fn trsv(&self, b: &[f64], x: &mut [f64]) {
+        match &self.storage {
+            Storage::Csr(s) => trsv::csr(s, b, x),
+            Storage::CsrAos(s) => trsv::csr_aos(s, b, x),
+            Storage::Csc(s) => trsv::csc(s, b, x),
+            Storage::CscAos(s) => trsv::csc_aos(s, b, x),
+            Storage::CooAos(s) => trsv::coo_rowmajor(s, b, x),
+            Storage::Ell(s) => trsv::ell_rowwise(s, b, x),
+            Storage::Hybrid(s) => trsv::hybrid(s, b, x),
+            _ => panic!("TrSv unsupported for this plan (checked by supports())"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::prop::assert_close;
+
+    fn all_spmv_plans() -> Vec<Plan> {
+        use crate::storage::{CooOrder, EllOrder};
+        vec![
+            Plan { layout: Layout::CooAos(CooOrder::Unsorted), traversal: Traversal::Flat },
+            Plan { layout: Layout::CooSoa(CooOrder::RowMajor), traversal: Traversal::Flat },
+            Plan { layout: Layout::Csr, traversal: Traversal::RowWise },
+            Plan { layout: Layout::CsrAos, traversal: Traversal::RowWise },
+            Plan { layout: Layout::Csc, traversal: Traversal::ColScatter },
+            Plan { layout: Layout::CscAos, traversal: Traversal::ColScatter },
+            Plan { layout: Layout::Ell(EllOrder::RowMajor), traversal: Traversal::RowWise },
+            Plan { layout: Layout::Ell(EllOrder::RowMajor), traversal: Traversal::RowWisePadded },
+            Plan { layout: Layout::Ell(EllOrder::ColMajor), traversal: Traversal::PlaneWise },
+            Plan { layout: Layout::Jds { permuted: true }, traversal: Traversal::DiagMajor },
+            Plan { layout: Layout::Jds { permuted: false }, traversal: Traversal::DiagMajor },
+            Plan { layout: Layout::Bcsr { br: 2, bc: 3 }, traversal: Traversal::Blocked },
+            Plan { layout: Layout::HybridEllCoo, traversal: Traversal::RowWise },
+            Plan { layout: Layout::Dia, traversal: Traversal::DiagMajor },
+        ]
+    }
+
+    #[test]
+    fn every_plan_executes_spmv_correctly() {
+        let m = gen::powerlaw(45, 2.0, 22, 60);
+        let x: Vec<f64> = (0..45).map(|i| (i as f64 * 0.11).sin() + 0.7).collect();
+        let want = m.spmv_ref(&x);
+        for plan in all_spmv_plans() {
+            let p = prepare(plan, &m);
+            let mut y = vec![0.0; 45];
+            p.spmv(&x, &mut y);
+            assert_close(&y, &want, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn every_supporting_plan_executes_spmm() {
+        let m = gen::uniform_random(20, 26, 140, 61);
+        let k = 4;
+        let b: Vec<f64> = (0..26 * k).map(|i| i as f64 * 0.05 - 1.0).collect();
+        let want = m.spmm_ref(&b, k);
+        for plan in all_spmv_plans() {
+            if !supports(&plan, Kernel::Spmm) {
+                continue;
+            }
+            let p = prepare(plan, &m);
+            let mut c = vec![0.0; 20 * k];
+            p.spmm(&b, k, &mut c);
+            assert_close(&c, &want, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn every_supporting_plan_executes_trsv() {
+        let m = gen::uniform_random(30, 30, 200, 62);
+        let l = m.strictly_lower();
+        let bvec: Vec<f64> = (0..30).map(|i| 1.0 - i as f64 * 0.03).collect();
+        let want = l.trsv_unit_lower_ref(&bvec);
+        let mut count = 0;
+        for plan in all_spmv_plans() {
+            if !supports(&plan, Kernel::Trsv) {
+                continue;
+            }
+            count += 1;
+            let p = prepare(plan, &l);
+            let mut x = vec![0.0; 30];
+            p.trsv(&bvec, &mut x);
+            assert_close(&x, &want, 1e-9).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+        }
+        assert!(count >= 5, "expected several TrSv-capable plans, got {count}");
+    }
+
+    #[test]
+    fn storage_bytes_positive() {
+        let m = gen::banded(30, 3, 0.8, 63);
+        for plan in all_spmv_plans() {
+            let p = prepare(plan, &m);
+            assert!(p.storage.bytes() > 0);
+        }
+    }
+}

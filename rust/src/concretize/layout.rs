@@ -1,0 +1,309 @@
+//! Concretization, stage 1 (paper §6.2.1): map a fully-transformed chain
+//! state onto a *physical* storage layout + traversal schedule. This is
+//! the one-to-one mapping of the materialized symbolic `PA` sequences
+//! onto allocated arrays; `exec.rs` then builds the arrays from the
+//! tuple reservoir and binds the generated loop nest.
+
+use crate::forelem::ir::{Blocking, ChainState, NStarMat, Orth};
+use crate::storage::{CooOrder, EllOrder};
+
+/// Physical storage layout descriptor — the "generated data structure".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Layout {
+    CooAos(CooOrder),
+    CooSoa(CooOrder),
+    Csr,
+    CsrAos,
+    Csc,
+    CscAos,
+    /// Padded rectangular; order = ITPACK direction after interchange.
+    Ell(EllOrder),
+    /// Jagged diagonal; `permuted` = ℕ* sorting applied.
+    Jds { permuted: bool },
+    Bcsr { br: usize, bc: usize },
+    HybridEllCoo,
+    /// Sliced ELLPACK with slice height `s`.
+    Sell { s: usize },
+    Dia,
+}
+
+impl Layout {
+    /// Literature name, where one exists (paper §6.2.2).
+    pub fn literature_name(&self) -> &'static str {
+        match self {
+            Layout::CooAos(_) | Layout::CooSoa(_) => "coordinate (COO)",
+            Layout::Csr | Layout::CsrAos => "Compressed Row Storage (CSR)",
+            Layout::Csc | Layout::CscAos => "Compressed Column Storage (CCS)",
+            Layout::Ell(EllOrder::ColMajor) => "ITPACK/ELLPACK (column-major)",
+            Layout::Ell(EllOrder::RowMajor) => "ELLPACK (row-major)",
+            Layout::Jds { permuted: true } => "Jagged Diagonal Storage (JDS)",
+            Layout::Jds { permuted: false } => "unpermuted jagged storage",
+            Layout::Bcsr { .. } => "Blocked CSR (BCSR)",
+            Layout::HybridEllCoo => "hybrid ELL+COO",
+            Layout::Sell { .. } => "Sliced ELLPACK (SELL)",
+            Layout::Dia => "diagonal storage (DIA)",
+        }
+    }
+}
+
+/// Traversal schedule of the generated loop nest over the layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Traversal {
+    /// Flat walk over a single materialized sequence.
+    Flat,
+    /// Row loop outer, exact lengths inner.
+    RowWise,
+    /// Row loop outer, padded width inner (branch-free).
+    RowWisePadded,
+    /// Slot loop outer (post-interchange / ITPACK schedule).
+    PlaneWise,
+    /// Jagged-diagonal-major.
+    DiagMajor,
+    /// Column loop outer, scatter into the output.
+    ColScatter,
+    /// Block-row loop with dense micro-kernel.
+    Blocked,
+    /// Slice loop outer, per-slice padded plane loops (SELL schedule).
+    SlicePlane,
+}
+
+/// A concretization plan: what to allocate and how to walk it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Plan {
+    pub layout: Layout,
+    pub traversal: Traversal,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ConcretizeError {
+    #[error("state not concretizable: {0}")]
+    NotConcretizable(&'static str),
+}
+
+/// Map a chain state to its concretization plan(s). Most states map to
+/// exactly one plan; padded-ELL row-major admits two traversals (exact
+/// and branch-free padded) — both are returned and become distinct
+/// *executables* over the same *data structure*, mirroring the paper's
+/// 130-executables / 25-structures distinction.
+pub fn plans(s: &ChainState) -> Result<Vec<Plan>, ConcretizeError> {
+    use ConcretizeError::NotConcretizable;
+    let Some(dependent) = s.materialized else {
+        return Err(NotConcretizable("materialization is a prerequisite of concretization"));
+    };
+
+    // Blocked states first.
+    if let Some(b) = s.blocked {
+        return match b {
+            Blocking::Tile { br, bc } => Ok(vec![Plan {
+                layout: Layout::Bcsr { br, bc },
+                traversal: Traversal::Blocked,
+            }]),
+            Blocking::FillCutoff => Ok(vec![Plan {
+                layout: Layout::HybridEllCoo,
+                traversal: Traversal::RowWise,
+            }]),
+            Blocking::RowSlice { s } => Ok(vec![Plan {
+                layout: Layout::Sell { s },
+                traversal: Traversal::SlicePlane,
+            }]),
+        };
+    }
+
+    if !dependent {
+        // Loop-independent materialization: a single flat sequence.
+        let order = CooOrder::Unsorted;
+        let layout = if s.split { Layout::CooSoa(order) } else { Layout::CooAos(order) };
+        return Ok(vec![Plan { layout, traversal: Traversal::Flat }]);
+    }
+
+    match s.orth {
+        Orth::Diag => Ok(vec![Plan { layout: Layout::Dia, traversal: Traversal::DiagMajor }]),
+        Orth::Row => match (s.nstar, s.sorted, s.interchanged, s.dim_reduced) {
+            // No ℕ* materialization: grouped flat sequence (row-major COO).
+            (None, false, false, false) => {
+                let layout = if s.split {
+                    Layout::CooSoa(CooOrder::RowMajor)
+                } else {
+                    Layout::CooAos(CooOrder::RowMajor)
+                };
+                Ok(vec![Plan { layout, traversal: Traversal::Flat }])
+            }
+            // Exact ℕ* + dim reduction = CSR.
+            (Some(NStarMat::Exact), false, false, true) => {
+                let layout = if s.split { Layout::Csr } else { Layout::CsrAos };
+                Ok(vec![Plan { layout, traversal: Traversal::RowWise }])
+            }
+            // Exact ℕ* without dim reduction: nested sequences —
+            // physically CSR arrays, same traversal (allocation detail).
+            (Some(NStarMat::Exact), false, false, false) => {
+                let layout = if s.split { Layout::Csr } else { Layout::CsrAos };
+                Ok(vec![Plan { layout, traversal: Traversal::RowWise }])
+            }
+            // Padded, no interchange: ELL row-major; two executables.
+            (Some(NStarMat::Padded), false, false, false) => Ok(vec![
+                Plan { layout: Layout::Ell(EllOrder::RowMajor), traversal: Traversal::RowWise },
+                Plan { layout: Layout::Ell(EllOrder::RowMajor), traversal: Traversal::RowWisePadded },
+            ]),
+            // Padded + interchange: ITPACK plane-wise.
+            (Some(NStarMat::Padded), false, true, false) => Ok(vec![Plan {
+                layout: Layout::Ell(EllOrder::ColMajor),
+                traversal: Traversal::PlaneWise,
+            }]),
+            // Padded + sorted (+ maybe interchange): sorted ELL — treat
+            // sorted padded rows as JDS-adjacent; plane-wise schedule.
+            (Some(NStarMat::Padded), true, xch, false) => {
+                let _ = xch;
+                Ok(vec![Plan {
+                    layout: Layout::Jds { permuted: true },
+                    traversal: Traversal::DiagMajor,
+                }])
+            }
+            // Sorted + interchanged + exact = JDS (with or without the
+            // final dim reduction, which only flattens the allocation).
+            (Some(NStarMat::Exact), true, true, _) => Ok(vec![Plan {
+                layout: Layout::Jds { permuted: true },
+                traversal: Traversal::DiagMajor,
+            }]),
+            // Unsorted + interchanged + exact = unpermuted jagged.
+            (Some(NStarMat::Exact), false, true, _) => Ok(vec![Plan {
+                layout: Layout::Jds { permuted: false },
+                traversal: Traversal::DiagMajor,
+            }]),
+            // Sorted without interchange: CSR with permuted rows — the
+            // permutation only reorders row visits; storage is CSR-like.
+            (Some(NStarMat::Exact), true, false, reduced) => {
+                let _ = reduced;
+                let layout = if s.split { Layout::Csr } else { Layout::CsrAos };
+                Ok(vec![Plan { layout, traversal: Traversal::RowWise }])
+            }
+            (None, ..) => Err(NotConcretizable("row nest needs ℕ* materialization or stays COO")),
+            (Some(NStarMat::Padded), _, _, true) => {
+                Err(NotConcretizable("padded sequences cannot be dimensionality-reduced"))
+            }
+        },
+        Orth::Col => match (s.nstar, s.dim_reduced) {
+            (None, false) => {
+                let layout = if s.split {
+                    Layout::CooSoa(CooOrder::ColMajor)
+                } else {
+                    Layout::CooAos(CooOrder::ColMajor)
+                };
+                Ok(vec![Plan { layout, traversal: Traversal::Flat }])
+            }
+            (Some(NStarMat::Exact), _) => {
+                let layout = if s.split { Layout::Csc } else { Layout::CscAos };
+                Ok(vec![Plan { layout, traversal: Traversal::ColScatter }])
+            }
+            _ => Err(NotConcretizable("column nest variant not generated")),
+        },
+        Orth::RowCol => {
+            // Un-blocked (row,col) orthogonalization materializes to the
+            // row-major grouped sequence (one tuple per (i,j) group).
+            let layout = if s.split {
+                Layout::CooSoa(CooOrder::RowMajor)
+            } else {
+                Layout::CooAos(CooOrder::RowMajor)
+            };
+            Ok(vec![Plan { layout, traversal: Traversal::Flat }])
+        }
+        Orth::None => Err(NotConcretizable("unreachable: dependent without orthogonalization")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Kernel;
+    use crate::forelem::ir::{ChainState, NStarMat, Orth};
+    use crate::transforms::{self, Step};
+
+    fn state(steps: &[Step]) -> ChainState {
+        transforms::apply_chain(Kernel::Spmv, steps).unwrap()
+    }
+
+    #[test]
+    fn unmaterialized_not_concretizable() {
+        let s = ChainState::initial(Kernel::Spmv);
+        assert!(plans(&s).is_err());
+    }
+
+    #[test]
+    fn fig8_chain_yields_itpack() {
+        let s = state(&[
+            Step::Orthogonalize(Orth::Row),
+            Step::Materialize,
+            Step::Split,
+            Step::NStar(NStarMat::Padded),
+            Step::Interchange,
+        ]);
+        let p = plans(&s).unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].layout, Layout::Ell(crate::storage::EllOrder::ColMajor));
+        assert_eq!(p[0].layout.literature_name(), "ITPACK/ELLPACK (column-major)");
+    }
+
+    #[test]
+    fn csr_and_csc_chains() {
+        let s = state(&[
+            Step::Orthogonalize(Orth::Row),
+            Step::Materialize,
+            Step::Split,
+            Step::NStar(NStarMat::Exact),
+            Step::DimReduce,
+        ]);
+        assert_eq!(plans(&s).unwrap()[0].layout, Layout::Csr);
+
+        let s = state(&[
+            Step::Orthogonalize(Orth::Col),
+            Step::Materialize,
+            Step::NStar(NStarMat::Exact),
+            Step::DimReduce,
+        ]);
+        assert_eq!(plans(&s).unwrap()[0].layout, Layout::CscAos);
+    }
+
+    #[test]
+    fn jds_requires_sort_and_interchange() {
+        let s = state(&[
+            Step::Orthogonalize(Orth::Row),
+            Step::Materialize,
+            Step::Split,
+            Step::NStarSort,
+            Step::NStar(NStarMat::Exact),
+            Step::Interchange,
+            Step::DimReduce,
+        ]);
+        assert_eq!(plans(&s).unwrap()[0].layout, Layout::Jds { permuted: true });
+    }
+
+    #[test]
+    fn padded_rowmajor_has_two_executables() {
+        let s = state(&[
+            Step::Orthogonalize(Orth::Row),
+            Step::Materialize,
+            Step::Split,
+            Step::NStar(NStarMat::Padded),
+        ]);
+        let p = plans(&s).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].layout, p[1].layout);
+        assert_ne!(p[0].traversal, p[1].traversal);
+    }
+
+    #[test]
+    fn blocked_states() {
+        let s = state(&[
+            Step::Orthogonalize(Orth::RowCol),
+            Step::Block(transforms::BlockStep::Tile3x3),
+            Step::Materialize,
+        ]);
+        assert_eq!(plans(&s).unwrap()[0].layout, Layout::Bcsr { br: 3, bc: 3 });
+
+        let s = state(&[
+            Step::Orthogonalize(Orth::Row),
+            Step::Materialize,
+            Step::Block(transforms::BlockStep::FillCutoff),
+        ]);
+        assert_eq!(plans(&s).unwrap()[0].layout, Layout::HybridEllCoo);
+    }
+}

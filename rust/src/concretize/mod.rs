@@ -1,0 +1,12 @@
+//! Concretization (paper §6.2.1): the one-to-one mapping of materialized
+//! loop structures and symbolic `PA` sequences onto physically allocated
+//! arrays + executable loops. Three stages: `layout` (state → plan),
+//! `exec` (plan + reservoir → storage + bound executor), `codegen`
+//! (plan → inspectable C-like source text).
+
+pub mod codegen;
+pub mod exec;
+pub mod layout;
+
+pub use exec::{prepare, supports, Prepared, Storage};
+pub use layout::{plans, ConcretizeError, Layout, Plan, Traversal};

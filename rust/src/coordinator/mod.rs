@@ -1,0 +1,17 @@
+//! The coordinator: the L3 driver that sweeps (kernel × architecture ×
+//! matrix × routine), producing the timing tables every paper table and
+//! figure is computed from.
+//!
+//! * Data-structure *builds* run in parallel on the worker pool;
+//!   *measurements* run single-threaded (the paper's protocol is
+//!   single-core execution time).
+//! * Two "architectures" (DESIGN.md §5): `host-small` (suite scale 1.0,
+//!   native backend) and `host-large` (scale 2.0, native + the XLA-PJRT
+//!   AOT backend joining the generated-variant pool, with graceful
+//!   native fallback when no shape bucket fits).
+//! * Every routine is validated against the dense oracle before it is
+//!   timed — a mis-generated structure fails loudly, never silently.
+
+pub mod sweep;
+
+pub use sweep::{Arch, SweepConfig, SweepResult};

@@ -1,0 +1,360 @@
+//! The benchmark sweep: produces `Measurements` tables for library
+//! routines and generated variants over the 20-matrix suite.
+
+use crate::baselines::{Kernel, LibRoutine, ALL_ROUTINES};
+use crate::bench::harness::{black_box, time_fn, BenchConfig};
+use crate::concretize;
+use crate::matrix::suite::{SuiteEntry, SUITE};
+use crate::matrix::TriMat;
+use crate::runtime::XlaBackend;
+use crate::search::coverage::Measurements;
+use crate::search::tree;
+use crate::storage::{Ell, EllOrder};
+use crate::util::rng::Rng;
+
+/// An evaluation "architecture" (DESIGN.md §5 substitution for the
+/// paper's Xeon 5150 / Xeon E5 pair).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    /// Suite at scale 1.0, native backend only (paper: Xeon 5150).
+    HostSmall,
+    /// Suite at scale 2.0 (larger working set) + the XLA-PJRT AOT
+    /// backend in the generated pool (paper: Xeon E5).
+    HostLarge,
+}
+
+impl Arch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::HostSmall => "host-small (Xeon 5150 stand-in)",
+            Arch::HostLarge => "host-large (Xeon E5 stand-in)",
+        }
+    }
+
+    pub fn scale(&self) -> f64 {
+        match self {
+            Arch::HostSmall => 1.0,
+            Arch::HostLarge => 2.0,
+        }
+    }
+
+    pub fn uses_xla(&self) -> bool {
+        matches!(self, Arch::HostLarge)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub bench: BenchConfig,
+    /// Dense-operand column count for SpMM (paper: 100).
+    pub spmm_k: usize,
+    /// Subset of suite matrices to run (indices into SUITE); all if None.
+    pub matrices: Option<Vec<usize>>,
+    /// Validate every routine against the oracle before timing.
+    pub validate: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig { bench: BenchConfig::from_env(), spmm_k: 100, matrices: None, validate: true }
+    }
+}
+
+impl SweepConfig {
+    pub fn quick() -> Self {
+        SweepConfig {
+            bench: BenchConfig::quick(),
+            spmm_k: 16,
+            matrices: Some(vec![0, 2, 7]),
+            validate: true,
+        }
+    }
+}
+
+/// Result of a sweep: library and generated-variant timing tables over
+/// the same matrices (times are per-invocation medians, seconds).
+pub struct SweepResult {
+    pub kernel: Kernel,
+    pub arch: Arch,
+    pub libs: Measurements,
+    pub gens: Measurements,
+    /// Derivations for the generated routines, aligned with `gens.routines`.
+    pub derivations: Vec<String>,
+}
+
+impl SweepResult {
+    /// Best generated time per matrix.
+    pub fn best_gen(&self) -> Vec<f64> {
+        self.gens.best_per_matrix(None)
+    }
+
+    /// Union table (libs + gens) for coverage analyses.
+    pub fn combined(&self) -> Measurements {
+        let mut all = self.libs.clone();
+        all.extend(&self.gens);
+        all
+    }
+
+    /// Indices of the library routines inside `combined()`.
+    pub fn lib_indices(&self) -> Vec<usize> {
+        (0..self.libs.routines.len()).collect()
+    }
+
+    /// Indices of the generated routines inside `combined()`.
+    pub fn gen_indices(&self) -> Vec<usize> {
+        (self.libs.routines.len()..self.libs.routines.len() + self.gens.routines.len()).collect()
+    }
+}
+
+fn workload_x(ncols: usize) -> Vec<f64> {
+    let mut rng = Rng::new(0xC0FFEE);
+    (0..ncols).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect()
+}
+
+fn workload_b(ncols: usize, k: usize) -> Vec<f64> {
+    let mut rng = Rng::new(0xBEEF);
+    (0..ncols * k).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect()
+}
+
+fn max_abs_rel_err(got: &[f64], want: &[f64]) -> f64 {
+    got.iter()
+        .zip(want)
+        .map(|(g, w)| (g - w).abs() / w.abs().max(1.0))
+        .fold(0.0, f64::max)
+}
+
+/// Run the full sweep for one kernel on one architecture.
+pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBackend>) -> SweepResult {
+    let mat_idx: Vec<usize> =
+        cfg.matrices.clone().unwrap_or_else(|| (0..SUITE.len()).collect());
+    let entries: Vec<&SuiteEntry> = mat_idx.iter().map(|&i| &SUITE[i]).collect();
+    let mat_names: Vec<String> = entries.iter().map(|e| e.name.to_string()).collect();
+
+    // Build matrices in parallel (TrSv uses the strictly-lower part).
+    let mats: Vec<TriMat> = crate::util::pool::parallel_map(
+        entries.len(),
+        crate::util::pool::default_workers(),
+        |i| {
+            let m = entries[i].build_scaled(arch.scale());
+            if kernel == Kernel::Trsv {
+                m.strictly_lower()
+            } else {
+                m
+            }
+        },
+    );
+
+    // Routine sets.
+    let lib_routines: Vec<LibRoutine> =
+        ALL_ROUTINES.iter().copied().filter(|r| r.supports(kernel)).collect();
+    let tree = tree::enumerate(kernel);
+
+    let mut libs = Measurements::new(
+        lib_routines.iter().map(|r| r.label()).collect(),
+        mat_names.clone(),
+    );
+    let mut gen_names: Vec<String> =
+        tree.variants.iter().map(|v| format!("{} {}", v.id, v.name())).collect();
+    let mut derivations: Vec<String> = tree.variants.iter().map(|v| v.derivation.clone()).collect();
+    let use_xla = arch.uses_xla() && xla.is_some();
+    if use_xla && kernel != Kernel::Trsv {
+        gen_names.push("xla ELL(AOT)/PJRT".to_string());
+        derivations.push("orthogonalize(row) → materialize(dep) → split → nstar(padded) → AOT(XLA)".into());
+    }
+    let mut gens = Measurements::new(gen_names, mat_names.clone());
+
+    for (mi, m) in mats.iter().enumerate() {
+        // Workloads + oracle.
+        let x = workload_x(m.ncols);
+        let b = workload_b(m.ncols, cfg.spmm_k);
+        let (want_y, want_c, want_x);
+        match kernel {
+            Kernel::Spmv => {
+                want_y = m.spmv_ref(&x);
+                want_c = Vec::new();
+                want_x = Vec::new();
+            }
+            Kernel::Spmm => {
+                want_c = m.spmm_ref(&b, cfg.spmm_k);
+                want_y = Vec::new();
+                want_x = Vec::new();
+            }
+            Kernel::Trsv => {
+                want_x = m.trsv_unit_lower_ref(&x);
+                want_y = Vec::new();
+                want_c = Vec::new();
+            }
+        }
+
+        // --- library routines ---
+        for (ri, r) in lib_routines.iter().enumerate() {
+            let inst = r.prepare(m);
+            let t = match kernel {
+                Kernel::Spmv => {
+                    let mut y = vec![0.0; m.nrows];
+                    if cfg.validate {
+                        inst.spmv(&x, &mut y);
+                        assert!(max_abs_rel_err(&y, &want_y) < 1e-9, "{} wrong on {}", r.label(), mat_names[mi]);
+                    }
+                    time_fn(&cfg.bench, || {
+                        inst.spmv(&x, &mut y);
+                        black_box(&y);
+                    })
+                }
+                Kernel::Spmm => {
+                    let mut c = vec![0.0; m.nrows * cfg.spmm_k];
+                    if cfg.validate {
+                        inst.spmm(&b, cfg.spmm_k, &mut c);
+                        assert!(max_abs_rel_err(&c, &want_c) < 1e-9, "{} wrong on {}", r.label(), mat_names[mi]);
+                    }
+                    time_fn(&cfg.bench, || {
+                        inst.spmm(&b, cfg.spmm_k, &mut c);
+                        black_box(&c);
+                    })
+                }
+                Kernel::Trsv => {
+                    let mut xs = vec![0.0; m.nrows];
+                    if cfg.validate {
+                        inst.trsv(&x, &mut xs);
+                        assert!(max_abs_rel_err(&xs, &want_x) < 1e-7, "{} wrong on {}", r.label(), mat_names[mi]);
+                    }
+                    time_fn(&cfg.bench, || {
+                        inst.trsv(&x, &mut xs);
+                        black_box(&xs);
+                    })
+                }
+            };
+            libs.set(ri, mi, t.median);
+        }
+
+        // --- generated variants ---
+        for (vi, v) in tree.variants.iter().enumerate() {
+            let p = concretize::prepare(v.plan, m);
+            let t = match kernel {
+                Kernel::Spmv => {
+                    let mut y = vec![0.0; m.nrows];
+                    if cfg.validate {
+                        p.spmv(&x, &mut y);
+                        assert!(max_abs_rel_err(&y, &want_y) < 1e-9, "{} wrong on {}", v.id, mat_names[mi]);
+                    }
+                    time_fn(&cfg.bench, || {
+                        p.spmv(&x, &mut y);
+                        black_box(&y);
+                    })
+                }
+                Kernel::Spmm => {
+                    let mut c = vec![0.0; m.nrows * cfg.spmm_k];
+                    if cfg.validate {
+                        p.spmm(&b, cfg.spmm_k, &mut c);
+                        assert!(max_abs_rel_err(&c, &want_c) < 1e-9, "{} wrong on {}", v.id, mat_names[mi]);
+                    }
+                    time_fn(&cfg.bench, || {
+                        p.spmm(&b, cfg.spmm_k, &mut c);
+                        black_box(&c);
+                    })
+                }
+                Kernel::Trsv => {
+                    let mut xs = vec![0.0; m.nrows];
+                    if cfg.validate {
+                        p.trsv(&x, &mut xs);
+                        assert!(max_abs_rel_err(&xs, &want_x) < 1e-7, "{} wrong on {}", v.id, mat_names[mi]);
+                    }
+                    time_fn(&cfg.bench, || {
+                        p.trsv(&x, &mut xs);
+                        black_box(&xs);
+                    })
+                }
+            };
+            gens.set(vi, mi, t.median);
+        }
+
+        // --- XLA AOT routine (ELL path with PJRT dispatch) ---
+        if use_xla && kernel != Kernel::Trsv {
+            let backend = xla.unwrap();
+            let ell = Ell::from_tuples(m, EllOrder::ColMajor);
+            let n = m.nrows.max(m.ncols);
+            let has_bucket = backend.bucket_for(kernel, n, ell.k, cfg.spmm_k).is_some();
+            let vi = tree.variants.len();
+            let t = if has_bucket {
+                match kernel {
+                    Kernel::Spmv => {
+                        if cfg.validate {
+                            let y = backend.spmv(&ell, &x).expect("xla spmv");
+                            assert!(
+                                max_abs_rel_err(&y, &want_y) < 5e-3,
+                                "xla spmv wrong on {}",
+                                mat_names[mi]
+                            );
+                        }
+                        time_fn(&cfg.bench, || {
+                            let y = backend.spmv(&ell, &x).expect("xla spmv");
+                            black_box(&y);
+                        })
+                    }
+                    Kernel::Spmm => {
+                        if cfg.validate {
+                            let c = backend.spmm(&ell, &b, cfg.spmm_k).expect("xla spmm");
+                            assert!(
+                                max_abs_rel_err(&c, &want_c) < 2e-2,
+                                "xla spmm wrong on {}",
+                                mat_names[mi]
+                            );
+                        }
+                        time_fn(&cfg.bench, || {
+                            let c = backend.spmm(&ell, &b, cfg.spmm_k).expect("xla spmm");
+                            black_box(&c);
+                        })
+                    }
+                    Kernel::Trsv => unreachable!(),
+                }
+            } else {
+                // Coordinator dispatch falls back to the native ELL path.
+                let mut y = vec![0.0; m.nrows];
+                let mut c = vec![0.0; m.nrows * cfg.spmm_k];
+                match kernel {
+                    Kernel::Spmv => time_fn(&cfg.bench, || {
+                        crate::kernels::spmv::ell_rowwise(&ell, &x, &mut y);
+                        black_box(&y);
+                    }),
+                    Kernel::Spmm => time_fn(&cfg.bench, || {
+                        crate::kernels::spmm::ell_rowwise(&ell, &b, cfg.spmm_k, &mut c);
+                        black_box(&c);
+                    }),
+                    Kernel::Trsv => unreachable!(),
+                }
+            };
+            gens.set(vi, mi, t.median);
+        }
+    }
+
+    libs.validate().expect("library table incomplete");
+    gens.validate().expect("generated table incomplete");
+    SweepResult { kernel, arch, libs, gens, derivations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_spmv_native() {
+        let cfg = SweepConfig::quick();
+        let r = run(Kernel::Spmv, Arch::HostSmall, &cfg, None);
+        assert_eq!(r.libs.routines.len(), 7);
+        assert!(r.gens.routines.len() >= 15);
+        assert_eq!(r.libs.matrices.len(), 3);
+        // the generated pool must beat or match the libraries somewhere
+        let best_gen = r.best_gen();
+        let best_lib = r.libs.best_per_matrix(None);
+        let wins = best_gen.iter().zip(&best_lib).filter(|(g, l)| g <= l).count();
+        assert!(wins >= 1, "generated variants never competitive: {best_gen:?} vs {best_lib:?}");
+    }
+
+    #[test]
+    fn quick_sweep_trsv_has_restricted_pools() {
+        let cfg = SweepConfig::quick();
+        let r = run(Kernel::Trsv, Arch::HostSmall, &cfg, None);
+        assert_eq!(r.libs.routines.len(), 4); // MTL4 + SL++ CRS/CCS
+        assert!(!r.gens.routines.is_empty());
+    }
+}

@@ -1,0 +1,172 @@
+//! Partitioners: different ways to split the blocked iteration domain,
+//! each "simply a different method for the partitioning of ℕ_m"
+//! (paper §6.2.4).
+
+use crate::matrix::TriMat;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Rows,
+    Grid2d,
+}
+
+/// A partition of the matrix iteration domain.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub kind: Kind,
+    /// Row ranges `[lo, hi)` (Kind::Rows), or empty.
+    pub row_ranges: Vec<(usize, usize)>,
+    /// Row and column split points (Kind::Grid2d): the 2-D blocks are
+    /// the cross product of consecutive split intervals.
+    pub row_splits: Vec<usize>,
+    pub col_splits: Vec<usize>,
+}
+
+/// Equal index ranges — blocking *before* materialization (Fig 4 left):
+/// oblivious to where the nonzeros actually are.
+pub fn rows_even(m: &TriMat, nparts: usize) -> Partition {
+    let nparts = nparts.max(1).min(m.nrows.max(1));
+    let chunk = m.nrows.div_ceil(nparts);
+    let row_ranges = (0..nparts)
+        .map(|p| (p * chunk, ((p + 1) * chunk).min(m.nrows)))
+        .filter(|(lo, hi)| lo <= hi)
+        .collect();
+    Partition { kind: Kind::Rows, row_ranges, row_splits: vec![], col_splits: vec![] }
+}
+
+/// Nonzero-balanced row ranges — blocking *after* materialization
+/// (Fig 4 right): split points placed on the materialized tuples so
+/// every part carries ≈ nnz/nparts entries.
+pub fn rows_balanced(m: &TriMat, nparts: usize) -> Partition {
+    let nparts = nparts.max(1).min(m.nrows.max(1));
+    let counts = m.row_counts();
+    let total: usize = counts.iter().sum();
+    let target = total.div_ceil(nparts);
+    let mut row_ranges = Vec::with_capacity(nparts);
+    let mut lo = 0usize;
+    let mut acc = 0usize;
+    for (i, &c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= target && row_ranges.len() + 1 < nparts {
+            row_ranges.push((lo, i + 1));
+            lo = i + 1;
+            acc = 0;
+        }
+    }
+    row_ranges.push((lo, m.nrows));
+    Partition { kind: Kind::Rows, row_ranges, row_splits: vec![], col_splits: vec![] }
+}
+
+/// 2-D nonzero-balanced grid (Vastenhouw–Bisseling-style, simplified):
+/// recursively choose row then column split points that halve the
+/// nonzero count, `levels` times each.
+pub fn grid_2d(m: &TriMat, levels: usize) -> Partition {
+    let row_splits = balanced_splits(&m.row_counts(), 1 << levels);
+    let col_splits = balanced_splits(&m.col_counts(), 1 << levels);
+    Partition { kind: Kind::Grid2d, row_ranges: vec![], row_splits, col_splits }
+}
+
+/// Split points (excluding 0 and n) dividing `counts` into `parts`
+/// nearly-equal prefix sums.
+fn balanced_splits(counts: &[usize], parts: usize) -> Vec<usize> {
+    let total: usize = counts.iter().sum();
+    if parts <= 1 || total == 0 {
+        return vec![];
+    }
+    let mut splits = Vec::with_capacity(parts - 1);
+    let mut acc = 0usize;
+    let mut next_target = total.div_ceil(parts);
+    for (i, &c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= next_target && splits.len() + 1 < parts {
+            splits.push(i + 1);
+            next_target = total * (splits.len() + 1) / parts;
+        }
+    }
+    splits
+}
+
+/// nnz of each 2-D block (row-major over blocks) for a grid partition.
+pub fn grid_block_nnz(m: &TriMat, p: &Partition) -> Vec<usize> {
+    assert_eq!(p.kind, Kind::Grid2d);
+    let rs = with_bounds(&p.row_splits, m.nrows);
+    let cs = with_bounds(&p.col_splits, m.ncols);
+    let nrb = rs.len() - 1;
+    let ncb = cs.len() - 1;
+    let mut nnz = vec![0usize; nrb * ncb];
+    for e in &m.entries {
+        let bi = rs.partition_point(|&s| s <= e.row as usize) - 1;
+        let bj = cs.partition_point(|&s| s <= e.col as usize) - 1;
+        nnz[bi * ncb + bj] += 1;
+    }
+    nnz
+}
+
+fn with_bounds(splits: &[usize], n: usize) -> Vec<usize> {
+    let mut v = Vec::with_capacity(splits.len() + 2);
+    v.push(0);
+    v.extend_from_slice(splits);
+    if *v.last().unwrap() != n {
+        v.push(n);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn even_covers_all_rows() {
+        let m = gen::uniform_random(103, 50, 400, 310);
+        for n in [1, 3, 7, 103, 200] {
+            let p = rows_even(&m, n);
+            assert_eq!(p.row_ranges.first().unwrap().0, 0);
+            assert_eq!(p.row_ranges.last().unwrap().1, 103);
+            for w in p.row_ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_covers_and_balances() {
+        let m = gen::powerlaw(400, 1.8, 150, 311);
+        let p = rows_balanced(&m, 8);
+        assert_eq!(p.row_ranges.len(), 8);
+        assert_eq!(p.row_ranges.first().unwrap().0, 0);
+        assert_eq!(p.row_ranges.last().unwrap().1, 400);
+        let counts = m.row_counts();
+        let nnz: Vec<usize> = p
+            .row_ranges
+            .iter()
+            .map(|&(lo, hi)| counts[lo..hi].iter().sum())
+            .collect();
+        let max = *nnz.iter().max().unwrap() as f64;
+        let mean = nnz.iter().sum::<usize>() as f64 / nnz.len() as f64;
+        assert!(max / mean < 2.0, "imbalance {}", max / mean);
+    }
+
+    #[test]
+    fn grid_blocks_partition_nnz() {
+        let m = gen::uniform_random(128, 128, 2000, 312);
+        let p = grid_2d(&m, 2); // 4×4 blocks
+        let nnz = grid_block_nnz(&m, &p);
+        assert_eq!(nnz.iter().sum::<usize>(), m.nnz());
+        assert_eq!(nnz.len(), 16);
+        // reasonably balanced for a uniform matrix
+        let max = *nnz.iter().max().unwrap() as f64;
+        let mean = m.nnz() as f64 / 16.0;
+        assert!(max / mean < 2.0, "grid imbalance {}", max / mean);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let empty = TriMat::new(5, 5);
+        let p = rows_balanced(&empty, 4);
+        assert_eq!(p.row_ranges.last().unwrap().1, 5);
+        let g = grid_2d(&empty, 2);
+        assert!(g.row_splits.is_empty());
+    }
+}

@@ -1,0 +1,256 @@
+//! Canonical AST reconstruction: `program(&ChainState) -> Program`.
+//!
+//! After every transformation the IR is re-rendered from the chain state.
+//! This is sound because, for the sparse-BLAS kernel family, the
+//! transformation algebra is confluent — the state (orthogonalization ×
+//! materialization × splitting × ℕ\* flavour × sorting × interchange ×
+//! dimensionality reduction × blocking) uniquely determines the canonical
+//! loop nest, which is exactly the form the paper's listings show at each
+//! node of the Fig 10 tree.
+
+use crate::baselines::Kernel;
+use crate::forelem::ir::*;
+
+fn fl(var: &str, domain: Domain) -> Loop {
+    Loop { var: var.into(), domain, ordered: false, kind: LoopKind::Forelem }
+}
+
+fn forl(var: &str, domain: Domain) -> Loop {
+    Loop { var: var.into(), domain, ordered: true, kind: LoopKind::For }
+}
+
+/// Value access expression for the (possibly materialized/split) A data.
+/// `subs` are the sequence subscripts in nesting order.
+fn val_access(s: &ChainState, subs: &[&str]) -> Expr {
+    match s.materialized {
+        None => Expr::AddrFn { name: "A".into(), arg: "t".into() },
+        Some(_) => {
+            let subs_e: Vec<Expr> = subs.iter().map(|x| Expr::var(x)).collect();
+            if s.split {
+                // structure splitting: PA.val[i][k]
+                Expr::Index { array: "PA.val".into(), subs: subs_e }
+            } else {
+                // sequence of structures: PA[i][k].val
+                let inner = Expr::Index { array: "PA".into(), subs: subs_e };
+                Expr::Field { tuple: crate::forelem::pretty::render_expr(&inner), field: "val".into() }
+            }
+        }
+    }
+}
+
+/// Column-token access (`t.col` before materialization, `PA…col` after).
+fn col_access(s: &ChainState, subs: &[&str]) -> Expr {
+    match s.materialized {
+        None => Expr::field("t", "col"),
+        Some(_) => {
+            let subs_e: Vec<Expr> = subs.iter().map(|x| Expr::var(x)).collect();
+            if s.split {
+                Expr::Index { array: "PA.col".into(), subs: subs_e }
+            } else {
+                let inner = Expr::Index { array: "PA".into(), subs: subs_e };
+                Expr::Field { tuple: crate::forelem::pretty::render_expr(&inner), field: "col".into() }
+            }
+        }
+    }
+}
+
+/// Row-token access for states where the row is not an induction var.
+fn row_access(s: &ChainState, subs: &[&str]) -> Expr {
+    match s.materialized {
+        None => Expr::field("t", "row"),
+        Some(_) => {
+            let subs_e: Vec<Expr> = subs.iter().map(|x| Expr::var(x)).collect();
+            if s.split {
+                Expr::Index { array: "PA.row".into(), subs: subs_e }
+            } else {
+                let inner = Expr::Index { array: "PA".into(), subs: subs_e };
+                Expr::Field { tuple: crate::forelem::pretty::render_expr(&inner), field: "row".into() }
+            }
+        }
+    }
+}
+
+/// The output-update statement(s) for a kernel, given row/col/val exprs.
+fn kernel_body(kernel: Kernel, row: Expr, col: Expr, val: Expr) -> Vec<Stmt> {
+    match kernel {
+        Kernel::Spmv => vec![Stmt::AddAssign {
+            lhs: Expr::Index { array: "C".into(), subs: vec![row] },
+            rhs: Expr::mul(val, Expr::Index { array: "B".into(), subs: vec![col] }),
+        }],
+        Kernel::Spmm => vec![
+            Stmt::Comment("inner dense loop over the k columns of B".into()),
+            Stmt::AddAssign {
+                lhs: Expr::Index { array: "C".into(), subs: vec![row, Expr::var("v")] },
+                rhs: Expr::mul(val, Expr::Index { array: "B".into(), subs: vec![col, Expr::var("v")] }),
+            },
+        ],
+        Kernel::Trsv => vec![Stmt::SubAssign {
+            lhs: Expr::Index { array: "x".into(), subs: vec![row] },
+            rhs: Expr::mul(val, Expr::Index { array: "x".into(), subs: vec![col] }),
+        }],
+    }
+}
+
+/// Reconstruct the canonical program for a chain state.
+pub fn program(s: &ChainState) -> Program {
+    let label = if s.history.is_empty() {
+        format!("{} — forelem normal form", s.kernel.label())
+    } else {
+        format!("{} — after {}", s.kernel.label(), s.history.join(" \u{2192} "))
+    };
+
+    let mut loops: Vec<Loop> = Vec::new();
+
+    // --- outer structure from orthogonalization / blocking -------------
+    match (s.orth, s.blocked) {
+        (Orth::RowCol, Some(Blocking::Tile { br, bc })) => {
+            loops.push(fl("ii", Domain::Blocked { bound: "n".into(), factor: br.to_string() }));
+            loops.push(fl("jj", Domain::Blocked { bound: "m".into(), factor: bc.to_string() }));
+            loops.push(fl("i", Domain::Nat { bound: format!("[ii\u{b7}{br},(ii+1)\u{b7}{br})") }));
+            loops.push(fl("j", Domain::Nat { bound: format!("[jj\u{b7}{bc},(jj+1)\u{b7}{bc})") }));
+        }
+        (Orth::Row, _) => loops.push(fl("i", Domain::Nat { bound: "Nrows".into() })),
+        (Orth::Col, _) => loops.push(fl("j", Domain::Nat { bound: "Ncols".into() })),
+        (Orth::RowCol, _) => {
+            loops.push(fl("i", Domain::Nat { bound: "Nrows".into() }));
+            loops.push(fl("j", Domain::Nat { bound: "Ncols".into() }));
+        }
+        (Orth::Diag, _) => loops.push(fl("d", Domain::FieldValues {
+            reservoir: "T".into(),
+            field: "diag".into(),
+        })),
+        (Orth::None, _) => {}
+    }
+
+    // ℕ* sorting permutes the outer row loop.
+    if s.sorted {
+        if let Some(first) = loops.first_mut() {
+            if let Domain::Nat { bound } = &first.domain {
+                first.domain = Domain::Nat { bound: format!("perm({bound})") };
+            }
+        }
+    }
+
+    // --- inner structure from materialization ---------------------------
+    let (body, pre, post);
+    match s.materialized {
+        None => {
+            // Reservoir loop with conditions from orthogonalization.
+            let conds = match s.orth {
+                Orth::None => vec![],
+                Orth::Row => vec![("row".to_string(), "i".to_string())],
+                Orth::Col => vec![("col".to_string(), "j".to_string())],
+                Orth::RowCol => {
+                    vec![("row".to_string(), "i".to_string()), ("col".to_string(), "j".to_string())]
+                }
+                Orth::Diag => vec![("diag".to_string(), "d".to_string())],
+            };
+            loops.push(fl("t", Domain::Reservoir { name: "T".into(), conds }));
+            let row = match s.orth {
+                Orth::Row | Orth::RowCol => Expr::var("i"),
+                _ => row_access(s, &[]),
+            };
+            let col = match s.orth {
+                Orth::Col | Orth::RowCol => Expr::var("j"),
+                Orth::Diag => Expr::Add(Box::new(Expr::field("t", "row")), Box::new(Expr::var("d"))),
+                _ => col_access(s, &[]),
+            };
+            body = kernel_body(s.kernel, row, col, val_access(s, &[]));
+            pre = vec![];
+            post = vec![];
+        }
+        Some(dependent) => {
+            if !dependent {
+                // Loop-independent: single flat sequence.
+                loops.push(fl("p", Domain::NStar));
+                body = kernel_body(s.kernel, row_access(s, &["p"]), col_access(s, &["p"]), val_access(s, &["p"]));
+                pre = vec![];
+                post = vec![];
+            } else {
+                // Loop-dependent: nested sequence under the orth loop(s).
+                let inner = if s.dim_reduced {
+                    forl("k", Domain::PtrRange { ptr: "PA_ptr".into(), of: "i".into() })
+                } else {
+                    match s.nstar {
+                        None => fl("k", Domain::NStar),
+                        Some(NStarMat::Exact) => fl("k", Domain::NStarLen { len_expr: "PA_len[i]".into() }),
+                        Some(NStarMat::Padded) => fl("k", Domain::NStarLen { len_expr: "K".into() }),
+                    }
+                };
+                if s.interchanged && !s.dim_reduced {
+                    // k becomes outermost (paper §5.2 / Fig 3b).
+                    let outer_pos = loops.len().saturating_sub(1);
+                    loops.insert(outer_pos, inner);
+                } else {
+                    loops.push(inner);
+                }
+                let subs: Vec<&str> = if s.dim_reduced { vec!["k"] } else { vec!["i", "k"] };
+                let (row, col) = match s.orth {
+                    Orth::Col => (row_access(s, &subs), Expr::var("j")),
+                    Orth::Diag => (row_access(s, &subs), Expr::Add(
+                        Box::new(row_access(s, &subs)),
+                        Box::new(Expr::var("d")),
+                    )),
+                    _ => (Expr::var("i"), col_access(s, &subs)),
+                };
+                body = kernel_body(s.kernel, row, col, val_access(s, &subs));
+                pre = vec![];
+                post = vec![];
+            }
+        }
+    }
+
+    Program { label, loops, pre, body, post }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forelem::pretty::render;
+    use crate::transforms;
+
+    #[test]
+    fn initial_spmv_is_single_reservoir_loop() {
+        let s = ChainState::initial(Kernel::Spmv);
+        let p = program(&s);
+        assert_eq!(p.loops.len(), 1);
+        let txt = render(&p);
+        assert!(txt.contains("forelem (t; t \u{2208} T)"), "{txt}");
+        assert!(txt.contains("C[t.row] += A(t) * B[t.col];"), "{txt}");
+    }
+
+    #[test]
+    fn orthogonalized_row_shows_condition() {
+        let mut s = ChainState::initial(Kernel::Spmv);
+        transforms::orthogonalize(&mut s, Orth::Row).unwrap();
+        let txt = render(&program(&s));
+        assert!(txt.contains("T.row[i]"), "{txt}");
+        assert!(txt.contains("C[i] +="), "{txt}");
+    }
+
+    #[test]
+    fn dim_reduced_shows_ptr_loop() {
+        let mut s = ChainState::initial(Kernel::Spmv);
+        transforms::orthogonalize(&mut s, Orth::Row).unwrap();
+        transforms::materialize(&mut s).unwrap();
+        transforms::split(&mut s).unwrap();
+        transforms::nstar_materialize(&mut s, NStarMat::Exact).unwrap();
+        transforms::dim_reduce(&mut s).unwrap();
+        let txt = render(&program(&s));
+        assert!(txt.contains("PA_ptr[i]"), "{txt}");
+        assert!(txt.contains("PA.val[k]"), "{txt}");
+    }
+
+    #[test]
+    fn interchanged_padded_puts_k_outer() {
+        let mut s = ChainState::initial(Kernel::Spmv);
+        transforms::orthogonalize(&mut s, Orth::Row).unwrap();
+        transforms::materialize(&mut s).unwrap();
+        transforms::nstar_materialize(&mut s, NStarMat::Padded).unwrap();
+        transforms::interchange(&mut s).unwrap();
+        let p = program(&s);
+        // first loop must now be the k loop
+        assert_eq!(p.loops[0].var, "k");
+        assert_eq!(p.loops[1].var, "i");
+    }
+}

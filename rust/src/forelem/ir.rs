@@ -1,0 +1,266 @@
+//! The forelem intermediate representation (paper §3).
+//!
+//! Programs are loop nests over *tuple reservoirs*: `forelem (t; t ∈ T)`
+//! iterates every tuple of `T` exactly once in an explicitly undefined
+//! order; subsets are selected with field conditions `T.field[v]`;
+//! `whilelem` additionally revisits tuples until quiescence. Data is
+//! reached through *address functions* applied to token tuples
+//! (`A(t)`, `B[t.col]`, …).
+//!
+//! Two views of a program coexist here:
+//!
+//! 1. the **AST** (`Program`, `Loop`, `Stmt`, `Expr`) — what gets pretty-
+//!    printed and inspected, reproducing the paper's listings; and
+//! 2. the **chain state** (`ChainState`) — the normalized record of which
+//!    transformations have been applied, from which the canonical AST is
+//!    reconstructed after every step (the transformation algebra for this
+//!    kernel family is confluent, so the state determines the program).
+//!
+//! Transformations (`crate::transforms`) are state transitions with
+//! legality predicates; `crate::concretize` maps a final state onto a
+//! physical storage format plus executor.
+
+use crate::baselines::Kernel;
+
+/// A loop iteration domain, mirroring the forms the paper's
+/// transformations produce.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Domain {
+    /// `t ∈ T` or `t ∈ T.(f1,..)[(v1,..)]` — reservoir with conditions.
+    Reservoir { name: String, conds: Vec<(String, String)> },
+    /// `i ∈ T.field` — all values of a tuple field (orthogonalization).
+    FieldValues { reservoir: String, field: String },
+    /// `i ∈ ℕ_b` — encapsulated natural-number range with symbolic bound.
+    Nat { bound: String },
+    /// `p ∈ ℕ*` — materialized sequence subscripts, implicit extent.
+    NStar,
+    /// `k ∈ PA_len[i]` (exact) or `k ∈ K` (padded) after ℕ* materialization.
+    NStarLen { len_expr: String },
+    /// `k ∈ [PA_ptr[i], PA_ptr[i+1])` after dimensionality reduction.
+    PtrRange { ptr: String, of: String },
+    /// `ii ∈ ℕ_{b/x}` — blocked partition of an encapsulated range.
+    Blocked { bound: String, factor: String },
+}
+
+/// One loop level. `ordered` distinguishes concretized `for` loops from
+/// order-free `forelem` loops.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Loop {
+    pub var: String,
+    pub domain: Domain,
+    pub ordered: bool,
+    pub kind: LoopKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopKind {
+    Forelem,
+    Whilelem,
+    For,
+}
+
+/// Expressions — the minimal language the sparse-BLAS specs need.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// `A(t)` — address function applied to a token tuple.
+    AddrFn { name: String, arg: String },
+    /// `B[t.col]` / `PA[i][k]` — array access with subscript expressions.
+    Index { array: String, subs: Vec<Expr> },
+    /// `t.field`.
+    Field { tuple: String, field: String },
+    /// Scalar variable.
+    Var(String),
+    Const(f64),
+    Mul(Box<Expr>, Box<Expr>),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Div(Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn var(s: &str) -> Expr {
+        Expr::Var(s.to_string())
+    }
+
+    pub fn idx(array: &str, subs: Vec<Expr>) -> Expr {
+        Expr::Index { array: array.to_string(), subs }
+    }
+
+    pub fn field(tuple: &str, field: &str) -> Expr {
+        Expr::Field { tuple: tuple.to_string(), field: field.to_string() }
+    }
+
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        Expr::Mul(Box::new(a), Box::new(b))
+    }
+}
+
+/// Statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `lhs = rhs`.
+    Assign { lhs: Expr, rhs: Expr },
+    /// `lhs += rhs`.
+    AddAssign { lhs: Expr, rhs: Expr },
+    /// `lhs -= rhs`.
+    SubAssign { lhs: Expr, rhs: Expr },
+    /// Declaration with initializer: `sum = 0`.
+    Decl { name: String, init: Expr },
+    Comment(String),
+}
+
+/// A full loop nest plus body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    /// Human-readable label, e.g. "SpMV (forelem normal form)".
+    pub label: String,
+    pub loops: Vec<Loop>,
+    /// Statements preceding the innermost body at each level are not
+    /// modeled; `pre`/`post` attach to the innermost loop's parent
+    /// (sufficient for the BLAS specs: `sum = 0` / `C[i] = sum`).
+    pub pre: Vec<Stmt>,
+    pub body: Vec<Stmt>,
+    pub post: Vec<Stmt>,
+}
+
+// ---------------------------------------------------------------------
+// Chain state
+// ---------------------------------------------------------------------
+
+/// Orthogonalization choice (paper §4.1). `Diag` orthogonalizes on the
+/// derived field `col - row` (legal because address functions may be any
+/// invertible function of the token fields, §2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Orth {
+    None,
+    Row,
+    Col,
+    RowCol,
+    Diag,
+}
+
+/// ℕ* materialization flavour (paper §4.3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NStarMat {
+    /// `PA_len[q] = max len` + padding.
+    Padded,
+    /// `PA_len[q] = len(PA[q])`, no padding.
+    Exact,
+}
+
+/// Loop-blocking flavour (paper §5.3 / §6.2.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Blocking {
+    /// Block both orthogonalized dimensions → submatrix (BCSR-like).
+    Tile { br: usize, bc: usize },
+    /// Partition ℕ* by row fill → hybrid ELL+COO.
+    FillCutoff,
+    /// Partition the row dimension into slices of `s`, each padded to
+    /// its own width → sliced ELLPACK (SELL).
+    RowSlice { s: usize },
+}
+
+/// The normalized record of a transformation chain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChainState {
+    pub kernel: Kernel,
+    pub orth: Orth,
+    /// `Some(dependent)` once materialized; `dependent` iff the inner
+    /// reservoir condition referenced an outer loop (paper §4.2.2).
+    pub materialized: Option<bool>,
+    /// Structure splitting applied (AoS → SoA).
+    pub split: bool,
+    pub nstar: Option<NStarMat>,
+    /// ℕ* sorting applied (rows permuted by decreasing length).
+    pub sorted: bool,
+    /// Post-materialization loop interchange applied (k outermost).
+    pub interchanged: bool,
+    /// Dimensionality reduction applied (nested → flat + ptr).
+    pub dim_reduced: bool,
+    pub blocked: Option<Blocking>,
+    /// Horizontal iteration-space reduction applied (drop unused fields).
+    pub hisr: bool,
+    /// Names of applied transformations, in order.
+    pub history: Vec<&'static str>,
+}
+
+impl ChainState {
+    /// The starting point: the minimal forelem representation (Fig 10
+    /// node 1) of a kernel.
+    pub fn initial(kernel: Kernel) -> Self {
+        ChainState {
+            kernel,
+            orth: Orth::None,
+            materialized: None,
+            split: false,
+            nstar: None,
+            sorted: false,
+            interchanged: false,
+            dim_reduced: false,
+            blocked: None,
+            hisr: false,
+            history: Vec::new(),
+        }
+    }
+
+    /// Stable key identifying the *data structure* this state
+    /// concretizes to (independent of kernel and of transformations that
+    /// don't change storage). Used to count distinct generated formats
+    /// (paper: "25 different data structures").
+    pub fn layout_key(&self) -> String {
+        format!(
+            "orth={:?} split={} nstar={:?} sorted={} xchg={} dimred={} blocked={}",
+            self.orth,
+            self.split,
+            self.nstar,
+            self.sorted,
+            self.interchanged,
+            self.dim_reduced,
+            self.blocked_key(),
+        )
+    }
+
+    fn blocked_key(&self) -> String {
+        match self.blocked {
+            None => "none".into(),
+            Some(Blocking::Tile { br, bc }) => format!("tile{br}x{bc}"),
+            Some(Blocking::FillCutoff) => "fill".into(),
+            Some(Blocking::RowSlice { s }) => format!("slice{s}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state_is_clean() {
+        let s = ChainState::initial(Kernel::Spmv);
+        assert_eq!(s.orth, Orth::None);
+        assert!(s.materialized.is_none());
+        assert!(s.history.is_empty());
+    }
+
+    #[test]
+    fn layout_key_ignores_kernel() {
+        let a = ChainState::initial(Kernel::Spmv);
+        let b = ChainState::initial(Kernel::Trsv);
+        assert_eq!(a.layout_key(), b.layout_key());
+    }
+
+    #[test]
+    fn expr_builders() {
+        let e = Expr::mul(Expr::idx("B", vec![Expr::field("t", "col")]), Expr::AddrFn {
+            name: "A".into(),
+            arg: "t".into(),
+        });
+        match e {
+            Expr::Mul(a, b) => {
+                assert!(matches!(*a, Expr::Index { .. }));
+                assert!(matches!(*b, Expr::AddrFn { .. }));
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The forelem IR (paper §2–3): tuple reservoirs, forelem/whilelem loop
+//! nests, address functions — plus the canonical-AST reconstruction and
+//! the pretty-printer that reproduces the paper's listings.
+
+pub mod build;
+pub mod ir;
+pub mod pretty;
+pub mod specs;
+pub mod whilelem;
+
+pub use ir::{Blocking, ChainState, Domain, Expr, Loop, LoopKind, NStarMat, Orth, Program, Stmt};

@@ -1,0 +1,179 @@
+//! Pretty-printer: renders a `Program` in the paper's listing style
+//! (`forelem (t; t ∈ T.row[i]) …`). Used by `examples/derive_formats.rs`
+//! to show each derivation step, and by tests asserting the IR shape.
+
+use crate::forelem::ir::*;
+
+pub fn render_expr(e: &Expr) -> String {
+    match e {
+        Expr::AddrFn { name, arg } => format!("{name}({arg})"),
+        Expr::Index { array, subs } => {
+            let s: Vec<String> = subs.iter().map(render_expr).collect();
+            format!("{array}[{}]", s.join("]["))
+        }
+        Expr::Field { tuple, field } => format!("{tuple}.{field}"),
+        Expr::Var(v) => v.clone(),
+        Expr::Const(c) => format!("{c}"),
+        Expr::Mul(a, b) => format!("{} * {}", render_expr(a), render_expr(b)),
+        Expr::Add(a, b) => format!("{} + {}", render_expr(a), render_expr(b)),
+        Expr::Sub(a, b) => format!("{} - {}", render_expr(a), render_expr(b)),
+        Expr::Div(a, b) => format!("{} / {}", render_expr(a), render_expr(b)),
+    }
+}
+
+pub fn render_stmt(s: &Stmt) -> String {
+    match s {
+        Stmt::Assign { lhs, rhs } => format!("{} = {};", render_expr(lhs), render_expr(rhs)),
+        Stmt::AddAssign { lhs, rhs } => format!("{} += {};", render_expr(lhs), render_expr(rhs)),
+        Stmt::SubAssign { lhs, rhs } => format!("{} -= {};", render_expr(lhs), render_expr(rhs)),
+        Stmt::Decl { name, init } => format!("{name} = {};", render_expr(init)),
+        Stmt::Comment(c) => format!("/* {c} */"),
+    }
+}
+
+fn render_domain(var: &str, d: &Domain) -> String {
+    match d {
+        Domain::Reservoir { name, conds } => {
+            if conds.is_empty() {
+                format!("{var}; {var} \u{2208} {name}")
+            } else if conds.len() == 1 {
+                let (f, v) = &conds[0];
+                format!("{var}; {var} \u{2208} {name}.{f}[{v}]")
+            } else {
+                let fs: Vec<&str> = conds.iter().map(|(f, _)| f.as_str()).collect();
+                let vs: Vec<&str> = conds.iter().map(|(_, v)| v.as_str()).collect();
+                format!("{var}; {var} \u{2208} {name}.({})[({})]", fs.join(","), vs.join(","))
+            }
+        }
+        Domain::FieldValues { reservoir, field } => {
+            format!("{var}; {var} \u{2208} {reservoir}.{field}")
+        }
+        Domain::Nat { bound } => format!("{var}; {var} \u{2208} \u{2115}_{bound}"),
+        Domain::NStar => format!("{var}; {var} \u{2208} \u{2115}*"),
+        Domain::NStarLen { len_expr } => format!("{var}; {var} \u{2208} {len_expr}"),
+        Domain::PtrRange { ptr, of } => {
+            format!("{var} = {ptr}[{of}]; {var} < {ptr}[{of}+1]; {var}++")
+        }
+        Domain::Blocked { bound, factor } => {
+            format!("{var}; {var} \u{2208} \u{2115}_{{{bound}/{factor}}}")
+        }
+    }
+}
+
+fn render_loop(l: &Loop) -> String {
+    let kw = match (l.kind, l.ordered) {
+        (LoopKind::For, _) | (_, true) => "for",
+        (LoopKind::Forelem, false) => "forelem",
+        (LoopKind::Whilelem, false) => "whilelem",
+    };
+    format!("{kw} ({})", render_domain(&l.var, &l.domain))
+}
+
+/// Render a whole program with 2-space indentation per level.
+pub fn render(p: &Program) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("// {}\n", p.label));
+    let n = p.loops.len();
+    for (d, l) in p.loops.iter().enumerate() {
+        // `pre` statements sit just inside the second-to-innermost level.
+        if d + 1 == n {
+            for s in &p.pre {
+                out.push_str(&"  ".repeat(d));
+                out.push_str(&render_stmt(s));
+                out.push('\n');
+            }
+        }
+        out.push_str(&"  ".repeat(d));
+        out.push_str(&render_loop(l));
+        out.push('\n');
+    }
+    for s in &p.body {
+        out.push_str(&"  ".repeat(n));
+        out.push_str(&render_stmt(s));
+        out.push('\n');
+    }
+    for s in &p.post {
+        out.push_str(&"  ".repeat(n.saturating_sub(1)));
+        out.push_str(&render_stmt(s));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_minimal_spmv_form() {
+        let p = Program {
+            label: "SpMV normal form".into(),
+            loops: vec![Loop {
+                var: "t".into(),
+                domain: Domain::Reservoir { name: "T".into(), conds: vec![] },
+                ordered: false,
+                kind: LoopKind::Forelem,
+            }],
+            pre: vec![],
+            body: vec![Stmt::AddAssign {
+                lhs: Expr::idx("C", vec![Expr::field("t", "row")]),
+                rhs: Expr::mul(
+                    Expr::AddrFn { name: "A".into(), arg: "t".into() },
+                    Expr::idx("B", vec![Expr::field("t", "col")]),
+                ),
+            }],
+            post: vec![],
+        };
+        let txt = render(&p);
+        assert!(txt.contains("forelem (t; t \u{2208} T)"), "{txt}");
+        assert!(txt.contains("C[t.row] += A(t) * B[t.col];"), "{txt}");
+    }
+
+    #[test]
+    fn renders_conditions_and_nat() {
+        let l1 = Loop {
+            var: "i".into(),
+            domain: Domain::Nat { bound: "Nrows".into() },
+            ordered: false,
+            kind: LoopKind::Forelem,
+        };
+        let l2 = Loop {
+            var: "t".into(),
+            domain: Domain::Reservoir { name: "T".into(), conds: vec![("row".into(), "i".into())] },
+            ordered: false,
+            kind: LoopKind::Forelem,
+        };
+        let p = Program { label: "x".into(), loops: vec![l1, l2], pre: vec![], body: vec![], post: vec![] };
+        let txt = render(&p);
+        assert!(txt.contains("\u{2115}_Nrows"), "{txt}");
+        assert!(txt.contains("T.row[i]"), "{txt}");
+    }
+
+    #[test]
+    fn renders_ptr_range_as_for() {
+        let l = Loop {
+            var: "k".into(),
+            domain: Domain::PtrRange { ptr: "PA_ptr".into(), of: "i".into() },
+            ordered: true,
+            kind: LoopKind::For,
+        };
+        let p = Program { label: "x".into(), loops: vec![l], pre: vec![], body: vec![], post: vec![] };
+        let txt = render(&p);
+        assert!(txt.contains("for (k = PA_ptr[i]; k < PA_ptr[i+1]; k++)"), "{txt}");
+    }
+
+    #[test]
+    fn renders_multi_field_condition() {
+        let l = Loop {
+            var: "t".into(),
+            domain: Domain::Reservoir {
+                name: "T".into(),
+                conds: vec![("row".into(), "i".into()), ("col".into(), "j".into())],
+            },
+            ordered: false,
+            kind: LoopKind::Forelem,
+        };
+        let p = Program { label: "x".into(), loops: vec![l], pre: vec![], body: vec![], post: vec![] };
+        assert!(render(&p).contains("T.(row,col)[(i,j)]"));
+    }
+}

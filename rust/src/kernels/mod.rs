@@ -1,0 +1,8 @@
+//! Compute kernels over the generated storage formats — one function per
+//! (kernel × format × traversal), each the concretization of a specific
+//! transformation chain. `search::tree` binds these into the paper's
+//! variant space; `concretize::codegen` emits the matching C-like text.
+
+pub mod spmm;
+pub mod spmv;
+pub mod trsv;

@@ -1,0 +1,238 @@
+//! SpMM kernels — `C = A B` with `B` dense `ncols × k` (row-major), the
+//! paper's "sparse matrix times k vectors" workload (§6.3, Fig 10;
+//! Table 2 uses k = 100). Each variant is the SpMV loop nest with the
+//! dense `k` loop innermost — which is exactly what the extra inner
+//! forelem loop concretizes to — so data-structure effects are the same
+//! but amortized differently (reuse of A across k columns).
+
+use crate::storage::*;
+
+/// COO AoS.
+pub fn coo_aos(a: &CooAos, b: &[f64], k: usize, c: &mut [f64]) {
+    c.fill(0.0);
+    for &(r, cc, v) in &a.tuples {
+        let brow = &b[cc as usize * k..cc as usize * k + k];
+        let crow = &mut c[r as usize * k..r as usize * k + k];
+        crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+    }
+}
+
+/// COO SoA.
+pub fn coo_soa(a: &CooSoa, b: &[f64], k: usize, c: &mut [f64]) {
+    c.fill(0.0);
+    for i in 0..a.vals.len() {
+        let (r, cc, v) = (a.rows[i] as usize, a.cols[i] as usize, a.vals[i]);
+        let brow = &b[cc * k..cc * k + k];
+        let crow = &mut c[r * k..r * k + k];
+        crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+    }
+}
+
+/// CSR, row-wise: accumulates each output row in place (register/L1
+/// resident for modest k).
+pub fn csr(a: &Csr, b: &[f64], k: usize, c: &mut [f64]) {
+    for i in 0..a.nrows {
+        let crow = &mut c[i * k..i * k + k];
+        crow.fill(0.0);
+        let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+        for p in s..e {
+            let v = a.vals[p];
+            let brow = &b[a.cols[p] as usize * k..a.cols[p] as usize * k + k];
+            crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+        }
+    }
+}
+
+/// CSR AoS.
+pub fn csr_aos(a: &CsrAos, b: &[f64], k: usize, c: &mut [f64]) {
+    for i in 0..a.nrows {
+        let crow = &mut c[i * k..i * k + k];
+        crow.fill(0.0);
+        let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+        for &(col, v) in &a.pairs[s..e] {
+            let brow = &b[col as usize * k..col as usize * k + k];
+            crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+        }
+    }
+}
+
+/// CSC: scatter per column, B-row reused across the whole column.
+pub fn csc(a: &Csc, b: &[f64], k: usize, c: &mut [f64]) {
+    c.fill(0.0);
+    for col in 0..a.ncols {
+        let (s, e) = (a.col_ptr[col] as usize, a.col_ptr[col + 1] as usize);
+        let brow = &b[col * k..col * k + k];
+        for p in s..e {
+            let v = a.vals[p];
+            let crow = &mut c[a.rows[p] as usize * k..a.rows[p] as usize * k + k];
+            crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+        }
+    }
+}
+
+/// CSC AoS.
+pub fn csc_aos(a: &CscAos, b: &[f64], k: usize, c: &mut [f64]) {
+    c.fill(0.0);
+    for col in 0..a.ncols {
+        let (s, e) = (a.col_ptr[col] as usize, a.col_ptr[col + 1] as usize);
+        let brow = &b[col * k..col * k + k];
+        for &(r, v) in &a.pairs[s..e] {
+            let crow = &mut c[r as usize * k..r as usize * k + k];
+            crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+        }
+    }
+}
+
+/// ELL row-wise (exact lengths).
+pub fn ell_rowwise(a: &Ell, b: &[f64], k: usize, c: &mut [f64]) {
+    for i in 0..a.nrows {
+        let crow = &mut c[i * k..i * k + k];
+        crow.fill(0.0);
+        for p in 0..a.row_len[i] as usize {
+            let ix = a.index(i, p);
+            let v = a.vals[ix];
+            let brow = &b[a.cols[ix] as usize * k..a.cols[ix] as usize * k + k];
+            crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+        }
+    }
+}
+
+/// ELL plane-wise (ITPACK traversal after loop interchange).
+pub fn ell_planewise(a: &Ell, b: &[f64], k: usize, c: &mut [f64]) {
+    c.fill(0.0);
+    for p in 0..a.k {
+        for i in 0..a.nrows {
+            let ix = a.index(i, p);
+            let v = a.vals[ix];
+            if v == 0.0 {
+                continue; // padding
+            }
+            let brow = &b[a.cols[ix] as usize * k..a.cols[ix] as usize * k + k];
+            let crow = &mut c[i * k..i * k + k];
+            crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+        }
+    }
+}
+
+/// JDS diagonal-major.
+pub fn jds(a: &Jds, rows: &JdsRows, b: &[f64], k: usize, c: &mut [f64]) {
+    c.fill(0.0);
+    for d in 0..a.ndiags() {
+        let s = a.jd_ptr[d] as usize;
+        for (off, &r) in rows.rows[d].iter().enumerate() {
+            let v = a.vals[s + off];
+            let col = a.cols[s + off] as usize;
+            let brow = &b[col * k..col * k + k];
+            let crow = &mut c[r as usize * k..r as usize * k + k];
+            crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+        }
+    }
+}
+
+/// BCSR: dense (br×bc)·(bc×k) micro-GEMM per block.
+pub fn bcsr(a: &Bcsr, b: &[f64], k: usize, c: &mut [f64]) {
+    c.fill(0.0);
+    let (br, bc) = (a.br, a.bc);
+    for bi in 0..a.nblock_rows {
+        let (s, e) = (a.block_row_ptr[bi] as usize, a.block_row_ptr[bi + 1] as usize);
+        let i0 = bi * br;
+        let rmax = br.min(a.nrows - i0);
+        for blk in s..e {
+            let j0 = a.block_cols[blk] as usize * bc;
+            let cmax = bc.min(a.ncols - j0);
+            let payload = &a.blocks[blk * br * bc..(blk + 1) * br * bc];
+            for r in 0..rmax {
+                let crow = &mut c[(i0 + r) * k..(i0 + r) * k + k];
+                for cc in 0..cmax {
+                    let v = payload[r * bc + cc];
+                    if v == 0.0 {
+                        continue; // block fill-in
+                    }
+                    let brow = &b[(j0 + cc) * k..(j0 + cc) * k + k];
+                    crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+                }
+            }
+        }
+    }
+}
+
+/// Hybrid ELL+COO.
+pub fn hybrid(a: &HybridEllCoo, b: &[f64], k: usize, c: &mut [f64]) {
+    ell_rowwise(&a.ell, b, k, c);
+    for i in 0..a.tail.vals.len() {
+        let (r, col, v) = (a.tail.rows[i] as usize, a.tail.cols[i] as usize, a.tail.vals[i]);
+        let brow = &b[col * k..col * k + k];
+        let crow = &mut c[r * k..r * k + k];
+        crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::prop::assert_close;
+
+    fn check_all(m: &crate::matrix::TriMat, k: usize) {
+        let b: Vec<f64> = (0..m.ncols * k).map(|i| ((i * 7 % 23) as f64 - 11.0) * 0.1).collect();
+        let want = m.spmm_ref(&b, k);
+        let mut c = vec![0.0; m.nrows * k];
+        let tol = 1e-10;
+
+        coo_aos(&CooAos::from_tuples(m, CooOrder::RowMajor), &b, k, &mut c);
+        assert_close(&c, &want, tol).unwrap();
+        coo_soa(&CooSoa::from_tuples(m, CooOrder::Unsorted), &b, k, &mut c);
+        assert_close(&c, &want, tol).unwrap();
+        csr(&Csr::from_tuples(m), &b, k, &mut c);
+        assert_close(&c, &want, tol).unwrap();
+        csr_aos(&CsrAos::from_tuples(m), &b, k, &mut c);
+        assert_close(&c, &want, tol).unwrap();
+        csc(&Csc::from_tuples(m), &b, k, &mut c);
+        assert_close(&c, &want, tol).unwrap();
+        csc_aos(&CscAos::from_tuples(m), &b, k, &mut c);
+        assert_close(&c, &want, tol).unwrap();
+        for order in [EllOrder::RowMajor, EllOrder::ColMajor] {
+            let e = Ell::from_tuples(m, order);
+            ell_rowwise(&e, &b, k, &mut c);
+            assert_close(&c, &want, tol).unwrap();
+            ell_planewise(&e, &b, k, &mut c);
+            assert_close(&c, &want, tol).unwrap();
+        }
+        let j = Jds::from_tuples(m, true);
+        let jr = JdsRows::build(&j, m);
+        jds(&j, &jr, &b, k, &mut c);
+        assert_close(&c, &want, tol).unwrap();
+        bcsr(&Bcsr::from_tuples(m, 2, 2), &b, k, &mut c);
+        assert_close(&c, &want, tol).unwrap();
+        hybrid(&HybridEllCoo::from_tuples(m, None, EllOrder::RowMajor), &b, k, &mut c);
+        assert_close(&c, &want, tol).unwrap();
+    }
+
+    #[test]
+    fn spmm_matches_oracle_small_k() {
+        check_all(&gen::uniform_random(23, 29, 150, 34), 3);
+    }
+
+    #[test]
+    fn spmm_matches_oracle_k8() {
+        check_all(&gen::powerlaw(30, 2.0, 16, 35), 8);
+    }
+
+    #[test]
+    fn spmm_k1_equals_spmv() {
+        let m = gen::banded(25, 3, 0.7, 36);
+        let x: Vec<f64> = (0..m.ncols).map(|i| i as f64 * 0.1 - 1.0).collect();
+        let mut c = vec![0.0; m.nrows];
+        csr(&Csr::from_tuples(&m), &x, 1, &mut c);
+        let want = m.spmv_ref(&x);
+        assert_close(&c, &want, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn ell_planewise_skips_padding_correctly() {
+        // A matrix whose genuine values include rows shorter than K —
+        // padding slots must not contribute even when x has garbage at 0.
+        let m = gen::powerlaw(20, 2.0, 10, 37);
+        check_all(&m, 4);
+    }
+}

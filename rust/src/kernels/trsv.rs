@@ -1,0 +1,180 @@
+//! Unit-lower triangular solve `L x = b` — the paper's third kernel
+//! (Fig 6 shows the forelem form). The storage holds the *strictly*
+//! lower part; the diagonal is implied 1. Forward substitution is
+//! inherently ordered, so (as the paper observes in §6.4.2) the legal
+//! transformation space is smaller: row-oriented formats keep the
+//! gather form, column-oriented formats become the scatter ("right-
+//! looking") form, and no ℕ\*-sorting/interchange variants are legal.
+
+use crate::storage::*;
+
+/// CSR forward substitution (gather).
+pub fn csr(l: &Csr, b: &[f64], x: &mut [f64]) {
+    x.copy_from_slice(b);
+    for i in 0..l.nrows {
+        let (s, e) = (l.row_ptr[i] as usize, l.row_ptr[i + 1] as usize);
+        let sum: f64 = l.cols[s..e]
+            .iter()
+            .zip(&l.vals[s..e])
+            .map(|(&c, &v)| v * x[c as usize])
+            .sum();
+        x[i] -= sum;
+    }
+}
+
+/// CSR AoS.
+pub fn csr_aos(l: &CsrAos, b: &[f64], x: &mut [f64]) {
+    x.copy_from_slice(b);
+    for i in 0..l.nrows {
+        let (s, e) = (l.row_ptr[i] as usize, l.row_ptr[i + 1] as usize);
+        let mut sum = 0.0;
+        for &(c, v) in &l.pairs[s..e] {
+            sum += v * x[c as usize];
+        }
+        x[i] -= sum;
+    }
+}
+
+/// CSC forward substitution (scatter / right-looking).
+pub fn csc(l: &Csc, b: &[f64], x: &mut [f64]) {
+    x.copy_from_slice(b);
+    for j in 0..l.ncols {
+        let xj = x[j];
+        let (s, e) = (l.col_ptr[j] as usize, l.col_ptr[j + 1] as usize);
+        for (&r, &v) in l.rows[s..e].iter().zip(&l.vals[s..e]) {
+            x[r as usize] -= v * xj;
+        }
+    }
+}
+
+/// CSC AoS.
+pub fn csc_aos(l: &CscAos, b: &[f64], x: &mut [f64]) {
+    x.copy_from_slice(b);
+    for j in 0..l.ncols {
+        let xj = x[j];
+        let (s, e) = (l.col_ptr[j] as usize, l.col_ptr[j + 1] as usize);
+        for &(r, v) in &l.pairs[s..e] {
+            x[r as usize] -= v * xj;
+        }
+    }
+}
+
+/// Row-major COO: a single pass works because entries are grouped by row
+/// in ascending order and cols < row are already solved.
+pub fn coo_rowmajor(l: &CooAos, b: &[f64], x: &mut [f64]) {
+    debug_assert_eq!(l.order, CooOrder::RowMajor);
+    x.copy_from_slice(b);
+    let mut idx = 0usize;
+    let n = l.tuples.len();
+    for i in 0..l.nrows {
+        let mut sum = 0.0;
+        while idx < n && l.tuples[idx].0 as usize == i {
+            let (_, c, v) = l.tuples[idx];
+            sum += v * x[c as usize];
+            idx += 1;
+        }
+        x[i] -= sum;
+    }
+}
+
+/// ELL row-wise.
+pub fn ell_rowwise(l: &Ell, b: &[f64], x: &mut [f64]) {
+    x.copy_from_slice(b);
+    for i in 0..l.nrows {
+        let mut sum = 0.0;
+        for p in 0..l.row_len[i] as usize {
+            let ix = l.index(i, p);
+            sum += l.vals[ix] * x[l.cols[ix] as usize];
+        }
+        x[i] -= sum;
+    }
+}
+
+/// Hybrid ELL+COO (tail is row-major: merge two row cursors).
+pub fn hybrid(l: &HybridEllCoo, b: &[f64], x: &mut [f64]) {
+    x.copy_from_slice(b);
+    let e = &l.ell;
+    let t = &l.tail;
+    let mut tidx = 0usize;
+    for i in 0..l.nrows {
+        let mut sum = 0.0;
+        for p in 0..e.row_len[i] as usize {
+            let ix = e.index(i, p);
+            sum += e.vals[ix] * x[e.cols[ix] as usize];
+        }
+        while tidx < t.rows.len() && t.rows[tidx] as usize == i {
+            sum += t.vals[tidx] * x[t.cols[tidx] as usize];
+            tidx += 1;
+        }
+        x[i] -= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::util::prop::assert_close;
+
+    fn check_all(m: &crate::matrix::TriMat) {
+        let l = m.strictly_lower();
+        let b: Vec<f64> = (0..l.nrows).map(|i| ((i % 13) as f64 - 6.0) * 0.5).collect();
+        let want = l.trsv_unit_lower_ref(&b);
+        let mut x = vec![0.0; l.nrows];
+        let tol = 1e-9;
+
+        csr(&Csr::from_tuples(&l), &b, &mut x);
+        assert_close(&x, &want, tol).unwrap();
+        csr_aos(&CsrAos::from_tuples(&l), &b, &mut x);
+        assert_close(&x, &want, tol).unwrap();
+        csc(&Csc::from_tuples(&l), &b, &mut x);
+        assert_close(&x, &want, tol).unwrap();
+        csc_aos(&CscAos::from_tuples(&l), &b, &mut x);
+        assert_close(&x, &want, tol).unwrap();
+        coo_rowmajor(&CooAos::from_tuples(&l, CooOrder::RowMajor), &b, &mut x);
+        assert_close(&x, &want, tol).unwrap();
+        ell_rowwise(&Ell::from_tuples(&l, EllOrder::RowMajor), &b, &mut x);
+        assert_close(&x, &want, tol).unwrap();
+        ell_rowwise(&Ell::from_tuples(&l, EllOrder::ColMajor), &b, &mut x);
+        assert_close(&x, &want, tol).unwrap();
+        hybrid(&HybridEllCoo::from_tuples(&l, None, EllOrder::RowMajor), &b, &mut x);
+        assert_close(&x, &want, tol).unwrap();
+    }
+
+    #[test]
+    fn trsv_matches_oracle_random() {
+        check_all(&gen::uniform_random(40, 40, 300, 38));
+    }
+
+    #[test]
+    fn trsv_matches_oracle_banded() {
+        check_all(&gen::banded(50, 4, 0.7, 39));
+    }
+
+    #[test]
+    fn trsv_matches_oracle_fem() {
+        check_all(&gen::fem_blocks(12, 3, 3, 40));
+    }
+
+    #[test]
+    fn identity_solve_is_b() {
+        let l = crate::matrix::TriMat::new(5, 5); // no strictly-lower entries
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut x = vec![0.0; 5];
+        csr(&Csr::from_tuples(&l), &b, &mut x);
+        assert_eq!(x, b);
+    }
+
+    #[test]
+    fn solve_then_multiply_recovers_b() {
+        let m = gen::uniform_random(30, 30, 200, 41);
+        let l = m.strictly_lower();
+        let b: Vec<f64> = (0..30).map(|i| (i as f64 * 0.7).cos()).collect();
+        let mut x = vec![0.0; 30];
+        csc(&Csc::from_tuples(&l), &b, &mut x);
+        // (I + L) x == b
+        let lx = l.spmv_ref(&x);
+        let back: Vec<f64> = (0..30).map(|i| x[i] + lx[i]).collect();
+        assert_close(&back, &b, 1e-9).unwrap();
+    }
+}

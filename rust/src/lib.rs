@@ -1,0 +1,23 @@
+//! # forelem
+//!
+//! Reproduction of Rietveld & Wijshoff, *Automatic Compiler-Based Data
+//! Structure Generation* (CS.DC 2022): the forelem framework — programs
+//! specified over tuple reservoirs with no fixed data structure, from
+//! which the "compiler" (this library) derives both loop nests and
+//! physical data structures via chains of IR transformations, then
+//! concretizes and executes them. See DESIGN.md for the experiment map.
+
+pub mod matrix;
+pub mod storage;
+pub mod kernels;
+pub mod baselines;
+pub mod forelem;
+pub mod transforms;
+pub mod concretize;
+pub mod search;
+pub mod bench;
+pub mod runtime;
+pub mod coordinator;
+pub mod distrib;
+pub mod relational;
+pub mod util;

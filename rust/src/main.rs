@@ -1,0 +1,225 @@
+//! forelem CLI — the L3 entrypoint.
+//!
+//! ```text
+//! forelem enumerate [--kernel spmv|spmm|trsv]     Fig 10 tree report
+//! forelem derive                                  Fig 8 derivation chains (IR at each step)
+//! forelem codegen --variant vNNN [--kernel spmv]  generated C-like code for a variant
+//! forelem table1|table2|table3 [--quick]          paper reduction tables (both archs)
+//! forelem table4|table5|fig11  [--quick]          coverage / selection analyses
+//! forelem bench-all [--quick] [--out FILE]        everything, appended to FILE
+//! forelem suite                                   print the 20-matrix suite statistics
+//! ```
+
+use forelem::baselines::Kernel;
+use forelem::bench::tables;
+use forelem::coordinator::sweep::{Arch, SweepConfig};
+use forelem::util::cli::Args;
+
+fn kernel_of(args: &Args) -> Kernel {
+    match args.get_or("kernel", "spmv") {
+        "spmv" => Kernel::Spmv,
+        "spmm" => Kernel::Spmm,
+        "trsv" => Kernel::Trsv,
+        other => {
+            eprintln!("unknown kernel '{other}' (spmv|spmm|trsv)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn sweep_cfg(args: &Args) -> SweepConfig {
+    let mut cfg = if args.flag("quick") { SweepConfig::quick() } else { SweepConfig::default() };
+    if let Some(k) = args.get("spmm-k") {
+        cfg.spmm_k = k.parse().expect("--spmm-k integer");
+    }
+    if let Some(n) = args.get("matrices") {
+        let n: usize = n.parse().expect("--matrices integer");
+        cfg.matrices = Some((0..n.min(20)).collect());
+    }
+    cfg
+}
+
+fn emit(args: &Args, text: &str) {
+    println!("{text}");
+    if let Some(path) = args.get("out") {
+        tables::record(path, text).expect("writing --out file");
+    }
+}
+
+fn cmd_derive() -> String {
+    use forelem::forelem::ir::{NStarMat, Orth};
+    use forelem::forelem::{build, pretty};
+    use forelem::transforms::{apply_chain, Step};
+    let chains: Vec<(&str, Vec<Step>)> = vec![
+        (
+            "Fig 8 main path → ITPACK (ELL column-major)",
+            vec![
+                Step::Orthogonalize(Orth::Row),
+                Step::Materialize,
+                Step::Split,
+                Step::NStar(NStarMat::Padded),
+                Step::Interchange,
+            ],
+        ),
+        (
+            "Fig 8 gray path → CSR",
+            vec![
+                Step::Orthogonalize(Orth::Row),
+                Step::Materialize,
+                Step::Split,
+                Step::NStar(NStarMat::Exact),
+                Step::DimReduce,
+            ],
+        ),
+        (
+            "column start → CCS",
+            vec![
+                Step::Orthogonalize(Orth::Col),
+                Step::Materialize,
+                Step::Split,
+                Step::NStar(NStarMat::Exact),
+                Step::DimReduce,
+            ],
+        ),
+        (
+            "ℕ*-sorted + interchange → JDS",
+            vec![
+                Step::Orthogonalize(Orth::Row),
+                Step::Materialize,
+                Step::Split,
+                Step::NStarSort,
+                Step::NStar(NStarMat::Exact),
+                Step::Interchange,
+                Step::DimReduce,
+            ],
+        ),
+    ];
+    let mut out = String::from("## Fig 5/6/7 — the paper-faithful kernel specifications\n");
+    out.push_str(&pretty::render(&forelem::forelem::specs::spmv_fig5()));
+    for p in forelem::forelem::specs::trsv_fig6() {
+        out.push('\n');
+        out.push_str(&pretty::render(&p));
+    }
+    for p in forelem::forelem::specs::lu_fig7() {
+        out.push('\n');
+        out.push_str(&pretty::render(&p));
+    }
+    out.push_str("\n## Fig 8 — derivation chains (IR after each step)\n");
+    for (name, steps) in chains {
+        out.push_str(&format!("\n==== {name} ====\n"));
+        let mut prefix: Vec<Step> = Vec::new();
+        // initial form
+        let s0 = apply_chain(Kernel::Spmv, &[]).unwrap();
+        out.push_str(&pretty::render(&build::program(&s0)));
+        for st in steps {
+            prefix.push(st);
+            let s = apply_chain(Kernel::Spmv, &prefix).unwrap();
+            out.push('\n');
+            out.push_str(&pretty::render(&build::program(&s)));
+        }
+        let s = apply_chain(Kernel::Spmv, &prefix).unwrap();
+        let plans = forelem::concretize::plans(&s).unwrap();
+        for p in plans {
+            out.push_str(&format!("\n→ concretizes to: {}\n", p.layout.literature_name()));
+            out.push_str(&forelem::concretize::codegen::emit(Kernel::Spmv, &p));
+        }
+    }
+    out
+}
+
+fn cmd_codegen(args: &Args) -> String {
+    let kernel = kernel_of(args);
+    let tree = forelem::search::enumerate(kernel);
+    let id = args.get_or("variant", "v001");
+    let Some(v) = tree.variants.iter().find(|v| v.id == id) else {
+        return format!("no variant '{id}' (have v001..v{:03})", tree.variants.len());
+    };
+    format!(
+        "variant {} — {}\nderivation: {}\n\n{}",
+        v.id,
+        v.plan.layout.literature_name(),
+        v.derivation,
+        forelem::concretize::codegen::emit(kernel, &v.plan)
+    )
+}
+
+fn cmd_suite() -> String {
+    let mut out = String::from("## 20-matrix suite (synthetic stand-ins; DESIGN.md §5)\n");
+    out.push_str(&format!(
+        "{:<12} {:>8} {:>10} {:>8} {:>10}\n",
+        "name", "n", "nnz", "maxrow", "nnz/row"
+    ));
+    for e in &forelem::matrix::suite::SUITE {
+        let m = e.build();
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>10} {:>8} {:>10.1}\n",
+            e.name,
+            m.nrows,
+            m.nnz(),
+            m.max_row_nnz(),
+            m.nnz() as f64 / m.nrows as f64
+        ));
+    }
+    out
+}
+
+fn main() {
+    let args = Args::parse();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    match sub.as_str() {
+        "enumerate" | "fig10" => emit(&args, &tables::fig10()),
+        "derive" => emit(&args, &cmd_derive()),
+        "codegen" => emit(&args, &cmd_codegen(&args)),
+        "suite" => emit(&args, &cmd_suite()),
+        "table1" | "table2" | "table3" => {
+            let cfg = sweep_cfg(&args);
+            let xla = tables::try_xla();
+            let (txt, ..) = match sub.as_str() {
+                "table1" => tables::table1(&cfg, xla.as_ref()),
+                "table2" => tables::table2(&cfg, xla.as_ref()),
+                _ => tables::table3(&cfg, xla.as_ref()),
+            };
+            emit(&args, &txt);
+        }
+        "table4" | "table5" | "fig11" => {
+            let cfg = sweep_cfg(&args);
+            let xla = tables::try_xla();
+            let a = tables::run_sweep(Kernel::Spmv, Arch::HostSmall, &cfg, xla.as_ref());
+            let b = tables::run_sweep(Kernel::Spmv, Arch::HostLarge, &cfg, xla.as_ref());
+            let txt = match sub.as_str() {
+                "table4" => tables::table4(&[&a, &b]),
+                "table5" => tables::table5(&[&a, &b], args.get_usize("seed", 2022) as u64),
+                _ => format!("{}\n{}", tables::fig11(&a), tables::fig11(&b)),
+            };
+            emit(&args, &txt);
+        }
+        "bench-all" => {
+            let cfg = sweep_cfg(&args);
+            let xla = tables::try_xla();
+            eprintln!(
+                "xla backend: {}",
+                xla.as_ref().map(|b| b.platform()).unwrap_or_else(|| "absent".into())
+            );
+            emit(&args, &tables::fig10());
+            let (t1, a1, b1) = tables::table1(&cfg, xla.as_ref());
+            emit(&args, &t1);
+            let (t2, a2, b2) = tables::table2(&cfg, xla.as_ref());
+            emit(&args, &t2);
+            let (t3, a3, b3) = tables::table3(&cfg, xla.as_ref());
+            emit(&args, &t3);
+            let sweeps = [&a1, &b1, &a2, &b2, &a3, &b3];
+            emit(&args, &tables::table4(&sweeps));
+            emit(&args, &tables::table5(&sweeps, args.get_usize("seed", 2022) as u64));
+            emit(&args, &tables::fig11(&a1));
+            emit(&args, &tables::fig11(&b1));
+        }
+        _ => {
+            println!(
+                "forelem — automatic compiler-based data structure generation\n\
+                 subcommands: enumerate derive codegen suite table1 table2 table3\n\
+                 \x20            table4 table5 fig11 bench-all\n\
+                 flags: --quick --kernel K --variant vNNN --spmm-k N --matrices N --out FILE"
+            );
+        }
+    }
+}

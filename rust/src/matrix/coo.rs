@@ -1,0 +1,290 @@
+//! Triplet ("tuple") sparse matrix — the *disassembled* form of the paper:
+//! a sparse matrix is exactly a reservoir of `⟨row, col⟩_A` token tuples
+//! with the value `A(row, col)` attached (paper §2.2.2). Every generated
+//! data structure in `storage/` is (re)assembled from this type.
+
+use crate::util::rng::Rng;
+
+/// One nonzero entry: the token tuple `⟨row, col⟩` plus its data value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Entry {
+    pub row: u32,
+    pub col: u32,
+    pub val: f64,
+}
+
+/// A sparse matrix as an unordered multiset-free collection of entries.
+/// Invariant (checked by `validate`): no duplicate (row, col) pairs,
+/// all indices in bounds.
+#[derive(Clone, Debug, Default)]
+pub struct TriMat {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub entries: Vec<Entry>,
+}
+
+impl TriMat {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        TriMat { nrows, ncols, entries: Vec::new() }
+    }
+
+    pub fn with_entries(nrows: usize, ncols: usize, entries: Vec<Entry>) -> Self {
+        TriMat { nrows, ncols, entries }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn push(&mut self, row: usize, col: usize, val: f64) {
+        debug_assert!(row < self.nrows && col < self.ncols);
+        self.entries.push(Entry { row: row as u32, col: col as u32, val });
+    }
+
+    /// Check the reservoir invariants. Returns an error description.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::with_capacity(self.nnz() * 2);
+        for e in &self.entries {
+            if e.row as usize >= self.nrows || e.col as usize >= self.ncols {
+                return Err(format!("entry ({}, {}) out of bounds {}x{}", e.row, e.col, self.nrows, self.ncols));
+            }
+            if !seen.insert(((e.row as u64) << 32) | e.col as u64) {
+                return Err(format!("duplicate entry ({}, {})", e.row, e.col));
+            }
+            if !e.val.is_finite() {
+                return Err(format!("non-finite value at ({}, {})", e.row, e.col));
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge duplicate coordinates by summing their values (MatrixMarket
+    /// files and generators may produce duplicates).
+    pub fn sum_duplicates(&mut self) {
+        let mut map = std::collections::HashMap::with_capacity(self.nnz() * 2);
+        for e in &self.entries {
+            *map.entry(((e.row as u64) << 32) | e.col as u64).or_insert(0.0) += e.val;
+        }
+        let mut entries: Vec<Entry> = map
+            .into_iter()
+            .map(|(k, v)| Entry { row: (k >> 32) as u32, col: (k & 0xFFFF_FFFF) as u32, val: v })
+            .collect();
+        entries.sort_unstable_by_key(|e| (e.row, e.col));
+        self.entries = entries;
+    }
+
+    /// Row-major sort (row, then col).
+    pub fn sort_row_major(&mut self) {
+        self.entries.sort_unstable_by_key(|e| (e.row, e.col));
+    }
+
+    /// Column-major sort (col, then row).
+    pub fn sort_col_major(&mut self) {
+        self.entries.sort_unstable_by_key(|e| (e.col, e.row));
+    }
+
+    /// Shuffle entries — used by tests to confirm order-insensitivity of
+    /// the forelem pipeline ("iteration order explicitly undefined").
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        rng.shuffle(&mut self.entries);
+    }
+
+    /// Number of nonzeros per row.
+    pub fn row_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.nrows];
+        for e in &self.entries {
+            c[e.row as usize] += 1;
+        }
+        c
+    }
+
+    /// Number of nonzeros per column.
+    pub fn col_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.ncols];
+        for e in &self.entries {
+            c[e.col as usize] += 1;
+        }
+        c
+    }
+
+    /// Maximum nonzeros in any row (the ITPACK/ELL width K).
+    pub fn max_row_nnz(&self) -> usize {
+        self.row_counts().into_iter().max().unwrap_or(0)
+    }
+
+    /// Extract the unit-lower-triangular system used by the TrSv
+    /// experiments: strictly-lower part of `self` (diagonal implied 1).
+    pub fn strictly_lower(&self) -> TriMat {
+        let entries = self
+            .entries
+            .iter()
+            .copied()
+            .filter(|e| e.col < e.row)
+            .collect();
+        TriMat { nrows: self.nrows, ncols: self.ncols, entries }
+    }
+
+    /// Transpose (swaps the token fields of every tuple).
+    pub fn transpose(&self) -> TriMat {
+        TriMat {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            entries: self
+                .entries
+                .iter()
+                .map(|e| Entry { row: e.col, col: e.row, val: e.val })
+                .collect(),
+        }
+    }
+
+    /// Dense row-major expansion (oracle-sized matrices only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for e in &self.entries {
+            d[e.row as usize * self.ncols + e.col as usize] += e.val;
+        }
+        d
+    }
+
+    /// Dense-oracle SpMV: `y = A x` computed from the dense expansion-free
+    /// triplet walk (order independent, exact reference).
+    pub fn spmv_ref(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for e in &self.entries {
+            y[e.row as usize] += e.val * x[e.col as usize];
+        }
+        y
+    }
+
+    /// Dense-oracle SpMM: `C = A B` with `B` dense `ncols × k`, row-major.
+    pub fn spmm_ref(&self, b: &[f64], k: usize) -> Vec<f64> {
+        assert_eq!(b.len(), self.ncols * k);
+        let mut c = vec![0.0; self.nrows * k];
+        for e in &self.entries {
+            let (r, cc, v) = (e.row as usize, e.col as usize, e.val);
+            let brow = &b[cc * k..cc * k + k];
+            let crow = &mut c[r * k..r * k + k];
+            for j in 0..k {
+                crow[j] += v * brow[j];
+            }
+        }
+        c
+    }
+
+    /// Oracle unit-lower triangular solve `L x = b` where `L` has implied
+    /// unit diagonal and `self` holds the strictly-lower entries.
+    pub fn trsv_unit_lower_ref(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(self.nrows, self.ncols);
+        assert_eq!(b.len(), self.nrows);
+        // Gather strictly-lower entries by row, then forward substitution.
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.nrows];
+        for e in &self.entries {
+            assert!(e.col < e.row, "trsv oracle expects strictly-lower input");
+            rows[e.row as usize].push((e.col as usize, e.val));
+        }
+        let mut x = b.to_vec();
+        for i in 0..self.nrows {
+            let mut s = 0.0;
+            for &(j, v) in &rows[i] {
+                s += v * x[j];
+            }
+            x[i] -= s;
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TriMat {
+        // [ 1 0 2 ]
+        // [ 0 3 0 ]
+        // [ 4 0 5 ]
+        let mut m = TriMat::new(3, 3);
+        m.push(0, 0, 1.0);
+        m.push(0, 2, 2.0);
+        m.push(1, 1, 3.0);
+        m.push(2, 0, 4.0);
+        m.push(2, 2, 5.0);
+        m
+    }
+
+    #[test]
+    fn validate_ok_and_duplicates() {
+        let mut m = small();
+        assert!(m.validate().is_ok());
+        m.push(0, 0, 9.0);
+        assert!(m.validate().is_err());
+        m.sum_duplicates();
+        assert!(m.validate().is_ok());
+        assert_eq!(m.nnz(), 5);
+        let d = m.to_dense();
+        assert_eq!(d[0], 10.0); // 1 + 9
+    }
+
+    #[test]
+    fn spmv_oracle() {
+        let m = small();
+        let y = m.spmv_ref(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn spmm_oracle_matches_repeated_spmv() {
+        let m = small();
+        let k = 2;
+        let b = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0]; // 3x2 row-major
+        let c = m.spmm_ref(&b, k);
+        for j in 0..k {
+            let x: Vec<f64> = (0..3).map(|i| b[i * k + j]).collect();
+            let y = m.spmv_ref(&x);
+            for i in 0..3 {
+                assert!((c[i * k + j] - y[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = small();
+        let mut tt = m.transpose().transpose();
+        tt.sort_row_major();
+        let mut orig = m.clone();
+        orig.sort_row_major();
+        assert_eq!(tt.entries, orig.entries);
+    }
+
+    #[test]
+    fn lower_and_trsv() {
+        // L = I + strictly lower [[0,0],[2,0]]
+        let mut m = TriMat::new(2, 2);
+        m.push(1, 0, 2.0);
+        m.push(0, 1, 7.0); // upper entry must be filtered by strictly_lower
+        let l = m.strictly_lower();
+        assert_eq!(l.nnz(), 1);
+        let x = l.trsv_unit_lower_ref(&[1.0, 5.0]);
+        assert_eq!(x, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn counts() {
+        let m = small();
+        assert_eq!(m.row_counts(), vec![2, 1, 2]);
+        assert_eq!(m.col_counts(), vec![2, 1, 2]);
+        assert_eq!(m.max_row_nnz(), 2);
+    }
+
+    #[test]
+    fn spmv_order_independent() {
+        let mut m = small();
+        let x = vec![0.5, -1.5, 2.0];
+        let y0 = m.spmv_ref(&x);
+        let mut rng = Rng::new(99);
+        m.shuffle(&mut rng);
+        let y1 = m.spmv_ref(&x);
+        assert_eq!(y0, y1);
+    }
+}

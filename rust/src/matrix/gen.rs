@@ -1,0 +1,289 @@
+//! Synthetic sparse-matrix generators reproducing the *structural
+//! classes* of the paper's 20 UF-collection matrices (DESIGN.md §5):
+//! Erdős–Rényi / power-law graphs, banded finite-difference stencils,
+//! FEM meshes with dense node blocks, circuit/power networks, LP/netflow
+//! constraint matrices. What drives the paper's results is the diversity
+//! of row/column fill distributions, bandwidth and block structure —
+//! which these generators control directly.
+
+use crate::matrix::coo::TriMat;
+use crate::util::rng::Rng;
+
+fn val(rng: &mut Rng) -> f64 {
+    // Values bounded away from zero so cancellation doesn't mask bugs.
+    let v = rng.gen_f64_range(0.1, 2.0);
+    if rng.gen_bool(0.5) { v } else { -v }
+}
+
+/// Uniform random matrix: each of `nnz` entries at a uniform (row, col).
+pub fn uniform_random(nrows: usize, ncols: usize, nnz: usize, seed: u64) -> TriMat {
+    let mut rng = Rng::new(seed);
+    let mut m = TriMat::new(nrows, ncols);
+    for _ in 0..nnz {
+        m.push(rng.gen_range(nrows), rng.gen_range(ncols), val(&mut rng));
+    }
+    m.sum_duplicates();
+    m
+}
+
+/// Erdős–Rényi directed graph adjacency (Erdos971-class: small, sparse,
+/// irregular). `avg_degree` expected out-degree.
+pub fn erdos_renyi(n: usize, avg_degree: f64, seed: u64) -> TriMat {
+    let nnz = (n as f64 * avg_degree) as usize;
+    uniform_random(n, n, nnz, seed)
+}
+
+/// Power-law ("scale-free") graph: out-degrees drawn from a truncated
+/// Pareto; models circuit (G2_circuit, Raj1) and web/social structure.
+/// A handful of high-degree hub rows with many short rows.
+pub fn powerlaw(n: usize, alpha: f64, max_degree: usize, seed: u64) -> TriMat {
+    let mut rng = Rng::new(seed);
+    let mut m = TriMat::new(n, n);
+    for i in 0..n {
+        let deg = rng.gen_powerlaw(max_degree, alpha).min(n);
+        let cols = rng.sample_distinct(n, deg);
+        for c in cols {
+            m.push(i, c, val(&mut rng));
+        }
+    }
+    m.sum_duplicates();
+    m
+}
+
+/// Banded matrix: `band` diagonals on each side of the main diagonal,
+/// each kept with probability `fill`. Models FDM/oil-reservoir matrices
+/// (Orsreg_1, blckhole-class).
+pub fn banded(n: usize, band: usize, fill: f64, seed: u64) -> TriMat {
+    let mut rng = Rng::new(seed);
+    let mut m = TriMat::new(n, n);
+    for i in 0..n {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band + 1).min(n);
+        for j in lo..hi {
+            if i == j || rng.gen_bool(fill) {
+                m.push(i, j, val(&mut rng));
+            }
+        }
+    }
+    m
+}
+
+/// 2-D 5-point Laplacian stencil on a `gx × gy` grid (classic PDE
+/// structure; stomach/3dtube-class regularity).
+pub fn laplacian_2d(gx: usize, gy: usize, seed: u64) -> TriMat {
+    let mut rng = Rng::new(seed);
+    let n = gx * gy;
+    let mut m = TriMat::new(n, n);
+    for y in 0..gy {
+        for x in 0..gx {
+            let i = y * gx + x;
+            m.push(i, i, 4.0 + 0.01 * rng.gen_f64());
+            if x > 0 {
+                m.push(i, i - 1, -1.0 - 0.01 * rng.gen_f64());
+            }
+            if x + 1 < gx {
+                m.push(i, i + 1, -1.0 - 0.01 * rng.gen_f64());
+            }
+            if y > 0 {
+                m.push(i, i - gx, -1.0 - 0.01 * rng.gen_f64());
+            }
+            if y + 1 < gy {
+                m.push(i, i + gx, -1.0 - 0.01 * rng.gen_f64());
+            }
+        }
+    }
+    m
+}
+
+/// FEM-style matrix: nodes carry `block`-sized dense blocks and couple to
+/// a few random geometric neighbours (shipsec/consph/pdb1HYS-class: high
+/// nnz/row, strong block structure).
+pub fn fem_blocks(nodes: usize, block: usize, neighbors: usize, seed: u64) -> TriMat {
+    let mut rng = Rng::new(seed);
+    let n = nodes * block;
+    let mut m = TriMat::new(n, n);
+    for node in 0..nodes {
+        // Self-coupling dense block.
+        let mut coupled = vec![node];
+        // Geometric-ish neighbours: close node ids couple (mesh locality),
+        // plus occasional long-range coupling.
+        for _ in 0..neighbors {
+            let off = 1 + rng.gen_range(8);
+            let nb = if rng.gen_bool(0.9) {
+                if rng.gen_bool(0.5) { node.saturating_sub(off) } else { (node + off).min(nodes - 1) }
+            } else {
+                rng.gen_range(nodes)
+            };
+            coupled.push(nb);
+        }
+        coupled.sort_unstable();
+        coupled.dedup();
+        for &nb in &coupled {
+            for bi in 0..block {
+                for bj in 0..block {
+                    m.push(node * block + bi, nb * block + bj, val(&mut rng));
+                }
+            }
+        }
+    }
+    m.sum_duplicates();
+    m
+}
+
+/// LP / network-constraint matrix: rectangular-feeling structure inside a
+/// square: most rows short (2–4 entries), a few dense coupling rows
+/// (c-62 / net150 / lhr71-class skew).
+pub fn constraint(n: usize, dense_rows: usize, dense_len: usize, seed: u64) -> TriMat {
+    let mut rng = Rng::new(seed);
+    let mut m = TriMat::new(n, n);
+    for i in 0..n {
+        let deg = 2 + rng.gen_range(3);
+        for c in rng.sample_distinct(n, deg.min(n)) {
+            m.push(i, c, val(&mut rng));
+        }
+    }
+    for _ in 0..dense_rows {
+        let i = rng.gen_range(n);
+        for c in rng.sample_distinct(n, dense_len.min(n)) {
+            m.push(i, c, val(&mut rng));
+        }
+    }
+    m.sum_duplicates();
+    m
+}
+
+/// Electrical-network matrix: sparse symmetric-ish stencil with a few
+/// hub nodes (OPF_10000 / G2_circuit-class).
+pub fn circuit(n: usize, hubs: usize, hub_degree: usize, seed: u64) -> TriMat {
+    let mut rng = Rng::new(seed);
+    let mut m = TriMat::new(n, n);
+    for i in 0..n {
+        m.push(i, i, 2.0 + rng.gen_f64());
+        // couple to 1-3 nearby nodes, symmetric
+        let deg = 1 + rng.gen_range(3);
+        for _ in 0..deg {
+            let off = 1 + rng.gen_range(16);
+            let j = (i + off) % n;
+            let v = val(&mut rng);
+            m.push(i, j, v);
+            m.push(j, i, v);
+        }
+    }
+    for _ in 0..hubs {
+        let h = rng.gen_range(n);
+        for c in rng.sample_distinct(n, hub_degree.min(n)) {
+            let v = val(&mut rng);
+            m.push(h, c, v);
+            m.push(c, h, v);
+        }
+    }
+    m.sum_duplicates();
+    m
+}
+
+/// Census/redistricting adjacency (or2010-class): planar-ish graph —
+/// short rows of nearly constant degree, strong locality.
+pub fn planar_adjacency(n: usize, seed: u64) -> TriMat {
+    let mut rng = Rng::new(seed);
+    let mut m = TriMat::new(n, n);
+    let side = (n as f64).sqrt() as usize + 1;
+    for i in 0..n {
+        m.push(i, i, 1.0 + rng.gen_f64());
+        for &off in &[1usize, side, side - 1, side + 1] {
+            if rng.gen_bool(0.8) && i + off < n {
+                let v = val(&mut rng);
+                m.push(i, i + off, v);
+                m.push(i + off, i, v);
+            }
+        }
+    }
+    m.sum_duplicates();
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_dims_and_validity() {
+        let m = uniform_random(100, 80, 500, 1);
+        assert_eq!((m.nrows, m.ncols), (100, 80));
+        assert!(m.nnz() > 400 && m.nnz() <= 500); // duplicates merged
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = powerlaw(200, 2.1, 50, 7);
+        let b = powerlaw(200, 2.1, 50, 7);
+        assert_eq!(a.entries, b.entries);
+        let c = powerlaw(200, 2.1, 50, 8);
+        assert_ne!(a.entries, c.entries);
+    }
+
+    #[test]
+    fn banded_bandwidth_respected() {
+        let m = banded(50, 3, 0.7, 2);
+        m.validate().unwrap();
+        for e in &m.entries {
+            let d = (e.row as i64 - e.col as i64).abs();
+            assert!(d <= 3);
+        }
+        // full diagonal present
+        assert!(m.row_counts().iter().all(|&c| c >= 1));
+    }
+
+    #[test]
+    fn laplacian_structure() {
+        let m = laplacian_2d(8, 8, 0);
+        m.validate().unwrap();
+        assert_eq!(m.nrows, 64);
+        // interior rows have 5 entries
+        assert_eq!(m.max_row_nnz(), 5);
+        assert_eq!(m.nnz(), 64 + 2 * (7 * 8) * 2); // diag + horiz + vert edges both dirs
+    }
+
+    #[test]
+    fn fem_blocks_have_block_rows() {
+        let m = fem_blocks(20, 3, 4, 3);
+        m.validate().unwrap();
+        assert_eq!(m.nrows, 60);
+        // every row contains at least its own dense block → ≥ block entries
+        assert!(m.row_counts().iter().all(|&c| c >= 3));
+    }
+
+    #[test]
+    fn powerlaw_is_skewed() {
+        let m = powerlaw(500, 2.0, 200, 11);
+        m.validate().unwrap();
+        let counts = m.row_counts();
+        let max = *counts.iter().max().unwrap();
+        let mean = counts.iter().sum::<usize>() as f64 / counts.len() as f64;
+        assert!(max as f64 > 5.0 * mean, "expected skew: max {max}, mean {mean}");
+    }
+
+    #[test]
+    fn circuit_roughly_symmetric_pattern() {
+        let m = circuit(300, 3, 30, 5);
+        m.validate().unwrap();
+        let set: std::collections::HashSet<(u32, u32)> =
+            m.entries.iter().map(|e| (e.row, e.col)).collect();
+        let sym = m.entries.iter().filter(|e| set.contains(&(e.col, e.row))).count();
+        assert!(sym as f64 > 0.95 * m.nnz() as f64);
+    }
+
+    #[test]
+    fn constraint_has_dense_rows() {
+        let m = constraint(400, 4, 120, 9);
+        m.validate().unwrap();
+        assert!(m.max_row_nnz() >= 100);
+    }
+
+    #[test]
+    fn planar_short_rows() {
+        let m = planar_adjacency(400, 13);
+        m.validate().unwrap();
+        assert!(m.max_row_nnz() <= 10);
+    }
+}

@@ -1,0 +1,201 @@
+//! MatrixMarket coordinate-format I/O. The paper's evaluation uses 20
+//! matrices from the UF (SuiteSparse) collection distributed as `.mtx`;
+//! we support reading real files when available and writing our synthetic
+//! suite out in the same format for inspection/interchange.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::matrix::coo::TriMat;
+
+#[derive(Debug, thiserror::Error)]
+pub enum MmError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("unsupported MatrixMarket variant: {0}")]
+    Unsupported(String),
+}
+
+/// Parse MatrixMarket from a reader. Supports `matrix coordinate
+/// real|integer|pattern general|symmetric|skew-symmetric`.
+pub fn read_matrix_market<R: BufRead>(r: R) -> Result<TriMat, MmError> {
+    let mut lines = r.lines().enumerate();
+
+    // Header line.
+    let (mut lineno, header) = loop {
+        match lines.next() {
+            Some((i, l)) => {
+                let l = l?;
+                if !l.trim().is_empty() {
+                    break (i, l);
+                }
+            }
+            None => {
+                return Err(MmError::Parse { line: 0, msg: "empty file".into() });
+            }
+        }
+    };
+    let h: Vec<String> = header.split_whitespace().map(|s| s.to_ascii_lowercase()).collect();
+    if h.len() < 5 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
+        return Err(MmError::Parse { line: lineno + 1, msg: format!("bad header '{header}'") });
+    }
+    if h[2] != "coordinate" {
+        return Err(MmError::Unsupported(format!("format '{}'", h[2])));
+    }
+    let field = h[3].clone();
+    if !matches!(field.as_str(), "real" | "integer" | "pattern") {
+        return Err(MmError::Unsupported(format!("field '{field}'")));
+    }
+    let symmetry = h[4].clone();
+    if !matches!(symmetry.as_str(), "general" | "symmetric" | "skew-symmetric") {
+        return Err(MmError::Unsupported(format!("symmetry '{symmetry}'")));
+    }
+
+    // Size line (skipping comments).
+    let size_line = loop {
+        match lines.next() {
+            Some((i, l)) => {
+                lineno = i;
+                let l = l?;
+                let t = l.trim().to_string();
+                if t.is_empty() || t.starts_with('%') {
+                    continue;
+                }
+                break t;
+            }
+            None => return Err(MmError::Parse { line: lineno + 1, msg: "missing size line".into() }),
+        }
+    };
+    let parts: Vec<&str> = size_line.split_whitespace().collect();
+    if parts.len() != 3 {
+        return Err(MmError::Parse { line: lineno + 1, msg: format!("bad size line '{size_line}'") });
+    }
+    let nrows: usize = parts[0].parse().map_err(|_| MmError::Parse { line: lineno + 1, msg: "bad nrows".into() })?;
+    let ncols: usize = parts[1].parse().map_err(|_| MmError::Parse { line: lineno + 1, msg: "bad ncols".into() })?;
+    let nnz: usize = parts[2].parse().map_err(|_| MmError::Parse { line: lineno + 1, msg: "bad nnz".into() })?;
+
+    let mut m = TriMat::new(nrows, ncols);
+    m.entries.reserve(if symmetry == "general" { nnz } else { nnz * 2 });
+    let mut read = 0usize;
+    for (i, l) in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or(MmError::Parse { line: i + 1, msg: "bad row index".into() })?;
+        let c: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or(MmError::Parse { line: i + 1, msg: "bad col index".into() })?;
+        let v: f64 = if field == "pattern" {
+            1.0
+        } else {
+            it.next()
+                .and_then(|s| s.parse().ok())
+                .ok_or(MmError::Parse { line: i + 1, msg: "bad value".into() })?
+        };
+        if r == 0 || c == 0 || r > nrows || c > ncols {
+            return Err(MmError::Parse { line: i + 1, msg: format!("index ({r},{c}) out of bounds") });
+        }
+        m.push(r - 1, c - 1, v); // 1-based → 0-based
+        match symmetry.as_str() {
+            "symmetric" if r != c => m.push(c - 1, r - 1, v),
+            "skew-symmetric" if r != c => m.push(c - 1, r - 1, -v),
+            _ => {}
+        }
+        read += 1;
+    }
+    if read != nnz {
+        return Err(MmError::Parse { line: 0, msg: format!("expected {nnz} entries, found {read}") });
+    }
+    m.sum_duplicates();
+    Ok(m)
+}
+
+/// Read a `.mtx` file from disk.
+pub fn read_file<P: AsRef<Path>>(path: P) -> Result<TriMat, MmError> {
+    let f = std::fs::File::open(path)?;
+    read_matrix_market(std::io::BufReader::new(f))
+}
+
+/// Write `m` in `matrix coordinate real general` format.
+pub fn write_file<P: AsRef<Path>>(m: &TriMat, path: P) -> Result<(), MmError> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by forelem (synthetic suite)")?;
+    writeln!(w, "{} {} {}", m.nrows, m.ncols, m.nnz())?;
+    for e in &m.entries {
+        writeln!(w, "{} {} {:.17e}", e.row + 1, e.col + 1, e.val)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general_real() {
+        let txt = "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 2\n1 1 1.5\n3 2 -2.0\n";
+        let m = read_matrix_market(Cursor::new(txt)).unwrap();
+        assert_eq!((m.nrows, m.ncols, m.nnz()), (3, 3, 2));
+        assert_eq!(m.to_dense()[0], 1.5);
+        assert_eq!(m.to_dense()[3 * 2 + 1], -2.0);
+    }
+
+    #[test]
+    fn parse_symmetric_expands() {
+        let txt = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 3.0\n2 1 4.0\n";
+        let m = read_matrix_market(Cursor::new(txt)).unwrap();
+        assert_eq!(m.nnz(), 3); // diagonal stays single
+        let d = m.to_dense();
+        assert_eq!(d[1], 4.0);
+        assert_eq!(d[2], 4.0);
+    }
+
+    #[test]
+    fn parse_pattern() {
+        let txt = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n2 2\n";
+        let m = read_matrix_market(Cursor::new(txt)).unwrap();
+        assert_eq!(m.to_dense()[3], 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_bounds() {
+        assert!(read_matrix_market(Cursor::new("junk\n")).is_err());
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_matrix_market(Cursor::new(oob)).is_err());
+        let wrong_count = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_matrix_market(Cursor::new(wrong_count)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let mut m = TriMat::new(4, 3);
+        m.push(0, 0, 1.25);
+        m.push(3, 2, -0.5);
+        m.push(1, 1, 1e-9);
+        let path = std::env::temp_dir().join("forelem_mmio_roundtrip.mtx");
+        write_file(&m, &path).unwrap();
+        let mut back = read_file(&path).unwrap();
+        back.sort_row_major();
+        let mut orig = m.clone();
+        orig.sort_row_major();
+        assert_eq!((back.nrows, back.ncols), (4, 3));
+        assert_eq!(back.entries.len(), orig.entries.len());
+        for (a, b) in back.entries.iter().zip(orig.entries.iter()) {
+            assert_eq!((a.row, a.col), (b.row, b.col));
+            assert!((a.val - b.val).abs() < 1e-15);
+        }
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse-matrix substrate: the tuple ("disassembled") representation,
+//! MatrixMarket I/O, synthetic structural generators and the paper's
+//! 20-matrix evaluation suite.
+
+pub mod coo;
+pub mod gen;
+pub mod mmio;
+pub mod suite;
+
+pub use coo::{Entry, TriMat};

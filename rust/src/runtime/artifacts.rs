@@ -1,0 +1,153 @@
+//! Artifact manifest: the shape-bucketed executables `aot.py` emitted.
+//! Plain-text manifest (`file kernel nrows k ncols kcols` per line) —
+//! no JSON dependency offline.
+
+use std::path::{Path, PathBuf};
+
+use crate::baselines::Kernel;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub kernel: Kernel,
+    pub nrows: usize,
+    pub k: usize,
+    pub ncols: usize,
+    pub kcols: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`. Returns an empty manifest if absent
+    /// (the coordinator then runs native-only).
+    pub fn load(dir: &Path) -> std::io::Result<Manifest> {
+        let mpath = dir.join("manifest.txt");
+        if !mpath.exists() {
+            return Ok(Manifest { dir: dir.to_path_buf(), entries: Vec::new() });
+        }
+        let text = std::fs::read_to_string(&mpath)?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 6 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad manifest line: '{line}'"),
+                ));
+            }
+            let kernel = match f[1] {
+                "spmv" => Kernel::Spmv,
+                "spmm" => Kernel::Spmm,
+                other => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("unknown kernel '{other}'"),
+                    ))
+                }
+            };
+            let parse = |s: &str| -> std::io::Result<usize> {
+                s.parse().map_err(|_| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad int '{s}'"))
+                })
+            };
+            entries.push(ManifestEntry {
+                file: f[0].to_string(),
+                kernel,
+                nrows: parse(f[2])?,
+                k: parse(f[3])?,
+                ncols: parse(f[4])?,
+                kcols: parse(f[5])?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Default artifact dir: `$FORELEM_ARTIFACT_DIR` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FORELEM_ARTIFACT_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest bucket that fits (nrows, k, kcols) for `kernel`, if any.
+    pub fn find_bucket(&self, kernel: Kernel, nrows: usize, k: usize, kcols: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kernel == kernel
+                    && e.nrows >= nrows
+                    && e.ncols >= nrows.max(1) // square buckets; operand len = ncols
+                    && e.k >= k
+                    && (kernel != Kernel::Spmm || e.kcols == kcols)
+            })
+            .min_by_key(|e| (e.nrows, e.k))
+    }
+
+    pub fn path_of(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_and_finds_buckets() {
+        let dir = std::env::temp_dir().join("forelem_manifest_test");
+        write_manifest(
+            &dir,
+            "# comment\n\
+             ell_spmv_n2048_k8.hlo.txt spmv 2048 8 2048 1\n\
+             ell_spmv_n8192_k8.hlo.txt spmv 8192 8 8192 1\n\
+             ell_spmv_n2048_k32.hlo.txt spmv 2048 32 2048 1\n\
+             ell_spmm_n2048_k8_c100.hlo.txt spmm 2048 8 2048 100\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        // exact fit
+        let b = m.find_bucket(Kernel::Spmv, 2048, 8, 1).unwrap();
+        assert_eq!(b.nrows, 2048);
+        // needs bigger k
+        let b = m.find_bucket(Kernel::Spmv, 1000, 20, 1).unwrap();
+        assert_eq!((b.nrows, b.k), (2048, 32));
+        // too big
+        assert!(m.find_bucket(Kernel::Spmv, 100_000, 8, 1).is_none());
+        // spmm kcols must match
+        assert!(m.find_bucket(Kernel::Spmm, 1000, 8, 100).is_some());
+        assert!(m.find_bucket(Kernel::Spmm, 1000, 8, 50).is_none());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_manifest_is_empty() {
+        let dir = std::env::temp_dir().join("forelem_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.is_empty());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("forelem_manifest_bad");
+        write_manifest(&dir, "only three fields\n");
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

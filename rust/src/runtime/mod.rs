@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the `xla` crate's CPU
+//! client. Python never runs here — the artifacts are self-contained.
+
+pub mod artifacts;
+pub mod xla_exec;
+
+pub use artifacts::{Manifest, ManifestEntry};
+pub use xla_exec::XlaBackend;

@@ -1,0 +1,195 @@
+//! The XLA execution backend: compiles bucketed HLO-text artifacts on
+//! the PJRT CPU client (once, cached) and runs generated padded-ELL
+//! SpMV/SpMM through them.
+//!
+//! This is the second "architecture" of the evaluation (DESIGN.md §5):
+//! a genuinely different execution pipeline — AOT-compiled XLA vs
+//! natively compiled Rust — over the same generated data structures.
+//! Kernels compute in f32 (the MXU-realistic dtype); the backend
+//! downcasts f64 inputs and upcasts results, so callers compare against
+//! the native f64 path with a relative tolerance (~1e-4).
+
+// PjRtLoadedExecutable is neither Send nor Sync; the Arc is used only for
+// cheap intra-thread cache sharing (measurement is single-threaded).
+#![allow(clippy::arc_with_non_send_sync)]
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::baselines::Kernel;
+use crate::runtime::artifacts::{Manifest, ManifestEntry};
+use crate::storage::Ell;
+
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaBackend {
+    /// Create the backend; errors if PJRT cannot initialize. An empty
+    /// manifest is allowed (every call will report no-bucket).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(XlaBackend { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load from the default artifact dir.
+    pub fn from_default_dir() -> Result<Self> {
+        let dir = Manifest::default_dir();
+        let manifest = Manifest::load(&dir).context("loading manifest")?;
+        Self::new(manifest)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&self, entry: &ManifestEntry) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(&entry.file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", entry.file))?;
+        let exe = std::sync::Arc::new(exe);
+        cache.insert(entry.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Can this backend run `kernel` for an ELL structure of this shape?
+    pub fn bucket_for(&self, kernel: Kernel, nrows: usize, k: usize, kcols: usize) -> Option<&ManifestEntry> {
+        if k == 0 {
+            return None;
+        }
+        self.manifest.find_bucket(kernel, nrows, k, kcols)
+    }
+
+    /// Pad ELL planes to the bucket's (nrows × k), row-major f32.
+    fn pad_planes(ell: &Ell, b_rows: usize, b_k: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut vals = vec![0.0f32; b_rows * b_k];
+        let mut cols = vec![0i32; b_rows * b_k];
+        for i in 0..ell.nrows {
+            for p in 0..ell.row_len[i] as usize {
+                let src = ell.index(i, p);
+                let dst = i * b_k + p;
+                vals[dst] = ell.vals[src] as f32;
+                cols[dst] = ell.cols[src] as i32;
+            }
+        }
+        (vals, cols)
+    }
+
+    /// SpMV via the AOT executable. `x.len() == ell.ncols`; returns
+    /// `ell.nrows` outputs. Fails if no bucket fits.
+    pub fn spmv(&self, ell: &Ell, x: &[f64]) -> Result<Vec<f64>> {
+        let entry = self
+            .bucket_for(Kernel::Spmv, ell.nrows.max(ell.ncols), ell.k, 1)
+            .ok_or_else(|| anyhow!("no spmv bucket for n={} k={}", ell.nrows.max(ell.ncols), ell.k))?
+            .clone();
+        let exe = self.executable(&entry)?;
+        let (vals, cols) = Self::pad_planes(ell, entry.nrows, entry.k);
+        let mut xpad = vec![0.0f32; entry.ncols];
+        for (i, &v) in x.iter().enumerate() {
+            xpad[i] = v as f32;
+        }
+        let lv = xla::Literal::vec1(&vals).reshape(&[entry.nrows as i64, entry.k as i64])?;
+        let lc = xla::Literal::vec1(&cols).reshape(&[entry.nrows as i64, entry.k as i64])?;
+        let lx = xla::Literal::vec1(&xpad);
+        let result = exe.execute::<xla::Literal>(&[lv, lc, lx])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let y32 = out.to_vec::<f32>()?;
+        Ok(y32[..ell.nrows].iter().map(|&v| v as f64).collect())
+    }
+
+    /// SpMM via the AOT executable; `b` is (ncols × kcols) row-major.
+    pub fn spmm(&self, ell: &Ell, b: &[f64], kcols: usize) -> Result<Vec<f64>> {
+        let entry = self
+            .bucket_for(Kernel::Spmm, ell.nrows.max(ell.ncols), ell.k, kcols)
+            .ok_or_else(|| anyhow!("no spmm bucket for n={} k={} c={kcols}", ell.nrows.max(ell.ncols), ell.k))?
+            .clone();
+        let exe = self.executable(&entry)?;
+        let (vals, cols) = Self::pad_planes(ell, entry.nrows, entry.k);
+        let mut bpad = vec![0.0f32; entry.ncols * kcols];
+        for r in 0..ell.ncols {
+            for c in 0..kcols {
+                bpad[r * kcols + c] = b[r * kcols + c] as f32;
+            }
+        }
+        let lv = xla::Literal::vec1(&vals).reshape(&[entry.nrows as i64, entry.k as i64])?;
+        let lc = xla::Literal::vec1(&cols).reshape(&[entry.nrows as i64, entry.k as i64])?;
+        let lb = xla::Literal::vec1(&bpad).reshape(&[entry.ncols as i64, kcols as i64])?;
+        let result = exe.execute::<xla::Literal>(&[lv, lc, lb])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let c32 = out.to_vec::<f32>()?;
+        Ok(c32[..ell.nrows * kcols].iter().map(|&v| v as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::storage::EllOrder;
+
+    fn backend() -> Option<XlaBackend> {
+        // Tests run from the workspace root; artifacts may not be built
+        // in minimal environments — skip gracefully then.
+        let b = XlaBackend::from_default_dir().ok()?;
+        if b.manifest.entries.is_empty() {
+            return None;
+        }
+        Some(b)
+    }
+
+    #[test]
+    fn xla_spmv_matches_native() {
+        let Some(b) = backend() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let m = gen::powerlaw(500, 2.0, 30, 70);
+        let ell = Ell::from_tuples(&m, EllOrder::ColMajor);
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.01).sin()).collect();
+        let want = m.spmv_ref(&x);
+        let got = b.spmv(&ell, &x).unwrap();
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            let scale = w.abs().max(1.0);
+            assert!((g - w).abs() < 2e-4 * scale, "row {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn xla_spmm_matches_native() {
+        let Some(b) = backend() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let m = gen::banded(300, 4, 0.7, 71);
+        let ell = Ell::from_tuples(&m, EllOrder::ColMajor);
+        let kcols = 100;
+        let bmat: Vec<f64> = (0..m.ncols * kcols).map(|i| ((i % 37) as f64 - 18.0) * 0.05).collect();
+        let want = m.spmm_ref(&bmat, kcols);
+        let got = b.spmm(&ell, &bmat, kcols).unwrap();
+        for i in 0..want.len() {
+            let scale = want[i].abs().max(1.0);
+            assert!((got[i] - want[i]).abs() < 5e-4 * scale, "elem {i}: {} vs {}", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn no_bucket_for_huge_k() {
+        let Some(b) = backend() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        assert!(b.bucket_for(Kernel::Spmv, 1000, 1000, 1).is_none());
+    }
+}

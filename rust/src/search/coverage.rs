@@ -1,0 +1,204 @@
+//! The coverage metric (paper §6.4.4).
+//!
+//! Given measured execution times for a set of routines `R` over a set of
+//! matrices `M`: the *top group* `T(m)` for a matrix m holds the routines
+//! within `t%` of the best time `b(m)`; the *weight* of a routine is the
+//! number of matrices for which it is in the top group; the *coverage*
+//! is the maximal weight. Coverage of 100% at small t means one routine
+//! is near-optimal everywhere; the paper shows libraries need large t
+//! for that, while generated variants do not.
+
+/// A routine × matrix timing table (seconds; `times[r][m]`).
+#[derive(Clone, Debug)]
+pub struct Measurements {
+    pub routines: Vec<String>,
+    pub matrices: Vec<String>,
+    pub times: Vec<Vec<f64>>,
+}
+
+impl Measurements {
+    pub fn new(routines: Vec<String>, matrices: Vec<String>) -> Self {
+        let times = vec![vec![f64::NAN; matrices.len()]; routines.len()];
+        Measurements { routines, matrices, times }
+    }
+
+    pub fn set(&mut self, routine: usize, matrix: usize, t: f64) {
+        self.times[routine][matrix] = t;
+    }
+
+    /// Validate: every cell filled with a positive finite time.
+    pub fn validate(&self) -> Result<(), String> {
+        for (r, row) in self.times.iter().enumerate() {
+            for (m, &t) in row.iter().enumerate() {
+                if !(t.is_finite() && t > 0.0) {
+                    return Err(format!("missing/invalid time for ({}, {})", self.routines[r], self.matrices[m]));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Best time per matrix (over a routine subset, or all with `None`).
+    pub fn best_per_matrix(&self, subset: Option<&[usize]>) -> Vec<f64> {
+        let idx: Vec<usize> = match subset {
+            Some(s) => s.to_vec(),
+            None => (0..self.routines.len()).collect(),
+        };
+        (0..self.matrices.len())
+            .map(|m| idx.iter().map(|&r| self.times[r][m]).fold(f64::INFINITY, f64::min))
+            .collect()
+    }
+
+    /// Merge another table (same matrices) into this one.
+    pub fn extend(&mut self, other: &Measurements) {
+        assert_eq!(self.matrices, other.matrices);
+        self.routines.extend(other.routines.iter().cloned());
+        self.times.extend(other.times.iter().cloned());
+    }
+}
+
+/// Is routine `r` in the top group of matrix `m` at tolerance `t_pct`,
+/// relative to best times `best` (typically over a *larger* collection,
+/// cf. Fig 11 where the optimum includes generated variants)?
+#[inline]
+fn in_top(meas: &Measurements, best: &[f64], r: usize, m: usize, t_pct: f64) -> bool {
+    meas.times[r][m] <= (1.0 + t_pct / 100.0) * best[m]
+}
+
+/// Weight of routine `r` (number of matrices where it is in the top
+/// group) at tolerance `t_pct`.
+pub fn weight(meas: &Measurements, best: &[f64], r: usize, t_pct: f64) -> usize {
+    (0..meas.matrices.len()).filter(|&m| in_top(meas, best, r, m, t_pct)).count()
+}
+
+/// Coverage (max weight over a routine subset) at tolerance `t_pct`,
+/// as a fraction of |M| in [0, 1]. `best` is the per-matrix optimum of
+/// the *reference* collection.
+pub fn coverage(meas: &Measurements, best: &[f64], subset: Option<&[usize]>, t_pct: f64) -> f64 {
+    let idx: Vec<usize> = match subset {
+        Some(s) => s.to_vec(),
+        None => (0..meas.routines.len()).collect(),
+    };
+    let maxw = idx.iter().map(|&r| weight(meas, best, r, t_pct)).max().unwrap_or(0);
+    maxw as f64 / meas.matrices.len() as f64
+}
+
+/// The smallest t% at which the subset achieves 100% coverage (paper:
+/// "the minimum value of t% that is necessary to find a single
+/// best-performing library routine"). Scans in 1% steps to `max_t`.
+pub fn min_t_for_full_coverage(
+    meas: &Measurements,
+    best: &[f64],
+    subset: Option<&[usize]>,
+    max_t: f64,
+) -> Option<f64> {
+    let mut t = 0.0;
+    while t <= max_t {
+        if coverage(meas, best, subset, t) >= 1.0 {
+            return Some(t);
+        }
+        t += 1.0;
+    }
+    None
+}
+
+/// Coverage curve: (t%, coverage) samples for Fig 11.
+pub fn coverage_curve(
+    meas: &Measurements,
+    best: &[f64],
+    subset: Option<&[usize]>,
+    t_values: &[f64],
+) -> Vec<(f64, f64)> {
+    t_values.iter().map(|&t| (t, coverage(meas, best, subset, t))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 3 routines × 3 matrices. r0 is best on m0/m1, r1 on m2;
+    /// r2 always 2x the best.
+    fn table() -> Measurements {
+        let mut m = Measurements::new(
+            vec!["r0".into(), "r1".into(), "r2".into()],
+            vec!["m0".into(), "m1".into(), "m2".into()],
+        );
+        let data = [
+            [1.0, 1.0, 2.0], // r0
+            [1.5, 1.2, 1.0], // r1
+            [2.0, 2.0, 4.0], // r2
+        ];
+        for (r, row) in data.iter().enumerate() {
+            for (c, &t) in row.iter().enumerate() {
+                m.set(r, c, t);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn best_and_weights() {
+        let m = table();
+        m.validate().unwrap();
+        let best = m.best_per_matrix(None);
+        assert_eq!(best, vec![1.0, 1.0, 1.0]);
+        assert_eq!(weight(&m, &best, 0, 0.0), 2);
+        assert_eq!(weight(&m, &best, 1, 0.0), 1);
+        assert_eq!(weight(&m, &best, 2, 0.0), 0);
+    }
+
+    #[test]
+    fn coverage_monotone_in_t() {
+        let m = table();
+        let best = m.best_per_matrix(None);
+        let c0 = coverage(&m, &best, None, 0.0);
+        let c50 = coverage(&m, &best, None, 50.0);
+        let c100 = coverage(&m, &best, None, 100.0);
+        assert!(c0 <= c50 && c50 <= c100);
+        assert!((c0 - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c100 - 1.0).abs() < 1e-12); // r0 within 100% everywhere
+    }
+
+    #[test]
+    fn min_t_full_coverage() {
+        let m = table();
+        let best = m.best_per_matrix(None);
+        // r1 reaches full coverage first: worst cell 1.5 → t = 50%.
+        assert_eq!(min_t_for_full_coverage(&m, &best, None, 200.0), Some(50.0));
+        // r0 alone needs m2: 2.0 <= (1+t)*1.0 → t = 100%.
+        assert_eq!(min_t_for_full_coverage(&m, &best, Some(&[0]), 200.0), Some(100.0));
+        // restricted to r2 only: needs 100% on m0/m1 and 300% on m2.
+        assert_eq!(min_t_for_full_coverage(&m, &best, Some(&[2]), 200.0), None);
+    }
+
+    #[test]
+    fn subset_coverage_vs_reference_best() {
+        let m = table();
+        let best = m.best_per_matrix(None);
+        // Only r2 considered, but best still includes everyone:
+        let c = coverage(&m, &best, Some(&[2]), 0.0);
+        assert_eq!(c, 0.0);
+    }
+
+    #[test]
+    fn extend_merges() {
+        let mut a = table();
+        let mut b = Measurements::new(vec!["gen0".into()], a.matrices.clone());
+        for c in 0..3 {
+            b.set(0, c, 0.5);
+        }
+        a.extend(&b);
+        assert_eq!(a.routines.len(), 4);
+        let best = a.best_per_matrix(None);
+        assert_eq!(best, vec![0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn curve_shape() {
+        let m = table();
+        let best = m.best_per_matrix(None);
+        let curve = coverage_curve(&m, &best, None, &[0.0, 25.0, 50.0, 100.0]);
+        assert_eq!(curve.len(), 4);
+        assert!(curve.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+}

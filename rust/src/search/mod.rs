@@ -1,0 +1,10 @@
+//! Search-space machinery: transformation-tree enumeration (Fig 10),
+//! the coverage metric (§6.4.4) and per-architecture all-round kernel
+//! selection (§6.4.5).
+
+pub mod coverage;
+pub mod select;
+pub mod tree;
+
+pub use coverage::Measurements;
+pub use tree::{enumerate, Tree, Variant};

@@ -1,0 +1,129 @@
+//! Coordinate storage — the direct concretization of a materialized
+//! reservoir with *no* orthogonalization: `forelem (i; i ∈ ℕ*) … PA[i] …`
+//! maps to a flat sequence of localized tuples `⟨row, col, val⟩`.
+//!
+//! Two physical layouts correspond to the presence/absence of the
+//! *structure splitting* transformation (paper §4.3.2):
+//! `CooAos` (sequence of structures) and `CooSoa` (structure of
+//! sequences). The sequence order is whatever the chain imposed
+//! (unsorted, row-major via orthogonalization-on-row + concretization,
+//! or col-major).
+
+use crate::matrix::TriMat;
+
+/// Element order imposed by the transformation chain before
+/// concretization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CooOrder {
+    /// Iteration order left fully undefined (input order).
+    Unsorted,
+    /// Orthogonalized on `row`, then materialized.
+    RowMajor,
+    /// Orthogonalized on `col`, then materialized.
+    ColMajor,
+}
+
+/// Array-of-structures coordinate storage.
+#[derive(Clone, Debug)]
+pub struct CooAos {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub order: CooOrder,
+    /// Localized tuples `⟨row, col, val⟩` (val inline with the token).
+    pub tuples: Vec<(u32, u32, f64)>,
+}
+
+impl CooAos {
+    pub fn from_tuples(m: &TriMat, order: CooOrder) -> Self {
+        let mut t = m.clone();
+        match order {
+            CooOrder::Unsorted => {}
+            CooOrder::RowMajor => t.sort_row_major(),
+            CooOrder::ColMajor => t.sort_col_major(),
+        }
+        CooAos {
+            nrows: m.nrows,
+            ncols: m.ncols,
+            order,
+            tuples: t.entries.iter().map(|e| (e.row, e.col, e.val)).collect(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.tuples.len()
+    }
+
+    /// Bytes of physical storage (for DESIGN/EXPERIMENTS footprint notes).
+    pub fn bytes(&self) -> usize {
+        self.tuples.len() * std::mem::size_of::<(u32, u32, f64)>()
+    }
+}
+
+/// Structure-of-arrays coordinate storage (after structure splitting).
+#[derive(Clone, Debug)]
+pub struct CooSoa {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub order: CooOrder,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl CooSoa {
+    pub fn from_tuples(m: &TriMat, order: CooOrder) -> Self {
+        let aos = CooAos::from_tuples(m, order);
+        let mut rows = Vec::with_capacity(aos.nnz());
+        let mut cols = Vec::with_capacity(aos.nnz());
+        let mut vals = Vec::with_capacity(aos.nnz());
+        for (r, c, v) in aos.tuples {
+            rows.push(r);
+            cols.push(c);
+            vals.push(v);
+        }
+        CooSoa { nrows: m.nrows, ncols: m.ncols, order, rows, cols, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.rows.len() * 4 + self.cols.len() * 4 + self.vals.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn row_major_is_sorted() {
+        let m = gen::uniform_random(40, 40, 200, 1);
+        let c = CooAos::from_tuples(&m, CooOrder::RowMajor);
+        assert!(c.tuples.windows(2).all(|w| (w[0].0, w[0].1) <= (w[1].0, w[1].1)));
+        assert_eq!(c.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn col_major_is_sorted() {
+        let m = gen::uniform_random(40, 40, 200, 2);
+        let c = CooAos::from_tuples(&m, CooOrder::ColMajor);
+        assert!(c.tuples.windows(2).all(|w| (w[0].1, w[0].0) <= (w[1].1, w[1].0)));
+    }
+
+    #[test]
+    fn soa_matches_aos() {
+        let m = gen::uniform_random(30, 50, 150, 3);
+        let a = CooAos::from_tuples(&m, CooOrder::RowMajor);
+        let s = CooSoa::from_tuples(&m, CooOrder::RowMajor);
+        assert_eq!(a.nnz(), s.nnz());
+        for (i, &(r, c, v)) in a.tuples.iter().enumerate() {
+            assert_eq!((s.rows[i], s.cols[i]), (r, c));
+            assert_eq!(s.vals[i], v);
+        }
+        // splitting saves memory vs padded AoS tuple
+        assert!(s.bytes() <= a.bytes());
+    }
+}

@@ -1,0 +1,114 @@
+//! Compressed Column Storage — the same chain as CSR but starting from
+//! *orthogonalization on `col`* (paper §6.2.2: "a transformation sequence
+//! that continues from orthogonalization on column … results in CCS").
+
+use crate::matrix::TriMat;
+use crate::storage::csr::Csr;
+
+/// Split (SoA) CSC: `col_ptr`, `rows`, `vals`.
+#[derive(Clone, Debug)]
+pub struct Csc {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub col_ptr: Vec<u32>,
+    pub rows: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Csc {
+    pub fn from_tuples(m: &TriMat) -> Self {
+        // CSC(A) is CSR(Aᵀ) with the index roles swapped.
+        let t = m.transpose();
+        let c = Csr::from_tuples(&t);
+        Csc { nrows: m.nrows, ncols: m.ncols, col_ptr: c.row_ptr, rows: c.cols, vals: c.vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.col_ptr[j] as usize, self.col_ptr[j + 1] as usize);
+        (&self.rows[s..e], &self.vals[s..e])
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.col_ptr.len() * 4 + self.rows.len() * 4 + self.vals.len() * 8
+    }
+}
+
+/// Unsplit (AoS) CSC.
+#[derive(Clone, Debug)]
+pub struct CscAos {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub col_ptr: Vec<u32>,
+    pub pairs: Vec<(u32, f64)>,
+}
+
+impl CscAos {
+    pub fn from_tuples(m: &TriMat) -> Self {
+        let c = Csc::from_tuples(m);
+        CscAos {
+            nrows: c.nrows,
+            ncols: c.ncols,
+            col_ptr: c.col_ptr.clone(),
+            pairs: c.rows.iter().zip(c.vals.iter()).map(|(&a, &b)| (a, b)).collect(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.col_ptr.len() * 4 + self.pairs.len() * std::mem::size_of::<(u32, f64)>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn csc_roundtrip_dense() {
+        let m = gen::uniform_random(17, 23, 120, 8);
+        let c = Csc::from_tuples(&m);
+        let mut d = vec![0.0; m.nrows * m.ncols];
+        for j in 0..c.ncols {
+            let (rows, vals) = c.col(j);
+            for (i, v) in rows.iter().zip(vals.iter()) {
+                d[*i as usize * c.ncols + j] += v;
+            }
+        }
+        assert_eq!(d, m.to_dense());
+    }
+
+    #[test]
+    fn col_ptr_total() {
+        let m = gen::banded(40, 4, 0.5, 9);
+        let c = Csc::from_tuples(&m);
+        assert_eq!(c.col_ptr[m.ncols] as usize, m.nnz());
+        assert!(c.col_ptr.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn cols_sorted_by_row() {
+        let m = gen::uniform_random(30, 30, 200, 10);
+        let c = Csc::from_tuples(&m);
+        for j in 0..c.ncols {
+            let (rows, _) = c.col(j);
+            assert!(rows.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn aos_matches() {
+        let m = gen::uniform_random(12, 12, 60, 11);
+        let s = Csc::from_tuples(&m);
+        let a = CscAos::from_tuples(&m);
+        assert_eq!(a.col_ptr, s.col_ptr);
+        assert_eq!(a.pairs.len(), s.nnz());
+    }
+}

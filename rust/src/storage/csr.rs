@@ -1,0 +1,163 @@
+//! Compressed Row Storage — the concretization of the chain
+//! *orthogonalize(row) → loop-dependent materialization → structure
+//! splitting → exact ℕ\* materialization → dimensionality reduction*
+//! (paper Fig 8, gray path): nested sequences `PA[i][k]` flattened back
+//! to back with a `PA_ptr` array.
+//!
+//! `CsrAos` is the same chain *without* structure splitting: the flat
+//! sequence stores localized `⟨col, val⟩` pairs.
+
+use crate::matrix::TriMat;
+
+/// Split (SoA) CSR: `row_ptr`, `cols`, `vals`.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub row_ptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    pub fn from_tuples(m: &TriMat) -> Self {
+        let mut counts = vec![0u32; m.nrows + 1];
+        for e in &m.entries {
+            counts[e.row as usize + 1] += 1;
+        }
+        for i in 0..m.nrows {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts.clone();
+        let nnz = m.nnz();
+        let mut cols = vec![0u32; nnz];
+        let mut vals = vec![0.0f64; nnz];
+        let mut next = row_ptr.clone();
+        // Fill per row; sort within row afterwards for deterministic layout.
+        for e in &m.entries {
+            let p = next[e.row as usize] as usize;
+            cols[p] = e.col;
+            vals[p] = e.val;
+            next[e.row as usize] += 1;
+        }
+        // In-row sort by column (paper: inner order undefined; we pick
+        // ascending for cache friendliness and reproducibility).
+        let mut out = Csr { nrows: m.nrows, ncols: m.ncols, row_ptr, cols, vals };
+        out.sort_rows();
+        out
+    }
+
+    fn sort_rows(&mut self) {
+        for i in 0..self.nrows {
+            let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            let mut idx: Vec<usize> = (s..e).collect();
+            idx.sort_unstable_by_key(|&k| self.cols[k]);
+            let c: Vec<u32> = idx.iter().map(|&k| self.cols[k]).collect();
+            let v: Vec<f64> = idx.iter().map(|&k| self.vals[k]).collect();
+            self.cols[s..e].copy_from_slice(&c);
+            self.vals[s..e].copy_from_slice(&v);
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+        (&self.cols[s..e], &self.vals[s..e])
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.cols.len() * 4 + self.vals.len() * 8
+    }
+}
+
+/// Unsplit (AoS) CSR: flat sequence of `⟨col, val⟩` pairs + `row_ptr`.
+#[derive(Clone, Debug)]
+pub struct CsrAos {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub row_ptr: Vec<u32>,
+    pub pairs: Vec<(u32, f64)>,
+}
+
+impl CsrAos {
+    pub fn from_tuples(m: &TriMat) -> Self {
+        let c = Csr::from_tuples(m);
+        CsrAos {
+            nrows: c.nrows,
+            ncols: c.ncols,
+            row_ptr: c.row_ptr.clone(),
+            pairs: c.cols.iter().zip(c.vals.iter()).map(|(&a, &b)| (a, b)).collect(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.pairs.len() * std::mem::size_of::<(u32, f64)>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn csr_roundtrip_dense() {
+        let m = gen::uniform_random(25, 31, 180, 4);
+        let c = Csr::from_tuples(&m);
+        let mut d = vec![0.0; m.nrows * m.ncols];
+        for i in 0..c.nrows {
+            let (cols, vals) = c.row(i);
+            for (j, v) in cols.iter().zip(vals.iter()) {
+                d[i * c.ncols + *j as usize] += v;
+            }
+        }
+        assert_eq!(d, m.to_dense());
+    }
+
+    #[test]
+    fn row_ptr_monotone_and_total() {
+        let m = gen::powerlaw(60, 2.0, 30, 5);
+        let c = Csr::from_tuples(&m);
+        assert_eq!(c.row_ptr.len(), m.nrows + 1);
+        assert!(c.row_ptr.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(c.row_ptr[m.nrows] as usize, m.nnz());
+    }
+
+    #[test]
+    fn rows_sorted_by_col() {
+        let m = gen::uniform_random(20, 20, 120, 6);
+        let c = Csr::from_tuples(&m);
+        for i in 0..c.nrows {
+            let (cols, _) = c.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn aos_matches_soa() {
+        let m = gen::uniform_random(20, 20, 100, 7);
+        let s = Csr::from_tuples(&m);
+        let a = CsrAos::from_tuples(&m);
+        assert_eq!(a.row_ptr, s.row_ptr);
+        for (i, &(c, v)) in a.pairs.iter().enumerate() {
+            assert_eq!(c, s.cols[i]);
+            assert_eq!(v, s.vals[i]);
+        }
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut m = TriMat::new(5, 5);
+        m.push(4, 0, 1.0);
+        let c = Csr::from_tuples(&m);
+        assert_eq!(c.row(0).0.len(), 0);
+        assert_eq!(c.row(4).0, &[0]);
+    }
+}

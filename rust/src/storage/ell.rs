@@ -1,0 +1,153 @@
+//! ELLPACK / ITPACK storage — the concretization of *orthogonalize(row) →
+//! loop-dependent materialization → structure splitting → padded ℕ\*
+//! materialization* (paper Fig 8 main path): every row padded to the
+//! maximum row length K; `PA_len[q] = max(len(PA[q]))` so a single
+//! rectangular (nrows × K) plane is allocated for values and one for
+//! column indices.
+//!
+//! Two physical element orders correspond to applying *loop interchange*
+//! after materialization or not (paper §5.2 / §6.2.2):
+//! row-major (`EllOrder::RowMajor`) and column-major (`EllOrder::ColMajor`
+//! — the classic ITPACK layout, and the MXU/VPU-friendly layout used by
+//! the Pallas kernels in `python/compile/kernels/`).
+
+use crate::matrix::TriMat;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EllOrder {
+    /// `plane[i * k + p]` — row slots contiguous.
+    RowMajor,
+    /// `plane[p * nrows + i]` — slot-planes contiguous (ITPACK).
+    ColMajor,
+}
+
+/// Padded rectangular storage. Padding slots carry `col = pad_col` (a
+/// valid in-bounds column — conventionally 0 — paired with `val = 0.0`,
+/// so kernels may process padding unconditionally without branching).
+#[derive(Clone, Debug)]
+pub struct Ell {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub k: usize,
+    pub order: EllOrder,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+    /// Actual per-row lengths (the exact ℕ* sets, kept so kernels can
+    /// also iterate without touching padding).
+    pub row_len: Vec<u32>,
+    /// Number of stored nonzeros (excludes padding).
+    pub nnz: usize,
+}
+
+impl Ell {
+    pub fn from_tuples(m: &TriMat, order: EllOrder) -> Self {
+        let counts = m.row_counts();
+        let k = counts.iter().copied().max().unwrap_or(0);
+        let size = m.nrows * k;
+        let mut cols = vec![0u32; size];
+        let mut vals = vec![0.0f64; size];
+        let mut fill = vec![0usize; m.nrows];
+        // Deterministic slot order: sort row-major first.
+        let mut t = m.clone();
+        t.sort_row_major();
+        let idx = |i: usize, p: usize| match order {
+            EllOrder::RowMajor => i * k + p,
+            EllOrder::ColMajor => p * m.nrows + i,
+        };
+        for e in &t.entries {
+            let i = e.row as usize;
+            let p = fill[i];
+            cols[idx(i, p)] = e.col;
+            vals[idx(i, p)] = e.val;
+            fill[i] += 1;
+        }
+        Ell {
+            nrows: m.nrows,
+            ncols: m.ncols,
+            k,
+            order,
+            cols,
+            vals,
+            row_len: counts.iter().map(|&c| c as u32).collect(),
+            nnz: m.nnz(),
+        }
+    }
+
+    #[inline]
+    pub fn index(&self, i: usize, p: usize) -> usize {
+        match self.order {
+            EllOrder::RowMajor => i * self.k + p,
+            EllOrder::ColMajor => p * self.nrows + i,
+        }
+    }
+
+    /// Padding overhead ratio: stored slots / nonzeros.
+    pub fn padding_ratio(&self) -> f64 {
+        if self.nnz == 0 {
+            return 1.0;
+        }
+        (self.nrows * self.k) as f64 / self.nnz as f64
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.cols.len() * 4 + self.vals.len() * 8 + self.row_len.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    fn dense_of(e: &Ell) -> Vec<f64> {
+        let mut d = vec![0.0; e.nrows * e.ncols];
+        for i in 0..e.nrows {
+            for p in 0..e.row_len[i] as usize {
+                let ix = e.index(i, p);
+                d[i * e.ncols + e.cols[ix] as usize] += e.vals[ix];
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn roundtrip_both_orders() {
+        let m = gen::powerlaw(40, 2.0, 20, 12);
+        for order in [EllOrder::RowMajor, EllOrder::ColMajor] {
+            let e = Ell::from_tuples(&m, order);
+            assert_eq!(dense_of(&e), m.to_dense());
+            assert_eq!(e.k, m.max_row_nnz());
+            assert_eq!(e.nnz, m.nnz());
+        }
+    }
+
+    #[test]
+    fn padding_is_zero_valued() {
+        let m = gen::powerlaw(30, 2.2, 15, 13);
+        let e = Ell::from_tuples(&m, EllOrder::ColMajor);
+        for i in 0..e.nrows {
+            for p in e.row_len[i] as usize..e.k {
+                let ix = e.index(i, p);
+                assert_eq!(e.vals[ix], 0.0);
+                assert_eq!(e.cols[ix], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_ratio_reflects_skew() {
+        let skewed = gen::powerlaw(100, 1.8, 60, 14);
+        let flat = gen::banded(100, 3, 1.0, 14);
+        let es = Ell::from_tuples(&skewed, EllOrder::RowMajor);
+        let ef = Ell::from_tuples(&flat, EllOrder::RowMajor);
+        assert!(es.padding_ratio() > ef.padding_ratio());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = TriMat::new(4, 4);
+        let e = Ell::from_tuples(&m, EllOrder::RowMajor);
+        assert_eq!(e.k, 0);
+        assert_eq!(e.padding_ratio(), 1.0);
+    }
+}

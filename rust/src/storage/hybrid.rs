@@ -1,0 +1,139 @@
+//! Hybrid ELL + COO storage — generated when *loop blocking partitions
+//! the ℕ\* domain by row fill* (paper §6.2.3: "for each of these blocks a
+//! different set of transformations could be carried out, leading to
+//! different storage formats"): rows up to a width cutoff live in a
+//! padded ELL plane; the overflow of long rows spills to coordinate
+//! storage. This is the format that wins on power-law matrices where
+//! plain ELL drowns in padding.
+
+use crate::matrix::TriMat;
+use crate::storage::coo::{CooOrder, CooSoa};
+use crate::storage::ell::{Ell, EllOrder};
+
+#[derive(Clone, Debug)]
+pub struct HybridEllCoo {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// ELL part: holds min(row_len, cutoff) entries of every row.
+    pub ell: Ell,
+    /// COO part: overflow entries of rows longer than the cutoff.
+    pub tail: CooSoa,
+    pub cutoff: usize,
+}
+
+impl HybridEllCoo {
+    /// `cutoff = None` picks the width that minimizes stored slots
+    /// (a simple version of the ELL/COO split heuristic).
+    pub fn from_tuples(m: &TriMat, cutoff: Option<usize>, order: EllOrder) -> Self {
+        let counts = m.row_counts();
+        let cutoff = cutoff.unwrap_or_else(|| best_cutoff(&counts));
+        let mut head = TriMat::new(m.nrows, m.ncols);
+        let mut tail = TriMat::new(m.nrows, m.ncols);
+        let mut fill = vec![0usize; m.nrows];
+        let mut sorted = m.clone();
+        sorted.sort_row_major();
+        for e in &sorted.entries {
+            let i = e.row as usize;
+            if fill[i] < cutoff {
+                head.push(i, e.col as usize, e.val);
+            } else {
+                tail.push(i, e.col as usize, e.val);
+            }
+            fill[i] += 1;
+        }
+        HybridEllCoo {
+            nrows: m.nrows,
+            ncols: m.ncols,
+            ell: Ell::from_tuples(&head, order),
+            tail: CooSoa::from_tuples(&tail, CooOrder::RowMajor),
+            cutoff,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.ell.nnz + self.tail.nnz()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.ell.bytes() + self.tail.bytes()
+    }
+}
+
+/// Choose the ELL width minimizing total stored slots:
+/// `nrows * k + overflow(k)` over candidate cutoffs.
+pub fn best_cutoff(counts: &[usize]) -> usize {
+    let max = counts.iter().copied().max().unwrap_or(0);
+    if max == 0 {
+        return 0;
+    }
+    let mut best_k = max;
+    let mut best_cost = usize::MAX;
+    for k in 0..=max {
+        let overflow: usize = counts.iter().map(|&c| c.saturating_sub(k)).sum();
+        // COO overflow entries cost ~2x an ELL slot (row+col+val vs col+val).
+        let cost = counts.len() * k + 2 * overflow;
+        if cost < best_cost {
+            best_cost = cost;
+            best_k = k;
+        }
+    }
+    best_k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    fn dense_of(h: &HybridEllCoo) -> Vec<f64> {
+        let e = &h.ell;
+        let mut d = vec![0.0; h.nrows * h.ncols];
+        for i in 0..e.nrows {
+            for p in 0..e.row_len[i] as usize {
+                let ix = e.index(i, p);
+                d[i * e.ncols + e.cols[ix] as usize] += e.vals[ix];
+            }
+        }
+        for k in 0..h.tail.nnz() {
+            d[h.tail.rows[k] as usize * h.ncols + h.tail.cols[k] as usize] += h.tail.vals[k];
+        }
+        d
+    }
+
+    #[test]
+    fn roundtrip_auto_and_fixed_cutoff() {
+        let m = gen::powerlaw(60, 1.9, 40, 24);
+        for cutoff in [None, Some(2), Some(5), Some(1000)] {
+            let h = HybridEllCoo::from_tuples(&m, cutoff, EllOrder::ColMajor);
+            assert_eq!(dense_of(&h), m.to_dense(), "cutoff {cutoff:?}");
+            assert_eq!(h.nnz(), m.nnz());
+        }
+    }
+
+    #[test]
+    fn hybrid_beats_plain_ell_on_skew() {
+        let m = gen::powerlaw(200, 1.8, 150, 25);
+        let plain = Ell::from_tuples(&m, EllOrder::ColMajor);
+        let h = HybridEllCoo::from_tuples(&m, None, EllOrder::ColMajor);
+        assert!(h.bytes() < plain.bytes(), "hybrid {} vs ell {}", h.bytes(), plain.bytes());
+    }
+
+    #[test]
+    fn huge_cutoff_degenerates_to_ell() {
+        let m = gen::banded(30, 2, 1.0, 26);
+        let h = HybridEllCoo::from_tuples(&m, Some(100), EllOrder::RowMajor);
+        assert_eq!(h.tail.nnz(), 0);
+        assert_eq!(h.ell.nnz, m.nnz());
+    }
+
+    #[test]
+    fn best_cutoff_sane() {
+        assert_eq!(best_cutoff(&[]), 0);
+        assert_eq!(best_cutoff(&[0, 0]), 0);
+        // uniform rows: cutoff = the row length
+        assert_eq!(best_cutoff(&[3, 3, 3, 3]), 3);
+        // one huge row among short ones: cutoff stays near the short length
+        let c = best_cutoff(&[2, 2, 2, 2, 2, 2, 2, 2, 100]);
+        assert!(c <= 3, "cutoff {c}");
+    }
+}

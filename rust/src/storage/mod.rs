@@ -1,0 +1,24 @@
+//! Physical storage formats — every layout the transformation chains of
+//! `transforms/` + `concretize/` can generate, (re)assembled from the
+//! tuple reservoir (`matrix::TriMat`). Each submodule's doc comment names
+//! the paper chain that derives it.
+
+pub mod bcsr;
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod dia;
+pub mod ell;
+pub mod hybrid;
+pub mod jds;
+pub mod sell;
+
+pub use bcsr::Bcsr;
+pub use coo::{CooAos, CooOrder, CooSoa};
+pub use csc::{Csc, CscAos};
+pub use csr::{Csr, CsrAos};
+pub use dia::Dia;
+pub use ell::{Ell, EllOrder};
+pub use hybrid::HybridEllCoo;
+pub use jds::{Jds, JdsRows};
+pub use sell::Sell;

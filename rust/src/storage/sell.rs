@@ -1,0 +1,208 @@
+//! Sliced ELLPACK (SELL) — the hybrid the paper's §6.2.3 machinery
+//! generates when *loop blocking partitions the row dimension before
+//! materialization* and each block is then padded independently
+//! ("for each of these blocks a different set of transformations could
+//! be carried out"): rows are processed in slices of `s`; each slice is
+//! padded only to its *own* maximum width, stored column-major within
+//! the slice (vector-friendly), eliminating most of plain ELL's global
+//! padding.
+
+use crate::matrix::TriMat;
+use crate::storage::csr::Csr;
+
+#[derive(Clone, Debug)]
+pub struct Sell {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Slice height (rows per block).
+    pub s: usize,
+    pub nslices: usize,
+    /// Per-slice width (max row length within the slice).
+    pub widths: Vec<u32>,
+    /// Start of each slice's payload in `cols`/`vals`
+    /// (slice payload = widths[b] * rows_in_slice, column-major).
+    pub slice_ptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+    /// Exact per-row lengths.
+    pub row_len: Vec<u32>,
+    pub nnz: usize,
+}
+
+impl Sell {
+    pub fn from_tuples(m: &TriMat, s: usize) -> Self {
+        assert!(s > 0);
+        let csr = Csr::from_tuples(m);
+        let nslices = m.nrows.div_ceil(s);
+        let row_len: Vec<u32> =
+            (0..m.nrows).map(|i| csr.row_ptr[i + 1] - csr.row_ptr[i]).collect();
+        let mut widths = Vec::with_capacity(nslices);
+        let mut slice_ptr = vec![0u32; nslices + 1];
+        for b in 0..nslices {
+            let lo = b * s;
+            let hi = ((b + 1) * s).min(m.nrows);
+            let w = (lo..hi).map(|i| row_len[i]).max().unwrap_or(0);
+            widths.push(w);
+            let rows = (hi - lo) as u32;
+            slice_ptr[b + 1] = slice_ptr[b] + w * rows;
+        }
+        let total = slice_ptr[nslices] as usize;
+        let mut cols = vec![0u32; total];
+        let mut vals = vec![0.0f64; total];
+        for b in 0..nslices {
+            let lo = b * s;
+            let hi = ((b + 1) * s).min(m.nrows);
+            let rows = hi - lo;
+            let base = slice_ptr[b] as usize;
+            let w = widths[b] as usize;
+            for (ri, i) in (lo..hi).enumerate() {
+                let (rs, re) = (csr.row_ptr[i] as usize, csr.row_ptr[i + 1] as usize);
+                for (p, k) in (rs..re).enumerate() {
+                    // column-major within the slice: slot p plane, row ri
+                    let ix = base + p * rows + ri;
+                    cols[ix] = csr.cols[k];
+                    vals[ix] = csr.vals[k];
+                }
+                let _ = w;
+            }
+        }
+        Sell {
+            nrows: m.nrows,
+            ncols: m.ncols,
+            s,
+            nslices,
+            widths,
+            slice_ptr,
+            cols,
+            vals,
+            row_len,
+            nnz: m.nnz(),
+        }
+    }
+
+    /// Stored slots / nonzeros — must sit between CSR (1.0) and ELL.
+    pub fn padding_ratio(&self) -> f64 {
+        if self.nnz == 0 {
+            return 1.0;
+        }
+        self.vals.len() as f64 / self.nnz as f64
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.widths.len() * 4
+            + self.slice_ptr.len() * 4
+            + self.cols.len() * 4
+            + self.vals.len() * 8
+            + self.row_len.len() * 4
+    }
+}
+
+/// SELL SpMV: slice loop outer, slot plane loop, row-vector inner.
+pub fn spmv(a: &Sell, x: &[f64], y: &mut [f64]) {
+    for b in 0..a.nslices {
+        let lo = b * a.s;
+        let hi = ((b + 1) * a.s).min(a.nrows);
+        let rows = hi - lo;
+        let base = a.slice_ptr[b] as usize;
+        let w = a.widths[b] as usize;
+        y[lo..hi].fill(0.0);
+        for p in 0..w {
+            let plane = base + p * rows;
+            for ri in 0..rows {
+                let ix = plane + ri;
+                y[lo + ri] += a.vals[ix] * x[a.cols[ix] as usize];
+            }
+        }
+    }
+}
+
+/// SELL SpMM.
+pub fn spmm(a: &Sell, bm: &[f64], k: usize, c: &mut [f64]) {
+    for b in 0..a.nslices {
+        let lo = b * a.s;
+        let hi = ((b + 1) * a.s).min(a.nrows);
+        let rows = hi - lo;
+        let base = a.slice_ptr[b] as usize;
+        let w = a.widths[b] as usize;
+        c[lo * k..hi * k].fill(0.0);
+        for p in 0..w {
+            let plane = base + p * rows;
+            for ri in 0..rows {
+                let ix = plane + ri;
+                let v = a.vals[ix];
+                if v == 0.0 {
+                    continue;
+                }
+                let col = a.cols[ix] as usize;
+                let brow = &bm[col * k..col * k + k];
+                let crow = &mut c[(lo + ri) * k..(lo + ri) * k + k];
+                for j in 0..k {
+                    crow[j] += v * brow[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::storage::ell::{Ell, EllOrder};
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn roundtrip_various_slices() {
+        let m = gen::powerlaw(70, 1.9, 35, 200);
+        let x: Vec<f64> = (0..70).map(|i| (i as f64 * 0.17).sin() + 0.3).collect();
+        let want = m.spmv_ref(&x);
+        for s in [1, 4, 8, 32, 128] {
+            let a = Sell::from_tuples(&m, s);
+            let mut y = vec![0.0; 70];
+            spmv(&a, &x, &mut y);
+            assert_close(&y, &want, 1e-10).unwrap_or_else(|e| panic!("s={s}: {e}"));
+        }
+    }
+
+    #[test]
+    fn spmm_matches() {
+        let m = gen::uniform_random(40, 45, 300, 201);
+        let k = 5;
+        let bm: Vec<f64> = (0..45 * k).map(|i| i as f64 * 0.01 - 0.2).collect();
+        let want = m.spmm_ref(&bm, k);
+        let a = Sell::from_tuples(&m, 8);
+        let mut c = vec![0.0; 40 * k];
+        spmm(&a, &bm, k, &mut c);
+        assert_close(&c, &want, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn padding_between_csr_and_ell() {
+        let m = gen::powerlaw(128, 1.8, 60, 202);
+        let sell = Sell::from_tuples(&m, 16);
+        let ell = Ell::from_tuples(&m, EllOrder::RowMajor);
+        assert!(sell.padding_ratio() >= 1.0 - 1e-12);
+        assert!(sell.padding_ratio() <= ell.padding_ratio() + 1e-12);
+        // strictly better than ELL on a skewed matrix
+        assert!(sell.padding_ratio() < ell.padding_ratio());
+    }
+
+    #[test]
+    fn slice_of_one_equals_csr_density() {
+        let m = gen::banded(30, 3, 0.5, 203);
+        let sell = Sell::from_tuples(&m, 1);
+        assert!((sell.padding_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ragged_tail_slice() {
+        // nrows not divisible by s
+        let m = gen::uniform_random(37, 29, 150, 204);
+        let x: Vec<f64> = (0..29).map(|i| i as f64 * 0.1).collect();
+        let a = Sell::from_tuples(&m, 8);
+        assert_eq!(a.nslices, 5);
+        let mut y = vec![0.0; 37];
+        spmv(&a, &x, &mut y);
+        assert_close(&y, &m.spmv_ref(&x), 1e-10).unwrap();
+    }
+}

@@ -1,0 +1,497 @@
+//! The forelem transformations (paper §4–5) as legality-checked
+//! transitions on `ChainState`. After each application the canonical IR
+//! is reconstructable with `forelem::build::program`.
+//!
+//! | function | paper |
+//! |---|---|
+//! | `orthogonalize` (incl. encapsulation) | §4.1 |
+//! | `localize` (loop collapse of token+data reservoirs) | §5.1, §2.3.1 |
+//! | `hisr` (horizontal iteration-space reduction) | §4.3.1 |
+//! | `materialize` (loop-dependent/-independent) | §4.2 |
+//! | `split` (structure/tuple splitting) | §4.3.2 |
+//! | `nstar_materialize` (padded/exact) | §4.3.3 |
+//! | `nstar_sort` | §4.3.4 |
+//! | `interchange` (post-materialization) | §5.2 |
+//! | `dim_reduce` | §4.3.5 |
+//! | `block` (tile / fill-cutoff) | §5.3, §6.2.3 |
+
+use crate::baselines::Kernel;
+use crate::forelem::ir::{Blocking, ChainState, NStarMat, Orth};
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum TransformError {
+    #[error("illegal transformation: {0}")]
+    Illegal(&'static str),
+}
+
+type R = Result<(), TransformError>;
+
+fn illegal(msg: &'static str) -> R {
+    Err(TransformError::Illegal(msg))
+}
+
+/// §4.1 — impose grouping on one or more tuple fields. Includes the
+/// encapsulation of the introduced field-value loop(s) into ℕ ranges
+/// (always legal for row/col indices, which are naturals).
+pub fn orthogonalize(s: &mut ChainState, orth: Orth) -> R {
+    if s.materialized.is_some() {
+        return illegal("orthogonalization must precede materialization");
+    }
+    if s.orth != Orth::None {
+        return illegal("already orthogonalized");
+    }
+    if orth == Orth::None {
+        return illegal("orthogonalize requires a target field");
+    }
+    if orth == Orth::Diag && s.kernel == Kernel::Trsv {
+        // forward substitution cannot be reordered by diagonals of A
+        return illegal("diagonal orthogonalization breaks TrSv dependences");
+    }
+    s.orth = orth;
+    s.history.push(match orth {
+        Orth::Row => "orthogonalize(row)",
+        Orth::Col => "orthogonalize(col)",
+        Orth::RowCol => "orthogonalize(row,col)",
+        Orth::Diag => "orthogonalize(col-row)",
+        Orth::None => unreachable!(),
+    });
+    Ok(())
+}
+
+/// §5.1 — loop collapse of the token reservoir with its data reservoir:
+/// `⟨row,col⟩` tokens and `A(t)` values become localized `⟨row,col,val⟩`
+/// tuples. In this pipeline materialization performs the localization
+/// implicitly; the explicit step exists so derivation listings can show
+/// it (and is required before `hisr` can drop the data indirection).
+pub fn localize(s: &mut ChainState) -> R {
+    if s.materialized.is_some() {
+        return illegal("already materialized (localization implied)");
+    }
+    if s.history.contains(&"localize") {
+        return illegal("already localized");
+    }
+    s.history.push("localize");
+    Ok(())
+}
+
+/// §4.3.1 — drop tuple fields the loop body does not use. For a
+/// row-orthogonalized SpMV the `row` field becomes an induction variable
+/// and is *not stored* (this is why CSR stores no row indices).
+pub fn hisr(s: &mut ChainState) -> R {
+    if s.hisr {
+        return illegal("already reduced");
+    }
+    if s.orth == Orth::None {
+        return illegal("no redundant field without orthogonalization");
+    }
+    s.hisr = true;
+    s.history.push("hisr");
+    Ok(())
+}
+
+/// §4.2 — materialize the iterated tuples into sequence(s) `PA`.
+/// Loop-dependent iff an orthogonalization loop condition exists.
+pub fn materialize(s: &mut ChainState) -> R {
+    if s.materialized.is_some() {
+        return illegal("already materialized");
+    }
+    if let Some(Blocking::FillCutoff) = s.blocked {
+        return illegal("fill-cutoff blocking applies after materialization");
+    }
+    let dependent = s.orth != Orth::None;
+    s.materialized = Some(dependent);
+    s.history.push(if dependent { "materialize(dep)" } else { "materialize(indep)" });
+    Ok(())
+}
+
+/// §4.3.2 — structure splitting (AoS → SoA).
+pub fn split(s: &mut ChainState) -> R {
+    if s.materialized.is_none() {
+        return illegal("splitting operates on materialized sequences");
+    }
+    if s.split {
+        return illegal("already split");
+    }
+    if s.dim_reduced {
+        return illegal("split before dimensionality reduction");
+    }
+    s.split = true;
+    s.history.push("split");
+    Ok(())
+}
+
+/// §4.3.3 — make ℕ* explicit, either padded (single `K = max len`) or
+/// exact (`PA_len[i] = len(PA[i])`).
+pub fn nstar_materialize(s: &mut ChainState, flavor: NStarMat) -> R {
+    if s.materialized != Some(true) {
+        return illegal("ℕ* materialization requires loop-dependent materialization");
+    }
+    if s.nstar.is_some() {
+        return illegal("ℕ* already materialized");
+    }
+    if s.orth == Orth::Diag {
+        return illegal("diagonal groups concretize directly (DIA)");
+    }
+    if flavor == NStarMat::Padded && s.orth != Orth::Row {
+        return illegal("padded ℕ* implemented for row orthogonalization");
+    }
+    s.nstar = Some(flavor);
+    s.history.push(match flavor {
+        NStarMat::Padded => "nstar(padded)",
+        NStarMat::Exact => "nstar(exact)",
+    });
+    Ok(())
+}
+
+/// §4.3.4 — permute the outer loop by decreasing inner length.
+pub fn nstar_sort(s: &mut ChainState) -> R {
+    if s.materialized != Some(true) {
+        return illegal("ℕ* sorting requires loop-dependent materialization");
+    }
+    if s.sorted {
+        return illegal("already sorted");
+    }
+    if s.dim_reduced {
+        return illegal("sorting must precede dimensionality reduction");
+    }
+    if s.orth != Orth::Row {
+        return illegal("ℕ* sorting implemented for row orthogonalization");
+    }
+    if s.kernel == Kernel::Trsv {
+        return illegal("row permutation breaks TrSv forward-substitution order");
+    }
+    s.sorted = true;
+    s.history.push("nstar_sort");
+    Ok(())
+}
+
+/// §5.2 — post-materialization loop interchange: the slot loop `k`
+/// becomes outermost (Fig 3b), changing the grouping of the generated
+/// structure (row-major ↔ column-major / ITPACK / JDS direction).
+pub fn interchange(s: &mut ChainState) -> R {
+    if s.materialized != Some(true) {
+        return illegal("interchange operates on the materialized nest");
+    }
+    if s.interchanged {
+        return illegal("already interchanged");
+    }
+    if s.dim_reduced {
+        return illegal("ptr-range loop cannot be interchanged");
+    }
+    if s.nstar.is_none() {
+        return illegal("make ℕ* explicit before interchanging");
+    }
+    if s.orth != Orth::Row {
+        return illegal("interchange implemented for row orthogonalization");
+    }
+    if s.kernel == Kernel::Trsv {
+        return illegal("interchange breaks TrSv dependences");
+    }
+    s.interchanged = true;
+    s.history.push("interchange");
+    Ok(())
+}
+
+/// §4.3.5 — store nested sequences back to back with a `PA_ptr` array.
+pub fn dim_reduce(s: &mut ChainState) -> R {
+    if s.materialized != Some(true) {
+        return illegal("dimensionality reduction requires nested sequences");
+    }
+    if s.dim_reduced {
+        return illegal("already reduced");
+    }
+    match s.nstar {
+        Some(NStarMat::Exact) => {}
+        Some(NStarMat::Padded) => return illegal("padded sequences are rectangular, not jagged"),
+        None => return illegal("make ℕ* explicit (exact) first"),
+    }
+    if s.orth == Orth::Diag {
+        return illegal("diagonal groups concretize directly (DIA)");
+    }
+    s.dim_reduced = true;
+    s.history.push("dim_reduce");
+    Ok(())
+}
+
+/// §5.3 / §6.2.3 — loop blocking. `Tile` partitions both orthogonalized
+/// index dimensions before materialization (submatrix blocks → BCSR);
+/// `FillCutoff` partitions ℕ* by row fill after materialization (hybrid
+/// ELL+COO).
+pub fn block(s: &mut ChainState, b: Blocking) -> R {
+    if s.blocked.is_some() {
+        return illegal("already blocked");
+    }
+    match b {
+        Blocking::Tile { br, bc } => {
+            if br == 0 || bc == 0 {
+                return illegal("zero block extent");
+            }
+            if s.orth != Orth::RowCol {
+                return illegal("tile blocking requires (row,col) orthogonalization");
+            }
+            if s.materialized.is_some() {
+                return illegal("tile blocking precedes materialization (Fig 4 left)");
+            }
+            if s.kernel == Kernel::Trsv {
+                return illegal("tiled TrSv not generated (dependences)");
+            }
+        }
+        Blocking::RowSlice { s: slice } => {
+            if slice == 0 {
+                return illegal("zero slice height");
+            }
+            if s.orth != Orth::Row {
+                return illegal("row-slice blocking requires row orthogonalization");
+            }
+            if s.materialized.is_some() {
+                return illegal("row-slice blocking precedes materialization (per-slice padded ℕ*)");
+            }
+            if s.kernel == Kernel::Trsv {
+                return illegal("sliced TrSv not generated (within-slice dependences)");
+            }
+        }
+        Blocking::FillCutoff => {
+            if s.orth != Orth::Row {
+                return illegal("fill-cutoff blocking requires row orthogonalization");
+            }
+            if s.materialized != Some(true) {
+                return illegal("fill-cutoff blocking partitions materialized ℕ* (Fig 4 right)");
+            }
+            if s.nstar.is_some() || s.interchanged || s.sorted || s.dim_reduced {
+                return illegal("fill-cutoff blocking applies to the plain materialized nest");
+            }
+        }
+    }
+    s.blocked = Some(b);
+    s.history.push(match b {
+        Blocking::Tile { .. } => "block(tile)",
+        Blocking::FillCutoff => "block(fill)",
+        Blocking::RowSlice { .. } => "block(slice)",
+    });
+    Ok(())
+}
+
+/// A named, boxed transformation step — the unit the search tree
+/// composes into chains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Step {
+    Orthogonalize(Orth),
+    Localize,
+    Hisr,
+    Materialize,
+    Split,
+    NStar(NStarMat),
+    NStarSort,
+    Interchange,
+    DimReduce,
+    Block(BlockStep),
+}
+
+/// `Blocking` with hashable params for enumeration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BlockStep {
+    Tile2x2,
+    Tile3x3,
+    Tile4x4,
+    FillCutoff,
+    RowSlice32,
+    RowSlice128,
+}
+
+impl BlockStep {
+    pub fn to_blocking(self) -> Blocking {
+        match self {
+            BlockStep::Tile2x2 => Blocking::Tile { br: 2, bc: 2 },
+            BlockStep::Tile3x3 => Blocking::Tile { br: 3, bc: 3 },
+            BlockStep::Tile4x4 => Blocking::Tile { br: 4, bc: 4 },
+            BlockStep::FillCutoff => Blocking::FillCutoff,
+            BlockStep::RowSlice32 => Blocking::RowSlice { s: 32 },
+            BlockStep::RowSlice128 => Blocking::RowSlice { s: 128 },
+        }
+    }
+}
+
+impl Step {
+    pub fn apply(&self, s: &mut ChainState) -> R {
+        match *self {
+            Step::Orthogonalize(o) => orthogonalize(s, o),
+            Step::Localize => localize(s),
+            Step::Hisr => hisr(s),
+            Step::Materialize => materialize(s),
+            Step::Split => split(s),
+            Step::NStar(f) => nstar_materialize(s, f),
+            Step::NStarSort => nstar_sort(s),
+            Step::Interchange => interchange(s),
+            Step::DimReduce => dim_reduce(s),
+            Step::Block(b) => block(s, b.to_blocking()),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        format!("{self:?}")
+    }
+}
+
+/// Apply a whole chain, failing on the first illegal step.
+pub fn apply_chain(kernel: Kernel, steps: &[Step]) -> Result<ChainState, TransformError> {
+    let mut s = ChainState::initial(kernel);
+    for st in steps {
+        st.apply(&mut s)?;
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(kernel: Kernel, steps: &[Step]) -> Result<ChainState, TransformError> {
+        apply_chain(kernel, steps)
+    }
+
+    #[test]
+    fn fig8_itpack_chain_is_legal() {
+        // Fig 8 main path: orthogonalize(row) → materialize → split →
+        // padded ℕ* → (concretize → ITPACK after interchange).
+        let s = chain(
+            Kernel::Spmv,
+            &[
+                Step::Orthogonalize(Orth::Row),
+                Step::Materialize,
+                Step::Split,
+                Step::NStar(NStarMat::Padded),
+                Step::Interchange,
+            ],
+        )
+        .unwrap();
+        assert!(s.split && s.interchanged);
+        assert_eq!(s.nstar, Some(NStarMat::Padded));
+    }
+
+    #[test]
+    fn csr_chain_is_legal() {
+        let s = chain(
+            Kernel::Spmv,
+            &[
+                Step::Orthogonalize(Orth::Row),
+                Step::Materialize,
+                Step::Split,
+                Step::NStar(NStarMat::Exact),
+                Step::DimReduce,
+            ],
+        )
+        .unwrap();
+        assert!(s.dim_reduced);
+    }
+
+    #[test]
+    fn jds_chain_is_legal() {
+        let s = chain(
+            Kernel::Spmv,
+            &[
+                Step::Orthogonalize(Orth::Row),
+                Step::Materialize,
+                Step::Split,
+                Step::NStarSort,
+                Step::NStar(NStarMat::Exact),
+                Step::Interchange,
+            ],
+        )
+        .unwrap();
+        assert!(s.sorted && s.interchanged);
+    }
+
+    #[test]
+    fn illegal_orders_rejected() {
+        // materialize before orthogonalize is legal (loop-independent),
+        // but orthogonalize after materialize is not.
+        assert!(chain(Kernel::Spmv, &[Step::Materialize, Step::Orthogonalize(Orth::Row)]).is_err());
+        // dim reduce without exact ℕ*
+        assert!(chain(
+            Kernel::Spmv,
+            &[Step::Orthogonalize(Orth::Row), Step::Materialize, Step::DimReduce]
+        )
+        .is_err());
+        // padded ℕ* then dim reduce
+        assert!(chain(
+            Kernel::Spmv,
+            &[
+                Step::Orthogonalize(Orth::Row),
+                Step::Materialize,
+                Step::NStar(NStarMat::Padded),
+                Step::DimReduce
+            ]
+        )
+        .is_err());
+        // double split
+        assert!(chain(
+            Kernel::Spmv,
+            &[Step::Orthogonalize(Orth::Row), Step::Materialize, Step::Split, Step::Split]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn trsv_restrictions() {
+        // sorting and interchange break forward substitution
+        assert!(chain(
+            Kernel::Trsv,
+            &[Step::Orthogonalize(Orth::Row), Step::Materialize, Step::NStarSort]
+        )
+        .is_err());
+        assert!(chain(
+            Kernel::Trsv,
+            &[
+                Step::Orthogonalize(Orth::Row),
+                Step::Materialize,
+                Step::NStar(NStarMat::Padded),
+                Step::Interchange
+            ]
+        )
+        .is_err());
+        // but CSR/CSC chains remain legal
+        assert!(chain(
+            Kernel::Trsv,
+            &[
+                Step::Orthogonalize(Orth::Col),
+                Step::Materialize,
+                Step::Split,
+                Step::NStar(NStarMat::Exact),
+                Step::DimReduce
+            ]
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn blocking_legality() {
+        // tile requires row+col orthogonalization, pre-materialization
+        assert!(chain(Kernel::Spmv, &[Step::Block(BlockStep::Tile2x2)]).is_err());
+        assert!(chain(
+            Kernel::Spmv,
+            &[Step::Orthogonalize(Orth::RowCol), Step::Block(BlockStep::Tile3x3), Step::Materialize]
+        )
+        .is_ok());
+        // fill cutoff requires materialized row nest
+        assert!(chain(
+            Kernel::Spmv,
+            &[Step::Orthogonalize(Orth::Row), Step::Materialize, Step::Block(BlockStep::FillCutoff)]
+        )
+        .is_ok());
+        assert!(chain(
+            Kernel::Spmv,
+            &[Step::Orthogonalize(Orth::Row), Step::Block(BlockStep::FillCutoff)]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn history_records_chain() {
+        let s = chain(
+            Kernel::Spmv,
+            &[Step::Orthogonalize(Orth::Row), Step::Materialize, Step::Split],
+        )
+        .unwrap();
+        assert_eq!(s.history, vec!["orthogonalize(row)", "materialize(dep)", "split"]);
+    }
+}

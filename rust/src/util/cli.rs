@@ -1,0 +1,112 @@
+//! Tiny hand-rolled CLI argument parser (clap is not available offline).
+//!
+//! Supports: positional subcommand + `--flag`, `--key value`, `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — first element must be
+    /// the program name and is skipped.
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let mut out = Args::default();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a float, got '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from(std::iter::once("prog".to_string()).chain(s.iter().map(|x| x.to_string())))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["table1", "mat.mtx"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.positional, vec!["mat.mtx"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["bench", "--repeats", "10", "--seed=42"]);
+        assert_eq!(a.get_usize("repeats", 0), 10);
+        assert_eq!(a.get("seed"), Some("42"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["bench", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        // `--fast --n 3`: `--fast` must not consume `--n`.
+        let a = parse(&["x", "--fast", "--n", "3"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_or("backend", "native"), "native");
+        assert_eq!(a.get_f64("t", 0.1), 0.1);
+    }
+}

@@ -1,0 +1,9 @@
+//! Utility substrate: PRNG, statistics, worker pool, CLI parsing and a
+//! property-testing driver — all dependency-free (the offline crate cache
+//! contains only the `xla` closure; see DESIGN.md §5 Substitutions).
+
+pub mod cli;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

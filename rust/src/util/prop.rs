@@ -1,0 +1,114 @@
+//! A minimal property-based testing driver (proptest is not available
+//! offline). Provides: a `Gen` context wrapping the repo PRNG, value
+//! generators, and `forall` which runs a property over N random cases and
+//! reports the failing seed so a failure is reproducible.
+//!
+//! Shrinking is deliberately out of scope — failures report the exact
+//! (seed, case index) which regenerates the input deterministically.
+
+use crate::util::rng::Rng;
+
+/// Generation context handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Soft size bound generators should respect (grows over the run so
+    /// early cases are small, mimicking proptest's sizing).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.gen_range(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.gen_f64_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.gen_bool(0.5)
+    }
+
+    /// Pick an element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_range(xs.len())]
+    }
+
+    /// A vector of f64 values with magnitudes well away from f64 edge
+    /// cases (suitable for kernel numerics checked with relative error).
+    pub fn vec_f64(&mut self, len: usize) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(-8.0, 8.0)).collect()
+    }
+}
+
+/// Run `prop` over `cases` random inputs. Panics with the reproducing
+/// seed/case on first failure. `name` labels the property in the message.
+pub fn forall<F: FnMut(&mut Gen) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    let base_seed = match std::env::var("FORELEM_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().expect("FORELEM_PROP_SEED must be a u64"),
+        Err(_) => 0xF0E1_D2C3_B4A5_9687,
+    };
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::new(seed), size: 4 + case * 24 / cases.max(1) };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce with FORELEM_PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f64 slices are elementwise close (absolute + relative).
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        if (x - y).abs() > tol * scale {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol}, scale {scale})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("x+x is even-ish", 50, |g| {
+            let x = g.usize_in(0, 1000);
+            if (x + x) % 2 == 0 { Ok(()) } else { Err("odd".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn forall_reports_failure() {
+        forall("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_checks() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-9).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen { rng: Rng::new(1), size: 8 };
+        for _ in 0..100 {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+        }
+        let v = g.vec_f64(16);
+        assert_eq!(v.len(), 16);
+        assert!(v.iter().all(|x| x.abs() <= 8.0));
+    }
+}

@@ -1,0 +1,123 @@
+//! Robust summary statistics for the benchmark harness.
+//!
+//! The paper reports per-(kernel, matrix, routine) execution times with 10
+//! repetitions "to remove fluctuation"; we follow the same protocol but
+//! summarize with the median (and median absolute deviation) which is
+//! robust to scheduler noise on a shared host.
+
+/// Summary of a sample of measurements (seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    /// Median absolute deviation, scaled by 1.4826 (≈ σ for normal data).
+    pub mad: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let min = sorted[0];
+        let max = sorted[n - 1];
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let median = percentile_sorted(&sorted, 50.0);
+        let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0) * 1.4826;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / if n > 1 { (n - 1) as f64 } else { 1.0 };
+        Summary { n, min, max, mean, median, mad, stddev: var.sqrt() }
+    }
+}
+
+/// Percentile (linear interpolation) of an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// The paper's headline metric: percentage reduction of execution time of
+/// `ours` relative to `theirs` — `100 * (1 - ours/theirs)`.
+/// Positive = we are faster; negative = slower (Table 3 has a few).
+pub fn pct_reduction(ours: f64, theirs: f64) -> f64 {
+    100.0 * (1.0 - ours / theirs)
+}
+
+/// Geometric mean (used for aggregate speedup summaries in EXPERIMENTS.md).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[2.5]);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn median_even() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_robust_to_outlier() {
+        let s = Summary::of(&[1.0, 1.1, 0.9, 1.0, 50.0]);
+        assert!(s.median < 1.2);
+        assert!(s.mean > 5.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v = vec![0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 4.0);
+        assert!((percentile_sorted(&v, 25.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduction_metric() {
+        assert!((pct_reduction(0.5, 1.0) - 50.0).abs() < 1e-12);
+        assert!((pct_reduction(1.0, 1.0) - 0.0).abs() < 1e-12);
+        assert!(pct_reduction(2.0, 1.0) < 0.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+}

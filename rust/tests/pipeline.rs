@@ -1,0 +1,124 @@
+//! Integration: specification → transformation chain → concretization →
+//! execution ≡ tuple-reservoir oracle, across the whole enumerated tree,
+//! all kernels, several matrix classes — the end-to-end correctness
+//! contract of the framework.
+
+use forelem::baselines::Kernel;
+use forelem::concretize;
+use forelem::matrix::gen;
+use forelem::matrix::TriMat;
+use forelem::search::tree;
+use forelem::util::prop::assert_close;
+
+fn matrices() -> Vec<(&'static str, TriMat)> {
+    vec![
+        ("uniform", gen::uniform_random(60, 70, 500, 100)),
+        ("powerlaw", gen::powerlaw(80, 1.9, 40, 101)),
+        ("banded", gen::banded(90, 6, 0.6, 102)),
+        ("fem", gen::fem_blocks(20, 3, 5, 103)),
+        ("stencil", gen::laplacian_2d(9, 9, 104)),
+    ]
+}
+
+#[test]
+fn every_spmv_variant_matches_oracle_on_every_class() {
+    let t = tree::enumerate(Kernel::Spmv);
+    assert!(t.variants.len() >= 15);
+    for (name, m) in matrices() {
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.7).cos() + 0.2).collect();
+        let want = m.spmv_ref(&x);
+        for v in &t.variants {
+            let p = concretize::prepare(v.plan, &m);
+            let mut y = vec![0.0; m.nrows];
+            p.spmv(&x, &mut y);
+            assert_close(&y, &want, 1e-10)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}\nderivation: {}", v.id, v.derivation));
+        }
+    }
+}
+
+#[test]
+fn every_spmm_variant_matches_oracle() {
+    let t = tree::enumerate(Kernel::Spmm);
+    let k = 7;
+    for (name, m) in matrices() {
+        let b: Vec<f64> = (0..m.ncols * k).map(|i| ((i * 13 % 29) as f64 - 14.0) * 0.1).collect();
+        let want = m.spmm_ref(&b, k);
+        for v in &t.variants {
+            let p = concretize::prepare(v.plan, &m);
+            let mut c = vec![0.0; m.nrows * k];
+            p.spmm(&b, k, &mut c);
+            assert_close(&c, &want, 1e-10)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", v.id));
+        }
+    }
+}
+
+#[test]
+fn every_trsv_variant_matches_oracle() {
+    let t = tree::enumerate(Kernel::Trsv);
+    for (name, m) in matrices() {
+        if m.nrows != m.ncols {
+            continue;
+        }
+        let l = m.strictly_lower();
+        let b: Vec<f64> = (0..l.nrows).map(|i| 1.0 - (i % 9) as f64 * 0.2).collect();
+        let want = l.trsv_unit_lower_ref(&b);
+        for v in &t.variants {
+            let p = concretize::prepare(v.plan, &l);
+            let mut x = vec![0.0; l.nrows];
+            p.trsv(&b, &mut x);
+            assert_close(&x, &want, 1e-8)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", v.id));
+        }
+    }
+}
+
+#[test]
+fn codegen_exists_for_every_variant() {
+    for kernel in [Kernel::Spmv, Kernel::Spmm, Kernel::Trsv] {
+        let t = tree::enumerate(kernel);
+        for v in &t.variants {
+            let txt = concretize::codegen::emit(kernel, &v.plan);
+            assert!(txt.starts_with("/* generated:"), "{}: {txt}", v.id);
+            assert!(txt.len() > 50, "{}: suspiciously short codegen", v.id);
+        }
+    }
+}
+
+#[test]
+fn derivations_are_replayable() {
+    // Each variant's recorded history must replay to the same plan.
+    use forelem::forelem::ir::{NStarMat, Orth};
+    use forelem::transforms::{apply_chain, BlockStep, Step};
+    let parse = |h: &str| -> Option<Step> {
+        Some(match h {
+            "orthogonalize(row)" => Step::Orthogonalize(Orth::Row),
+            "orthogonalize(col)" => Step::Orthogonalize(Orth::Col),
+            "orthogonalize(row,col)" => Step::Orthogonalize(Orth::RowCol),
+            "orthogonalize(col-row)" => Step::Orthogonalize(Orth::Diag),
+            "materialize(dep)" | "materialize(indep)" => Step::Materialize,
+            "split" => Step::Split,
+            "nstar(padded)" => Step::NStar(NStarMat::Padded),
+            "nstar(exact)" => Step::NStar(NStarMat::Exact),
+            "nstar_sort" => Step::NStarSort,
+            "interchange" => Step::Interchange,
+            "dim_reduce" => Step::DimReduce,
+            "block(fill)" => Step::Block(BlockStep::FillCutoff),
+            // tile/slice sizes are not recoverable from the history text
+            "block(tile)" | "block(slice)" => return None,
+            other => panic!("unknown history entry '{other}'"),
+        })
+    };
+    let t = tree::enumerate(Kernel::Spmv);
+    let mut replayed = 0;
+    for v in &t.variants {
+        let steps: Option<Vec<Step>> = v.state.history.iter().map(|h| parse(h)).collect();
+        let Some(steps) = steps else { continue };
+        let s = apply_chain(Kernel::Spmv, &steps).unwrap();
+        let plans = concretize::plans(&s).unwrap();
+        assert!(plans.contains(&v.plan), "{}: replay diverged", v.id);
+        replayed += 1;
+    }
+    assert!(replayed >= 10, "too few replayable variants: {replayed}");
+}

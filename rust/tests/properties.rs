@@ -1,0 +1,197 @@
+//! Property-based tests (util::prop) on the framework's invariants:
+//! transformation chains preserve the iterated tuple multiset; storage
+//! round-trips are lossless; generated routines are order-insensitive;
+//! the coverage metric behaves monotonically.
+
+use forelem::baselines::Kernel;
+use forelem::concretize;
+use forelem::matrix::TriMat;
+use forelem::search::coverage::{self, Measurements};
+use forelem::search::tree;
+use forelem::util::prop::{assert_close, forall, Gen};
+
+/// A random reservoir of tuples with no duplicate coordinates.
+fn random_trimat(g: &mut Gen) -> TriMat {
+    let nrows = g.usize_in(3, 12 + g.size * 4);
+    let ncols = g.usize_in(3, 12 + g.size * 4);
+    let nnz = g.usize_in(1, (nrows * ncols).min(10 + g.size * 20));
+    let mut m = TriMat::new(nrows, ncols);
+    let mut used = std::collections::HashSet::new();
+    for _ in 0..nnz {
+        let r = g.usize_in(0, nrows - 1);
+        let c = g.usize_in(0, ncols - 1);
+        if used.insert((r, c)) {
+            let v = g.f64_in(0.1, 4.0) * if g.bool() { 1.0 } else { -1.0 };
+            m.push(r, c, v);
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_every_variant_preserves_spmv_semantics() {
+    let t = tree::enumerate(Kernel::Spmv);
+    forall("variant ≡ oracle", 40, |g| {
+        let m = random_trimat(g);
+        let x = g.vec_f64(m.ncols);
+        let want = m.spmv_ref(&x);
+        // pick a random variant each case (all covered over the run)
+        let v = g.choose(&t.variants);
+        let p = concretize::prepare(v.plan, &m);
+        let mut y = vec![0.0; m.nrows];
+        p.spmv(&x, &mut y);
+        assert_close(&y, &want, 1e-9).map_err(|e| format!("{}: {e}", v.id))
+    });
+}
+
+#[test]
+fn prop_storage_preserves_tuple_multiset() {
+    // Rebuilding the dense expansion from every concretized storage must
+    // equal the reservoir's dense expansion — i.e. no tuple is lost,
+    // duplicated or reassigned by any generated layout.
+    let t = tree::enumerate(Kernel::Spmv);
+    forall("storage lossless", 30, |g| {
+        let m = random_trimat(g);
+        let dense = m.to_dense();
+        let v = g.choose(&t.variants);
+        let p = concretize::prepare(v.plan, &m);
+        // probe: SpMV against unit vectors reconstructs columns
+        for j in 0..m.ncols.min(6) {
+            let mut e = vec![0.0; m.ncols];
+            e[j] = 1.0;
+            let mut y = vec![0.0; m.nrows];
+            p.spmv(&e, &mut y);
+            for i in 0..m.nrows {
+                let want = dense[i * m.ncols + j];
+                if (y[i] - want).abs() > 1e-9 * want.abs().max(1.0) {
+                    return Err(format!("{}: column {j} row {i}: {} vs {want}", v.id, y[i]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmv_insensitive_to_reservoir_order() {
+    let t = tree::enumerate(Kernel::Spmv);
+    forall("order-insensitive", 25, |g| {
+        let mut m = random_trimat(g);
+        let x = g.vec_f64(m.ncols);
+        let v = g.choose(&t.variants);
+        let p1 = concretize::prepare(v.plan, &m);
+        let mut y1 = vec![0.0; m.nrows];
+        p1.spmv(&x, &mut y1);
+        // shuffle the reservoir (iteration order is explicitly undefined)
+        let mut rng = forelem::util::rng::Rng::new(g.usize_in(0, 1 << 30) as u64);
+        m.shuffle(&mut rng);
+        let p2 = concretize::prepare(v.plan, &m);
+        let mut y2 = vec![0.0; m.nrows];
+        p2.spmv(&x, &mut y2);
+        assert_close(&y1, &y2, 1e-9).map_err(|e| format!("{}: {e}", v.id))
+    });
+}
+
+#[test]
+fn prop_trsv_solves_system() {
+    let t = tree::enumerate(Kernel::Trsv);
+    forall("(I+L)x = b", 25, |g| {
+        let n = g.usize_in(2, 30 + g.size * 3);
+        let mut sq = TriMat::new(n, n);
+        let mut used = std::collections::HashSet::new();
+        for _ in 0..g.usize_in(0, n * 3) {
+            let r = g.usize_in(1, n - 1);
+            let c = g.usize_in(0, r - 1);
+            if used.insert((r, c)) {
+                sq.push(r, c, g.f64_in(-1.0, 1.0));
+            }
+        }
+        let b = g.vec_f64(n);
+        let v = g.choose(&t.variants);
+        let p = concretize::prepare(v.plan, &sq);
+        let mut x = vec![0.0; n];
+        p.trsv(&b, &mut x);
+        // verify (I + L) x == b
+        let lx = sq.spmv_ref(&x);
+        let back: Vec<f64> = (0..n).map(|i| x[i] + lx[i]).collect();
+        assert_close(&back, &b, 1e-7).map_err(|e| format!("{}: {e}", v.id))
+    });
+}
+
+#[test]
+fn prop_coverage_monotone_and_bounded() {
+    forall("coverage monotone in t", 30, |g| {
+        let nr = g.usize_in(2, 6);
+        let nm = g.usize_in(2, 8);
+        let mut meas = Measurements::new(
+            (0..nr).map(|i| format!("r{i}")).collect(),
+            (0..nm).map(|i| format!("m{i}")).collect(),
+        );
+        for r in 0..nr {
+            for m in 0..nm {
+                meas.set(r, m, g.f64_in(0.1, 10.0));
+            }
+        }
+        let best = meas.best_per_matrix(None);
+        let mut prev = 0.0;
+        for t in [0.0, 5.0, 10.0, 25.0, 50.0, 100.0] {
+            let c = coverage::coverage(&meas, &best, None, t);
+            if c < prev - 1e-12 {
+                return Err(format!("coverage decreased: {prev} -> {c} at t={t}"));
+            }
+            if !(0.0..=1.0).contains(&c) {
+                return Err(format!("coverage out of range: {c}"));
+            }
+            prev = c;
+        }
+        // at t=0 someone is optimal on at least one matrix
+        let c0 = coverage::coverage(&meas, &best, None, 0.0);
+        if c0 <= 0.0 {
+            return Err("no routine optimal anywhere".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transform_chains_never_panic() {
+    // Random step sequences either apply cleanly or report Illegal —
+    // never panic, never corrupt the state.
+    use forelem::forelem::ir::{ChainState, NStarMat, Orth};
+    use forelem::transforms::{BlockStep, Step};
+    let universe = [
+        Step::Orthogonalize(Orth::Row),
+        Step::Orthogonalize(Orth::Col),
+        Step::Orthogonalize(Orth::RowCol),
+        Step::Orthogonalize(Orth::Diag),
+        Step::Localize,
+        Step::Hisr,
+        Step::Materialize,
+        Step::Split,
+        Step::NStar(NStarMat::Padded),
+        Step::NStar(NStarMat::Exact),
+        Step::NStarSort,
+        Step::Interchange,
+        Step::DimReduce,
+        Step::Block(BlockStep::Tile2x2),
+        Step::Block(BlockStep::FillCutoff),
+    ];
+    forall("random chains safe", 200, |g| {
+        let kernel = *g.choose(&[Kernel::Spmv, Kernel::Spmm, Kernel::Trsv]);
+        let mut s = ChainState::initial(kernel);
+        let len = g.usize_in(0, 10);
+        for _ in 0..len {
+            let step = *g.choose(&universe);
+            let _ = step.apply(&mut s); // Ok or Illegal, both fine
+        }
+        // state must remain internally consistent: history length ≥ flags set
+        let flags = [s.split, s.sorted, s.interchanged, s.dim_reduced, s.hisr]
+            .iter()
+            .filter(|&&b| b)
+            .count();
+        if s.history.len() < flags {
+            return Err(format!("history {} < flags {flags}", s.history.len()));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,83 @@
+//! Integration of the XLA-PJRT backend with the rest of the stack:
+//! artifacts load, compile, execute, and agree with the native executors
+//! over suite matrices. Skips (with a notice) when artifacts are absent
+//! so `cargo test` stays green before `make artifacts`.
+
+use forelem::matrix::suite;
+use forelem::runtime::XlaBackend;
+use forelem::storage::{Ell, EllOrder};
+
+fn backend() -> Option<XlaBackend> {
+    let b = XlaBackend::from_default_dir().ok()?;
+    if b.manifest.entries.is_empty() {
+        eprintln!("NOTE: artifacts/ empty — run `make artifacts`; skipping XLA integration");
+        return None;
+    }
+    Some(b)
+}
+
+#[test]
+fn xla_agrees_with_native_on_suite_matrices() {
+    let Some(b) = backend() else { return };
+    let mut tested = 0;
+    for name in ["Erdos971", "blckhole", "Orsreg_1", "stomach", "or2010"] {
+        let m = suite::by_name(name).unwrap().build();
+        let ell = Ell::from_tuples(&m, EllOrder::ColMajor);
+        let n = m.nrows.max(m.ncols);
+        if b.bucket_for(forelem::baselines::Kernel::Spmv, n, ell.k, 1).is_none() {
+            eprintln!("{name}: no bucket (n={n}, k={}); skipped", ell.k);
+            continue;
+        }
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.003).sin()).collect();
+        let want = m.spmv_ref(&x);
+        let got = b.spmv(&ell, &x).unwrap();
+        for i in 0..want.len() {
+            let scale = want[i].abs().max(1.0);
+            assert!(
+                (got[i] - want[i]).abs() < 5e-4 * scale,
+                "{name} row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+        tested += 1;
+    }
+    assert!(tested >= 2, "too few suite matrices fit the AOT buckets: {tested}");
+}
+
+#[test]
+fn xla_spmm_100_columns_matches() {
+    let Some(b) = backend() else { return };
+    let m = suite::by_name("blckhole").unwrap().build();
+    let ell = Ell::from_tuples(&m, EllOrder::ColMajor);
+    let kcols = 100;
+    let bmat: Vec<f64> = (0..m.ncols * kcols).map(|i| ((i % 41) as f64 - 20.0) * 0.02).collect();
+    let want = m.spmm_ref(&bmat, kcols);
+    let got = b.spmm(&ell, &bmat, kcols).unwrap();
+    let mut max_rel: f64 = 0.0;
+    for i in 0..want.len() {
+        max_rel = max_rel.max((got[i] - want[i]).abs() / want[i].abs().max(1.0));
+    }
+    assert!(max_rel < 2e-3, "max rel err {max_rel}");
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(b) = backend() else { return };
+    let m = suite::by_name("Orsreg_1").unwrap().build();
+    let ell = Ell::from_tuples(&m, EllOrder::ColMajor);
+    let x: Vec<f64> = vec![1.0; m.ncols];
+    // First call compiles; the repeat must be much faster (cache hit).
+    let t0 = std::time::Instant::now();
+    let _ = b.spmv(&ell, &x).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..3 {
+        let _ = b.spmv(&ell, &x).unwrap();
+    }
+    let repeat = t1.elapsed() / 3;
+    assert!(
+        repeat < first,
+        "cache ineffective: first {first:?}, repeat {repeat:?}"
+    );
+}
