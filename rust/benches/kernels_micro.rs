@@ -1,10 +1,16 @@
 //! Micro-benchmarks of the generated kernels per format on one matrix
 //! class — the profiling entry point for the L3 §Perf pass (DESIGN §7).
+//!
+//! With the schedule axis: every (layout × traversal × schedule) plan
+//! in the host schedule pool is timed, and the CSR serial-vs-parallel
+//! SpMV speedup is reported explicitly (the headline number for the
+//! `Schedule::Parallel` generated kernels — expect ≥2× on ≥4 cores).
 use forelem::baselines::Kernel;
 use forelem::bench::harness::{black_box, time_fn, BenchConfig};
-use forelem::concretize;
+use forelem::concretize::{self, Layout, Schedule};
+use forelem::coordinator::sweep::DEFAULT_X_BLOCK;
 use forelem::matrix::suite;
-use forelem::search::tree;
+use forelem::search::tree::{self, SchedulePool};
 
 fn main() {
     let cfg = if std::env::var("FORELEM_QUICK").is_ok() {
@@ -12,8 +18,15 @@ fn main() {
     } else {
         BenchConfig::from_env()
     };
+    let threads = forelem::util::pool::default_workers().clamp(2, 8);
+    let pool = SchedulePool::host(threads, DEFAULT_X_BLOCK);
     let names = ["Erdos971", "blckhole", "consph", "Raj1", "net150"];
-    let t = tree::enumerate(Kernel::Spmv);
+    let t = tree::enumerate_scheduled(Kernel::Spmv, &pool);
+    println!(
+        "schedule pool: {} schedules, {} worker threads",
+        pool.schedules.len(),
+        threads
+    );
     for name in names {
         let m = suite::by_name(name).unwrap().build();
         let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.01).sin()).collect();
@@ -24,6 +37,8 @@ fn main() {
             m.max_row_nnz()
         );
         let mut rows: Vec<(String, f64, usize)> = Vec::new();
+        let mut csr_serial = None;
+        let mut csr_parallel = None;
         for v in &t.variants {
             let p = concretize::prepare(v.plan, &m);
             let mut y = vec![0.0; m.nrows];
@@ -31,12 +46,27 @@ fn main() {
                 p.spmv(&x, &mut y);
                 black_box(&y);
             });
-            rows.push((format!("{} {}", v.id, v.name()), s.median, p.storage.bytes()));
+            if v.plan.layout == Layout::Csr {
+                match v.plan.schedule {
+                    Schedule::Serial => csr_serial = Some(s.median),
+                    Schedule::Parallel { .. } => csr_parallel = Some(s.median),
+                    _ => {}
+                }
+            }
+            rows.push((format!("{} {}", v.id, v.name()), s.median, p.bytes()));
         }
         rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         for (name, median, bytes) in rows {
             let gflops = 2.0 * m.nnz() as f64 / median / 1e9;
-            println!("  {name:<48} {:>10.2} µs  {gflops:>6.2} GF/s  {:>8} B", median * 1e6, bytes);
+            println!("  {name:<58} {:>10.2} µs  {gflops:>6.2} GF/s  {:>8} B", median * 1e6, bytes);
+        }
+        if let (Some(ser), Some(par)) = (csr_serial, csr_parallel) {
+            println!(
+                "  CSR SpMV serial/parallel({threads}): {:.2}x speedup  ({:.2} µs -> {:.2} µs)",
+                ser / par,
+                ser * 1e6,
+                par * 1e6
+            );
         }
     }
 }

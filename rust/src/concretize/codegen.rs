@@ -5,23 +5,66 @@
 //! code artifact, used by `examples/derive_formats.rs` and the docs.
 
 use crate::baselines::Kernel;
-use crate::concretize::layout::{Layout, Plan, Traversal};
+use crate::concretize::layout::{schedule_legal, Layout, Plan, Schedule, Traversal};
 use crate::storage::{CooOrder, EllOrder};
 
-/// Emit the generated C-like code for (kernel, plan).
+/// Emit the generated C-like code for (kernel, plan). A schedule that
+/// is illegal for the (layout, kernel) pair — e.g. tiling anything but
+/// CSR SpMV — is not code-generated; the serial nest is emitted and
+/// the header says so, rather than mislabeling an SpMV band nest as
+/// another kernel.
 pub fn emit(kernel: Kernel, plan: &Plan) -> String {
+    let legal = schedule_legal(plan.layout, plan.traversal, plan.schedule, kernel);
+    let sched_note = if legal {
+        plan.schedule.label()
+    } else {
+        format!("{} illegal here; serial", plan.schedule.label())
+    };
     let header = format!(
-        "/* generated: {} over {} ({:?} traversal) */\n",
+        "/* generated: {} over {} ({:?} traversal, {} schedule) */\n",
         kernel.label(),
         plan.layout.literature_name(),
         plan.traversal,
+        sched_note,
     );
     let body = match kernel {
         Kernel::Spmv => emit_spmv(plan),
         Kernel::Spmm => emit_spmm(plan),
         Kernel::Trsv => emit_trsv(plan),
     };
+    let body = if legal { apply_schedule(plan, body) } else { body };
     format!("{header}{body}")
+}
+
+fn indent(body: &str) -> String {
+    body.lines().map(|l| format!("  {l}\n")).collect()
+}
+
+/// Wrap the serial loop nest in the schedule's outer structure: a
+/// `parallel forelem` worker loop over disjoint nnz-balanced row
+/// ranges, a column-band loop over the per-band row splits, or both.
+/// Callers guarantee legality (`schedule_legal`), so the Tiled arms
+/// only ever see the CSR SpMV nest they replace with the band nest.
+fn apply_schedule(plan: &Plan, body: String) -> String {
+    match plan.schedule {
+        Schedule::Serial => body,
+        Schedule::Parallel { threads } => format!(
+            "/* {threads} workers; rows[t] = nnz-balanced disjoint ranges; y chunks owned per worker */\n\
+             parallel forelem (t; t \u{2208} 0..{threads}) {{\n{}}}\n",
+            indent(&body)
+        ),
+        Schedule::Tiled { x_block } => format!(
+            "/* CSB-style two-pass: x band of {x_block} columns stays L2-resident;\n   band_ptr = per-band row_ptr split built at prepare() */\n\
+             for (i = 0; i < nrows; i++) y[i] = 0;\n\
+             for (b = 0; b < nbands; b++)\n  for (i = 0; i < nrows; i++)\n    for (k = band_ptr[b][i]; k < band_ptr[b+1][i]; k++)\n      y[i] += PA_val[k] * x[PA_col[k]];\n"
+        ),
+        Schedule::ParallelTiled { threads, x_block } => format!(
+            "/* {threads} workers \u{00d7} {x_block}-column L2-resident bands */\n\
+             parallel forelem (t; t \u{2208} 0..{threads}) {{  /* rows[t] nnz-balanced */\n\
+             \x20 for (i \u{2208} rows[t]) y[i] = 0;\n\
+             \x20 for (b = 0; b < nbands; b++)\n    for (i \u{2208} rows[t])\n      for (k = band_ptr[b][i]; k < band_ptr[b+1][i]; k++)\n        y[i] += PA_val[k] * x[PA_col[k]];\n}}\n"
+        ),
+    }
 }
 
 fn emit_spmv(plan: &Plan) -> String {
@@ -99,11 +142,11 @@ mod tests {
     #[test]
     fn emits_for_every_layout() {
         let plans = [
-            Plan { layout: Layout::Csr, traversal: Traversal::RowWise },
-            Plan { layout: Layout::Ell(EllOrder::ColMajor), traversal: Traversal::PlaneWise },
-            Plan { layout: Layout::Jds { permuted: true }, traversal: Traversal::DiagMajor },
-            Plan { layout: Layout::Bcsr { br: 3, bc: 3 }, traversal: Traversal::Blocked },
-            Plan { layout: Layout::Dia, traversal: Traversal::DiagMajor },
+            Plan::serial(Layout::Csr, Traversal::RowWise),
+            Plan::serial(Layout::Ell(EllOrder::ColMajor), Traversal::PlaneWise),
+            Plan::serial(Layout::Jds { permuted: true }, Traversal::DiagMajor),
+            Plan::serial(Layout::Bcsr { br: 3, bc: 3 }, Traversal::Blocked),
+            Plan::serial(Layout::Dia, Traversal::DiagMajor),
         ];
         for p in plans {
             for k in [Kernel::Spmv, Kernel::Spmm, Kernel::Trsv] {
@@ -116,7 +159,7 @@ mod tests {
 
     #[test]
     fn itpack_code_mentions_interchange_order() {
-        let p = Plan { layout: Layout::Ell(EllOrder::ColMajor), traversal: Traversal::PlaneWise };
+        let p = Plan::serial(Layout::Ell(EllOrder::ColMajor), Traversal::PlaneWise);
         let txt = emit(Kernel::Spmv, &p);
         assert!(txt.contains("ITPACK"));
         assert!(txt.contains("p*nrows + i"));
@@ -124,7 +167,48 @@ mod tests {
 
     #[test]
     fn csr_code_has_ptr_loop() {
-        let p = Plan { layout: Layout::Csr, traversal: Traversal::RowWise };
+        let p = Plan::serial(Layout::Csr, Traversal::RowWise);
         assert!(emit(Kernel::Spmv, &p).contains("PA_ptr[i+1]"));
+    }
+
+    #[test]
+    fn parallel_schedule_wraps_nest_in_parallel_forelem() {
+        let p = Plan::serial(Layout::Csr, Traversal::RowWise)
+            .with_schedule(Schedule::Parallel { threads: 4 });
+        let txt = emit(Kernel::Spmv, &p);
+        assert!(txt.contains("parallel forelem"), "{txt}");
+        assert!(txt.contains("par(4) schedule"), "{txt}");
+        // the serial nest is indented inside the worker loop
+        assert!(txt.contains("  for (i = 0; i < nrows; i++)"), "{txt}");
+    }
+
+    #[test]
+    fn tiled_schedule_emits_band_nest() {
+        let p = Plan::serial(Layout::Csr, Traversal::RowWise)
+            .with_schedule(Schedule::Tiled { x_block: 4096 });
+        let txt = emit(Kernel::Spmv, &p);
+        assert!(txt.contains("band_ptr[b][i]"), "{txt}");
+        assert!(txt.contains("4096"), "{txt}");
+        let pt = Plan::serial(Layout::Csr, Traversal::RowWise)
+            .with_schedule(Schedule::ParallelTiled { threads: 2, x_block: 1024 });
+        let txt = emit(Kernel::Spmv, &pt);
+        assert!(txt.contains("parallel forelem"), "{txt}");
+        assert!(txt.contains("band_ptr"), "{txt}");
+    }
+
+    #[test]
+    fn illegal_schedule_falls_back_to_serial_nest() {
+        // Tiled SpMM is pruned by the tree; emit must not mislabel the
+        // SpMV band nest as SpMM code.
+        let p = Plan::serial(Layout::Csr, Traversal::RowWise)
+            .with_schedule(Schedule::Tiled { x_block: 4096 });
+        let txt = emit(Kernel::Spmm, &p);
+        assert!(txt.contains("illegal here; serial"), "{txt}");
+        assert!(!txt.contains("band_ptr"), "{txt}");
+        // TrSv never reschedules.
+        let par = Plan::serial(Layout::Csr, Traversal::RowWise)
+            .with_schedule(Schedule::Parallel { threads: 4 });
+        let txt = emit(Kernel::Trsv, &par);
+        assert!(!txt.contains("parallel forelem"), "{txt}");
     }
 }

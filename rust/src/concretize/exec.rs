@@ -5,8 +5,8 @@
 //! native backend.
 
 use crate::baselines::Kernel;
-use crate::concretize::layout::{Layout, Plan, Traversal};
-use crate::kernels::{spmm, spmv, trsv};
+use crate::concretize::layout::{schedule_legal, Layout, Plan, Schedule, Traversal};
+use crate::kernels::{par, spmm, spmv, trsv};
 use crate::matrix::TriMat;
 use crate::storage::*;
 
@@ -49,6 +49,10 @@ impl Storage {
 pub struct Prepared {
     pub plan: Plan,
     pub storage: Storage,
+    /// Per-band CSR row splits for `Schedule::Tiled` /
+    /// `Schedule::ParallelTiled` plans — part of the generated data
+    /// structure, built once here at prepare time.
+    pub bands: Option<CsrBands>,
     pub nrows: usize,
     pub ncols: usize,
 }
@@ -56,7 +60,13 @@ pub struct Prepared {
 /// Which kernels a plan's generated loop nest supports (TrSv requires a
 /// dependence-respecting traversal; SpMM is generated for every layout
 /// the SpMV nest covers except DIA, which the tree prunes for SpMM).
+/// The plan's schedule must also be legal for the kernel
+/// (`layout::schedule_legal`): TrSv stays `Serial`, and non-serial
+/// schedules exist only for row-partitionable layouts.
 pub fn supports(plan: &Plan, kernel: Kernel) -> bool {
+    if !schedule_legal(plan.layout, plan.traversal, plan.schedule, kernel) {
+        return false;
+    }
     match kernel {
         Kernel::Spmv => true,
         Kernel::Spmm => !matches!(plan.layout, Layout::Dia),
@@ -95,12 +105,55 @@ pub fn prepare(plan: Plan, m: &TriMat) -> Prepared {
         Layout::Sell { s } => Storage::Sell(Sell::from_tuples(m, s)),
         Layout::Dia => Storage::Dia(Dia::from_tuples(m)),
     };
-    Prepared { plan, storage, nrows: m.nrows, ncols: m.ncols }
+    // Tiled CSR schedules carry their per-band row splits as part of
+    // the generated data structure.
+    let x_block = match plan.schedule {
+        Schedule::Tiled { x_block } => Some(x_block),
+        Schedule::ParallelTiled { x_block, .. } => Some(x_block),
+        _ => None,
+    };
+    let bands = match (&storage, x_block) {
+        (Storage::Csr(s), Some(xb)) => Some(CsrBands::build(s, xb)),
+        _ => None,
+    };
+    Prepared { plan, storage, bands, nrows: m.nrows, ncols: m.ncols }
 }
 
 impl Prepared {
-    /// Run the generated SpMV.
+    /// Total bytes of the generated data structure, including the
+    /// tiled schedules' per-band row splits (part of what the plan
+    /// allocates, unlike the transient workspace of e.g. permuted JDS).
+    pub fn bytes(&self) -> usize {
+        self.storage.bytes() + self.bands.as_ref().map_or(0, |b| b.bytes())
+    }
+
+    /// Run the generated SpMV under the plan's schedule.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        match self.plan.schedule {
+            Schedule::Serial => self.spmv_serial(x, y),
+            Schedule::Parallel { threads } => match &self.storage {
+                Storage::Csr(s) => par::csr_spmv(s, x, y, threads),
+                Storage::Ell(s) => par::ell_spmv(s, x, y, threads),
+                Storage::Sell(s) => par::sell_spmv(s, x, y, threads),
+                Storage::Bcsr(s) => par::bcsr_spmv(s, x, y, threads),
+                Storage::Jds(s, _) if s.permuted => par::jds_spmv(s, x, y, threads),
+                _ => self.spmv_serial(x, y), // pruned by schedule_legal
+            },
+            Schedule::Tiled { .. } => match (&self.storage, &self.bands) {
+                (Storage::Csr(s), Some(bands)) => par::csr_spmv_tiled(s, bands, x, y),
+                _ => self.spmv_serial(x, y),
+            },
+            Schedule::ParallelTiled { threads, .. } => match (&self.storage, &self.bands) {
+                (Storage::Csr(s), Some(bands)) => {
+                    par::csr_spmv_parallel_tiled(s, bands, x, y, threads)
+                }
+                _ => self.spmv_serial(x, y),
+            },
+        }
+    }
+
+    /// The serial loop nest (the paper's single-core executors).
+    fn spmv_serial(&self, x: &[f64], y: &mut [f64]) {
         match (&self.storage, self.plan.traversal) {
             (Storage::CooAos(s), _) => spmv::coo_aos(s, x, y),
             (Storage::CooSoa(s), _) => spmv::coo_soa(s, x, y),
@@ -120,8 +173,27 @@ impl Prepared {
         }
     }
 
-    /// Run the generated SpMM (`b` is ncols×k row-major).
+    /// Run the generated SpMM (`b` is ncols×k row-major) under the
+    /// plan's schedule.
     pub fn spmm(&self, b: &[f64], k: usize, c: &mut [f64]) {
+        match self.plan.schedule {
+            // Tiling is only generated for the SpMV gather; a tiled
+            // plan asked for SpMM falls back to the serial nest.
+            Schedule::Serial | Schedule::Tiled { .. } => self.spmm_serial(b, k, c),
+            Schedule::Parallel { threads } | Schedule::ParallelTiled { threads, .. } => {
+                match &self.storage {
+                    Storage::Csr(s) => par::csr_spmm(s, b, k, c, threads),
+                    Storage::Ell(s) => par::ell_spmm(s, b, k, c, threads),
+                    Storage::Sell(s) => par::sell_spmm(s, b, k, c, threads),
+                    Storage::Bcsr(s) => par::bcsr_spmm(s, b, k, c, threads),
+                    Storage::Jds(s, _) if s.permuted => par::jds_spmm(s, b, k, c, threads),
+                    _ => self.spmm_serial(b, k, c), // pruned by schedule_legal
+                }
+            }
+        }
+    }
+
+    fn spmm_serial(&self, b: &[f64], k: usize, c: &mut [f64]) {
         match (&self.storage, self.plan.traversal) {
             (Storage::CooAos(s), _) => spmm::coo_aos(s, b, k, c),
             (Storage::CooSoa(s), _) => spmm::coo_soa(s, b, k, c),
@@ -163,20 +235,20 @@ mod tests {
     fn all_spmv_plans() -> Vec<Plan> {
         use crate::storage::{CooOrder, EllOrder};
         vec![
-            Plan { layout: Layout::CooAos(CooOrder::Unsorted), traversal: Traversal::Flat },
-            Plan { layout: Layout::CooSoa(CooOrder::RowMajor), traversal: Traversal::Flat },
-            Plan { layout: Layout::Csr, traversal: Traversal::RowWise },
-            Plan { layout: Layout::CsrAos, traversal: Traversal::RowWise },
-            Plan { layout: Layout::Csc, traversal: Traversal::ColScatter },
-            Plan { layout: Layout::CscAos, traversal: Traversal::ColScatter },
-            Plan { layout: Layout::Ell(EllOrder::RowMajor), traversal: Traversal::RowWise },
-            Plan { layout: Layout::Ell(EllOrder::RowMajor), traversal: Traversal::RowWisePadded },
-            Plan { layout: Layout::Ell(EllOrder::ColMajor), traversal: Traversal::PlaneWise },
-            Plan { layout: Layout::Jds { permuted: true }, traversal: Traversal::DiagMajor },
-            Plan { layout: Layout::Jds { permuted: false }, traversal: Traversal::DiagMajor },
-            Plan { layout: Layout::Bcsr { br: 2, bc: 3 }, traversal: Traversal::Blocked },
-            Plan { layout: Layout::HybridEllCoo, traversal: Traversal::RowWise },
-            Plan { layout: Layout::Dia, traversal: Traversal::DiagMajor },
+            Plan::serial(Layout::CooAos(CooOrder::Unsorted), Traversal::Flat),
+            Plan::serial(Layout::CooSoa(CooOrder::RowMajor), Traversal::Flat),
+            Plan::serial(Layout::Csr, Traversal::RowWise),
+            Plan::serial(Layout::CsrAos, Traversal::RowWise),
+            Plan::serial(Layout::Csc, Traversal::ColScatter),
+            Plan::serial(Layout::CscAos, Traversal::ColScatter),
+            Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWise),
+            Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWisePadded),
+            Plan::serial(Layout::Ell(EllOrder::ColMajor), Traversal::PlaneWise),
+            Plan::serial(Layout::Jds { permuted: true }, Traversal::DiagMajor),
+            Plan::serial(Layout::Jds { permuted: false }, Traversal::DiagMajor),
+            Plan::serial(Layout::Bcsr { br: 2, bc: 3 }, Traversal::Blocked),
+            Plan::serial(Layout::HybridEllCoo, Traversal::RowWise),
+            Plan::serial(Layout::Dia, Traversal::DiagMajor),
         ]
     }
 
@@ -236,6 +308,62 @@ mod tests {
         for plan in all_spmv_plans() {
             let p = prepare(plan, &m);
             assert!(p.storage.bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn every_legal_schedule_executes_spmv_correctly() {
+        let m = gen::powerlaw(52, 2.0, 26, 64);
+        let x: Vec<f64> = (0..52).map(|i| (i as f64 * 0.19).cos() + 0.3).collect();
+        let want = m.spmv_ref(&x);
+        let schedules = [
+            Schedule::Parallel { threads: 3 },
+            Schedule::Tiled { x_block: 16 },
+            Schedule::ParallelTiled { threads: 3, x_block: 16 },
+        ];
+        let mut ran = 0;
+        for base in all_spmv_plans() {
+            for sch in schedules {
+                let plan = base.with_schedule(sch);
+                if !supports(&plan, Kernel::Spmv) {
+                    continue;
+                }
+                ran += 1;
+                let p = prepare(plan, &m);
+                if matches!(sch, Schedule::Tiled { .. } | Schedule::ParallelTiled { .. }) {
+                    assert!(p.bands.is_some(), "{plan:?}: bands not built at prepare time");
+                }
+                let mut y = vec![0.0; 52];
+                p.spmv(&x, &mut y);
+                assert_close(&y, &want, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+            }
+        }
+        assert!(ran >= 7, "too few scheduled plans exercised: {ran}");
+    }
+
+    #[test]
+    fn every_legal_schedule_executes_spmm_correctly() {
+        let m = gen::uniform_random(24, 31, 160, 65);
+        let k = 6;
+        let b: Vec<f64> = (0..31 * k).map(|i| i as f64 * 0.04 - 0.6).collect();
+        let want = m.spmm_ref(&b, k);
+        for base in all_spmv_plans() {
+            let plan = base.with_schedule(Schedule::Parallel { threads: 4 });
+            if !supports(&plan, Kernel::Spmm) {
+                continue;
+            }
+            let p = prepare(plan, &m);
+            let mut c = vec![0.0; 24 * k];
+            p.spmm(&b, k, &mut c);
+            assert_close(&c, &want, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn trsv_rejects_non_serial_schedules() {
+        for base in all_spmv_plans() {
+            let par = base.with_schedule(Schedule::Parallel { threads: 2 });
+            assert!(!supports(&par, Kernel::Trsv), "{par:?}");
         }
     }
 }

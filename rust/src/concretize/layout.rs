@@ -3,7 +3,33 @@
 //! the one-to-one mapping of the materialized symbolic `PA` sequences
 //! onto allocated arrays; `exec.rs` then builds the arrays from the
 //! tuple reservoir and binds the generated loop nest.
+//!
+//! # The three plan axes
+//!
+//! A concretization [`Plan`] spans three orthogonal axes:
+//!
+//! 1. **[`Layout`]** — *how the tuples are stored*: the physical data
+//!    structure (CSR, ELL, JDS, BCSR, SELL, …) the chain's materialized
+//!    `PA` sequences map onto. This is the paper's "generated data
+//!    structure".
+//! 2. **[`Traversal`]** — *in what order the loop nest walks the
+//!    storage*: row-wise, plane-wise (post-interchange), diagonal-major,
+//!    etc. Layout × Traversal reproduces the paper's 130-executables /
+//!    25-structures distinction.
+//! 3. **[`Schedule`]** — *how the walk is mapped onto the machine*:
+//!    serial, parallel over nnz-balanced disjoint row ranges, cache-
+//!    blocked over L2-resident `x` column bands, or both combined. The
+//!    paper's evaluation is single-core (its tables are reproduced with
+//!    `Schedule::Serial`); the schedule axis is this reproduction's
+//!    extension of the same search philosophy to the hardware knobs
+//!    that ADHA and Marmoset show must be co-optimized with layout.
+//!
+//! `layout.rs` maps chain states to Serial plans; `search::tree`
+//! crosses them with a [`Schedule`] pool, pruning per kernel (TrSv's
+//! loop-carried dependence forces `Serial`); `exec.rs` binds each
+//! triple to a concrete executor.
 
+use crate::baselines::Kernel;
 use crate::forelem::ir::{Blocking, ChainState, NStarMat, Orth};
 use crate::storage::{CooOrder, EllOrder};
 
@@ -67,18 +93,127 @@ pub enum Traversal {
     SlicePlane,
 }
 
-/// A concretization plan: what to allocate and how to walk it.
+/// Execution schedule of the generated loop nest — the third plan axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Schedule {
+    /// Single-threaded, unblocked — the paper's measurement protocol.
+    Serial,
+    /// Disjoint nnz-balanced row ranges across `threads` workers; each
+    /// worker owns a `&mut` chunk of the output (no locks).
+    Parallel { threads: usize },
+    /// Cache-blocked: the `x` gather is tiled into `x_block`-column
+    /// bands (CSB-style two-pass over a per-band row_ptr split built at
+    /// `prepare()` time) so each band stays L2-resident.
+    Tiled { x_block: usize },
+    /// Both: parallel row ranges, each traversed band-by-band.
+    ParallelTiled { threads: usize, x_block: usize },
+}
+
+impl Schedule {
+    /// Short display label, e.g. `par(4)` or `tile(4096)`.
+    pub fn label(&self) -> String {
+        match self {
+            Schedule::Serial => "serial".to_string(),
+            Schedule::Parallel { threads } => format!("par({threads})"),
+            Schedule::Tiled { x_block } => format!("tile({x_block})"),
+            Schedule::ParallelTiled { threads, x_block } => {
+                format!("par({threads})+tile({x_block})")
+            }
+        }
+    }
+
+    pub fn is_serial(&self) -> bool {
+        matches!(self, Schedule::Serial)
+    }
+}
+
+/// A concretization plan: what to allocate, how to walk it, and how the
+/// walk is scheduled onto the machine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Plan {
     pub layout: Layout,
     pub traversal: Traversal,
+    pub schedule: Schedule,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+impl Plan {
+    /// A serial plan — the paper's original Layout × Traversal space.
+    pub fn serial(layout: Layout, traversal: Traversal) -> Plan {
+        Plan { layout, traversal, schedule: Schedule::Serial }
+    }
+
+    /// The same plan under a different schedule.
+    pub fn with_schedule(self, schedule: Schedule) -> Plan {
+        Plan { schedule, ..self }
+    }
+}
+
+/// Is `schedule` legal for this (layout, traversal, kernel)?
+///
+/// Pruning rules:
+/// - `Serial` is always legal.
+/// - TrSv is never rescheduled: its loop nest carries a true dependence
+///   over rows (x[i] needs all x[j<i]), so parallel row ranges and
+///   band-reordered accumulation are both illegal.
+/// - `Parallel` requires a layout whose output rows partition into
+///   disjoint contiguous ranges: CSR (SoA), ELL, SELL (slice ranges),
+///   BCSR (block-row ranges) and permuted JDS (prefix-property row
+///   ranges in the permuted output). Scatter-shaped layouts (COO, CSC,
+///   DIA, hybrid tails, unpermuted JDS) would need atomics or merges.
+///   The branch-free `RowWisePadded` ELL traversal is excluded: its
+///   parallel executor would be identical to the exact-length row-wise
+///   one, and duplicating the executable under two names would skew
+///   the variant tables.
+/// - `Tiled` is generated for the CSR SpMV gather only (the band split
+///   is a CSR-specific auxiliary structure).
+pub fn schedule_legal(
+    layout: Layout,
+    traversal: Traversal,
+    schedule: Schedule,
+    kernel: Kernel,
+) -> bool {
+    if schedule.is_serial() {
+        return true;
+    }
+    if kernel == Kernel::Trsv {
+        return false;
+    }
+    let row_partitionable = matches!(
+        layout,
+        Layout::Csr
+            | Layout::Ell(_)
+            | Layout::Sell { .. }
+            | Layout::Bcsr { .. }
+            | Layout::Jds { permuted: true }
+    ) && traversal != Traversal::RowWisePadded;
+    match schedule {
+        Schedule::Serial => true,
+        Schedule::Parallel { threads } => threads > 0 && row_partitionable,
+        Schedule::Tiled { x_block } => {
+            x_block > 0 && kernel == Kernel::Spmv && layout == Layout::Csr
+        }
+        Schedule::ParallelTiled { threads, x_block } => {
+            threads > 0 && x_block > 0 && kernel == Kernel::Spmv && layout == Layout::Csr
+        }
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
 pub enum ConcretizeError {
-    #[error("state not concretizable: {0}")]
     NotConcretizable(&'static str),
 }
+
+impl std::fmt::Display for ConcretizeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConcretizeError::NotConcretizable(msg) => {
+                write!(f, "state not concretizable: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConcretizeError {}
 
 /// Map a chain state to its concretization plan(s). Most states map to
 /// exactly one plan; padded-ELL row-major admits two traversals (exact
@@ -94,18 +229,15 @@ pub fn plans(s: &ChainState) -> Result<Vec<Plan>, ConcretizeError> {
     // Blocked states first.
     if let Some(b) = s.blocked {
         return match b {
-            Blocking::Tile { br, bc } => Ok(vec![Plan {
-                layout: Layout::Bcsr { br, bc },
-                traversal: Traversal::Blocked,
-            }]),
-            Blocking::FillCutoff => Ok(vec![Plan {
-                layout: Layout::HybridEllCoo,
-                traversal: Traversal::RowWise,
-            }]),
-            Blocking::RowSlice { s } => Ok(vec![Plan {
-                layout: Layout::Sell { s },
-                traversal: Traversal::SlicePlane,
-            }]),
+            Blocking::Tile { br, bc } => {
+                Ok(vec![Plan::serial(Layout::Bcsr { br, bc }, Traversal::Blocked)])
+            }
+            Blocking::FillCutoff => {
+                Ok(vec![Plan::serial(Layout::HybridEllCoo, Traversal::RowWise)])
+            }
+            Blocking::RowSlice { s } => {
+                Ok(vec![Plan::serial(Layout::Sell { s }, Traversal::SlicePlane)])
+            }
         };
     }
 
@@ -113,11 +245,11 @@ pub fn plans(s: &ChainState) -> Result<Vec<Plan>, ConcretizeError> {
         // Loop-independent materialization: a single flat sequence.
         let order = CooOrder::Unsorted;
         let layout = if s.split { Layout::CooSoa(order) } else { Layout::CooAos(order) };
-        return Ok(vec![Plan { layout, traversal: Traversal::Flat }]);
+        return Ok(vec![Plan::serial(layout, Traversal::Flat)]);
     }
 
     match s.orth {
-        Orth::Diag => Ok(vec![Plan { layout: Layout::Dia, traversal: Traversal::DiagMajor }]),
+        Orth::Diag => Ok(vec![Plan::serial(Layout::Dia, Traversal::DiagMajor)]),
         Orth::Row => match (s.nstar, s.sorted, s.interchanged, s.dim_reduced) {
             // No ℕ* materialization: grouped flat sequence (row-major COO).
             (None, false, false, false) => {
@@ -126,55 +258,50 @@ pub fn plans(s: &ChainState) -> Result<Vec<Plan>, ConcretizeError> {
                 } else {
                     Layout::CooAos(CooOrder::RowMajor)
                 };
-                Ok(vec![Plan { layout, traversal: Traversal::Flat }])
+                Ok(vec![Plan::serial(layout, Traversal::Flat)])
             }
             // Exact ℕ* + dim reduction = CSR.
             (Some(NStarMat::Exact), false, false, true) => {
                 let layout = if s.split { Layout::Csr } else { Layout::CsrAos };
-                Ok(vec![Plan { layout, traversal: Traversal::RowWise }])
+                Ok(vec![Plan::serial(layout, Traversal::RowWise)])
             }
             // Exact ℕ* without dim reduction: nested sequences —
             // physically CSR arrays, same traversal (allocation detail).
             (Some(NStarMat::Exact), false, false, false) => {
                 let layout = if s.split { Layout::Csr } else { Layout::CsrAos };
-                Ok(vec![Plan { layout, traversal: Traversal::RowWise }])
+                Ok(vec![Plan::serial(layout, Traversal::RowWise)])
             }
             // Padded, no interchange: ELL row-major; two executables.
             (Some(NStarMat::Padded), false, false, false) => Ok(vec![
-                Plan { layout: Layout::Ell(EllOrder::RowMajor), traversal: Traversal::RowWise },
-                Plan { layout: Layout::Ell(EllOrder::RowMajor), traversal: Traversal::RowWisePadded },
+                Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWise),
+                Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWisePadded),
             ]),
             // Padded + interchange: ITPACK plane-wise.
-            (Some(NStarMat::Padded), false, true, false) => Ok(vec![Plan {
-                layout: Layout::Ell(EllOrder::ColMajor),
-                traversal: Traversal::PlaneWise,
-            }]),
+            (Some(NStarMat::Padded), false, true, false) => Ok(vec![Plan::serial(
+                Layout::Ell(EllOrder::ColMajor),
+                Traversal::PlaneWise,
+            )]),
             // Padded + sorted (+ maybe interchange): sorted ELL — treat
             // sorted padded rows as JDS-adjacent; plane-wise schedule.
             (Some(NStarMat::Padded), true, xch, false) => {
                 let _ = xch;
-                Ok(vec![Plan {
-                    layout: Layout::Jds { permuted: true },
-                    traversal: Traversal::DiagMajor,
-                }])
+                Ok(vec![Plan::serial(Layout::Jds { permuted: true }, Traversal::DiagMajor)])
             }
             // Sorted + interchanged + exact = JDS (with or without the
             // final dim reduction, which only flattens the allocation).
-            (Some(NStarMat::Exact), true, true, _) => Ok(vec![Plan {
-                layout: Layout::Jds { permuted: true },
-                traversal: Traversal::DiagMajor,
-            }]),
+            (Some(NStarMat::Exact), true, true, _) => {
+                Ok(vec![Plan::serial(Layout::Jds { permuted: true }, Traversal::DiagMajor)])
+            }
             // Unsorted + interchanged + exact = unpermuted jagged.
-            (Some(NStarMat::Exact), false, true, _) => Ok(vec![Plan {
-                layout: Layout::Jds { permuted: false },
-                traversal: Traversal::DiagMajor,
-            }]),
+            (Some(NStarMat::Exact), false, true, _) => {
+                Ok(vec![Plan::serial(Layout::Jds { permuted: false }, Traversal::DiagMajor)])
+            }
             // Sorted without interchange: CSR with permuted rows — the
             // permutation only reorders row visits; storage is CSR-like.
             (Some(NStarMat::Exact), true, false, reduced) => {
                 let _ = reduced;
                 let layout = if s.split { Layout::Csr } else { Layout::CsrAos };
-                Ok(vec![Plan { layout, traversal: Traversal::RowWise }])
+                Ok(vec![Plan::serial(layout, Traversal::RowWise)])
             }
             (None, ..) => Err(NotConcretizable("row nest needs ℕ* materialization or stays COO")),
             (Some(NStarMat::Padded), _, _, true) => {
@@ -188,11 +315,11 @@ pub fn plans(s: &ChainState) -> Result<Vec<Plan>, ConcretizeError> {
                 } else {
                     Layout::CooAos(CooOrder::ColMajor)
                 };
-                Ok(vec![Plan { layout, traversal: Traversal::Flat }])
+                Ok(vec![Plan::serial(layout, Traversal::Flat)])
             }
             (Some(NStarMat::Exact), _) => {
                 let layout = if s.split { Layout::Csc } else { Layout::CscAos };
-                Ok(vec![Plan { layout, traversal: Traversal::ColScatter }])
+                Ok(vec![Plan::serial(layout, Traversal::ColScatter)])
             }
             _ => Err(NotConcretizable("column nest variant not generated")),
         },
@@ -204,7 +331,7 @@ pub fn plans(s: &ChainState) -> Result<Vec<Plan>, ConcretizeError> {
             } else {
                 Layout::CooAos(CooOrder::RowMajor)
             };
-            Ok(vec![Plan { layout, traversal: Traversal::Flat }])
+            Ok(vec![Plan::serial(layout, Traversal::Flat)])
         }
         Orth::None => Err(NotConcretizable("unreachable: dependent without orthogonalization")),
     }
@@ -305,5 +432,53 @@ mod tests {
             Step::Block(transforms::BlockStep::FillCutoff),
         ]);
         assert_eq!(plans(&s).unwrap()[0].layout, Layout::HybridEllCoo);
+    }
+
+    #[test]
+    fn plans_are_serial_by_default() {
+        let s = state(&[
+            Step::Orthogonalize(Orth::Row),
+            Step::Materialize,
+            Step::Split,
+            Step::NStar(NStarMat::Exact),
+            Step::DimReduce,
+        ]);
+        for p in plans(&s).unwrap() {
+            assert_eq!(p.schedule, Schedule::Serial);
+        }
+    }
+
+    #[test]
+    fn schedule_legality_prunes_per_kernel() {
+        use Traversal::RowWise;
+        let par = Schedule::Parallel { threads: 4 };
+        let tiled = Schedule::Tiled { x_block: 4096 };
+        // TrSv is never rescheduled.
+        assert!(!schedule_legal(Layout::Csr, RowWise, par, Kernel::Trsv));
+        assert!(schedule_legal(Layout::Csr, RowWise, Schedule::Serial, Kernel::Trsv));
+        // Parallel only for row-partitionable layouts.
+        assert!(schedule_legal(Layout::Csr, RowWise, par, Kernel::Spmv));
+        assert!(schedule_legal(Layout::Sell { s: 32 }, Traversal::SlicePlane, par, Kernel::Spmm));
+        assert!(schedule_legal(Layout::Bcsr { br: 2, bc: 2 }, Traversal::Blocked, par, Kernel::Spmv));
+        assert!(schedule_legal(Layout::Jds { permuted: true }, Traversal::DiagMajor, par, Kernel::Spmv));
+        assert!(!schedule_legal(Layout::Jds { permuted: false }, Traversal::DiagMajor, par, Kernel::Spmv));
+        assert!(!schedule_legal(Layout::Csc, Traversal::ColScatter, par, Kernel::Spmv));
+        assert!(!schedule_legal(Layout::Dia, Traversal::DiagMajor, par, Kernel::Spmv));
+        // The padded ELL traversal would duplicate the exact-length
+        // parallel executor — pruned.
+        assert!(schedule_legal(Layout::Ell(EllOrder::RowMajor), RowWise, par, Kernel::Spmv));
+        assert!(!schedule_legal(
+            Layout::Ell(EllOrder::RowMajor),
+            Traversal::RowWisePadded,
+            par,
+            Kernel::Spmv
+        ));
+        // Tiling is the CSR SpMV gather optimization only.
+        assert!(schedule_legal(Layout::Csr, RowWise, tiled, Kernel::Spmv));
+        assert!(!schedule_legal(Layout::Csr, RowWise, tiled, Kernel::Spmm));
+        assert!(!schedule_legal(Layout::Ell(EllOrder::RowMajor), RowWise, tiled, Kernel::Spmv));
+        let pt = Schedule::ParallelTiled { threads: 4, x_block: 4096 };
+        assert!(schedule_legal(Layout::Csr, RowWise, pt, Kernel::Spmv));
+        assert!(!schedule_legal(Layout::Csr, RowWise, pt, Kernel::Spmm));
     }
 }

@@ -9,4 +9,4 @@ pub mod exec;
 pub mod layout;
 
 pub use exec::{prepare, supports, Prepared, Storage};
-pub use layout::{plans, ConcretizeError, Layout, Plan, Traversal};
+pub use layout::{plans, schedule_legal, ConcretizeError, Layout, Plan, Schedule, Traversal};

@@ -8,9 +8,14 @@ use crate::matrix::suite::{SuiteEntry, SUITE};
 use crate::matrix::TriMat;
 use crate::runtime::XlaBackend;
 use crate::search::coverage::Measurements;
-use crate::search::tree;
+use crate::search::tree::{self, SchedulePool};
 use crate::storage::{Ell, EllOrder};
 use crate::util::rng::Rng;
+
+/// Default column-band width (in doubles) for tiled schedules: 4096
+/// doubles of `x` ≈ 32 KiB, comfortably L2-resident next to the
+/// streamed row data.
+pub const DEFAULT_X_BLOCK: usize = 4096;
 
 /// An evaluation "architecture" (DESIGN.md §5 substitution for the
 /// paper's Xeon 5150 / Xeon E5 pair).
@@ -41,6 +46,21 @@ impl Arch {
     pub fn uses_xla(&self) -> bool {
         matches!(self, Arch::HostLarge)
     }
+
+    /// Schedule pool this architecture explores when the sweep opts in
+    /// (`SweepConfig::use_schedules`). `HostSmall` stays serial-only so
+    /// the paper's single-core tables remain reproducible; `HostLarge`
+    /// (the "modern machine" stand-in) adds the parallel and
+    /// cache-blocked schedules.
+    pub fn schedule_pool(&self) -> SchedulePool {
+        match self {
+            Arch::HostSmall => SchedulePool::serial_only(),
+            Arch::HostLarge => {
+                let threads = crate::util::pool::default_workers().clamp(2, 8);
+                SchedulePool::host(threads, DEFAULT_X_BLOCK)
+            }
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -52,11 +72,21 @@ pub struct SweepConfig {
     pub matrices: Option<Vec<usize>>,
     /// Validate every routine against the oracle before timing.
     pub validate: bool,
+    /// Opt in to the schedule axis: cross the generated pool with the
+    /// architecture's `Arch::schedule_pool()`. Off by default so the
+    /// paper's single-core tables stay reproducible.
+    pub use_schedules: bool,
 }
 
 impl Default for SweepConfig {
     fn default() -> Self {
-        SweepConfig { bench: BenchConfig::from_env(), spmm_k: 100, matrices: None, validate: true }
+        SweepConfig {
+            bench: BenchConfig::from_env(),
+            spmm_k: 100,
+            matrices: None,
+            validate: true,
+            use_schedules: false,
+        }
     }
 }
 
@@ -67,7 +97,13 @@ impl SweepConfig {
             spmm_k: 16,
             matrices: Some(vec![0, 2, 7]),
             validate: true,
+            use_schedules: false,
         }
+    }
+
+    /// `quick()` with the schedule axis enabled.
+    pub fn quick_scheduled() -> Self {
+        SweepConfig { use_schedules: true, ..SweepConfig::quick() }
     }
 }
 
@@ -144,10 +180,12 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
         },
     );
 
-    // Routine sets.
+    // Routine sets. The generated pool is the serial tree unless the
+    // sweep opted into this architecture's schedule pool.
     let lib_routines: Vec<LibRoutine> =
         ALL_ROUTINES.iter().copied().filter(|r| r.supports(kernel)).collect();
-    let tree = tree::enumerate(kernel);
+    let pool = if cfg.use_schedules { arch.schedule_pool() } else { SchedulePool::serial_only() };
+    let tree = tree::enumerate_scheduled(kernel, &pool);
 
     let mut libs = Measurements::new(
         lib_routines.iter().map(|r| r.label()).collect(),
@@ -332,6 +370,89 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
     SweepResult { kernel, arch, libs, gens, derivations }
 }
 
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_str_array(items: &[String]) -> String {
+    let quoted: Vec<String> = items.iter().map(|s| format!("\"{}\"", json_escape(s))).collect();
+    format!("[{}]", quoted.join(", "))
+}
+
+fn json_num_array(items: &[f64]) -> String {
+    let nums: Vec<String> = items.iter().map(|v| format!("{v:e}")).collect();
+    format!("[{}]", nums.join(", "))
+}
+
+/// Render the machine-trackable perf record (`BENCH_spmv.json`) from a
+/// schedule-extended sweep: median seconds per generated variant ×
+/// matrix, plus a per-matrix serial-best vs best-overall summary — so
+/// the repo's perf trajectory is comparable across PRs.
+///
+/// The sweep's pool already contains every serial variant (schedule
+/// labels carry an `@` suffix only when non-serial), so the serial
+/// table is the `@`-free subset — no second sweep is run.
+pub fn bench_json(scheduled: &SweepResult) -> String {
+    let mats = &scheduled.gens.matrices;
+    let serial_idx: Vec<usize> = (0..scheduled.gens.routines.len())
+        .filter(|&r| !scheduled.gens.routines[r].contains('@'))
+        .collect();
+    assert!(!serial_idx.is_empty(), "scheduled sweep lost its serial variants");
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"kernel\": \"{}\",\n", json_escape(scheduled.kernel.label())));
+    out.push_str(&format!("  \"arch\": \"{}\",\n", json_escape(scheduled.arch.name())));
+    out.push_str(&format!("  \"matrices\": {},\n", json_str_array(mats)));
+    out.push_str("  \"scheduled\": {\n");
+    out.push_str(&format!("    \"routines\": {},\n", json_str_array(&scheduled.gens.routines)));
+    let rows: Vec<String> =
+        scheduled.gens.times.iter().map(|row| format!("      {}", json_num_array(row))).collect();
+    out.push_str(&format!("    \"median_secs\": [\n{}\n    ]\n", rows.join(",\n")));
+    out.push_str("  },\n");
+    let serial_best = scheduled.gens.best_per_matrix(Some(&serial_idx));
+    let sched_best = scheduled.gens.best_per_matrix(None);
+    let summary: Vec<String> = mats
+        .iter()
+        .enumerate()
+        .map(|(mi, name)| {
+            format!(
+                "    {{\"matrix\": \"{}\", \"serial_best_secs\": {:e}, \
+                 \"scheduled_best_secs\": {:e}, \"speedup\": {:.3}}}",
+                json_escape(name),
+                serial_best[mi],
+                sched_best[mi],
+                serial_best[mi] / sched_best[mi]
+            )
+        })
+        .collect();
+    out.push_str(&format!("  \"summary\": [\n{}\n  ]\n", summary.join(",\n")));
+    out.push_str("}\n");
+    out
+}
+
+/// Run the schedule-extended SpMV sweep on `arch` and write
+/// `BENCH_spmv.json` to `path`.
+pub fn write_bench_json(
+    path: &str,
+    arch: Arch,
+    cfg: &SweepConfig,
+    xla: Option<&XlaBackend>,
+) -> std::io::Result<()> {
+    let sched_cfg = SweepConfig { use_schedules: true, ..cfg.clone() };
+    let scheduled = run(Kernel::Spmv, arch, &sched_cfg, xla);
+    std::fs::write(path, bench_json(&scheduled))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,5 +477,49 @@ mod tests {
         let r = run(Kernel::Trsv, Arch::HostSmall, &cfg, None);
         assert_eq!(r.libs.routines.len(), 4); // MTL4 + SL++ CRS/CCS
         assert!(!r.gens.routines.is_empty());
+    }
+
+    #[test]
+    fn scheduled_sweep_extends_pool_on_host_large_only() {
+        let mut cfg = SweepConfig::quick_scheduled();
+        cfg.matrices = Some(vec![0]);
+        // HostSmall stays serial even when schedules are requested, so
+        // the paper tables remain reproducible.
+        let small = run(Kernel::Spmv, Arch::HostSmall, &cfg, None);
+        let serial_cfg = SweepConfig { use_schedules: false, ..cfg.clone() };
+        let small_serial = run(Kernel::Spmv, Arch::HostSmall, &serial_cfg, None);
+        assert_eq!(small.gens.routines.len(), small_serial.gens.routines.len());
+        // HostLarge opts into the parallel/tiled schedules (validated
+        // against the oracle inside run()).
+        let large = run(Kernel::Spmv, Arch::HostLarge, &cfg, None);
+        assert!(
+            large.gens.routines.len() > small.gens.routines.len(),
+            "schedule axis did not extend the pool: {} vs {}",
+            large.gens.routines.len(),
+            small.gens.routines.len()
+        );
+        assert!(large.gens.routines.iter().any(|r| r.contains("@par(")));
+        assert!(large.gens.routines.iter().any(|r| r.contains("@tile(")));
+    }
+
+    #[test]
+    fn bench_json_is_well_formed() {
+        let mut cfg = SweepConfig::quick_scheduled();
+        cfg.matrices = Some(vec![0]);
+        let scheduled = run(Kernel::Spmv, Arch::HostLarge, &cfg, None);
+        let js = bench_json(&scheduled);
+        assert!(js.starts_with("{\n"));
+        assert!(js.contains("\"kernel\": \"SPMV\""));
+        assert!(js.contains("\"scheduled\""));
+        assert!(js.contains("\"serial_best_secs\""));
+        assert!(js.contains("\"summary\""));
+        assert!(js.contains("\"speedup\""));
+        // crude structural balance check
+        let opens = js.matches('{').count();
+        let closes = js.matches('}').count();
+        assert_eq!(opens, closes);
+        let b_opens = js.matches('[').count();
+        let b_closes = js.matches(']').count();
+        assert_eq!(b_opens, b_closes);
     }
 }

@@ -1,0 +1,691 @@
+//! Schedule-aware kernels — the executors behind `Schedule::Parallel`,
+//! `Schedule::Tiled` and `Schedule::ParallelTiled` (the third plan
+//! axis; see `concretize::layout`).
+//!
+//! Parallel kernels partition the *output* dimension into disjoint
+//! contiguous ranges — rows for CSR/ELL, slices for SELL, block-rows
+//! for BCSR, permuted-row prefixes for JDS — balanced by nonzero count,
+//! and hand each worker an owned `&mut` chunk of the output obtained by
+//! splitting the slice. No worker ever writes another worker's rows, so
+//! the hot path takes no locks and needs no atomics.
+//!
+//! Tiled kernels run the CSB-style two-pass CSR SpMV: the `x` gather is
+//! restricted to one `x_block`-column band at a time using the per-band
+//! row splits built at `prepare()` time (`storage::CsrBands`), so the
+//! randomly-gathered part of the working set stays L2-resident.
+//!
+//! Workers are scoped `std::thread`s spawned per invocation (no
+//! persistent pool — tokio/rayon are unavailable offline), so every
+//! call pays spawn+join latency (~tens of µs). That cost is *part of
+//! the schedule's measured time on purpose*: on small matrices the
+//! parallel variants genuinely lose to `Serial`, and the search sees
+//! exactly that and selects per-matrix — the same
+//! let-the-measurements-decide philosophy the paper applies to
+//! layouts. The ≥2× CSR speedup target applies to the large suite
+//! matrices, where spawn cost is noise.
+
+use crate::storage::{Bcsr, Csr, CsrBands, Ell, Jds, Sell};
+use crate::util::pool::scoped_run;
+
+use super::spmm::axpy_k4;
+
+/// Split `0..n` units into at most `threads` contiguous ranges with
+/// approximately equal cumulative weight. `cum(i)` is the total weight
+/// of units `0..i` (monotone non-decreasing, `cum(0) == 0`). Every
+/// returned range is non-empty and the ranges cover `0..n` exactly.
+pub fn balanced_ranges(
+    n: usize,
+    threads: usize,
+    cum: impl Fn(usize) -> usize,
+) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    let total = cum(n);
+    let mut ranges = Vec::with_capacity(threads);
+    let mut lo = 0usize;
+    for t in 0..threads {
+        if lo >= n {
+            break;
+        }
+        let hi = if t + 1 == threads {
+            n
+        } else {
+            // Smallest hi > lo with cum(hi) >= the t+1-th weight share.
+            let target = (total as u128 * (t as u128 + 1) / threads as u128) as usize;
+            let (mut a, mut b) = (lo + 1, n);
+            while a < b {
+                let mid = (a + b) / 2;
+                if cum(mid) >= target {
+                    b = mid;
+                } else {
+                    a = mid + 1;
+                }
+            }
+            a
+        };
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    ranges
+}
+
+/// Split `y` into per-range `&mut` chunks (range `(lo, hi)` gets
+/// `y[lo * unit..hi * unit]`, the tail chunk clamped to `y.len()`).
+fn chunks_for<'a>(
+    mut y: &'a mut [f64],
+    ranges: &[(usize, usize)],
+    unit: usize,
+) -> Vec<&'a mut [f64]> {
+    let total = y.len();
+    let mut chunks = Vec::with_capacity(ranges.len());
+    let mut consumed = 0usize;
+    for &(_lo, hi) in ranges {
+        let end = (hi * unit).min(total);
+        let (chunk, tail) = std::mem::take(&mut y).split_at_mut(end - consumed);
+        y = tail;
+        consumed = end;
+        chunks.push(chunk);
+    }
+    debug_assert_eq!(consumed, total);
+    chunks
+}
+
+// ---------------------------------------------------------------- CSR
+
+fn csr_rows(a: &Csr, x: &[f64], y: &mut [f64], row0: usize) {
+    for (r, yi) in y.iter_mut().enumerate() {
+        let i = row0 + r;
+        let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+        *yi = a.cols[s..e]
+            .iter()
+            .zip(&a.vals[s..e])
+            .map(|(&c, &v)| v * x[c as usize])
+            .sum();
+    }
+}
+
+/// CSR SpMV over nnz-balanced disjoint row ranges.
+pub fn csr_spmv(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
+    assert_eq!(x.len(), a.ncols);
+    assert_eq!(y.len(), a.nrows);
+    let ranges = balanced_ranges(a.nrows, threads, |i| a.row_ptr[i] as usize);
+    if ranges.len() <= 1 {
+        return crate::kernels::spmv::csr(a, x, y);
+    }
+    let chunks = chunks_for(y, &ranges, 1);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    for (&(lo, _hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || csr_rows(a, x, chunk, lo));
+    }
+    scoped_run(tasks);
+}
+
+fn csr_rows_mm(a: &Csr, b: &[f64], k: usize, c: &mut [f64], row0: usize) {
+    for r in 0..c.len() / k {
+        let i = row0 + r;
+        let crow = &mut c[r * k..r * k + k];
+        crow.fill(0.0);
+        let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+        for p in s..e {
+            let col = a.cols[p] as usize;
+            axpy_k4(crow, &b[col * k..col * k + k], a.vals[p]);
+        }
+    }
+}
+
+/// CSR SpMM over nnz-balanced disjoint row ranges (register-blocked
+/// micro-kernel inner loop).
+pub fn csr_spmm(a: &Csr, b: &[f64], k: usize, c: &mut [f64], threads: usize) {
+    assert_eq!(c.len(), a.nrows * k);
+    let ranges = balanced_ranges(a.nrows, threads, |i| a.row_ptr[i] as usize);
+    if ranges.len() <= 1 {
+        return crate::kernels::spmm::csr(a, b, k, c);
+    }
+    let chunks = chunks_for(c, &ranges, k);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    for (&(lo, _hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || csr_rows_mm(a, b, k, chunk, lo));
+    }
+    scoped_run(tasks);
+}
+
+fn csr_rows_tiled(a: &Csr, bands: &CsrBands, x: &[f64], y: &mut [f64], row0: usize) {
+    y.fill(0.0);
+    let nrows = a.nrows;
+    for band in 0..bands.nbands {
+        let base = band * nrows;
+        for (r, yi) in y.iter_mut().enumerate() {
+            let i = row0 + r;
+            let s = bands.split[base + i] as usize;
+            let e = bands.split[base + nrows + i] as usize;
+            if s == e {
+                continue;
+            }
+            let mut sum = 0.0;
+            for (&col, &v) in a.cols[s..e].iter().zip(&a.vals[s..e]) {
+                sum += v * x[col as usize];
+            }
+            *yi += sum;
+        }
+    }
+}
+
+/// Cache-blocked CSR SpMV: two passes over the per-band row splits so
+/// each `x` band stays L2-resident.
+pub fn csr_spmv_tiled(a: &Csr, bands: &CsrBands, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.ncols);
+    assert_eq!(y.len(), a.nrows);
+    csr_rows_tiled(a, bands, x, y, 0);
+}
+
+/// Parallel + cache-blocked CSR SpMV: nnz-balanced row ranges, each
+/// traversed band-by-band.
+pub fn csr_spmv_parallel_tiled(
+    a: &Csr,
+    bands: &CsrBands,
+    x: &[f64],
+    y: &mut [f64],
+    threads: usize,
+) {
+    assert_eq!(x.len(), a.ncols);
+    assert_eq!(y.len(), a.nrows);
+    let ranges = balanced_ranges(a.nrows, threads, |i| a.row_ptr[i] as usize);
+    if ranges.len() <= 1 {
+        return csr_spmv_tiled(a, bands, x, y);
+    }
+    let chunks = chunks_for(y, &ranges, 1);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    for (&(lo, _hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || csr_rows_tiled(a, bands, x, chunk, lo));
+    }
+    scoped_run(tasks);
+}
+
+// ---------------------------------------------------------------- ELL
+
+fn ell_len_prefix(a: &Ell) -> Vec<usize> {
+    let mut pref = vec![0usize; a.nrows + 1];
+    for i in 0..a.nrows {
+        pref[i + 1] = pref[i] + a.row_len[i] as usize;
+    }
+    pref
+}
+
+fn ell_rows(a: &Ell, x: &[f64], y: &mut [f64], row0: usize) {
+    for (r, yi) in y.iter_mut().enumerate() {
+        let i = row0 + r;
+        let mut sum = 0.0;
+        for p in 0..a.row_len[i] as usize {
+            let ix = a.index(i, p);
+            sum += a.vals[ix] * x[a.cols[ix] as usize];
+        }
+        *yi = sum;
+    }
+}
+
+/// ELL SpMV (either element order) over nnz-balanced row ranges.
+pub fn ell_spmv(a: &Ell, x: &[f64], y: &mut [f64], threads: usize) {
+    assert_eq!(y.len(), a.nrows);
+    let pref = ell_len_prefix(a);
+    let ranges = balanced_ranges(a.nrows, threads, |i| pref[i]);
+    if ranges.len() <= 1 {
+        return crate::kernels::spmv::ell_rowwise(a, x, y);
+    }
+    let chunks = chunks_for(y, &ranges, 1);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    for (&(lo, _hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || ell_rows(a, x, chunk, lo));
+    }
+    scoped_run(tasks);
+}
+
+fn ell_rows_mm(a: &Ell, b: &[f64], k: usize, c: &mut [f64], row0: usize) {
+    for r in 0..c.len() / k {
+        let i = row0 + r;
+        let crow = &mut c[r * k..r * k + k];
+        crow.fill(0.0);
+        for p in 0..a.row_len[i] as usize {
+            let ix = a.index(i, p);
+            let col = a.cols[ix] as usize;
+            axpy_k4(crow, &b[col * k..col * k + k], a.vals[ix]);
+        }
+    }
+}
+
+/// ELL SpMM over nnz-balanced row ranges.
+pub fn ell_spmm(a: &Ell, b: &[f64], k: usize, c: &mut [f64], threads: usize) {
+    assert_eq!(c.len(), a.nrows * k);
+    let pref = ell_len_prefix(a);
+    let ranges = balanced_ranges(a.nrows, threads, |i| pref[i]);
+    if ranges.len() <= 1 {
+        return crate::kernels::spmm::ell_rowwise(a, b, k, c);
+    }
+    let chunks = chunks_for(c, &ranges, k);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    for (&(lo, _hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || ell_rows_mm(a, b, k, chunk, lo));
+    }
+    scoped_run(tasks);
+}
+
+// --------------------------------------------------------------- SELL
+
+fn sell_slices(a: &Sell, x: &[f64], y: &mut [f64], slice0: usize, slice1: usize, row0: usize) {
+    for sb in slice0..slice1 {
+        let lo = sb * a.s;
+        let hi = ((sb + 1) * a.s).min(a.nrows);
+        let rows = hi - lo;
+        let base = a.slice_ptr[sb] as usize;
+        let w = a.widths[sb] as usize;
+        let yb = &mut y[lo - row0..lo - row0 + rows];
+        yb.fill(0.0);
+        for p in 0..w {
+            let plane = base + p * rows;
+            for (ri, ybr) in yb.iter_mut().enumerate() {
+                let ix = plane + ri;
+                *ybr += a.vals[ix] * x[a.cols[ix] as usize];
+            }
+        }
+    }
+}
+
+/// SELL SpMV over nnz-balanced disjoint *slice* ranges (slice
+/// boundaries are row boundaries, so output chunks stay disjoint).
+pub fn sell_spmv(a: &Sell, x: &[f64], y: &mut [f64], threads: usize) {
+    assert_eq!(y.len(), a.nrows);
+    let ranges = balanced_ranges(a.nslices, threads, |sb| a.slice_ptr[sb] as usize);
+    if ranges.len() <= 1 {
+        return crate::storage::sell::spmv(a, x, y);
+    }
+    // Row chunk for slice range (lo, hi): rows lo*s .. min(hi*s, nrows).
+    let chunks = chunks_for(y, &ranges, a.s);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || sell_slices(a, x, chunk, lo, hi, lo * a.s));
+    }
+    scoped_run(tasks);
+}
+
+fn sell_slices_mm(
+    a: &Sell,
+    bm: &[f64],
+    k: usize,
+    c: &mut [f64],
+    slice0: usize,
+    slice1: usize,
+    row0: usize,
+) {
+    for sb in slice0..slice1 {
+        let lo = sb * a.s;
+        let hi = ((sb + 1) * a.s).min(a.nrows);
+        let rows = hi - lo;
+        let base = a.slice_ptr[sb] as usize;
+        let w = a.widths[sb] as usize;
+        let c0 = (lo - row0) * k;
+        c[c0..c0 + rows * k].fill(0.0);
+        for p in 0..w {
+            let plane = base + p * rows;
+            for ri in 0..rows {
+                let ix = plane + ri;
+                let v = a.vals[ix];
+                if v == 0.0 {
+                    continue;
+                }
+                let col = a.cols[ix] as usize;
+                let crow = &mut c[c0 + ri * k..c0 + ri * k + k];
+                axpy_k4(crow, &bm[col * k..col * k + k], v);
+            }
+        }
+    }
+}
+
+/// SELL SpMM over nnz-balanced slice ranges.
+pub fn sell_spmm(a: &Sell, bm: &[f64], k: usize, c: &mut [f64], threads: usize) {
+    assert_eq!(c.len(), a.nrows * k);
+    let ranges = balanced_ranges(a.nslices, threads, |sb| a.slice_ptr[sb] as usize);
+    if ranges.len() <= 1 {
+        return crate::storage::sell::spmm(a, bm, k, c);
+    }
+    let chunks = chunks_for(c, &ranges, a.s * k);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || sell_slices_mm(a, bm, k, chunk, lo, hi, lo * a.s));
+    }
+    scoped_run(tasks);
+}
+
+// --------------------------------------------------------------- BCSR
+
+fn bcsr_block_rows(a: &Bcsr, x: &[f64], y: &mut [f64], brow0: usize, brow1: usize, row0: usize) {
+    y.fill(0.0);
+    let (br, bc) = (a.br, a.bc);
+    for bi in brow0..brow1 {
+        let (s, e) = (a.block_row_ptr[bi] as usize, a.block_row_ptr[bi + 1] as usize);
+        let i0 = bi * br;
+        let rmax = br.min(a.nrows - i0);
+        for kblk in s..e {
+            let j0 = a.block_cols[kblk] as usize * bc;
+            let cmax = bc.min(a.ncols - j0);
+            let payload = &a.blocks[kblk * br * bc..(kblk + 1) * br * bc];
+            let xs = &x[j0..j0 + cmax];
+            for r in 0..rmax {
+                let prow = &payload[r * bc..r * bc + cmax];
+                let sum: f64 = prow.iter().zip(xs).map(|(&p, &xv)| p * xv).sum();
+                y[i0 + r - row0] += sum;
+            }
+        }
+    }
+}
+
+/// BCSR SpMV over block-balanced disjoint block-row ranges.
+pub fn bcsr_spmv(a: &Bcsr, x: &[f64], y: &mut [f64], threads: usize) {
+    assert_eq!(y.len(), a.nrows);
+    let ranges = balanced_ranges(a.nblock_rows, threads, |bi| a.block_row_ptr[bi] as usize);
+    if ranges.len() <= 1 {
+        return crate::kernels::spmv::bcsr(a, x, y);
+    }
+    let chunks = chunks_for(y, &ranges, a.br);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || bcsr_block_rows(a, x, chunk, lo, hi, lo * a.br));
+    }
+    scoped_run(tasks);
+}
+
+fn bcsr_block_rows_mm(
+    a: &Bcsr,
+    b: &[f64],
+    k: usize,
+    c: &mut [f64],
+    brow0: usize,
+    brow1: usize,
+    row0: usize,
+) {
+    c.fill(0.0);
+    let (br, bc) = (a.br, a.bc);
+    for bi in brow0..brow1 {
+        let (s, e) = (a.block_row_ptr[bi] as usize, a.block_row_ptr[bi + 1] as usize);
+        let i0 = bi * br;
+        let rmax = br.min(a.nrows - i0);
+        for blk in s..e {
+            let j0 = a.block_cols[blk] as usize * bc;
+            let cmax = bc.min(a.ncols - j0);
+            let payload = &a.blocks[blk * br * bc..(blk + 1) * br * bc];
+            for r in 0..rmax {
+                let co = (i0 + r - row0) * k;
+                let crow = &mut c[co..co + k];
+                for cc in 0..cmax {
+                    let v = payload[r * bc + cc];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    axpy_k4(crow, &b[(j0 + cc) * k..(j0 + cc) * k + k], v);
+                }
+            }
+        }
+    }
+}
+
+/// BCSR SpMM over block-balanced block-row ranges (register-blocked
+/// micro-kernel inner loop).
+pub fn bcsr_spmm(a: &Bcsr, b: &[f64], k: usize, c: &mut [f64], threads: usize) {
+    assert_eq!(c.len(), a.nrows * k);
+    let ranges = balanced_ranges(a.nblock_rows, threads, |bi| a.block_row_ptr[bi] as usize);
+    if ranges.len() <= 1 {
+        return crate::kernels::spmm::bcsr(a, b, k, c);
+    }
+    let chunks = chunks_for(c, &ranges, a.br * k);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || bcsr_block_rows_mm(a, b, k, chunk, lo, hi, lo * a.br));
+    }
+    scoped_run(tasks);
+}
+
+// ---------------------------------------------------------------- JDS
+
+/// Cumulative nonzeros of the first `q` permuted rows: permuted row `q`
+/// participates in every diagonal `d` with `diag_len[d] > q`, and
+/// `diag_len` is non-increasing for ℕ*-sorted JDS.
+fn jds_permuted_prefix(a: &Jds) -> Vec<usize> {
+    let mut pref = vec![0usize; a.nrows + 1];
+    for q in 0..a.nrows {
+        let len = a.diag_len.partition_point(|&dl| dl as usize > q);
+        pref[q + 1] = pref[q] + len;
+    }
+    pref
+}
+
+fn jds_prows(a: &Jds, x: &[f64], yp: &mut [f64], lo: usize, hi: usize) {
+    yp.fill(0.0);
+    for d in 0..a.ndiags() {
+        let n = a.diag_len[d] as usize;
+        if n <= lo {
+            break; // diag_len is non-increasing: later diagonals shorter
+        }
+        let hi2 = hi.min(n);
+        let s = a.jd_ptr[d] as usize;
+        for q in lo..hi2 {
+            yp[q - lo] += a.vals[s + q] * x[a.cols[s + q] as usize];
+        }
+    }
+}
+
+/// Permuted JDS SpMV over nnz-balanced permuted-row ranges: workers
+/// fill disjoint chunks of the permuted output, then one serial pass
+/// scatters through `perm`.
+pub fn jds_spmv(a: &Jds, x: &[f64], y: &mut [f64], threads: usize) {
+    debug_assert!(a.permuted);
+    assert_eq!(y.len(), a.nrows);
+    let pref = jds_permuted_prefix(a);
+    let ranges = balanced_ranges(a.nrows, threads, |q| pref[q]);
+    if ranges.len() <= 1 {
+        return crate::kernels::spmv::jds_permuted(a, x, y);
+    }
+    let mut yp = vec![0.0f64; a.nrows];
+    {
+        let chunks = chunks_for(&mut yp, &ranges, 1);
+        let mut tasks = Vec::with_capacity(chunks.len());
+        for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+            tasks.push(move || jds_prows(a, x, chunk, lo, hi));
+        }
+        scoped_run(tasks);
+    }
+    for (off, &r) in a.perm.iter().enumerate() {
+        y[r as usize] = yp[off];
+    }
+}
+
+fn jds_prows_mm(a: &Jds, b: &[f64], k: usize, cp: &mut [f64], lo: usize, hi: usize) {
+    cp.fill(0.0);
+    for d in 0..a.ndiags() {
+        let n = a.diag_len[d] as usize;
+        if n <= lo {
+            break;
+        }
+        let hi2 = hi.min(n);
+        let s = a.jd_ptr[d] as usize;
+        for q in lo..hi2 {
+            let col = a.cols[s + q] as usize;
+            let co = (q - lo) * k;
+            axpy_k4(&mut cp[co..co + k], &b[col * k..col * k + k], a.vals[s + q]);
+        }
+    }
+}
+
+/// Permuted JDS SpMM over nnz-balanced permuted-row ranges.
+pub fn jds_spmm(a: &Jds, b: &[f64], k: usize, c: &mut [f64], threads: usize) {
+    debug_assert!(a.permuted);
+    assert_eq!(c.len(), a.nrows * k);
+    let pref = jds_permuted_prefix(a);
+    let ranges = balanced_ranges(a.nrows, threads, |q| pref[q]);
+    let mut cp = vec![0.0f64; a.nrows * k];
+    if ranges.len() <= 1 {
+        // Serial fallback: same permuted accumulate + scatter, one range.
+        jds_prows_mm(a, b, k, &mut cp, 0, a.nrows);
+        for (off, &r) in a.perm.iter().enumerate() {
+            c[r as usize * k..r as usize * k + k].copy_from_slice(&cp[off * k..off * k + k]);
+        }
+        return;
+    }
+    {
+        let chunks = chunks_for(&mut cp, &ranges, k);
+        let mut tasks = Vec::with_capacity(chunks.len());
+        for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+            tasks.push(move || jds_prows_mm(a, b, k, chunk, lo, hi));
+        }
+        scoped_run(tasks);
+    }
+    for (off, &r) in a.perm.iter().enumerate() {
+        c[r as usize * k..r as usize * k + k].copy_from_slice(&cp[off * k..off * k + k]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::storage::EllOrder;
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn balanced_ranges_cover_and_balance() {
+        // Uniform weights: ranges must be near-equal and cover 0..n.
+        let r = balanced_ranges(100, 4, |i| i * 10);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[0].0, 0);
+        assert_eq!(r.last().unwrap().1, 100);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        for &(lo, hi) in &r {
+            assert!(hi - lo >= 20 && hi - lo <= 30, "unbalanced: {lo}..{hi}");
+        }
+    }
+
+    #[test]
+    fn balanced_ranges_skewed_weights() {
+        // One huge row: it gets its own range; remaining ranges cover rest.
+        let weights: Vec<usize> = (0..10).map(|i| if i == 0 { 1000 } else { 1 }).collect();
+        let mut pref = vec![0usize];
+        for &w in &weights {
+            pref.push(pref.last().unwrap() + w);
+        }
+        let r = balanced_ranges(10, 4, |i| pref[i]);
+        assert_eq!(r[0], (0, 1));
+        assert_eq!(r.last().unwrap().1, 10);
+    }
+
+    #[test]
+    fn balanced_ranges_more_threads_than_units() {
+        let r = balanced_ranges(3, 8, |i| i);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn balanced_ranges_empty_and_zero_weight() {
+        assert!(balanced_ranges(0, 4, |_| 0).is_empty());
+        let r = balanced_ranges(5, 3, |_| 0); // all rows empty
+        assert_eq!(r.last().unwrap().1, 5);
+        assert_eq!(r[0].0, 0);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    fn check_spmv_all(m: &crate::matrix::TriMat, threads: usize) {
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.23).sin() + 0.4).collect();
+        let want = m.spmv_ref(&x);
+        let mut y = vec![0.0; m.nrows];
+        let tol = 1e-10;
+
+        let csr = Csr::from_tuples(m);
+        csr_spmv(&csr, &x, &mut y, threads);
+        assert_close(&y, &want, tol).unwrap();
+        for xb in [1, 3, 64] {
+            let bands = CsrBands::build(&csr, xb);
+            csr_spmv_tiled(&csr, &bands, &x, &mut y);
+            assert_close(&y, &want, tol).unwrap_or_else(|e| panic!("tiled xb={xb}: {e}"));
+            csr_spmv_parallel_tiled(&csr, &bands, &x, &mut y, threads);
+            assert_close(&y, &want, tol).unwrap_or_else(|e| panic!("par+tiled xb={xb}: {e}"));
+        }
+        for order in [EllOrder::RowMajor, EllOrder::ColMajor] {
+            let e = Ell::from_tuples(m, order);
+            ell_spmv(&e, &x, &mut y, threads);
+            assert_close(&y, &want, tol).unwrap();
+        }
+        let s = Sell::from_tuples(m, 4);
+        sell_spmv(&s, &x, &mut y, threads);
+        assert_close(&y, &want, tol).unwrap();
+        let bc = Bcsr::from_tuples(m, 2, 3);
+        bcsr_spmv(&bc, &x, &mut y, threads);
+        assert_close(&y, &want, tol).unwrap();
+        let j = Jds::from_tuples(m, true);
+        jds_spmv(&j, &x, &mut y, threads);
+        assert_close(&y, &want, tol).unwrap();
+    }
+
+    fn check_spmm_all(m: &crate::matrix::TriMat, k: usize, threads: usize) {
+        let b: Vec<f64> = (0..m.ncols * k).map(|i| ((i * 11 % 17) as f64 - 8.0) * 0.1).collect();
+        let want = m.spmm_ref(&b, k);
+        let mut c = vec![0.0; m.nrows * k];
+        let tol = 1e-10;
+
+        csr_spmm(&Csr::from_tuples(m), &b, k, &mut c, threads);
+        assert_close(&c, &want, tol).unwrap();
+        ell_spmm(&Ell::from_tuples(m, EllOrder::RowMajor), &b, k, &mut c, threads);
+        assert_close(&c, &want, tol).unwrap();
+        sell_spmm(&Sell::from_tuples(m, 8), &b, k, &mut c, threads);
+        assert_close(&c, &want, tol).unwrap();
+        bcsr_spmm(&Bcsr::from_tuples(m, 3, 2), &b, k, &mut c, threads);
+        assert_close(&c, &want, tol).unwrap();
+        jds_spmm(&Jds::from_tuples(m, true), &b, k, &mut c, threads);
+        assert_close(&c, &want, tol).unwrap();
+    }
+
+    #[test]
+    fn parallel_kernels_match_oracle() {
+        for threads in [1, 2, 3, 4, 7] {
+            check_spmv_all(&gen::uniform_random(43, 37, 350, 50), threads);
+            check_spmm_all(&gen::powerlaw(30, 2.0, 15, 51), 5, threads);
+        }
+    }
+
+    #[test]
+    fn parallel_kernels_adversarial_shapes() {
+        // Mostly-empty rows.
+        let mut sparse = crate::matrix::TriMat::new(12, 12);
+        sparse.push(0, 11, 2.0);
+        sparse.push(11, 0, 3.0);
+        check_spmv_all(&sparse, 4);
+        check_spmm_all(&sparse, 3, 4);
+        // Single dense row among empties.
+        let mut hog = crate::matrix::TriMat::new(8, 20);
+        for j in 0..20 {
+            hog.push(3, j, (j + 1) as f64 * 0.1);
+        }
+        hog.push(7, 0, 1.0);
+        check_spmv_all(&hog, 4);
+        check_spmm_all(&hog, 4, 4);
+        // 1×N single row.
+        let mut wide = crate::matrix::TriMat::new(1, 30);
+        for j in (0..30).step_by(2) {
+            wide.push(0, j, j as f64 + 0.5);
+        }
+        check_spmv_all(&wide, 4);
+        // nrows < threads.
+        check_spmv_all(&gen::uniform_random(3, 9, 12, 52), 8);
+        check_spmm_all(&gen::uniform_random(3, 9, 12, 53), 2, 8);
+    }
+
+    #[test]
+    fn k_not_multiple_of_four() {
+        // The 4-wide micro-kernel must handle ragged k tails.
+        for k in [1, 2, 3, 5, 7, 9] {
+            check_spmm_all(&gen::uniform_random(17, 19, 90, 54), k, 3);
+        }
+    }
+}

@@ -7,6 +7,28 @@
 
 use crate::storage::*;
 
+/// Register-blocked micro-kernel shared by the CSR and BCSR SpMM nests
+/// (and their `Schedule::Parallel` counterparts in `kernels::par`):
+/// `C_row += v * B_row` with a 4-wide unroll over the dense k
+/// dimension, keeping four independent accumulators live per step so
+/// the FMA chain is not serialized on one register.
+#[inline(always)]
+pub fn axpy_k4(crow: &mut [f64], brow: &[f64], v: f64) {
+    debug_assert_eq!(crow.len(), brow.len());
+    let k4 = crow.len() & !3;
+    let (cm, ct) = crow.split_at_mut(k4);
+    let (bm, bt) = brow.split_at(k4);
+    for (cc, bb) in cm.chunks_exact_mut(4).zip(bm.chunks_exact(4)) {
+        cc[0] += v * bb[0];
+        cc[1] += v * bb[1];
+        cc[2] += v * bb[2];
+        cc[3] += v * bb[3];
+    }
+    for (cj, &bj) in ct.iter_mut().zip(bt) {
+        *cj += v * bj;
+    }
+}
+
 /// COO AoS.
 pub fn coo_aos(a: &CooAos, b: &[f64], k: usize, c: &mut [f64]) {
     c.fill(0.0);
@@ -29,16 +51,15 @@ pub fn coo_soa(a: &CooSoa, b: &[f64], k: usize, c: &mut [f64]) {
 }
 
 /// CSR, row-wise: accumulates each output row in place (register/L1
-/// resident for modest k).
+/// resident for modest k) through the register-blocked micro-kernel.
 pub fn csr(a: &Csr, b: &[f64], k: usize, c: &mut [f64]) {
     for i in 0..a.nrows {
         let crow = &mut c[i * k..i * k + k];
         crow.fill(0.0);
         let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
         for p in s..e {
-            let v = a.vals[p];
-            let brow = &b[a.cols[p] as usize * k..a.cols[p] as usize * k + k];
-            crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+            let col = a.cols[p] as usize;
+            axpy_k4(crow, &b[col * k..col * k + k], a.vals[p]);
         }
     }
 }
@@ -148,8 +169,7 @@ pub fn bcsr(a: &Bcsr, b: &[f64], k: usize, c: &mut [f64]) {
                     if v == 0.0 {
                         continue; // block fill-in
                     }
-                    let brow = &b[(j0 + cc) * k..(j0 + cc) * k + k];
-                    crow.iter_mut().zip(brow).for_each(|(cj, &bj)| *cj += v * bj);
+                    axpy_k4(crow, &b[(j0 + cc) * k..(j0 + cc) * k + k], v);
                 }
             }
         }

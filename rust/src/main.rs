@@ -36,6 +36,9 @@ fn sweep_cfg(args: &Args) -> SweepConfig {
         let n: usize = n.parse().expect("--matrices integer");
         cfg.matrices = Some((0..n.min(20)).collect());
     }
+    // Opt into the schedule axis (parallel / cache-blocked generated
+    // kernels on the HostLarge arch; HostSmall stays single-core).
+    cfg.use_schedules = args.flag("schedules");
     cfg
 }
 
@@ -193,6 +196,19 @@ fn main() {
             };
             emit(&args, &txt);
         }
+        "bench-json" => {
+            let cfg = sweep_cfg(&args);
+            let xla = tables::try_xla();
+            let path = args.get_or("out", "BENCH_spmv.json").to_string();
+            forelem::coordinator::sweep::write_bench_json(
+                &path,
+                Arch::HostLarge,
+                &cfg,
+                xla.as_ref(),
+            )
+            .expect("writing bench json");
+            println!("wrote {path} (serial vs best-schedule SpMV medians)");
+        }
         "bench-all" => {
             let cfg = sweep_cfg(&args);
             let xla = tables::try_xla();
@@ -217,8 +233,9 @@ fn main() {
             println!(
                 "forelem — automatic compiler-based data structure generation\n\
                  subcommands: enumerate derive codegen suite table1 table2 table3\n\
-                 \x20            table4 table5 fig11 bench-all\n\
-                 flags: --quick --kernel K --variant vNNN --spmm-k N --matrices N --out FILE"
+                 \x20            table4 table5 fig11 bench-all bench-json\n\
+                 flags: --quick --kernel K --variant vNNN --spmm-k N --matrices N --out FILE\n\
+                 \x20      --schedules (add the parallel/tiled schedule axis on host-large)"
             );
         }
     }

@@ -1,8 +1,18 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py` and executes them on the `xla` crate's CPU
 //! client. Python never runs here — the artifacts are self-contained.
+//!
+//! The real backend requires the external `xla` (and `anyhow`) crates,
+//! which offline builds cannot resolve; without the `xla` cargo feature
+//! an API-compatible stub is compiled instead and the backend simply
+//! reports itself absent (sweeps degrade to native-only).
 
 pub mod artifacts;
+
+#[cfg(feature = "xla")]
+pub mod xla_exec;
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
 pub mod xla_exec;
 
 pub use artifacts::{Manifest, ManifestEntry};

@@ -1,0 +1,75 @@
+//! Offline stand-in for the PJRT/XLA backend (`xla_exec.rs`), compiled
+//! when the `xla` cargo feature is disabled. The real backend binds the
+//! external `xla` crate, which cannot be resolved in offline builds;
+//! this stub exposes the same API surface but always reports the
+//! backend as unavailable, so `tables::try_xla()` returns `None` and
+//! every sweep degrades to native-only — exactly the path all callers
+//! already handle when artifacts are absent.
+
+use crate::baselines::Kernel;
+use crate::runtime::artifacts::{Manifest, ManifestEntry};
+use crate::storage::Ell;
+
+/// Error carried by every stub operation.
+#[derive(Debug)]
+pub struct XlaUnavailable;
+
+impl std::fmt::Display for XlaUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "XLA backend unavailable: built without the `xla` cargo feature")
+    }
+}
+
+impl std::error::Error for XlaUnavailable {}
+
+type Result<T> = std::result::Result<T, XlaUnavailable>;
+
+/// API-compatible stub for `xla_exec::XlaBackend`; unconstructible in
+/// practice because both constructors fail.
+pub struct XlaBackend {
+    pub manifest: Manifest,
+}
+
+impl XlaBackend {
+    pub fn new(_manifest: Manifest) -> Result<Self> {
+        Err(XlaUnavailable)
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Err(XlaUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (xla feature disabled)".to_string()
+    }
+
+    pub fn bucket_for(
+        &self,
+        _kernel: Kernel,
+        _nrows: usize,
+        _k: usize,
+        _kcols: usize,
+    ) -> Option<&ManifestEntry> {
+        None
+    }
+
+    pub fn spmv(&self, _ell: &Ell, _x: &[f64]) -> Result<Vec<f64>> {
+        Err(XlaUnavailable)
+    }
+
+    pub fn spmm(&self, _ell: &Ell, _b: &[f64], _kcols: usize) -> Result<Vec<f64>> {
+        Err(XlaUnavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(XlaBackend::from_default_dir().is_err());
+        let err = XlaBackend::from_default_dir().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}

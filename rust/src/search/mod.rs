@@ -7,4 +7,4 @@ pub mod select;
 pub mod tree;
 
 pub use coverage::Measurements;
-pub use tree::{enumerate, Tree, Variant};
+pub use tree::{enumerate, enumerate_scheduled, SchedulePool, Tree, Variant};

@@ -8,7 +8,7 @@
 use std::collections::{BTreeMap, HashSet};
 
 use crate::baselines::Kernel;
-use crate::concretize::{self, Plan};
+use crate::concretize::{self, Plan, Schedule};
 use crate::forelem::ir::{ChainState, NStarMat, Orth};
 use crate::transforms::{BlockStep, Step};
 
@@ -25,9 +25,47 @@ pub struct Variant {
 }
 
 impl Variant {
-    /// Short display name: layout + traversal.
+    /// Short display name: layout + traversal (+ schedule when not
+    /// serial).
     pub fn name(&self) -> String {
-        format!("{:?}/{:?}", self.plan.layout, self.plan.traversal)
+        if self.plan.schedule.is_serial() {
+            format!("{:?}/{:?}", self.plan.layout, self.plan.traversal)
+        } else {
+            format!(
+                "{:?}/{:?}@{}",
+                self.plan.layout,
+                self.plan.traversal,
+                self.plan.schedule.label()
+            )
+        }
+    }
+}
+
+/// The pool of schedules `enumerate_scheduled` crosses with the serial
+/// plan space. `serial_only()` reproduces the paper's single-core
+/// tables exactly; `host(..)` adds the parallel / cache-blocked axis.
+#[derive(Clone, Debug)]
+pub struct SchedulePool {
+    pub schedules: Vec<Schedule>,
+}
+
+impl SchedulePool {
+    /// Only `Serial` — the paper's measurement protocol.
+    pub fn serial_only() -> Self {
+        SchedulePool { schedules: vec![Schedule::Serial] }
+    }
+
+    /// Serial + parallel + tiled + both, for a host with `threads`
+    /// workers and an L2 that holds `x_block` doubles of `x` band.
+    pub fn host(threads: usize, x_block: usize) -> Self {
+        SchedulePool {
+            schedules: vec![
+                Schedule::Serial,
+                Schedule::Parallel { threads },
+                Schedule::Tiled { x_block },
+                Schedule::ParallelTiled { threads, x_block },
+            ],
+        }
     }
 }
 
@@ -139,6 +177,52 @@ pub fn enumerate(kernel: Kernel) -> Tree {
     Tree { kernel, variants, nodes_explored: nodes, chains_concretized: chains, distinct_layouts }
 }
 
+/// Enumerate the tree, then cross every serial variant with the pool's
+/// schedules, pruning illegal (layout, schedule, kernel) triples via
+/// `concretize::supports` (TrSv stays `Serial`; only row-partitionable
+/// layouts parallelize; only CSR SpMV tiles). Ids are reassigned so the
+/// result is a self-consistent `Tree` whose variant space is
+/// Layout × Traversal × Schedule.
+pub fn enumerate_scheduled(kernel: Kernel, pool: &SchedulePool) -> Tree {
+    let base = enumerate(kernel);
+    let mut variants: Vec<Variant> = Vec::new();
+    for v in &base.variants {
+        for &schedule in &pool.schedules {
+            let plan = v.plan.with_schedule(schedule);
+            if !concretize::supports(&plan, kernel) {
+                continue;
+            }
+            let derivation = if schedule.is_serial() {
+                v.derivation.clone()
+            } else {
+                format!("{} \u{2192} schedule({})", v.derivation, schedule.label())
+            };
+            variants.push(Variant {
+                id: String::new(),
+                derivation,
+                state: v.state.clone(),
+                plan,
+            });
+        }
+    }
+    variants.sort_by(|a, b| a.derivation.cmp(&b.derivation));
+    for (i, v) in variants.iter_mut().enumerate() {
+        v.id = format!("v{:03}", i + 1);
+    }
+    let distinct_layouts = variants
+        .iter()
+        .map(|v| format!("{:?}", v.plan.layout))
+        .collect::<HashSet<_>>()
+        .len();
+    Tree {
+        kernel,
+        variants,
+        nodes_explored: base.nodes_explored,
+        chains_concretized: base.chains_concretized,
+        distinct_layouts,
+    }
+}
+
 /// Summarize the tree as (layout → variant count), for the Fig 10 report.
 pub fn layout_histogram(tree: &Tree) -> BTreeMap<String, usize> {
     let mut h = BTreeMap::new();
@@ -196,6 +280,54 @@ mod tests {
         let ids: HashSet<&String> = t.variants.iter().map(|v| &v.id).collect();
         assert_eq!(ids.len(), t.variants.len());
         assert_eq!(t.variants[0].id, "v001");
+    }
+
+    #[test]
+    fn scheduled_tree_extends_serial_tree() {
+        let serial = enumerate(Kernel::Spmv);
+        let pool = SchedulePool::host(4, 4096);
+        let t = enumerate_scheduled(Kernel::Spmv, &pool);
+        // Every serial variant survives, plus the scheduled ones.
+        let serial_in_t =
+            t.variants.iter().filter(|v| v.plan.schedule.is_serial()).count();
+        assert_eq!(serial_in_t, serial.variants.len());
+        assert!(t.variants.len() > serial.variants.len());
+        // CSR gets all four schedules (RowWise CSR SpMV tiles).
+        let csr: Vec<_> = t
+            .variants
+            .iter()
+            .filter(|v| v.plan.layout == concretize::Layout::Csr)
+            .collect();
+        assert!(csr.len() >= 4, "CSR schedules missing: {:?}", csr.len());
+        // Scheduled derivations record the schedule step.
+        for v in &t.variants {
+            if !v.plan.schedule.is_serial() {
+                assert!(v.derivation.contains("schedule("), "{}", v.derivation);
+            }
+        }
+        // Ids stay unique.
+        let ids: HashSet<&String> = t.variants.iter().map(|v| &v.id).collect();
+        assert_eq!(ids.len(), t.variants.len());
+    }
+
+    #[test]
+    fn scheduled_tree_trsv_stays_serial() {
+        let pool = SchedulePool::host(8, 1024);
+        let t = enumerate_scheduled(Kernel::Trsv, &pool);
+        assert!(!t.variants.is_empty());
+        assert!(t.variants.iter().all(|v| v.plan.schedule.is_serial()));
+        let serial = enumerate(Kernel::Trsv);
+        assert_eq!(t.variants.len(), serial.variants.len());
+    }
+
+    #[test]
+    fn serial_only_pool_reproduces_paper_tree() {
+        let a = enumerate(Kernel::Spmv);
+        let b = enumerate_scheduled(Kernel::Spmv, &SchedulePool::serial_only());
+        assert_eq!(a.variants.len(), b.variants.len());
+        let pa: Vec<_> = a.variants.iter().map(|v| v.plan).collect();
+        let pb: Vec<_> = b.variants.iter().map(|v| v.plan).collect();
+        assert_eq!(pa, pb);
     }
 
     #[test]

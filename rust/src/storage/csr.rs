@@ -73,6 +73,47 @@ impl Csr {
     }
 }
 
+/// Per-band row splits for cache-blocked (`Schedule::Tiled`) CSR SpMV:
+/// columns are partitioned into `x_block`-wide bands and, for each row,
+/// the in-row position where each band starts is recorded (rows are
+/// column-sorted, so a band's entries are contiguous within the row).
+/// Built once at `prepare()` time; the two-pass kernel then walks one
+/// band at a time so the `x` gather stays L2-resident (CSB-style).
+#[derive(Clone, Debug)]
+pub struct CsrBands {
+    pub x_block: usize,
+    pub nbands: usize,
+    /// `(nbands + 1) × nrows`: `split[b * nrows + i]` is the global
+    /// index (into `cols`/`vals`) of the first entry of row `i` whose
+    /// column is ≥ `b * x_block`. Band `b` of row `i` spans
+    /// `split[b * nrows + i] .. split[(b + 1) * nrows + i]`.
+    pub split: Vec<u32>,
+}
+
+impl CsrBands {
+    pub fn build(a: &Csr, x_block: usize) -> Self {
+        assert!(x_block > 0);
+        let nbands = a.ncols.div_ceil(x_block).max(1);
+        let nrows = a.nrows;
+        let mut split = vec![0u32; (nbands + 1) * nrows];
+        for i in 0..nrows {
+            let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+            let row_cols = &a.cols[s..e];
+            split[i] = s as u32;
+            for b in 1..=nbands {
+                let bound = (b * x_block).min(u32::MAX as usize) as u32;
+                let off = row_cols.partition_point(|&c| c < bound);
+                split[b * nrows + i] = (s + off) as u32;
+            }
+        }
+        CsrBands { x_block, nbands, split }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.split.len() * 4
+    }
+}
+
 /// Unsplit (AoS) CSR: flat sequence of `⟨col, val⟩` pairs + `row_ptr`.
 #[derive(Clone, Debug)]
 pub struct CsrAos {
@@ -149,6 +190,30 @@ mod tests {
         for (i, &(c, v)) in a.pairs.iter().enumerate() {
             assert_eq!(c, s.cols[i]);
             assert_eq!(v, s.vals[i]);
+        }
+    }
+
+    #[test]
+    fn bands_partition_every_row() {
+        let m = gen::uniform_random(30, 50, 400, 8);
+        let c = Csr::from_tuples(&m);
+        for xb in [1, 7, 16, 64, 1000] {
+            let bands = CsrBands::build(&c, xb);
+            assert_eq!(bands.nbands, c.ncols.div_ceil(xb).max(1));
+            for i in 0..c.nrows {
+                // Band starts are monotone and bracket the row exactly.
+                assert_eq!(bands.split[i], c.row_ptr[i]);
+                assert_eq!(bands.split[bands.nbands * c.nrows + i], c.row_ptr[i + 1]);
+                for b in 0..bands.nbands {
+                    let s = bands.split[b * c.nrows + i] as usize;
+                    let e = bands.split[(b + 1) * c.nrows + i] as usize;
+                    assert!(s <= e);
+                    for k in s..e {
+                        let col = c.cols[k] as usize;
+                        assert!(col >= b * xb && col < (b + 1) * xb, "xb={xb} b={b}");
+                    }
+                }
+            }
         }
     }
 

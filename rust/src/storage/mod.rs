@@ -16,7 +16,7 @@ pub mod sell;
 pub use bcsr::Bcsr;
 pub use coo::{CooAos, CooOrder, CooSoa};
 pub use csc::{Csc, CscAos};
-pub use csr::{Csr, CsrAos};
+pub use csr::{Csr, CsrAos, CsrBands};
 pub use dia::Dia;
 pub use ell::{Ell, EllOrder};
 pub use hybrid::HybridEllCoo;

@@ -18,11 +18,20 @@
 use crate::baselines::Kernel;
 use crate::forelem::ir::{Blocking, ChainState, NStarMat, Orth};
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum TransformError {
-    #[error("illegal transformation: {0}")]
     Illegal(&'static str),
 }
+
+impl std::fmt::Display for TransformError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransformError::Illegal(msg) => write!(f, "illegal transformation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TransformError {}
 
 type R = Result<(), TransformError>;
 

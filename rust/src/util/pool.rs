@@ -1,14 +1,22 @@
 //! A minimal scoped worker pool built on `std::thread` (tokio is not
 //! available offline). The coordinator uses it to build per-(variant ×
-//! matrix) data structures in parallel; *measurements* are always taken
-//! single-threaded on the calling thread, matching the paper's single-core
-//! protocol.
+//! matrix) data structures in parallel, and the `Schedule::Parallel`
+//! generated kernels use [`scoped_run`] to execute disjoint row-range
+//! tasks; paper-protocol *measurements* of `Serial` plans are always
+//! taken single-threaded on the calling thread.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Run `f(i)` for every `i in 0..n` across up to `workers` threads and
 /// collect results in index order.
+///
+/// Work distribution claims *contiguous index chunks* (a handful per
+/// worker), not single items: the result buffer is one `Mutex<Vec<T>>`
+/// per chunk — O(workers) synchronization objects — instead of a mutex
+/// per item, which at 100k items allocated 100k mutexes and serialized
+/// on allocator traffic. Chunks are still claimed dynamically, so
+/// uneven per-item cost load-balances.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -22,28 +30,51 @@ where
     if workers == 1 {
         return (0..n).map(&f).collect();
     }
+    // A few chunks per worker balances dynamic claiming against
+    // synchronization overhead.
+    let nchunks = (workers * 4).min(n);
+    let chunk = n.div_ceil(nchunks);
+    let nchunks = n.div_ceil(chunk);
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let out: Vec<Mutex<Vec<T>>> = (0..nchunks).map(|_| Mutex::new(Vec::new())).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                if c >= nchunks {
                     break;
                 }
-                let out = f(i);
-                *slots[i].lock().unwrap() = Some(out);
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(n);
+                let vals: Vec<T> = (lo..hi).map(&f).collect();
+                *out[c].lock().unwrap() = vals;
             });
         }
     });
-    slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker failed to fill slot"))
-        .collect()
+    let mut flat = Vec::with_capacity(n);
+    for m in out {
+        flat.extend(m.into_inner().unwrap());
+    }
+    assert_eq!(flat.len(), n, "worker failed to fill a chunk");
+    flat
 }
 
-/// Number of workers to use for *build* parallelism (measurement stays
-/// on one core).
+/// Run every task on its own scoped thread and join them all. Tasks own
+/// their captures (typically a disjoint `&mut` chunk of an output slice
+/// plus shared `&` storage), so the hot path takes no locks.
+pub fn scoped_run<F>(tasks: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    std::thread::scope(|scope| {
+        for t in tasks {
+            scope.spawn(t);
+        }
+    });
+}
+
+/// Number of workers to use for *build* parallelism (measurement of
+/// `Serial` plans stays on one core).
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
@@ -74,5 +105,37 @@ mod tests {
     fn more_workers_than_items() {
         let out = parallel_map(3, 64, |i| i);
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn large_n_in_order() {
+        // Chunked claiming must still reassemble exact index order.
+        let out = parallel_map(100_000, 4, |i| i as u64);
+        assert_eq!(out.len(), 100_000);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64));
+    }
+
+    #[test]
+    fn ragged_tail_chunk() {
+        // n not divisible by the chunk size: last chunk is short.
+        let out = parallel_map(1001, 3, |i| i);
+        assert_eq!(out, (0..1001).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_run_fills_disjoint_chunks() {
+        // The exact pattern the Schedule::Parallel kernels use: split an
+        // output slice into owned chunks, one task per chunk, no locks.
+        let mut y = vec![0u32; 10];
+        let mut tasks = Vec::new();
+        let mut rest = &mut y[..];
+        for (val, n) in [(1u32, 4usize), (2, 6)] {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(n);
+            rest = tail;
+            tasks.push(move || chunk.fill(val));
+        }
+        scoped_run(tasks);
+        assert_eq!(&y[..4], &[1; 4]);
+        assert_eq!(&y[4..], &[2; 6]);
     }
 }

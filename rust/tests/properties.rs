@@ -7,7 +7,7 @@ use forelem::baselines::Kernel;
 use forelem::concretize;
 use forelem::matrix::TriMat;
 use forelem::search::coverage::{self, Measurements};
-use forelem::search::tree;
+use forelem::search::tree::{self, SchedulePool};
 use forelem::util::prop::{assert_close, forall, Gen};
 
 /// A random reservoir of tuples with no duplicate coordinates.
@@ -89,6 +89,99 @@ fn prop_spmv_insensitive_to_reservoir_order() {
         let mut y2 = vec![0.0; m.nrows];
         p2.spmv(&x, &mut y2);
         assert_close(&y1, &y2, 1e-9).map_err(|e| format!("{}: {e}", v.id))
+    });
+}
+
+/// Adversarial shapes for the schedule axis: empty rows, 1×N, a single
+/// dense row hogging all the nnz, and fewer rows than workers.
+fn adversarial_shapes() -> Vec<(&'static str, TriMat)> {
+    let mut empty_rows = TriMat::new(10, 10);
+    empty_rows.push(0, 9, 2.0);
+    empty_rows.push(9, 0, -3.0);
+
+    let mut one_by_n = TriMat::new(1, 40);
+    for j in (0..40).step_by(3) {
+        one_by_n.push(0, j, j as f64 * 0.25 + 1.0);
+    }
+
+    let mut dense_row = TriMat::new(9, 25);
+    for j in 0..25 {
+        dense_row.push(4, j, (j as f64 - 12.0) * 0.3);
+    }
+    dense_row.push(0, 0, 1.0);
+    dense_row.push(8, 24, -1.0);
+
+    let mut tiny = TriMat::new(3, 5); // nrows < threads
+    tiny.push(0, 1, 0.5);
+    tiny.push(1, 4, 1.5);
+    tiny.push(2, 0, -2.5);
+
+    let all_empty = TriMat::new(6, 6); // zero nnz
+
+    vec![
+        ("empty-rows", empty_rows),
+        ("1xN", one_by_n),
+        ("dense-row-hog", dense_row),
+        ("nrows<threads", tiny),
+        ("all-empty", all_empty),
+    ]
+}
+
+#[test]
+fn prop_every_schedule_triple_matches_spmv_oracle() {
+    // Every (layout, traversal, schedule) triple in the host pool must
+    // match spmv_ref on the adversarial shapes. x_block is small so the
+    // band path actually splits these column counts.
+    let pool = SchedulePool::host(4, 8);
+    let t = tree::enumerate_scheduled(Kernel::Spmv, &pool);
+    assert!(t.variants.iter().any(|v| !v.plan.schedule.is_serial()));
+    for (name, m) in adversarial_shapes() {
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.31).sin() + 0.6).collect();
+        let want = m.spmv_ref(&x);
+        for v in &t.variants {
+            let p = concretize::prepare(v.plan, &m);
+            let mut y = vec![0.0; m.nrows];
+            p.spmv(&x, &mut y);
+            assert_close(&y, &want, 1e-9)
+                .unwrap_or_else(|e| panic!("{name}/{} ({}): {e}", v.id, v.name()));
+        }
+    }
+}
+
+#[test]
+fn prop_every_schedule_triple_matches_spmm_oracle() {
+    let pool = SchedulePool::host(4, 8);
+    let t = tree::enumerate_scheduled(Kernel::Spmm, &pool);
+    assert!(t.variants.iter().any(|v| !v.plan.schedule.is_serial()));
+    let k = 5;
+    for (name, m) in adversarial_shapes() {
+        let b: Vec<f64> = (0..m.ncols * k).map(|i| ((i * 7 % 13) as f64 - 6.0) * 0.2).collect();
+        let want = m.spmm_ref(&b, k);
+        for v in &t.variants {
+            let p = concretize::prepare(v.plan, &m);
+            let mut c = vec![0.0; m.nrows * k];
+            p.spmm(&b, k, &mut c);
+            assert_close(&c, &want, 1e-9)
+                .unwrap_or_else(|e| panic!("{name}/{} ({}): {e}", v.id, v.name()));
+        }
+    }
+}
+
+#[test]
+fn prop_random_schedules_match_oracle() {
+    // Random matrices × random schedule variants (threads beyond the
+    // machine, tiny x_blocks) still agree with the oracle.
+    let pool = SchedulePool::host(3, 16);
+    let t = tree::enumerate_scheduled(Kernel::Spmv, &pool);
+    forall("scheduled variant ≡ oracle", 40, |g| {
+        let m = random_trimat(g);
+        let x = g.vec_f64(m.ncols);
+        let want = m.spmv_ref(&x);
+        let v = g.choose(&t.variants);
+        let p = concretize::prepare(v.plan, &m);
+        let mut y = vec![0.0; m.nrows];
+        p.spmv(&x, &mut y);
+        assert_close(&y, &want, 1e-9).map_err(|e| format!("{} ({}): {e}", v.id, v.name()))
     });
 }
 
