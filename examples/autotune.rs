@@ -1,7 +1,8 @@
-//! Autotuning walk-through on one matrix: enumerate the transformation
-//! tree, benchmark every generated variant and all 7 library routines,
-//! and report the winner — the per-matrix specialization the paper's
-//! framework delivers.
+//! Autotuning walk-through on one matrix: enumerate the cost-ranked
+//! plan space, benchmark every generated plan and all 7 library
+//! routines, and report the winner (plus where the analytic cost model
+//! had ranked it) — the per-matrix specialization the paper's
+//! framework delivers, now with the predict→measure planner visible.
 //!
 //! ```bash
 //! cargo run --release --example autotune -- [matrix-name] [--quick]
@@ -11,6 +12,7 @@ use forelem::baselines::{Kernel, ALL_ROUTINES};
 use forelem::bench::harness::{black_box, time_fn, BenchConfig};
 use forelem::concretize;
 use forelem::matrix::suite;
+use forelem::search::plan::PlanSpace;
 use forelem::search::tree;
 
 fn main() {
@@ -41,11 +43,14 @@ fn main() {
 
     let mut results: Vec<(String, f64, String)> = Vec::new();
 
-    // Generated variants.
-    let t = tree::enumerate(Kernel::Spmv);
-    println!("benchmarking {} generated variants + {} library routines ...", t.variants.len(), 7);
-    for v in &t.variants {
-        let p = concretize::prepare(v.plan, &m);
+    // Generated plans, ranked by the analytic cost model on this
+    // matrix's statistics.
+    let space = PlanSpace::serial_only()
+        .with_rank_stats(forelem::matrix::MatrixStats::of(&m));
+    let t = tree::enumerate(Kernel::Spmv, &space);
+    println!("benchmarking {} generated plans + {} library routines ...", t.plans.len(), 7);
+    for (rank, v) in t.plans.iter().enumerate() {
+        let p = concretize::prepare(v.exec, &m);
         let mut y = vec![0.0; m.nrows];
         p.spmv(&x, &mut y);
         for (i, (g, w)) in y.iter().zip(&want).enumerate() {
@@ -55,7 +60,11 @@ fn main() {
             p.spmv(&x, &mut y);
             black_box(&y);
         });
-        results.push((format!("{} {}", v.id, v.name()), s.median, v.derivation.clone()));
+        results.push((
+            format!("{} {} (predicted #{})", v.id, v.name(), rank + 1),
+            s.median,
+            v.derivation.clone(),
+        ));
     }
 
     // Library baselines.

@@ -3,13 +3,14 @@
 //! plus one sample derivation per generated layout.
 use forelem::baselines::Kernel;
 use forelem::bench::tables;
+use forelem::search::plan::PlanSpace;
 use forelem::search::tree;
 
 fn main() {
     println!("{}", tables::fig10());
-    let t = tree::enumerate(Kernel::Spmv);
+    let t = tree::enumerate(Kernel::Spmv, &PlanSpace::serial_only());
     println!("## sample derivations (SpMV)");
-    for v in &t.variants {
+    for v in &t.plans {
         println!("{} {:<45} {}", v.id, v.name(), v.derivation);
     }
 }

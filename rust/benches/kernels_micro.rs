@@ -10,7 +10,8 @@ use forelem::bench::harness::{black_box, time_fn, BenchConfig};
 use forelem::concretize::{self, Layout, Schedule};
 use forelem::coordinator::sweep::DEFAULT_X_BLOCK;
 use forelem::matrix::suite;
-use forelem::search::tree::{self, SchedulePool};
+use forelem::search::plan::PlanSpace;
+use forelem::search::tree;
 
 fn main() {
     let cfg = if std::env::var("FORELEM_QUICK").is_ok() {
@@ -19,12 +20,12 @@ fn main() {
         BenchConfig::from_env()
     };
     let threads = forelem::util::pool::default_workers().clamp(2, 8);
-    let pool = SchedulePool::host(threads, DEFAULT_X_BLOCK);
+    let space = PlanSpace::host(threads, DEFAULT_X_BLOCK);
     let names = ["Erdos971", "blckhole", "consph", "Raj1", "net150"];
-    let t = tree::enumerate_scheduled(Kernel::Spmv, &pool);
+    let t = tree::enumerate(Kernel::Spmv, &space);
     println!(
-        "schedule pool: {} schedules, {} worker threads",
-        pool.schedules.len(),
+        "plan space: {} schedules, {} worker threads",
+        space.schedules.len(),
         threads
     );
     for name in names {
@@ -39,15 +40,15 @@ fn main() {
         let mut rows: Vec<(String, f64, usize)> = Vec::new();
         let mut csr_serial = None;
         let mut csr_parallel = None;
-        for v in &t.variants {
-            let p = concretize::prepare(v.plan, &m);
+        for v in &t.plans {
+            let p = concretize::prepare(v.exec, &m);
             let mut y = vec![0.0; m.nrows];
             let s = time_fn(&cfg, || {
                 p.spmv(&x, &mut y);
                 black_box(&y);
             });
-            if v.plan.layout == Layout::Csr {
-                match v.plan.schedule {
+            if v.exec.layout == Layout::Csr {
+                match v.exec.schedule {
                     Schedule::Serial => csr_serial = Some(s.median),
                     Schedule::Parallel { .. } => csr_parallel = Some(s.median),
                     _ => {}

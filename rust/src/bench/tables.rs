@@ -7,6 +7,7 @@ use crate::baselines::Kernel;
 use crate::coordinator::sweep::{self, Arch, SweepConfig, SweepResult};
 use crate::runtime::XlaBackend;
 use crate::search::coverage;
+use crate::search::plan::PlanSpace;
 use crate::search::select;
 use crate::search::tree;
 use crate::util::rng::Rng;
@@ -217,13 +218,14 @@ pub fn fig11(s: &SweepResult) -> String {
 pub fn fig10() -> String {
     let mut out =
         String::from("## Figure 10 — transformation tree of sparse matrix times k vectors\n");
+    let space = PlanSpace::serial_only();
     for kernel in [Kernel::Spmv, Kernel::Spmm, Kernel::Trsv] {
-        let t = tree::enumerate(kernel);
+        let t = tree::enumerate(kernel, &space);
         out.push_str(&format!(
             "\n{}: {} concretizable chains, {} deduped executables, {} distinct data structures, {} IR nodes explored\n",
             kernel.label(),
             t.chains_concretized,
-            t.variants.len(),
+            t.plans.len(),
             t.distinct_layouts,
             t.nodes_explored
         ));
@@ -232,6 +234,40 @@ pub fn fig10() -> String {
         }
     }
     out.push_str("\n(paper: 130 executables / 25 data structures for SpMM×k; our tree\n dedups structurally identical executables — same order of magnitude.)\n");
+    out
+}
+
+/// Planner report: per-matrix best measured (layout, traversal,
+/// schedule) triple, the cost model's first pick, and the top-1
+/// rank-agreement summary — the human-readable face of the
+/// predict→measure pipeline (`BENCH_spmv.json` carries the machine-
+/// readable version).
+pub fn best_triples_report(s: &SweepResult) -> String {
+    let mut out = format!(
+        "## Best plan per matrix — {} {:?} (predict\u{2192}measure)\n",
+        s.kernel.label(),
+        s.arch
+    );
+    out.push_str(&format!(
+        "{:<12} {:<28} {:<28} {:>10}\n",
+        "matrix", "measured best", "predicted best", "secs"
+    ));
+    for (mi, t) in s.best_triples().iter().enumerate() {
+        let pb = s.predicted_best(mi);
+        let mark = if pb == t.plan_index { "" } else { " *" };
+        out.push_str(&format!(
+            "{:<12} {:<28} {:<28} {:>10.3e}{}\n",
+            t.matrix,
+            t.plan_id,
+            s.plans[pb].id,
+            t.secs,
+            mark
+        ));
+    }
+    let (matches, total) = s.rank_agreement();
+    out.push_str(&format!(
+        "cost-model top-1 agreement: {matches}/{total} matrices (* = model missed)\n"
+    ));
     out
 }
 
@@ -276,5 +312,9 @@ mod tests {
         let f11 = fig11(&a);
         assert!(f11.lines().count() > 50);
         assert!(f11.contains("t%, blaze, all_libraries, generated"));
+        let bt = best_triples_report(&a);
+        assert!(bt.contains("top-1 agreement"));
+        assert!(bt.contains("measured best"));
+        assert_eq!(bt.lines().count(), 2 + a.gens.matrices.len() + 1);
     }
 }

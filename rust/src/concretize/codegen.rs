@@ -36,6 +36,36 @@ pub fn emit(kernel: Kernel, plan: &Plan) -> String {
     format!("{header}{body}")
 }
 
+/// `emit`, prefixed with the planner's analytic resource footprint for
+/// the given matrix statistics — so the inspectable artifact also shows
+/// *why* the predict→measure pipeline ranked this plan where it did.
+/// `dense_k` is the SpMM dense-operand width the footprint assumes
+/// (ignored for SpMV/TrSv).
+pub fn emit_with_cost(
+    kernel: Kernel,
+    plan: &Plan,
+    dense_k: usize,
+    stats: &crate::matrix::MatrixStats,
+    params: &crate::search::cost::CostParams,
+) -> String {
+    let r = crate::search::cost::resources(kernel, dense_k, plan, stats);
+    let t = crate::search::cost::predict(kernel, dense_k, plan, stats, params);
+    format!(
+        "/* predicted on {}x{} nnz={}: {:.1} KB streamed, {:.1} KB gathered \
+         (ws {:.1} KB), {:.0} kflop, grain {} -> {:.2} us */\n{}",
+        stats.nrows,
+        stats.ncols,
+        stats.nnz,
+        r.streamed_bytes / 1e3,
+        r.gathered_bytes / 1e3,
+        r.gather_working_set / 1e3,
+        r.flops / 1e3,
+        r.parallel_grain,
+        t * 1e6,
+        emit(kernel, plan)
+    )
+}
+
 fn indent(body: &str) -> String {
     body.lines().map(|l| format!("  {l}\n")).collect()
 }
@@ -194,6 +224,17 @@ mod tests {
         let txt = emit(Kernel::Spmv, &pt);
         assert!(txt.contains("parallel forelem"), "{txt}");
         assert!(txt.contains("band_ptr"), "{txt}");
+    }
+
+    #[test]
+    fn emit_with_cost_prepends_footprint() {
+        let p = Plan::serial(Layout::Csr, Traversal::RowWise);
+        let stats = crate::matrix::MatrixStats::nominal();
+        let params = crate::search::cost::CostParams::host_small();
+        let txt = emit_with_cost(Kernel::Spmv, &p, 1, &stats, &params);
+        assert!(txt.starts_with("/* predicted on"), "{txt}");
+        assert!(txt.contains("KB streamed"), "{txt}");
+        assert!(txt.contains("/* generated:"), "{txt}");
     }
 
     #[test]

@@ -119,6 +119,14 @@ pub fn prepare(plan: Plan, m: &TriMat) -> Prepared {
     Prepared { plan, storage, bands, nrows: m.nrows, ncols: m.ncols }
 }
 
+/// Build the storage for many plans against the same reservoir in
+/// parallel (`util::pool::parallel_map` over plans). Used by the sweep
+/// so the large suite's CSR/ELL/SELL planes are assembled on all cores
+/// while *measurement* stays single-threaded per the paper protocol.
+pub fn prepare_many(plans: &[Plan], m: &TriMat, workers: usize) -> Vec<Prepared> {
+    crate::util::pool::parallel_map(plans.len(), workers.max(1), |i| prepare(plans[i], m))
+}
+
 impl Prepared {
     /// Total bytes of the generated data structure, including the
     /// tiled schedules' per-band row splits (part of what the plan
@@ -300,6 +308,24 @@ mod tests {
             assert_close(&x, &want, 1e-9).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
         }
         assert!(count >= 5, "expected several TrSv-capable plans, got {count}");
+    }
+
+    #[test]
+    fn prepare_many_matches_serial_prepare() {
+        let m = gen::powerlaw(40, 2.0, 20, 66);
+        let plans = all_spmv_plans();
+        let many = prepare_many(&plans, &m, 4);
+        assert_eq!(many.len(), plans.len());
+        let x: Vec<f64> = (0..40).map(|i| (i as f64 * 0.13).sin() + 0.5).collect();
+        let want = m.spmv_ref(&x);
+        for (plan, p) in plans.iter().zip(&many) {
+            assert_eq!(p.plan, *plan);
+            let serial = prepare(*plan, &m);
+            assert_eq!(p.bytes(), serial.bytes(), "{plan:?}: bytes differ");
+            let mut y = vec![0.0; 40];
+            p.spmv(&x, &mut y);
+            assert_close(&y, &want, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+        }
     }
 
     #[test]

@@ -54,6 +54,27 @@ pub enum Layout {
 }
 
 impl Layout {
+    /// Short stable slug used in plan ids (content-derived, so a plan
+    /// keeps its id across enumeration-order changes).
+    pub fn slug(&self) -> String {
+        match self {
+            Layout::CooAos(o) => format!("coo-aos-{}", coo_order_slug(*o)),
+            Layout::CooSoa(o) => format!("coo-soa-{}", coo_order_slug(*o)),
+            Layout::Csr => "csr".to_string(),
+            Layout::CsrAos => "csr-aos".to_string(),
+            Layout::Csc => "csc".to_string(),
+            Layout::CscAos => "csc-aos".to_string(),
+            Layout::Ell(EllOrder::RowMajor) => "ell-rm".to_string(),
+            Layout::Ell(EllOrder::ColMajor) => "ell-cm".to_string(),
+            Layout::Jds { permuted: true } => "jds".to_string(),
+            Layout::Jds { permuted: false } => "jds-unperm".to_string(),
+            Layout::Bcsr { br, bc } => format!("bcsr{br}x{bc}"),
+            Layout::HybridEllCoo => "hyb".to_string(),
+            Layout::Sell { s } => format!("sell{s}"),
+            Layout::Dia => "dia".to_string(),
+        }
+    }
+
     /// Literature name, where one exists (paper §6.2.2).
     pub fn literature_name(&self) -> &'static str {
         match self {
@@ -69,6 +90,14 @@ impl Layout {
             Layout::Sell { .. } => "Sliced ELLPACK (SELL)",
             Layout::Dia => "diagonal storage (DIA)",
         }
+    }
+}
+
+fn coo_order_slug(o: CooOrder) -> &'static str {
+    match o {
+        CooOrder::Unsorted => "any",
+        CooOrder::RowMajor => "rm",
+        CooOrder::ColMajor => "cm",
     }
 }
 
@@ -91,6 +120,22 @@ pub enum Traversal {
     Blocked,
     /// Slice loop outer, per-slice padded plane loops (SELL schedule).
     SlicePlane,
+}
+
+impl Traversal {
+    /// Short stable slug used in plan ids.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            Traversal::Flat => "flat",
+            Traversal::RowWise => "row",
+            Traversal::RowWisePadded => "rowpad",
+            Traversal::PlaneWise => "plane",
+            Traversal::DiagMajor => "diag",
+            Traversal::ColScatter => "colscat",
+            Traversal::Blocked => "blk",
+            Traversal::SlicePlane => "slice",
+        }
+    }
 }
 
 /// Execution schedule of the generated loop nest — the third plan axis.
@@ -119,6 +164,16 @@ impl Schedule {
             Schedule::ParallelTiled { threads, x_block } => {
                 format!("par({threads})+tile({x_block})")
             }
+        }
+    }
+
+    /// Short stable slug used in plan ids.
+    pub fn slug(&self) -> String {
+        match self {
+            Schedule::Serial => "serial".to_string(),
+            Schedule::Parallel { threads } => format!("par{threads}"),
+            Schedule::Tiled { x_block } => format!("tile{x_block}"),
+            Schedule::ParallelTiled { threads, x_block } => format!("par{threads}-tile{x_block}"),
         }
     }
 

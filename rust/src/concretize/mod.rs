@@ -8,5 +8,5 @@ pub mod codegen;
 pub mod exec;
 pub mod layout;
 
-pub use exec::{prepare, supports, Prepared, Storage};
+pub use exec::{prepare, prepare_many, supports, Prepared, Storage};
 pub use layout::{plans, schedule_legal, ConcretizeError, Layout, Plan, Schedule, Traversal};

@@ -1,14 +1,29 @@
-//! The benchmark sweep: produces `Measurements` tables for library
-//! routines and generated variants over the 20-matrix suite.
+//! The benchmark sweep — stage 2+3 of the predict→measure planner
+//! pipeline (see `search::plan`): produce `Measurements` tables for
+//! library routines and generated plans over the 20-matrix suite.
+//!
+//! For every matrix the sweep first *predicts* each enumerated plan's
+//! time from the matrix's memoized [`MatrixStats`] (`search::cost`),
+//! then *measures* only the top-K predicted plans (`--shortlist K`).
+//! `K = 0` (the default) measures exhaustively, reproducing the paper's
+//! tables exactly. Shortlisted sweeps fill the unmeasured cells with
+//! calibrated predictions (predicted seconds × the median
+//! measured/predicted ratio of the shortlist) so downstream coverage /
+//! selection analyses still see a full table; `SweepResult::measured`
+//! records which cells are real. Predicted-vs-measured top-1 agreement
+//! is reported through `bench_json` so the cost model stays auditable
+//! across PRs.
 
 use crate::baselines::{Kernel, LibRoutine, ALL_ROUTINES};
 use crate::bench::harness::{black_box, time_fn, BenchConfig};
-use crate::concretize;
+use crate::concretize::{self, Schedule};
 use crate::matrix::suite::{SuiteEntry, SUITE};
-use crate::matrix::TriMat;
+use crate::matrix::{MatrixStats, TriMat};
 use crate::runtime::XlaBackend;
+use crate::search::cost::{self, CostParams};
 use crate::search::coverage::Measurements;
-use crate::search::tree::{self, SchedulePool};
+use crate::search::plan::{Plan, PlanSpace};
+use crate::search::{select, tree};
 use crate::storage::{Ell, EllOrder};
 use crate::util::rng::Rng;
 
@@ -47,17 +62,27 @@ impl Arch {
         matches!(self, Arch::HostLarge)
     }
 
-    /// Schedule pool this architecture explores when the sweep opts in
+    /// Cost-model parameters of this architecture.
+    pub fn cost_params(&self) -> CostParams {
+        match self {
+            Arch::HostSmall => CostParams::host_small(),
+            Arch::HostLarge => {
+                CostParams::host_large(crate::util::pool::default_workers().clamp(2, 8))
+            }
+        }
+    }
+
+    /// Plan space this architecture explores when the sweep opts in
     /// (`SweepConfig::use_schedules`). `HostSmall` stays serial-only so
     /// the paper's single-core tables remain reproducible; `HostLarge`
     /// (the "modern machine" stand-in) adds the parallel and
     /// cache-blocked schedules.
-    pub fn schedule_pool(&self) -> SchedulePool {
+    pub fn plan_space(&self) -> PlanSpace {
         match self {
-            Arch::HostSmall => SchedulePool::serial_only(),
+            Arch::HostSmall => PlanSpace::serial_only(),
             Arch::HostLarge => {
                 let threads = crate::util::pool::default_workers().clamp(2, 8);
-                SchedulePool::host(threads, DEFAULT_X_BLOCK)
+                PlanSpace::host(threads, DEFAULT_X_BLOCK)
             }
         }
     }
@@ -73,9 +98,12 @@ pub struct SweepConfig {
     /// Validate every routine against the oracle before timing.
     pub validate: bool,
     /// Opt in to the schedule axis: cross the generated pool with the
-    /// architecture's `Arch::schedule_pool()`. Off by default so the
+    /// architecture's `Arch::plan_space()`. Off by default so the
     /// paper's single-core tables stay reproducible.
     pub use_schedules: bool,
+    /// Measure only the top-K predicted plans per matrix; 0 measures
+    /// everything (exhaustive, paper protocol).
+    pub shortlist: usize,
 }
 
 impl Default for SweepConfig {
@@ -86,6 +114,7 @@ impl Default for SweepConfig {
             matrices: None,
             validate: true,
             use_schedules: false,
+            shortlist: 0,
         }
     }
 }
@@ -98,6 +127,7 @@ impl SweepConfig {
             matrices: Some(vec![0, 2, 7]),
             validate: true,
             use_schedules: false,
+            shortlist: 0,
         }
     }
 
@@ -107,8 +137,10 @@ impl SweepConfig {
     }
 }
 
-/// Result of a sweep: library and generated-variant timing tables over
-/// the same matrices (times are per-invocation medians, seconds).
+/// Result of a sweep: library and generated-plan timing tables over the
+/// same matrices (times are per-invocation medians, seconds), plus the
+/// planner's inputs and outputs — the plans, per-matrix statistics,
+/// predicted times and the measured mask.
 pub struct SweepResult {
     pub kernel: Kernel,
     pub arch: Arch,
@@ -116,6 +148,16 @@ pub struct SweepResult {
     pub gens: Measurements,
     /// Derivations for the generated routines, aligned with `gens.routines`.
     pub derivations: Vec<String>,
+    /// The enumerated plans; `gens` rows `0..plans.len()` are theirs
+    /// (any extra row is the XLA backend).
+    pub plans: Vec<Plan>,
+    /// Memoized per-matrix statistics, aligned with `gens.matrices`.
+    pub stats: Vec<MatrixStats>,
+    /// Predicted seconds, `predicted[plan][matrix]`.
+    pub predicted: Vec<Vec<f64>>,
+    /// Which generated cells were actually measured (`[plan][matrix]`);
+    /// the rest of `gens` holds calibrated predictions.
+    pub measured: Vec<Vec<bool>>,
 }
 
 impl SweepResult {
@@ -139,6 +181,43 @@ impl SweepResult {
     /// Indices of the generated routines inside `combined()`.
     pub fn gen_indices(&self) -> Vec<usize> {
         (self.libs.routines.len()..self.libs.routines.len() + self.gens.routines.len()).collect()
+    }
+
+    /// Per-matrix best measured (layout, traversal, schedule) triples.
+    pub fn best_triples(&self) -> Vec<select::BestTriple> {
+        select::best_triples(&self.gens, &self.plans)
+    }
+
+    /// The plan the cost model ranks first on matrix `mi`.
+    pub fn predicted_best(&self, mi: usize) -> usize {
+        (0..self.plans.len())
+            .min_by(|&a, &b| {
+                self.predicted[a][mi]
+                    .partial_cmp(&self.predicted[b][mi])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("non-empty plan pool")
+    }
+
+    /// The measured-best plan on matrix `mi` (among measured cells).
+    pub fn measured_best(&self, mi: usize) -> usize {
+        (0..self.plans.len())
+            .filter(|&pi| self.measured[pi][mi])
+            .min_by(|&a, &b| {
+                self.gens.times[a][mi]
+                    .partial_cmp(&self.gens.times[b][mi])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("at least one measured plan per matrix")
+    }
+
+    /// Predicted-vs-measured top-1 agreement: on how many matrices did
+    /// the cost model's first pick win the measurements? Returns
+    /// `(matches, matrices)`.
+    pub fn rank_agreement(&self) -> (usize, usize) {
+        let n = self.gens.matrices.len();
+        let matches = (0..n).filter(|&mi| self.predicted_best(mi) == self.measured_best(mi)).count();
+        (matches, n)
     }
 }
 
@@ -180,28 +259,66 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
         },
     );
 
-    // Routine sets. The generated pool is the serial tree unless the
-    // sweep opted into this architecture's schedule pool.
+    // Stage 1 — enumerate: one cost-ranked plan space serves both the
+    // serial-only (paper protocol) and scheduled sweeps.
+    let mut space = arch.plan_space();
+    if !cfg.use_schedules {
+        space.schedules = vec![Schedule::Serial];
+    }
+    space.dense_k = cfg.spmm_k;
+    let tree = tree::enumerate(kernel, &space);
+    let plans = tree.plans;
+
     let lib_routines: Vec<LibRoutine> =
         ALL_ROUTINES.iter().copied().filter(|r| r.supports(kernel)).collect();
-    let pool = if cfg.use_schedules { arch.schedule_pool() } else { SchedulePool::serial_only() };
-    let tree = tree::enumerate_scheduled(kernel, &pool);
-
     let mut libs = Measurements::new(
         lib_routines.iter().map(|r| r.label()).collect(),
         mat_names.clone(),
     );
     let mut gen_names: Vec<String> =
-        tree.variants.iter().map(|v| format!("{} {}", v.id, v.name())).collect();
-    let mut derivations: Vec<String> = tree.variants.iter().map(|v| v.derivation.clone()).collect();
+        plans.iter().map(|p| format!("{} {}", p.id, p.name())).collect();
+    let mut derivations: Vec<String> = plans.iter().map(|p| p.derivation.clone()).collect();
     let use_xla = arch.uses_xla() && xla.is_some();
     if use_xla && kernel != Kernel::Trsv {
         gen_names.push("xla ELL(AOT)/PJRT".to_string());
         derivations.push("orthogonalize(row) → materialize(dep) → split → nstar(padded) → AOT(XLA)".into());
     }
     let mut gens = Measurements::new(gen_names, mat_names.clone());
+    let mut stats_per_mat: Vec<MatrixStats> = Vec::with_capacity(mats.len());
+    let mut predicted: Vec<Vec<f64>> = vec![vec![f64::NAN; mats.len()]; plans.len()];
+    let mut measured: Vec<Vec<bool>> = vec![vec![false; mats.len()]; plans.len()];
+    let execs: Vec<concretize::Plan> = plans.iter().map(|p| p.exec).collect();
 
     for (mi, m) in mats.iter().enumerate() {
+        // Stage 2 — predict: memoized statistics (TrSv ranks on the
+        // lowered triangle, which the memo does not cover) and the
+        // per-matrix cost ranking.
+        let stats = if kernel == Kernel::Trsv {
+            MatrixStats::of(m)
+        } else {
+            entries[mi].stats_scaled(arch.scale())
+        };
+        stats_per_mat.push(stats);
+        for (pi, p) in plans.iter().enumerate() {
+            predicted[pi][mi] = cost::predict(kernel, cfg.spmm_k, &p.exec, &stats, &space.params);
+        }
+        // Shortlist order: ascending predicted time, index tie-break —
+        // the same ordering contract as `cost::rank_execs`, computed
+        // from the column just filled instead of re-running the model.
+        let mut order: Vec<usize> = (0..plans.len()).collect();
+        order.sort_by(|&a, &b| {
+            predicted[a][mi]
+                .partial_cmp(&predicted[b][mi])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let k_short =
+            if cfg.shortlist == 0 { plans.len() } else { cfg.shortlist.min(plans.len()) };
+        let shortlist: Vec<usize> = order[..k_short].to_vec();
+        for &pi in &shortlist {
+            measured[pi][mi] = true;
+        }
+
         // Workloads + oracle.
         let x = workload_x(m.ncols);
         let b = workload_b(m.ncols, cfg.spmm_k);
@@ -265,15 +382,22 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
             libs.set(ri, mi, t.median);
         }
 
-        // --- generated variants ---
-        for (vi, v) in tree.variants.iter().enumerate() {
-            let p = concretize::prepare(v.plan, m);
+        // Stage 3 — measure the shortlist. Storage for the whole
+        // shortlist is assembled in parallel (`prepare_many`); timing
+        // itself stays single-threaded per the paper protocol.
+        let shortlist_execs: Vec<concretize::Plan> =
+            shortlist.iter().map(|&pi| execs[pi]).collect();
+        let prepared =
+            concretize::prepare_many(&shortlist_execs, m, crate::util::pool::default_workers());
+        for (si, &pi) in shortlist.iter().enumerate() {
+            let p = &prepared[si];
+            let id = &plans[pi].id;
             let t = match kernel {
                 Kernel::Spmv => {
                     let mut y = vec![0.0; m.nrows];
                     if cfg.validate {
                         p.spmv(&x, &mut y);
-                        assert!(max_abs_rel_err(&y, &want_y) < 1e-9, "{} wrong on {}", v.id, mat_names[mi]);
+                        assert!(max_abs_rel_err(&y, &want_y) < 1e-9, "{} wrong on {}", id, mat_names[mi]);
                     }
                     time_fn(&cfg.bench, || {
                         p.spmv(&x, &mut y);
@@ -284,7 +408,7 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
                     let mut c = vec![0.0; m.nrows * cfg.spmm_k];
                     if cfg.validate {
                         p.spmm(&b, cfg.spmm_k, &mut c);
-                        assert!(max_abs_rel_err(&c, &want_c) < 1e-9, "{} wrong on {}", v.id, mat_names[mi]);
+                        assert!(max_abs_rel_err(&c, &want_c) < 1e-9, "{} wrong on {}", id, mat_names[mi]);
                     }
                     time_fn(&cfg.bench, || {
                         p.spmm(&b, cfg.spmm_k, &mut c);
@@ -295,7 +419,7 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
                     let mut xs = vec![0.0; m.nrows];
                     if cfg.validate {
                         p.trsv(&x, &mut xs);
-                        assert!(max_abs_rel_err(&xs, &want_x) < 1e-7, "{} wrong on {}", v.id, mat_names[mi]);
+                        assert!(max_abs_rel_err(&xs, &want_x) < 1e-7, "{} wrong on {}", id, mat_names[mi]);
                     }
                     time_fn(&cfg.bench, || {
                         p.trsv(&x, &mut xs);
@@ -303,7 +427,24 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
                     })
                 }
             };
-            gens.set(vi, mi, t.median);
+            gens.set(pi, mi, t.median);
+        }
+
+        // Fill the unmeasured cells with calibrated predictions so the
+        // coverage / selection analyses see a full table (the measured
+        // mask records which cells are real).
+        if k_short < plans.len() {
+            let mut ratios: Vec<f64> = shortlist
+                .iter()
+                .map(|&pi| gens.times[pi][mi] / predicted[pi][mi].max(1e-12))
+                .collect();
+            ratios.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let alpha = crate::util::stats::percentile_sorted(&ratios, 50.0).max(1e-12);
+            for pi in 0..plans.len() {
+                if !measured[pi][mi] {
+                    gens.set(pi, mi, (alpha * predicted[pi][mi]).max(1e-12));
+                }
+            }
         }
 
         // --- XLA AOT routine (ELL path with PJRT dispatch) ---
@@ -312,7 +453,7 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
             let ell = Ell::from_tuples(m, EllOrder::ColMajor);
             let n = m.nrows.max(m.ncols);
             let has_bucket = backend.bucket_for(kernel, n, ell.k, cfg.spmm_k).is_some();
-            let vi = tree.variants.len();
+            let vi = plans.len();
             let t = if has_bucket {
                 match kernel {
                     Kernel::Spmv => {
@@ -367,7 +508,17 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
 
     libs.validate().expect("library table incomplete");
     gens.validate().expect("generated table incomplete");
-    SweepResult { kernel, arch, libs, gens, derivations }
+    SweepResult {
+        kernel,
+        arch,
+        libs,
+        gens,
+        derivations,
+        plans,
+        stats: stats_per_mat,
+        predicted,
+        measured,
+    }
 }
 
 fn json_escape(s: &str) -> String {
@@ -396,13 +547,15 @@ fn json_num_array(items: &[f64]) -> String {
 }
 
 /// Render the machine-trackable perf record (`BENCH_spmv.json`) from a
-/// schedule-extended sweep: median seconds per generated variant ×
-/// matrix, plus a per-matrix serial-best vs best-overall summary — so
-/// the repo's perf trajectory is comparable across PRs.
+/// schedule-extended sweep: median seconds per generated plan × matrix,
+/// a per-matrix serial-best vs best-overall summary, the predicted-vs-
+/// measured top-1 agreement of the cost model, and the coverage curves
+/// with and without the schedule axis — so both the repo's perf
+/// trajectory *and* its planner accuracy are comparable across PRs.
 ///
-/// The sweep's pool already contains every serial variant (schedule
-/// labels carry an `@` suffix only when non-serial), so the serial
-/// table is the `@`-free subset — no second sweep is run.
+/// The sweep's pool already contains every serial plan (schedule labels
+/// carry an `@` suffix only when non-serial), so the serial table is
+/// the `@`-free subset — no second sweep is run.
 pub fn bench_json(scheduled: &SweepResult) -> String {
     let mats = &scheduled.gens.matrices;
     let serial_idx: Vec<usize> = (0..scheduled.gens.routines.len())
@@ -419,6 +572,50 @@ pub fn bench_json(scheduled: &SweepResult) -> String {
         scheduled.gens.times.iter().map(|row| format!("      {}", json_num_array(row))).collect();
     out.push_str(&format!("    \"median_secs\": [\n{}\n    ]\n", rows.join(",\n")));
     out.push_str("  },\n");
+
+    // Predict-vs-measure audit of the planner.
+    let (matches, total) = scheduled.rank_agreement();
+    out.push_str("  \"predict\": {\n");
+    out.push_str(&format!(
+        "    \"top1_agreement\": {:.4},\n",
+        matches as f64 / total.max(1) as f64
+    ));
+    let per: Vec<String> = mats
+        .iter()
+        .enumerate()
+        .map(|(mi, name)| {
+            let pb = scheduled.predicted_best(mi);
+            let mb = scheduled.measured_best(mi);
+            format!(
+                "      {{\"matrix\": \"{}\", \"predicted_best\": \"{}\", \
+                 \"measured_best\": \"{}\", \"agree\": {}}}",
+                json_escape(name),
+                json_escape(&scheduled.plans[pb].id),
+                json_escape(&scheduled.plans[mb].id),
+                pb == mb
+            )
+        })
+        .collect();
+    out.push_str(&format!("    \"per_matrix\": [\n{}\n    ]\n", per.join(",\n")));
+    out.push_str("  },\n");
+
+    // Coverage with and without the schedule axis (vs the all-plan
+    // optimum), the ROADMAP's schedule-aware-selection deliverable.
+    let ts: Vec<f64> = (0..=10).map(|t| t as f64 * 5.0).collect();
+    let (serial_curve, all_curve) =
+        select::schedule_axis_curves(&scheduled.gens, &scheduled.plans, &ts);
+    out.push_str("  \"coverage\": {\n");
+    out.push_str(&format!("    \"t_pct\": {},\n", json_num_array(&ts)));
+    out.push_str(&format!(
+        "    \"serial_only\": {},\n",
+        json_num_array(&serial_curve.iter().map(|&(_, c)| c).collect::<Vec<_>>())
+    ));
+    out.push_str(&format!(
+        "    \"with_schedules\": {}\n",
+        json_num_array(&all_curve.iter().map(|&(_, c)| c).collect::<Vec<_>>())
+    ));
+    out.push_str("  },\n");
+
     let serial_best = scheduled.gens.best_per_matrix(Some(&serial_idx));
     let sched_best = scheduled.gens.best_per_matrix(None);
     let summary: Vec<String> = mats
@@ -464,6 +661,8 @@ mod tests {
         assert_eq!(r.libs.routines.len(), 7);
         assert!(r.gens.routines.len() >= 15);
         assert_eq!(r.libs.matrices.len(), 3);
+        // exhaustive sweep: every generated cell is measured
+        assert!(r.measured.iter().all(|row| row.iter().all(|&b| b)));
         // the generated pool must beat or match the libraries somewhere
         let best_gen = r.best_gen();
         let best_lib = r.libs.best_per_matrix(None);
@@ -503,6 +702,65 @@ mod tests {
     }
 
     #[test]
+    fn shortlist_measures_topk_and_fills_the_rest() {
+        let mut cfg = SweepConfig::quick();
+        cfg.matrices = Some(vec![0]);
+        cfg.shortlist = 3;
+        let r = run(Kernel::Spmv, Arch::HostSmall, &cfg, None);
+        assert!(r.plans.len() > 3);
+        for mi in 0..r.gens.matrices.len() {
+            let n_measured = (0..r.plans.len()).filter(|&pi| r.measured[pi][mi]).count();
+            assert_eq!(n_measured, 3, "matrix {mi}");
+            // The model's first pick is always on the shortlist…
+            assert!(r.measured[r.predicted_best(mi)][mi]);
+            // …and the shortlist is exactly the top-3 predicted plans.
+            let execs: Vec<crate::concretize::Plan> =
+                r.plans.iter().map(|p| p.exec).collect();
+            let order = cost::rank_execs(
+                Kernel::Spmv,
+                cfg.spmm_k,
+                &execs,
+                &r.stats[mi],
+                &Arch::HostSmall.cost_params(),
+            );
+            for &pi in &order[..3] {
+                assert!(r.measured[pi][mi], "top-predicted plan {pi} not measured");
+            }
+        }
+        // Unmeasured cells are filled with finite calibrated predictions.
+        r.gens.validate().expect("shortlisted table must still be full");
+        let (matches, total) = r.rank_agreement();
+        assert!(matches <= total);
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    fn exhaustive_shortlist_equals_plan_count() {
+        let mut cfg = SweepConfig::quick();
+        cfg.matrices = Some(vec![2]);
+        cfg.shortlist = 10_000; // larger than the pool → everything measured
+        let r = run(Kernel::Spmv, Arch::HostSmall, &cfg, None);
+        assert!(r.measured.iter().all(|row| row.iter().all(|&b| b)));
+    }
+
+    #[test]
+    fn best_triples_come_from_measured_plans() {
+        let mut cfg = SweepConfig::quick_scheduled();
+        cfg.matrices = Some(vec![0, 2]);
+        cfg.shortlist = 5;
+        let r = run(Kernel::Spmv, Arch::HostLarge, &cfg, None);
+        let triples = r.best_triples();
+        assert_eq!(triples.len(), 2);
+        for (mi, t) in triples.iter().enumerate() {
+            assert!(t.plan_index < r.plans.len());
+            assert_eq!(t.plan_id, r.plans[t.plan_index].id);
+            // The winner of the full (filled) table is the measured
+            // winner: calibrated fills sit above the shortlist's best.
+            assert_eq!(t.plan_index, r.measured_best(mi));
+        }
+    }
+
+    #[test]
     fn bench_json_is_well_formed() {
         let mut cfg = SweepConfig::quick_scheduled();
         cfg.matrices = Some(vec![0]);
@@ -514,6 +772,13 @@ mod tests {
         assert!(js.contains("\"serial_best_secs\""));
         assert!(js.contains("\"summary\""));
         assert!(js.contains("\"speedup\""));
+        // the planner audit sections
+        assert!(js.contains("\"predict\""));
+        assert!(js.contains("\"top1_agreement\""));
+        assert!(js.contains("\"predicted_best\""));
+        assert!(js.contains("\"coverage\""));
+        assert!(js.contains("\"serial_only\""));
+        assert!(js.contains("\"with_schedules\""));
         // crude structural balance check
         let opens = js.matches('{').count();
         let closes = js.matches('}').count();

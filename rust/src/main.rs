@@ -3,16 +3,19 @@
 //! ```text
 //! forelem enumerate [--kernel spmv|spmm|trsv]     Fig 10 tree report
 //! forelem derive                                  Fig 8 derivation chains (IR at each step)
-//! forelem codegen --variant vNNN [--kernel spmv]  generated C-like code for a variant
+//! forelem codegen --variant ID [--kernel spmv]    generated C-like code for a plan
+//!                                                 (stable id like csr.row.serial, or vNNN rank)
 //! forelem table1|table2|table3 [--quick]          paper reduction tables (both archs)
 //! forelem table4|table5|fig11  [--quick]          coverage / selection analyses
 //! forelem bench-all [--quick] [--out FILE]        everything, appended to FILE
+//! forelem bench-json [--shortlist K]              BENCH_spmv.json + planner audit
 //! forelem suite                                   print the 20-matrix suite statistics
 //! ```
 
 use forelem::baselines::Kernel;
 use forelem::bench::tables;
-use forelem::coordinator::sweep::{Arch, SweepConfig};
+use forelem::coordinator::sweep::{Arch, SweepConfig, DEFAULT_X_BLOCK};
+use forelem::search::plan::PlanSpace;
 use forelem::util::cli::Args;
 
 fn kernel_of(args: &Args) -> Kernel {
@@ -39,6 +42,9 @@ fn sweep_cfg(args: &Args) -> SweepConfig {
     // Opt into the schedule axis (parallel / cache-blocked generated
     // kernels on the HostLarge arch; HostSmall stays single-core).
     cfg.use_schedules = args.flag("schedules");
+    // Predict→measure shortlist: time only the top-K cost-ranked plans
+    // per matrix. 0 (default) = exhaustive, paper protocol.
+    cfg.shortlist = args.get_usize("shortlist", 0);
     cfg
 }
 
@@ -132,35 +138,66 @@ fn cmd_derive() -> String {
 
 fn cmd_codegen(args: &Args) -> String {
     let kernel = kernel_of(args);
-    let tree = forelem::search::enumerate(kernel);
-    let id = args.get_or("variant", "v001");
-    let Some(v) = tree.variants.iter().find(|v| v.id == id) else {
-        return format!("no variant '{id}' (have v001..v{:03})", tree.variants.len());
+    let space = if args.flag("schedules") {
+        PlanSpace::host(forelem::util::pool::default_workers().clamp(2, 8), DEFAULT_X_BLOCK)
+    } else {
+        PlanSpace::serial_only()
+    };
+    let tree = forelem::search::enumerate(kernel, &space);
+    // Accept a stable id ("csr.row.serial"), a cost-rank ordinal
+    // ("v003" = third-cheapest plan), or default to the top-ranked one.
+    let sel = args.get_or("variant", "v001");
+    let plan = if let Some(ord) = sel
+        .strip_prefix('v')
+        .and_then(|n| n.parse::<usize>().ok())
+        .filter(|&n| n >= 1 && n <= tree.plans.len())
+    {
+        Some(&tree.plans[ord - 1])
+    } else {
+        tree.plans.iter().find(|p| p.id == sel)
+    };
+    let Some(p) = plan else {
+        let ids: Vec<&str> = tree.plans.iter().map(|p| p.id.as_str()).collect();
+        return format!(
+            "no plan '{sel}' (use v1..v{} by predicted rank, or one of: {})",
+            tree.plans.len(),
+            ids.join(", ")
+        );
     };
     format!(
-        "variant {} — {}\nderivation: {}\n\n{}",
-        v.id,
-        v.plan.layout.literature_name(),
-        v.derivation,
-        forelem::concretize::codegen::emit(kernel, &v.plan)
+        "plan {} — {}\nderivation: {}\n\n{}",
+        p.id,
+        p.exec.layout.literature_name(),
+        p.derivation,
+        forelem::concretize::codegen::emit_with_cost(
+            kernel,
+            &p.exec,
+            space.dense_k,
+            &space.ranking_stats(),
+            &space.params,
+        )
     )
 }
 
 fn cmd_suite() -> String {
     let mut out = String::from("## 20-matrix suite (synthetic stand-ins; DESIGN.md §5)\n");
     out.push_str(&format!(
-        "{:<12} {:>8} {:>10} {:>8} {:>10}\n",
-        "name", "n", "nnz", "maxrow", "nnz/row"
+        "{:<12} {:>8} {:>10} {:>8} {:>10} {:>8} {:>10} {:>10}\n",
+        "name", "n", "nnz", "maxrow", "nnz/row", "row-cv", "bandwidth", "ell-fill"
     ));
     for e in &forelem::matrix::suite::SUITE {
-        let m = e.build();
+        // Memoized MatrixStats — the same values the planner ranks on.
+        let s = e.stats();
         out.push_str(&format!(
-            "{:<12} {:>8} {:>10} {:>8} {:>10.1}\n",
+            "{:<12} {:>8} {:>10} {:>8} {:>10.1} {:>8.2} {:>10} {:>10.2}\n",
             e.name,
-            m.nrows,
-            m.nnz(),
-            m.max_row_nnz(),
-            m.nnz() as f64 / m.nrows as f64
+            s.nrows,
+            s.nnz,
+            s.row_max,
+            s.row_mean,
+            s.row_cv(),
+            s.bandwidth,
+            s.ell_fill()
         ));
     }
     out
@@ -207,7 +244,9 @@ fn main() {
                 xla.as_ref(),
             )
             .expect("writing bench json");
-            println!("wrote {path} (serial vs best-schedule SpMV medians)");
+            println!(
+                "wrote {path} (serial vs best-schedule SpMV medians + predicted-vs-measured audit)"
+            );
         }
         "bench-all" => {
             let cfg = sweep_cfg(&args);
@@ -228,14 +267,18 @@ fn main() {
             emit(&args, &tables::table5(&sweeps, args.get_usize("seed", 2022) as u64));
             emit(&args, &tables::fig11(&a1));
             emit(&args, &tables::fig11(&b1));
+            emit(&args, &tables::best_triples_report(&a1));
+            emit(&args, &tables::best_triples_report(&b1));
         }
         _ => {
             println!(
                 "forelem — automatic compiler-based data structure generation\n\
                  subcommands: enumerate derive codegen suite table1 table2 table3\n\
                  \x20            table4 table5 fig11 bench-all bench-json\n\
-                 flags: --quick --kernel K --variant vNNN --spmm-k N --matrices N --out FILE\n\
-                 \x20      --schedules (add the parallel/tiled schedule axis on host-large)"
+                 flags: --quick --kernel K --variant ID --spmm-k N --matrices N --out FILE\n\
+                 \x20      --schedules (add the parallel/tiled schedule axis on host-large)\n\
+                 \x20      --shortlist K (measure only the top-K cost-ranked plans per\n\
+                 \x20                     matrix; 0 = exhaustive, the paper protocol)"
             );
         }
     }

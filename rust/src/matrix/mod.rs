@@ -5,6 +5,8 @@
 pub mod coo;
 pub mod gen;
 pub mod mmio;
+pub mod stats;
 pub mod suite;
 
 pub use coo::{Entry, TriMat};
+pub use stats::MatrixStats;

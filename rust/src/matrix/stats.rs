@@ -1,0 +1,196 @@
+//! Per-matrix structural statistics — the inputs of the analytic cost
+//! model (`search::cost`). One `MatrixStats` value summarizes everything
+//! the planner needs to *predict* a plan's execution time without
+//! building any storage: nonzero count, the row-length distribution
+//! (mean / variance / max — what decides CSR vs padded formats), the
+//! bandwidth (what decides DIA and x-gather locality) and the density
+//! (what decides register blocking fill-in).
+//!
+//! Computed in one pass by [`MatrixStats::of`]; the suite memoizes the
+//! result per (matrix, scale) so sweeps, tables and the CLI never
+//! recompute it (`matrix::suite::SuiteEntry::stats_scaled`).
+
+use crate::matrix::TriMat;
+
+/// Structural summary of a tuple reservoir.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MatrixStats {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    /// Mean nonzeros per row (`nnz / nrows`).
+    pub row_mean: f64,
+    /// Population variance of the row-length distribution.
+    pub row_var: f64,
+    /// Maximum nonzeros in any row (the ELL padding width K).
+    pub row_max: usize,
+    /// Rows with no nonzeros at all.
+    pub empty_rows: usize,
+    /// Maximum `|col - row|` over all entries.
+    pub bandwidth: usize,
+    /// Mean `|col - row|` over all entries.
+    pub avg_bandwidth: f64,
+    /// `nnz / (nrows * ncols)`.
+    pub density: f64,
+}
+
+impl MatrixStats {
+    /// Compute the statistics from a reservoir (one pass over the
+    /// entries plus one over the row counts).
+    pub fn of(m: &TriMat) -> Self {
+        let nrows = m.nrows;
+        let ncols = m.ncols;
+        let nnz = m.nnz();
+        let counts = m.row_counts();
+        let row_max = counts.iter().copied().max().unwrap_or(0);
+        let empty_rows = counts.iter().filter(|&&c| c == 0).count();
+        let nr = nrows.max(1) as f64;
+        let row_mean = nnz as f64 / nr;
+        let row_var = counts
+            .iter()
+            .map(|&c| {
+                let d = c as f64 - row_mean;
+                d * d
+            })
+            .sum::<f64>()
+            / nr;
+        let mut bandwidth = 0usize;
+        let mut band_sum = 0u64;
+        for e in &m.entries {
+            let b = (e.row as i64 - e.col as i64).unsigned_abs() as usize;
+            bandwidth = bandwidth.max(b);
+            band_sum += b as u64;
+        }
+        let avg_bandwidth = band_sum as f64 / (nnz.max(1)) as f64;
+        let density = nnz as f64 / (nr * ncols.max(1) as f64);
+        MatrixStats {
+            nrows,
+            ncols,
+            nnz,
+            row_mean,
+            row_var,
+            row_max,
+            empty_rows,
+            bandwidth,
+            avg_bandwidth,
+            density,
+        }
+    }
+
+    /// Build synthetic statistics directly (cost-model tests and the
+    /// reference ranking point used when no matrix is at hand yet).
+    pub fn synthetic(
+        nrows: usize,
+        ncols: usize,
+        row_mean: f64,
+        row_var: f64,
+        row_max: usize,
+        bandwidth: usize,
+    ) -> Self {
+        let nnz = (row_mean * nrows as f64).round() as usize;
+        MatrixStats {
+            nrows,
+            ncols,
+            nnz,
+            row_mean,
+            row_var,
+            row_max,
+            empty_rows: 0,
+            bandwidth,
+            avg_bandwidth: bandwidth as f64 * 0.5,
+            density: nnz as f64 / (nrows.max(1) * ncols.max(1)) as f64,
+        }
+    }
+
+    /// The "typical suite matrix" used to rank plans when no concrete
+    /// matrix has been chosen yet: mid-size, irregular row fill,
+    /// unstructured column pattern.
+    pub fn nominal() -> Self {
+        MatrixStats::synthetic(4000, 4000, 15.0, 225.0, 400, 2000)
+    }
+
+    /// Coefficient of variation of the row lengths (`σ / mean`) — the
+    /// planner's irregularity signal (0 for perfectly uniform rows).
+    pub fn row_cv(&self) -> f64 {
+        if self.row_mean <= 0.0 {
+            return 0.0;
+        }
+        self.row_var.max(0.0).sqrt() / self.row_mean
+    }
+
+    /// ELL padding factor: stored slots over nonzeros (`nrows * row_max
+    /// / nnz`, ≥ 1; 1 for uniform rows).
+    pub fn ell_fill(&self) -> f64 {
+        if self.nnz == 0 {
+            return 1.0;
+        }
+        (self.nrows * self.row_max) as f64 / self.nnz as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn uniform_rows_have_zero_variance() {
+        let mut m = TriMat::new(6, 8);
+        for i in 0..6 {
+            m.push(i, i, 1.0);
+            m.push(i, (i + 1) % 8, 2.0);
+        }
+        let s = MatrixStats::of(&m);
+        assert_eq!(s.nnz, 12);
+        assert!((s.row_mean - 2.0).abs() < 1e-12);
+        assert!(s.row_var.abs() < 1e-12);
+        assert_eq!(s.row_max, 2);
+        assert_eq!(s.empty_rows, 0);
+        assert!((s.row_cv()).abs() < 1e-12);
+        assert!((s.ell_fill() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewed_rows_show_up_in_variance_and_fill() {
+        let mut m = TriMat::new(10, 40);
+        for j in 0..40 {
+            m.push(0, j, 1.0); // one dense row
+        }
+        m.push(5, 0, 1.0);
+        let s = MatrixStats::of(&m);
+        assert_eq!(s.row_max, 40);
+        assert_eq!(s.empty_rows, 8);
+        assert!(s.row_cv() > 2.0, "cv = {}", s.row_cv());
+        assert!(s.ell_fill() > 5.0, "fill = {}", s.ell_fill());
+    }
+
+    #[test]
+    fn bandwidth_of_banded_matrix_is_small() {
+        let banded = gen::banded(200, 5, 0.8, 77);
+        let s = MatrixStats::of(&banded);
+        assert!(s.bandwidth <= 5, "bandwidth = {}", s.bandwidth);
+        assert!(s.avg_bandwidth <= 5.0);
+        let random = gen::uniform_random(200, 200, 800, 78);
+        let r = MatrixStats::of(&random);
+        assert!(r.bandwidth > 50, "random bandwidth = {}", r.bandwidth);
+    }
+
+    #[test]
+    fn empty_matrix_is_safe() {
+        let s = MatrixStats::of(&TriMat::new(6, 6));
+        assert_eq!(s.nnz, 0);
+        assert_eq!(s.row_max, 0);
+        assert_eq!(s.empty_rows, 6);
+        assert_eq!(s.row_cv(), 0.0);
+        assert_eq!(s.ell_fill(), 1.0);
+        assert_eq!(s.density, 0.0);
+    }
+
+    #[test]
+    fn synthetic_matches_definitions() {
+        let s = MatrixStats::synthetic(1000, 1000, 8.0, 0.0, 8, 500);
+        assert_eq!(s.nnz, 8000);
+        assert!((s.density - 8e-3).abs() < 1e-12);
+        assert!((s.ell_fill() - 1.0).abs() < 1e-12);
+    }
+}

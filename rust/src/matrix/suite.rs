@@ -4,7 +4,11 @@
 //! names, scaled to laptop size (DESIGN.md §5). If a real `.mtx` file is
 //! present under `$FORELEM_MATRIX_DIR/<name>.mtx` it is used instead.
 
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
 use crate::matrix::coo::TriMat;
+use crate::matrix::stats::MatrixStats;
 use crate::matrix::{gen, mmio};
 
 /// Structural class of a suite matrix (documents the substitution).
@@ -50,6 +54,27 @@ impl SuiteEntry {
         }
         SCALE.with(|s| s.set(scale));
         synthesize(self.name, self.class, self.seed)
+    }
+
+    /// Structural statistics at the env-default scale (memoized).
+    pub fn stats(&self) -> MatrixStats {
+        self.stats_scaled(env_scale())
+    }
+
+    /// Structural statistics at an explicit scale — memoized per
+    /// (matrix, scale), so the planner (`coordinator::sweep`), the
+    /// paper tables and the `suite` CLI all share one computation
+    /// instead of rebuilding the matrix to recount rows.
+    pub fn stats_scaled(&self, scale: f64) -> MatrixStats {
+        static MEMO: OnceLock<Mutex<HashMap<(&'static str, u64), MatrixStats>>> = OnceLock::new();
+        let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+        let key = (self.name, scale.to_bits());
+        if let Some(s) = memo.lock().unwrap().get(&key) {
+            return *s;
+        }
+        let s = MatrixStats::of(&self.build_scaled(scale));
+        memo.lock().unwrap().insert(key, s);
+        s
     }
 }
 
@@ -181,6 +206,20 @@ mod tests {
             assert!(m.nnz() > m.nrows, "{} suspiciously empty", e.name);
             m.validate().unwrap_or_else(|err| panic!("{}: {}", e.name, err));
         }
+    }
+
+    #[test]
+    fn stats_match_built_matrix_and_memoize() {
+        let e = by_name("Erdos971").unwrap();
+        let s1 = e.stats_scaled(1.0);
+        let direct = MatrixStats::of(&e.build_scaled(1.0));
+        assert_eq!(s1, direct);
+        // Second call hits the memo and returns the identical value.
+        let s2 = e.stats_scaled(1.0);
+        assert_eq!(s1, s2);
+        // A different scale is a different memo entry.
+        let s3 = e.stats_scaled(2.0);
+        assert!(s3.nrows > s1.nrows);
     }
 
     #[test]

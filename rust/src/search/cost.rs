@@ -1,0 +1,436 @@
+//! The analytic cost model of the predict→measure planner (stage 1 of
+//! the pipeline; see `search::plan` for the pipeline overview).
+//!
+//! Given a concretization triple (`concretize::Plan`), a matrix summary
+//! ([`MatrixStats`]) and architecture parameters ([`CostParams`]), the
+//! model predicts an execution time in seconds from first principles:
+//!
+//! * **streamed bytes** — the stored structure plus output traffic,
+//!   layout-specific (padded formats stream their padding; plane-wise
+//!   traversals re-stream `y` once per plane; DIA streams dense
+//!   diagonal planes),
+//! * **gathered bytes** — the random `x` (or scattered `y`) accesses,
+//!   charged at gather bandwidth only for the fraction of the working
+//!   set that exceeds the last-level cache (banded matrices get their
+//!   locality back through `avg_bandwidth`),
+//! * **flops** — `2 · slots · k`, rooflined against the memory time,
+//! * **loop overhead** — per-row/plane/diagonal header cost (what makes
+//!   branch-free padded traversals win on perfectly uniform matrices),
+//! * **schedule terms** — parallel speedup limited by grain, row-length
+//!   imbalance (`row_cv`) and per-invocation thread spawn cost; tiled
+//!   schedules trade the gather penalty for per-band split/`y` traffic.
+//!
+//! The point is *ranking*, not absolute accuracy: the sweep measures
+//! the top of the predicted order and reports predicted-vs-measured
+//! agreement (`BENCH_spmv.json`) so the model is auditable across PRs.
+
+use crate::baselines::Kernel;
+use crate::concretize::{Layout, Plan as ExecPlan, Schedule, Traversal};
+use crate::matrix::MatrixStats;
+use crate::storage::CooOrder;
+
+/// Architecture parameters of the cost model — the planner-facing
+/// summary of an `coordinator::sweep::Arch`.
+#[derive(Clone, Copy, Debug)]
+pub struct CostParams {
+    /// Per-core L1 data cache (bytes).
+    pub l1_bytes: f64,
+    /// Last-level cache a working set must fit in to gather cheaply.
+    pub l2_bytes: f64,
+    /// Sequential stream bandwidth (bytes/s).
+    pub stream_bw: f64,
+    /// Effective bandwidth of cache-missing random gathers (bytes/s).
+    pub gather_bw: f64,
+    /// Scalar flop rate (flops/s).
+    pub flop_rate: f64,
+    /// Cost of one inner-loop header (row / plane / diagonal), seconds.
+    pub loop_overhead: f64,
+    /// Per-thread spawn+join cost of one scoped-thread invocation.
+    pub spawn_overhead: f64,
+    /// Worker threads the architecture exposes to parallel schedules.
+    pub threads: usize,
+}
+
+impl CostParams {
+    /// The paper-protocol single-core machine (Xeon 5150 stand-in).
+    pub fn host_small() -> Self {
+        CostParams {
+            l1_bytes: 32e3,
+            l2_bytes: 4e6,
+            stream_bw: 8e9,
+            gather_bw: 1.5e9,
+            flop_rate: 4e9,
+            loop_overhead: 1.5e-9,
+            spawn_overhead: 2.5e-5,
+            threads: 1,
+        }
+    }
+
+    /// The modern multi-core machine (Xeon E5 stand-in).
+    pub fn host_large(threads: usize) -> Self {
+        CostParams {
+            l1_bytes: 48e3,
+            l2_bytes: 8e6,
+            stream_bw: 20e9,
+            gather_bw: 4e9,
+            flop_rate: 8e9,
+            loop_overhead: 1.0e-9,
+            spawn_overhead: 2.5e-5,
+            threads: threads.max(1),
+        }
+    }
+}
+
+/// Resource descriptor of a plan on a matrix — the analytic footprint
+/// the cost model integrates into a predicted time.
+#[derive(Clone, Copy, Debug)]
+pub struct Resources {
+    /// Sequentially streamed bytes per invocation (structure + output).
+    pub streamed_bytes: f64,
+    /// Randomly gathered bytes per invocation (`x` reads / `y` scatter).
+    pub gathered_bytes: f64,
+    /// Working set the gathers revisit (what wants to be L2-resident).
+    pub gather_working_set: f64,
+    /// Per-row working set (one row of structure + one output row) —
+    /// what wants to be L1-resident.
+    pub l1_working_set: f64,
+    /// Floating-point operations per invocation.
+    pub flops: f64,
+    /// Inner-loop headers executed (rows / planes / diagonals / blocks).
+    pub loop_headers: f64,
+    /// Independent output partitions a parallel schedule can exploit.
+    pub parallel_grain: usize,
+}
+
+/// Layout-specific serial footprint (before schedule terms).
+fn layout_resources(
+    kernel: Kernel,
+    dense_k: usize,
+    exec: &ExecPlan,
+    stats: &MatrixStats,
+) -> Resources {
+    let n = stats.nrows.max(1) as f64;
+    let nc = stats.ncols.max(1) as f64;
+    let nnz = stats.nnz as f64;
+    let row_max = stats.row_max as f64;
+    let kf = if kernel == Kernel::Spmm { dense_k.max(1) as f64 } else { 1.0 };
+
+    // Defaults for the row-oriented formats: one output pass, random x.
+    let mut out_bytes = 16.0 * n * kf;
+    let mut x_stream = 0.0; // sequential x traffic (scatter & DIA shapes)
+    let mut gather_ws = nc * 8.0 * kf;
+    let mut scatter = false; // y is the randomly-accessed side instead of x
+
+    let (stored, slots, headers, grain): (f64, f64, f64, usize) = match exec.layout {
+        Layout::CooAos(order) | Layout::CooSoa(order) => {
+            if order != CooOrder::RowMajor {
+                scatter = true;
+            }
+            (nnz * 16.0, nnz, 1.0, 1)
+        }
+        Layout::Csr => (nnz * 12.0 + (n + 1.0) * 4.0, nnz, n, stats.nrows),
+        Layout::CsrAos => (nnz * 16.0 + (n + 1.0) * 4.0, nnz, n, stats.nrows),
+        Layout::Csc => {
+            scatter = true;
+            x_stream = nc * 8.0 * kf;
+            (nnz * 12.0 + (nc + 1.0) * 4.0, nnz, nc, 1)
+        }
+        Layout::CscAos => {
+            scatter = true;
+            x_stream = nc * 8.0 * kf;
+            (nnz * 16.0 + (nc + 1.0) * 4.0, nnz, nc, 1)
+        }
+        Layout::Ell(_) => {
+            let pad_slots = (n * row_max - nnz).max(0.0);
+            match exec.traversal {
+                // Branch-free: every slot (padding included) is visited.
+                Traversal::RowWisePadded => {
+                    (n * row_max * 12.0, n * row_max, n * 0.25, stats.nrows)
+                }
+                // Plane-wise (ITPACK): all slots visited, `y` re-streamed
+                // once per plane.
+                Traversal::PlaneWise => {
+                    out_bytes = 16.0 * n * kf * row_max.max(1.0);
+                    (n * row_max * 12.0, n * row_max, row_max, stats.nrows)
+                }
+                // Exact-length row-wise: only real entries are visited,
+                // but the padded planes still waste part of each cache
+                // line.
+                _ => (nnz * 12.0 + n * 4.0 + pad_slots * 3.0, nnz, n, stats.nrows),
+            }
+        }
+        Layout::Jds { permuted } => {
+            // Diagonal-major accumulation re-reads/writes the permuted
+            // output once per element, plus the final scatter pass.
+            out_bytes = 16.0 * nnz * kf + 24.0 * n * kf;
+            let lists = if permuted { n * 4.0 } else { nnz * 4.0 };
+            let grain = if permuted { stats.nrows } else { 1 };
+            (nnz * 12.0 + row_max * 8.0 + lists, nnz, row_max.max(1.0), grain)
+        }
+        Layout::Bcsr { br, bc } => {
+            // Fill-in estimate: scattered matrices pay close to the full
+            // block, clustered (dense) ones close to none.
+            let cells = (br * bc) as f64;
+            let fill = 1.0 + (cells - 1.0) * (1.0 - stats.density.min(1.0)) * 0.2;
+            let slots = (nnz * fill).min(n * nc);
+            let nblocks = slots / cells;
+            let stored = slots * 8.0 + nblocks * 4.0 + (n / br as f64 + 1.0) * 4.0;
+            (stored, slots, nblocks + n / br as f64, stats.nrows.div_ceil(br))
+        }
+        Layout::HybridEllCoo => {
+            // ELL head cut at the mean width + COO tail.
+            let slots = nnz * 1.15;
+            (slots * 12.0 + n * 4.0, slots, n + 1.0, stats.nrows)
+        }
+        Layout::Sell { s } => {
+            // Each slice pads to its own width ≈ mean + σ/2.
+            let pad = (n * stats.row_var.max(0.0).sqrt() * 0.5)
+                .min((n * row_max - nnz).max(0.0));
+            let slots = nnz + pad;
+            let nslices = n / s as f64 + 1.0;
+            (slots * 12.0 + nslices * 8.0 + n * 4.0, slots, nslices + slots / s as f64, {
+                stats.nrows.div_ceil(s)
+            })
+        }
+        Layout::Dia => {
+            let ndiags = (2.0 * stats.bandwidth as f64 + 1.0).min(n + nc - 1.0).max(1.0);
+            // Dense diagonal planes; x and y are both streamed per plane.
+            out_bytes = 16.0 * n * kf * ndiags;
+            x_stream = 8.0 * n * kf * ndiags;
+            gather_ws = 0.0;
+            (ndiags * n * 8.0 + ndiags * 4.0, ndiags * n, ndiags, 1)
+        }
+    };
+
+    // Random side: row-oriented formats gather x (one B row of k·8
+    // bytes per visited slot for SpMM); scatter shapes gather y
+    // read+write instead. Banded matrices keep their gathers local.
+    let (gathered, ws) = if gather_ws == 0.0 {
+        (0.0, 0.0)
+    } else if scatter {
+        (slots * 16.0 * kf, n * 8.0 * kf)
+    } else {
+        let locality = (2.0 * stats.avg_bandwidth * 8.0 * kf + 64.0).min(gather_ws);
+        (slots * 8.0 * kf, locality)
+    };
+
+    Resources {
+        streamed_bytes: stored + out_bytes + x_stream,
+        gathered_bytes: gathered,
+        gather_working_set: ws,
+        l1_working_set: stats.row_mean * 12.0 + 8.0 * kf,
+        flops: 2.0 * slots * kf,
+        loop_headers: headers,
+        parallel_grain: grain.max(1),
+    }
+}
+
+/// Full resource descriptor of a plan (schedule-aware: tiled schedules
+/// add their per-band split traffic and shrink the gather working set).
+pub fn resources(
+    kernel: Kernel,
+    dense_k: usize,
+    exec: &ExecPlan,
+    stats: &MatrixStats,
+) -> Resources {
+    let mut r = layout_resources(kernel, dense_k, exec, stats);
+    let n = stats.nrows.max(1) as f64;
+    let nc = stats.ncols.max(1) as f64;
+    if let Schedule::Tiled { x_block } | Schedule::ParallelTiled { x_block, .. } = exec.schedule {
+        let nbands = (nc / x_block.max(1) as f64).ceil().max(1.0);
+        // Each band re-streams the split row and the partial sums, but
+        // the gather working set shrinks to one x band.
+        r.streamed_bytes += nbands * n * (4.0 + 16.0);
+        r.gather_working_set = r.gather_working_set.min(x_block as f64 * 8.0);
+    }
+    r
+}
+
+/// Predict the execution time (seconds) of one invocation of `exec` on
+/// a matrix with statistics `stats`, on architecture `p`. Always finite
+/// and positive; deterministic.
+pub fn predict(
+    kernel: Kernel,
+    dense_k: usize,
+    exec: &ExecPlan,
+    stats: &MatrixStats,
+    p: &CostParams,
+) -> f64 {
+    let r = resources(kernel, dense_k, exec, stats);
+
+    // Gather: the fraction of accesses whose working set spills past L2
+    // pays gather bandwidth; the rest (and the compulsory first touch)
+    // streams.
+    let ws = r.gather_working_set;
+    let miss = if ws > p.l2_bytes { ((ws - p.l2_bytes) / ws).clamp(0.0, 1.0) } else { 0.0 };
+    let gather_time = r.gathered_bytes * miss / p.gather_bw
+        + (r.gathered_bytes * (1.0 - miss) + ws) / p.stream_bw;
+
+    let mem_time = r.streamed_bytes / p.stream_bw + gather_time;
+    let flop_time = r.flops / p.flop_rate;
+    let core = mem_time.max(flop_time);
+    let headers = r.loop_headers * p.loop_overhead;
+
+    let total = match exec.schedule {
+        Schedule::Serial | Schedule::Tiled { .. } => {
+            let dep = if kernel == Kernel::Trsv { 1.2 } else { 1.0 };
+            (core + headers) * dep
+        }
+        Schedule::Parallel { threads } | Schedule::ParallelTiled { threads, .. } => {
+            let t = threads.max(1);
+            let eff_threads = t.min(p.threads.max(1)).min(r.parallel_grain) as f64;
+            // Row-length imbalance erodes the speedup even with
+            // nnz-balanced ranges (one huge row caps the partition).
+            let eff = 0.9 / (1.0 + stats.row_cv() * 0.25);
+            (core + headers) / (eff_threads * eff).max(1.0)
+                + p.spawn_overhead * t as f64
+        }
+    };
+    total.max(1e-12)
+}
+
+/// Indices of `plans`' execution triples sorted by predicted time
+/// (ascending, ties broken by index for determinism).
+pub fn rank_execs(
+    kernel: Kernel,
+    dense_k: usize,
+    execs: &[ExecPlan],
+    stats: &MatrixStats,
+    p: &CostParams,
+) -> Vec<usize> {
+    let scores: Vec<f64> =
+        execs.iter().map(|e| predict(kernel, dense_k, e, stats, p)).collect();
+    let mut idx: Vec<usize> = (0..execs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::concretize::Plan;
+    use crate::storage::EllOrder;
+
+    fn csr() -> Plan {
+        Plan::serial(Layout::Csr, Traversal::RowWise)
+    }
+
+    fn ell_plans() -> Vec<Plan> {
+        vec![
+            Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWise),
+            Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWisePadded),
+            Plan::serial(Layout::Ell(EllOrder::ColMajor), Traversal::PlaneWise),
+        ]
+    }
+
+    /// The ISSUE's planted ranking: on a high-variance row-length
+    /// matrix the padded formats drown in padding, so CSR must rank
+    /// above every ELL executable…
+    #[test]
+    fn csr_beats_ell_on_high_variance_rows() {
+        let p = CostParams::host_small();
+        let skewed = MatrixStats::synthetic(1000, 1000, 8.0, 1600.0, 400, 900);
+        let t_csr = predict(Kernel::Spmv, 1, &csr(), &skewed, &p);
+        for e in ell_plans() {
+            let t_ell = predict(Kernel::Spmv, 1, &e, &skewed, &p);
+            assert!(
+                t_csr < t_ell,
+                "CSR {t_csr:e} not ranked above {:?} {t_ell:e} on skewed rows",
+                e.layout
+            );
+        }
+    }
+
+    /// …and on perfectly uniform rows the branch-free padded ELL
+    /// executable ranks above CSR (no padding, no row_ptr traffic, no
+    /// per-row branch).
+    #[test]
+    fn ell_beats_csr_on_uniform_rows() {
+        let p = CostParams::host_small();
+        let uniform = MatrixStats::synthetic(1000, 1000, 8.0, 0.0, 8, 500);
+        let t_csr = predict(Kernel::Spmv, 1, &csr(), &uniform, &p);
+        let padded = Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWisePadded);
+        let t_ell = predict(Kernel::Spmv, 1, &padded, &uniform, &p);
+        assert!(t_ell < t_csr, "padded ELL {t_ell:e} not below CSR {t_csr:e} on uniform rows");
+    }
+
+    #[test]
+    fn dia_only_competitive_when_banded() {
+        let p = CostParams::host_small();
+        let dia = Plan::serial(Layout::Dia, Traversal::DiagMajor);
+        let banded = MatrixStats::synthetic(2000, 2000, 7.0, 1.0, 9, 4);
+        let scattered = MatrixStats::synthetic(2000, 2000, 7.0, 1.0, 9, 1500);
+        let t_banded = predict(Kernel::Spmv, 1, &dia, &banded, &p);
+        let t_scattered = predict(Kernel::Spmv, 1, &dia, &scattered, &p);
+        assert!(t_banded * 20.0 < t_scattered, "{t_banded:e} vs {t_scattered:e}");
+        assert!(t_banded < predict(Kernel::Spmv, 1, &csr(), &banded, &p) * 3.0);
+    }
+
+    #[test]
+    fn parallel_pays_spawn_cost_on_tiny_matrices() {
+        let p = CostParams::host_large(8);
+        let tiny = MatrixStats::synthetic(100, 100, 5.0, 2.0, 8, 50);
+        let big = MatrixStats::synthetic(400_000, 400_000, 40.0, 100.0, 80, 200_000);
+        let par = csr().with_schedule(Schedule::Parallel { threads: 8 });
+        assert!(
+            predict(Kernel::Spmv, 1, &par, &tiny, &p) > predict(Kernel::Spmv, 1, &csr(), &tiny, &p),
+            "parallel should lose on a tiny matrix"
+        );
+        assert!(
+            predict(Kernel::Spmv, 1, &par, &big, &p) < predict(Kernel::Spmv, 1, &csr(), &big, &p),
+            "parallel should win on a large matrix"
+        );
+    }
+
+    #[test]
+    fn tiling_helps_only_when_x_spills_cache() {
+        let p = CostParams::host_small();
+        let tiled = csr().with_schedule(Schedule::Tiled { x_block: 4096 });
+        let small = MatrixStats::synthetic(3000, 3000, 10.0, 9.0, 20, 1500);
+        assert!(
+            predict(Kernel::Spmv, 1, &tiled, &small, &p)
+                > predict(Kernel::Spmv, 1, &csr(), &small, &p),
+            "tiling must cost extra when x already fits in L2"
+        );
+        // On a huge matrix an L2-sized band pays off; a tiny band would
+        // drown in per-band split/partial traffic (977 bands × 4M rows).
+        let huge = MatrixStats::synthetic(4_000_000, 4_000_000, 30.0, 400.0, 200, 2_000_000);
+        let l2_band = csr().with_schedule(Schedule::Tiled { x_block: 500_000 });
+        assert!(
+            predict(Kernel::Spmv, 1, &l2_band, &huge, &p)
+                < predict(Kernel::Spmv, 1, &csr(), &huge, &p),
+            "tiling must pay off once the gather working set spills"
+        );
+    }
+
+    #[test]
+    fn predictions_finite_positive_and_deterministic() {
+        let p = CostParams::host_large(4);
+        let stats = MatrixStats::of(&crate::matrix::TriMat::new(6, 6));
+        for e in ell_plans().into_iter().chain([csr()]) {
+            let a = predict(Kernel::Spmm, 16, &e, &stats, &p);
+            let b = predict(Kernel::Spmm, 16, &e, &stats, &p);
+            assert!(a.is_finite() && a > 0.0);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn rank_execs_is_sorted_and_complete() {
+        let p = CostParams::host_small();
+        let stats = MatrixStats::nominal();
+        let execs: Vec<Plan> = ell_plans().into_iter().chain([csr()]).collect();
+        let order = rank_execs(Kernel::Spmv, 1, &execs, &stats, &p);
+        assert_eq!(order.len(), execs.len());
+        let mut seen = order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..execs.len()).collect::<Vec<_>>());
+        for w in order.windows(2) {
+            let a = predict(Kernel::Spmv, 1, &execs[w[0]], &stats, &p);
+            let b = predict(Kernel::Spmv, 1, &execs[w[1]], &stats, &p);
+            assert!(a <= b);
+        }
+    }
+}

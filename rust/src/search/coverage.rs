@@ -49,6 +49,31 @@ impl Measurements {
             .collect()
     }
 
+    /// Index of the best routine per matrix (over a routine subset, or
+    /// all with `None`); ties break to the earliest index. Returns an
+    /// empty vec for an empty subset.
+    pub fn argmin_per_matrix(&self, subset: Option<&[usize]>) -> Vec<usize> {
+        let idx: Vec<usize> = match subset {
+            Some(s) => s.to_vec(),
+            None => (0..self.routines.len()).collect(),
+        };
+        if idx.is_empty() {
+            return Vec::new();
+        }
+        (0..self.matrices.len())
+            .map(|m| {
+                idx.iter()
+                    .copied()
+                    .min_by(|&a, &b| {
+                        self.times[a][m]
+                            .partial_cmp(&self.times[b][m])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .expect("non-empty subset")
+            })
+            .collect()
+    }
+
     /// Merge another table (same matrices) into this one.
     pub fn extend(&mut self, other: &Measurements) {
         assert_eq!(self.matrices, other.matrices);
@@ -200,5 +225,52 @@ mod tests {
         let curve = coverage_curve(&m, &best, None, &[0.0, 25.0, 50.0, 100.0]);
         assert_eq!(curve.len(), 4);
         assert!(curve.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn curve_edge_cases() {
+        let m = table();
+        let best = m.best_per_matrix(None);
+        // Empty t-grid → empty curve.
+        assert!(coverage_curve(&m, &best, None, &[]).is_empty());
+        // t = 0 exactly: only true optima count; r1 covers exactly m2.
+        let c = coverage_curve(&m, &best, Some(&[1]), &[0.0]);
+        assert!((c[0].1 - 1.0 / 3.0).abs() < 1e-12);
+        // Subset of a strictly dominated routine stays at 0 until its
+        // worst-case t is reached (r2 is 2x best on m0/m1, 4x on m2).
+        let c = coverage_curve(&m, &best, Some(&[2]), &[0.0, 99.0, 100.0, 300.0]);
+        assert_eq!(c[0].1, 0.0);
+        assert_eq!(c[1].1, 0.0);
+        assert!((c[2].1 - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c[3].1 - 1.0).abs() < 1e-12);
+        // Huge t covers everything for any non-empty subset.
+        let c = coverage_curve(&m, &best, Some(&[0]), &[1e6]);
+        assert!((c[0].1 - 1.0).abs() < 1e-12);
+        // Empty subset: coverage is 0 at every t.
+        let c = coverage_curve(&m, &best, Some(&[]), &[0.0, 50.0]);
+        assert!(c.iter().all(|&(_, v)| v == 0.0));
+    }
+
+    #[test]
+    fn argmin_per_matrix_picks_winners() {
+        let m = table();
+        assert_eq!(m.argmin_per_matrix(None), vec![0, 0, 1]);
+        // Restricted to {r1, r2}: r1 wins everywhere.
+        assert_eq!(m.argmin_per_matrix(Some(&[1, 2])), vec![1, 1, 1]);
+        // Singleton subset maps every matrix to it.
+        assert_eq!(m.argmin_per_matrix(Some(&[2])), vec![2, 2, 2]);
+        // Empty subset → empty result.
+        assert!(m.argmin_per_matrix(Some(&[])).is_empty());
+    }
+
+    #[test]
+    fn argmin_breaks_ties_to_earliest() {
+        let mut m = Measurements::new(
+            vec!["a".into(), "b".into()],
+            vec!["m0".into()],
+        );
+        m.set(0, 0, 1.0);
+        m.set(1, 0, 1.0);
+        assert_eq!(m.argmin_per_matrix(None), vec![0]);
     }
 }

@@ -1,10 +1,18 @@
-//! Search-space machinery: transformation-tree enumeration (Fig 10),
-//! the coverage metric (§6.4.4) and per-architecture all-round kernel
-//! selection (§6.4.5).
+//! Search-space machinery: the predict→measure planner pipeline.
+//!
+//! `tree` enumerates the transformation tree (Fig 10) into cost-ranked
+//! first-class plans (`plan::Plan`); `cost` is the analytic model that
+//! ranks them; `coverage` is the coverage metric (§6.4.4); `select`
+//! picks per-matrix best triples and per-architecture all-round
+//! kernels (§6.4.5).
 
+pub mod cost;
 pub mod coverage;
+pub mod plan;
 pub mod select;
 pub mod tree;
 
+pub use cost::CostParams;
 pub use coverage::Measurements;
-pub use tree::{enumerate, enumerate_scheduled, SchedulePool, Tree, Variant};
+pub use plan::{Plan, PlanSpace};
+pub use tree::{enumerate, Tree};

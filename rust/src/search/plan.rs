@@ -1,0 +1,236 @@
+//! The first-class [`Plan`] of the predict→measure planner.
+//!
+//! # The planner pipeline
+//!
+//! PR 1 grew the search space to Layout × Traversal × Schedule, but
+//! selection was still brute-force: every enumerated variant was
+//! measured on every matrix. This module makes the planner's unit of
+//! currency explicit so the search can *predict first and measure
+//! second*:
+//!
+//! 1. **Enumerate** — `search::tree::enumerate(kernel, &PlanSpace)`
+//!    walks the transformation tree once, crosses the concretizable
+//!    chains with the space's schedules, prunes illegal triples
+//!    (`Plan::legal_for`), and yields cost-ranked [`Plan`]s.
+//! 2. **Predict** — `search::cost::predict` scores every plan on a
+//!    matrix's [`MatrixStats`] under the architecture's
+//!    [`CostParams`]: an analytic model, no execution.
+//! 3. **Measure** — `coordinator::sweep` times only the top-K
+//!    predicted plans per matrix (`--shortlist K`; `K = 0` measures
+//!    exhaustively and reproduces the paper's tables bit-identically),
+//!    and reports predicted-vs-measured rank agreement so the model
+//!    stays auditable.
+//!
+//! A `Plan` carries a *stable*, content-derived id (`csr.row.par4`),
+//! its derivation chain, the IR state it concretized from, and the
+//! execution triple `exec` (`concretize::Plan`) that `prepare` binds
+//! to a matrix. The legality predicate and resource descriptor are
+//! methods, not copies: [`Plan::legal_for`] delegates to
+//! `concretize::supports`, [`Plan::resources`] to `cost::resources`.
+
+use crate::baselines::Kernel;
+use crate::concretize::{self, Plan as ExecPlan, Schedule};
+use crate::forelem::ir::ChainState;
+use crate::matrix::MatrixStats;
+use crate::search::cost::{self, CostParams, Resources};
+
+/// One automatically instantiated routine + data structure: the unit
+/// the planner enumerates, ranks, shortlists and measures.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Stable content-derived id, e.g. `csr.row.serial` or
+    /// `ell-cm.plane.par4` — independent of enumeration order.
+    pub id: String,
+    /// Human-readable derivation, e.g.
+    /// "orthogonalize(row) → materialize(dep) → split → nstar(padded)".
+    pub derivation: String,
+    /// The IR chain state the plan concretized from.
+    pub state: ChainState,
+    /// The execution triple: (Layout, Traversal, Schedule).
+    pub exec: ExecPlan,
+}
+
+impl Plan {
+    /// Build a plan; the id is derived from the execution triple.
+    pub fn new(state: ChainState, derivation: String, exec: ExecPlan) -> Self {
+        Plan { id: Self::stable_id(&exec), derivation, state, exec }
+    }
+
+    /// The stable id of an execution triple.
+    pub fn stable_id(exec: &ExecPlan) -> String {
+        format!("{}.{}.{}", exec.layout.slug(), exec.traversal.slug(), exec.schedule.slug())
+    }
+
+    /// Short display name: layout + traversal (+ schedule when not
+    /// serial).
+    pub fn name(&self) -> String {
+        if self.exec.schedule.is_serial() {
+            format!("{:?}/{:?}", self.exec.layout, self.exec.traversal)
+        } else {
+            format!(
+                "{:?}/{:?}@{}",
+                self.exec.layout,
+                self.exec.traversal,
+                self.exec.schedule.label()
+            )
+        }
+    }
+
+    /// Legality predicate: can this plan's generated loop nest execute
+    /// `kernel` (dependences respected, schedule legal for the layout)?
+    pub fn legal_for(&self, kernel: Kernel) -> bool {
+        concretize::supports(&self.exec, kernel)
+    }
+
+    /// Resource descriptor on a concrete matrix: bytes touched, gather
+    /// working set per cache level, flop count, parallel grain.
+    pub fn resources(&self, kernel: Kernel, dense_k: usize, stats: &MatrixStats) -> Resources {
+        cost::resources(kernel, dense_k, &self.exec, stats)
+    }
+
+    /// Predicted execution time (seconds) on a matrix, stage 1 of the
+    /// pipeline.
+    pub fn predict(
+        &self,
+        kernel: Kernel,
+        dense_k: usize,
+        stats: &MatrixStats,
+        params: &CostParams,
+    ) -> f64 {
+        cost::predict(kernel, dense_k, &self.exec, stats, params)
+    }
+}
+
+/// The space `enumerate` explores: which schedules to cross with the
+/// serial tree, the architecture parameters that score plans, and the
+/// reference statistics used for the returned ranking.
+#[derive(Clone, Debug)]
+pub struct PlanSpace {
+    /// Schedules crossed with every serial (layout, traversal) pair.
+    pub schedules: Vec<Schedule>,
+    /// Architecture parameters of the cost model.
+    pub params: CostParams,
+    /// Dense-operand column count assumed when ranking SpMM plans.
+    pub dense_k: usize,
+    /// Statistics the returned plan list is ranked against; `None`
+    /// ranks against [`MatrixStats::nominal`]. Per-matrix shortlists
+    /// re-rank with real statistics regardless.
+    pub rank_stats: Option<MatrixStats>,
+}
+
+impl PlanSpace {
+    /// Only `Serial` — the paper's measurement protocol.
+    pub fn serial_only() -> Self {
+        PlanSpace {
+            schedules: vec![Schedule::Serial],
+            params: CostParams::host_small(),
+            dense_k: 100,
+            rank_stats: None,
+        }
+    }
+
+    /// Serial + parallel + tiled + both, for a host with `threads`
+    /// workers and an L2 that holds `x_block` doubles of `x` band.
+    pub fn host(threads: usize, x_block: usize) -> Self {
+        PlanSpace {
+            schedules: vec![
+                Schedule::Serial,
+                Schedule::Parallel { threads },
+                Schedule::Tiled { x_block },
+                Schedule::ParallelTiled { threads, x_block },
+            ],
+            params: CostParams::host_large(threads),
+            dense_k: 100,
+            rank_stats: None,
+        }
+    }
+
+    /// Rank the enumeration against concrete matrix statistics.
+    pub fn with_rank_stats(mut self, stats: MatrixStats) -> Self {
+        self.rank_stats = Some(stats);
+        self
+    }
+
+    /// The statistics enumeration ranks against.
+    pub fn ranking_stats(&self) -> MatrixStats {
+        self.rank_stats.unwrap_or_else(MatrixStats::nominal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::concretize::{Layout, Traversal};
+
+    #[test]
+    fn stable_ids_are_content_derived() {
+        let a = ExecPlan::serial(Layout::Csr, Traversal::RowWise);
+        assert_eq!(Plan::stable_id(&a), "csr.row.serial");
+        let b = a.with_schedule(Schedule::Parallel { threads: 4 });
+        assert_eq!(Plan::stable_id(&b), "csr.row.par4");
+        let c = a.with_schedule(Schedule::ParallelTiled { threads: 2, x_block: 4096 });
+        assert_eq!(Plan::stable_id(&c), "csr.row.par2-tile4096");
+        let d = ExecPlan::serial(Layout::Sell { s: 32 }, Traversal::SlicePlane);
+        assert_eq!(Plan::stable_id(&d), "sell32.slice.serial");
+    }
+
+    #[test]
+    fn plan_name_marks_non_serial_schedules() {
+        let state = ChainState::initial(Kernel::Spmv);
+        let serial = Plan::new(
+            state.clone(),
+            "x".into(),
+            ExecPlan::serial(Layout::Csr, Traversal::RowWise),
+        );
+        assert!(!serial.name().contains('@'));
+        let par = Plan::new(
+            state,
+            "x".into(),
+            ExecPlan::serial(Layout::Csr, Traversal::RowWise)
+                .with_schedule(Schedule::Parallel { threads: 3 }),
+        );
+        assert!(par.name().contains("@par(3)"));
+    }
+
+    #[test]
+    fn legality_delegates_to_concretize() {
+        let state = ChainState::initial(Kernel::Spmv);
+        let par = Plan::new(
+            state,
+            "x".into(),
+            ExecPlan::serial(Layout::Csr, Traversal::RowWise)
+                .with_schedule(Schedule::Parallel { threads: 4 }),
+        );
+        assert!(par.legal_for(Kernel::Spmv));
+        assert!(par.legal_for(Kernel::Spmm));
+        assert!(!par.legal_for(Kernel::Trsv));
+    }
+
+    #[test]
+    fn resources_and_prediction_are_exposed() {
+        let state = ChainState::initial(Kernel::Spmv);
+        let p = Plan::new(
+            state,
+            "x".into(),
+            ExecPlan::serial(Layout::Csr, Traversal::RowWise),
+        );
+        let stats = MatrixStats::nominal();
+        let r = p.resources(Kernel::Spmv, 1, &stats);
+        assert!(r.streamed_bytes > 0.0 && r.flops > 0.0);
+        assert!(r.parallel_grain >= 1);
+        let t = p.predict(Kernel::Spmv, 1, &stats, &CostParams::host_small());
+        assert!(t.is_finite() && t > 0.0);
+    }
+
+    #[test]
+    fn plan_space_defaults() {
+        let s = PlanSpace::serial_only();
+        assert_eq!(s.schedules, vec![Schedule::Serial]);
+        assert!(s.rank_stats.is_none());
+        let h = PlanSpace::host(4, 4096);
+        assert_eq!(h.schedules.len(), 4);
+        assert_eq!(h.params.threads, 4);
+        let ranked = h.with_rank_stats(MatrixStats::synthetic(10, 10, 2.0, 0.0, 2, 5));
+        assert_eq!(ranked.ranking_stats().nrows, 10);
+    }
+}

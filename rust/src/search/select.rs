@@ -8,9 +8,58 @@
 //! paper reports the *worst* such average (Table 5b) against the *best*
 //! library routine's average (Table 5a).
 
-use crate::search::coverage::Measurements;
+use crate::search::coverage::{self, Measurements};
+use crate::search::plan::Plan;
 use crate::util::rng::Rng;
 use crate::util::stats::pct_reduction;
+
+/// Per-matrix winner of the predict→measure pipeline: the best
+/// (layout, traversal, schedule) triple on one matrix.
+#[derive(Clone, Debug)]
+pub struct BestTriple {
+    pub matrix: String,
+    /// Row index into the measurements / `plans` slice.
+    pub plan_index: usize,
+    /// Stable plan id (`csr.row.par4`, …).
+    pub plan_id: String,
+    pub secs: f64,
+}
+
+/// The per-matrix best triples of a measured table whose first
+/// `plans.len()` rows are the generated plans (extra rows — e.g. the
+/// XLA backend — are ignored). Ties break to the earliest plan.
+pub fn best_triples(meas: &Measurements, plans: &[Plan]) -> Vec<BestTriple> {
+    let rows: Vec<usize> = (0..plans.len().min(meas.routines.len())).collect();
+    let winners = meas.argmin_per_matrix(Some(&rows));
+    winners
+        .into_iter()
+        .enumerate()
+        .map(|(mi, r)| BestTriple {
+            matrix: meas.matrices[mi].clone(),
+            plan_index: r,
+            plan_id: plans[r].id.clone(),
+            secs: meas.times[r][mi],
+        })
+        .collect()
+}
+
+/// Coverage curves with and without the schedule axis: `(serial_only,
+/// all_schedules)` sampled at `t_values`, both against the all-plan
+/// optimum — quantifying what the third plan axis buys (the ROADMAP's
+/// schedule-aware-selection item).
+pub fn schedule_axis_curves(
+    meas: &Measurements,
+    plans: &[Plan],
+    t_values: &[f64],
+) -> (Vec<(f64, f64)>, Vec<(f64, f64)>) {
+    let all: Vec<usize> = (0..plans.len().min(meas.routines.len())).collect();
+    let serial: Vec<usize> =
+        all.iter().copied().filter(|&r| plans[r].exec.schedule.is_serial()).collect();
+    let best = meas.best_per_matrix(Some(&all));
+    let serial_curve = coverage::coverage_curve(meas, &best, Some(&serial), t_values);
+    let all_curve = coverage::coverage_curve(meas, &best, Some(&all), t_values);
+    (serial_curve, all_curve)
+}
 
 /// Average % reduction of the per-matrix optimum vs routine `r`
 /// (how far `r` is from optimal on average; smaller is better).
@@ -161,5 +210,97 @@ mod tests {
         let b = select_allround(&m, &best, &[0, 1, 2], 2, 2.0, &mut Rng::new(7));
         assert_eq!(a.sample, b.sample);
         assert_eq!(a.candidates, b.candidates);
+    }
+
+    use crate::baselines::Kernel;
+    use crate::concretize::{Layout, Plan as ExecPlan, Schedule, Traversal};
+    use crate::forelem::ir::ChainState;
+
+    /// Three plans (serial CSR, parallel CSR, serial padded ELL) over
+    /// a table with a planted per-matrix winner.
+    fn planted() -> (Measurements, Vec<Plan>) {
+        let state = ChainState::initial(Kernel::Spmv);
+        let mk = |e: ExecPlan| Plan::new(state.clone(), String::new(), e);
+        let csr = ExecPlan::serial(Layout::Csr, Traversal::RowWise);
+        let plans = vec![
+            mk(csr),
+            mk(csr.with_schedule(Schedule::Parallel { threads: 4 })),
+            mk(ExecPlan::serial(Layout::Ell(crate::storage::EllOrder::RowMajor), Traversal::RowWisePadded)),
+        ];
+        let mut m = Measurements::new(
+            plans.iter().map(|p| p.id.clone()).collect(),
+            vec!["small".into(), "big".into(), "uniform".into()],
+        );
+        // Planted winners: serial CSR on "small", parallel CSR on
+        // "big", padded ELL on "uniform".
+        let data = [[1.0, 8.0, 3.0], [5.0, 2.0, 4.0], [2.0, 9.0, 1.0]];
+        for (r, row) in data.iter().enumerate() {
+            for (c, &t) in row.iter().enumerate() {
+                m.set(r, c, t);
+            }
+        }
+        (m, plans)
+    }
+
+    #[test]
+    fn best_triples_find_planted_winners() {
+        let (m, plans) = planted();
+        let best = best_triples(&m, &plans);
+        assert_eq!(best.len(), 3);
+        assert_eq!(best[0].plan_id, "csr.row.serial");
+        assert_eq!(best[1].plan_id, "csr.row.par4");
+        assert_eq!(best[2].plan_id, "ell-rm.rowpad.serial");
+        assert_eq!(best[1].plan_index, 1);
+        assert!((best[1].secs - 2.0).abs() < 1e-12);
+        assert_eq!(best[0].matrix, "small");
+    }
+
+    #[test]
+    fn best_triples_ignore_extra_rows() {
+        // An extra (XLA) row beyond the plan rows must never win.
+        let (mut m, plans) = planted();
+        let mut extra = Measurements::new(vec!["xla".into()], m.matrices.clone());
+        for c in 0..3 {
+            extra.set(0, c, 0.01);
+        }
+        m.extend(&extra);
+        let best = best_triples(&m, &plans);
+        assert!(best.iter().all(|b| b.plan_index < plans.len()));
+        assert_eq!(best[0].plan_id, "csr.row.serial");
+    }
+
+    #[test]
+    fn schedule_axis_curves_show_the_axis_payoff() {
+        let (m, plans) = planted();
+        let ts = [0.0, 50.0, 200.0, 400.0];
+        let (serial_curve, all_curve) = schedule_axis_curves(&m, &plans, &ts);
+        assert_eq!(serial_curve.len(), ts.len());
+        assert_eq!(all_curve.len(), ts.len());
+        // The full space always covers at least as much as serial-only.
+        for (s, a) in serial_curve.iter().zip(&all_curve) {
+            assert!(a.1 >= s.1 - 1e-12, "axis lost coverage at t={}", s.0);
+        }
+        // At t = 0 every plan is optimal on exactly one matrix, so the
+        // max single-plan weight is 1/3 for both subsets.
+        assert!((serial_curve[0].1 - 1.0 / 3.0).abs() < 1e-12);
+        assert!((all_curve[0].1 - 1.0 / 3.0).abs() < 1e-12);
+        // At t = 200% serial CSR covers "small" and "uniform" but still
+        // misses "big" (8.0 vs best 2.0 needs t = 300%).
+        assert!((serial_curve[2].1 - 2.0 / 3.0).abs() < 1e-12);
+        // At t = 400% serial CSR covers everything.
+        let (serial_hi, all_hi) = (serial_curve[3].1, all_curve[3].1);
+        assert!((serial_hi - 1.0).abs() < 1e-12);
+        assert!((all_hi - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_triples_subset_edge_cases() {
+        let (m, plans) = planted();
+        // No plans → no triples.
+        assert!(best_triples(&m, &[]).is_empty());
+        // One plan → it wins every matrix.
+        let one = &plans[..1];
+        let best = best_triples(&m, one);
+        assert!(best.iter().all(|b| b.plan_index == 0));
     }
 }

@@ -1,73 +1,24 @@
 //! Transformation-tree enumeration (paper §6.3, Fig 10): starting from
 //! the minimal forelem representation of a kernel, walk every legal
-//! sequence of transformations, concretize every materialized node, and
-//! collect the resulting *variants* (executables) and *distinct data
-//! structures* — reproducing the paper's "130 implementations / 25 data
-//! structures" exploration programmatically.
+//! sequence of transformations, concretize every materialized node,
+//! cross the concretizable chains with the [`PlanSpace`]'s schedules,
+//! and return the surviving [`Plan`]s *cost-ranked* — stage 1 of the
+//! predict→measure planner pipeline (see `search::plan`).
+//!
+//! One entry point serves every caller: `enumerate(kernel, &space)`
+//! with `PlanSpace::serial_only()` reproduces the paper's single-core
+//! Layout × Traversal tree exactly (same plan set; order is by
+//! predicted cost); `PlanSpace::host(..)` adds the schedule axis.
 
 use std::collections::{BTreeMap, HashSet};
 
 use crate::baselines::Kernel;
-use crate::concretize::{self, Plan, Schedule};
-use crate::forelem::ir::{ChainState, NStarMat, Orth};
+use crate::concretize::{self, Plan as ExecPlan};
+use crate::search::cost;
+use crate::search::plan::{Plan, PlanSpace};
 use crate::transforms::{BlockStep, Step};
 
-/// One automatically instantiated routine + data structure.
-#[derive(Clone, Debug)]
-pub struct Variant {
-    /// Stable id within the enumeration, e.g. "v017".
-    pub id: String,
-    /// Human-readable derivation, e.g.
-    /// "orthogonalize(row) → materialize(dep) → split → nstar(padded)".
-    pub derivation: String,
-    pub state: ChainState,
-    pub plan: Plan,
-}
-
-impl Variant {
-    /// Short display name: layout + traversal (+ schedule when not
-    /// serial).
-    pub fn name(&self) -> String {
-        if self.plan.schedule.is_serial() {
-            format!("{:?}/{:?}", self.plan.layout, self.plan.traversal)
-        } else {
-            format!(
-                "{:?}/{:?}@{}",
-                self.plan.layout,
-                self.plan.traversal,
-                self.plan.schedule.label()
-            )
-        }
-    }
-}
-
-/// The pool of schedules `enumerate_scheduled` crosses with the serial
-/// plan space. `serial_only()` reproduces the paper's single-core
-/// tables exactly; `host(..)` adds the parallel / cache-blocked axis.
-#[derive(Clone, Debug)]
-pub struct SchedulePool {
-    pub schedules: Vec<Schedule>,
-}
-
-impl SchedulePool {
-    /// Only `Serial` — the paper's measurement protocol.
-    pub fn serial_only() -> Self {
-        SchedulePool { schedules: vec![Schedule::Serial] }
-    }
-
-    /// Serial + parallel + tiled + both, for a host with `threads`
-    /// workers and an L2 that holds `x_block` doubles of `x` band.
-    pub fn host(threads: usize, x_block: usize) -> Self {
-        SchedulePool {
-            schedules: vec![
-                Schedule::Serial,
-                Schedule::Parallel { threads },
-                Schedule::Tiled { x_block },
-                Schedule::ParallelTiled { threads, x_block },
-            ],
-        }
-    }
-}
+use crate::forelem::ir::{ChainState, NStarMat, Orth};
 
 /// The step universe the tree explores. `Localize`/`Hisr` are excluded:
 /// they never change the concretized layout, so including them only
@@ -97,8 +48,9 @@ fn universe() -> Vec<Step> {
 /// Result of the enumeration.
 pub struct Tree {
     pub kernel: Kernel,
-    /// All distinct executables (variant = distinct concretization plan).
-    pub variants: Vec<Variant>,
+    /// All distinct executables, ranked by predicted cost on the
+    /// space's ranking statistics (ascending; ties by stable id).
+    pub plans: Vec<Plan>,
     /// Number of explored IR nodes (including non-concretizable "tmp"
     /// stages, paper Fig 10's `tmp*` nodes).
     pub nodes_explored: usize,
@@ -109,19 +61,21 @@ pub struct Tree {
     pub distinct_layouts: usize,
 }
 
-/// Enumerate the full tree for a kernel.
-pub fn enumerate(kernel: Kernel) -> Tree {
+/// Enumerate the full plan space for a kernel: DFS over the chain
+/// states, concretize, cross with the space's schedules, prune illegal
+/// (layout, traversal, schedule, kernel) combinations, rank by the
+/// analytic cost model.
+pub fn enumerate(kernel: Kernel, space: &PlanSpace) -> Tree {
     let steps = universe();
     let mut seen_states: HashSet<String> = HashSet::new();
-    let mut seen_variants: HashSet<Plan> = HashSet::new();
-    let mut variants: Vec<Variant> = Vec::new();
+    let mut seen_execs: HashSet<ExecPlan> = HashSet::new();
+    let mut serial: Vec<(ChainState, String, ExecPlan)> = Vec::new();
     let mut nodes = 0usize;
     let mut chains = 0usize;
 
     // Iterative DFS over chain states.
     let mut stack: Vec<ChainState> = vec![ChainState::initial(kernel)];
     while let Some(state) = stack.pop() {
-        let state_key = format!("{} | {:?}", state.layout_key(), state.history);
         // Dedup purely on the *semantic* state (layout_key + flags that
         // affect future legality), not history, to bound the walk.
         let sem_key = format!(
@@ -133,24 +87,17 @@ pub fn enumerate(kernel: Kernel) -> Tree {
         if !seen_states.insert(sem_key) {
             continue;
         }
-        let _ = state_key;
         nodes += 1;
 
-        // Concretize if possible: each plan is an executable variant.
-        if let Ok(plans) = concretize::plans(&state) {
-            for plan in plans {
-                if !concretize::supports(&plan, kernel) {
+        // Concretize if possible: each serial plan is an executable.
+        if let Ok(execs) = concretize::plans(&state) {
+            for exec in execs {
+                if !concretize::supports(&exec, kernel) {
                     continue;
                 }
                 chains += 1;
-                if seen_variants.insert(plan) {
-                    let id = format!("v{:03}", variants.len() + 1);
-                    variants.push(Variant {
-                        id,
-                        derivation: state.history.join(" \u{2192} "),
-                        state: state.clone(),
-                        plan,
-                    });
+                if seen_execs.insert(exec) {
+                    serial.push((state.clone(), state.history.join(" \u{2192} "), exec));
                 }
             }
         }
@@ -164,70 +111,50 @@ pub fn enumerate(kernel: Kernel) -> Tree {
         }
     }
 
-    // Deterministic order: by derivation string.
-    variants.sort_by(|a, b| a.derivation.cmp(&b.derivation));
-    for (i, v) in variants.iter_mut().enumerate() {
-        v.id = format!("v{:03}", i + 1);
-    }
-    let distinct_layouts = variants
-        .iter()
-        .map(|v| format!("{:?}", v.plan.layout))
-        .collect::<HashSet<_>>()
-        .len();
-    Tree { kernel, variants, nodes_explored: nodes, chains_concretized: chains, distinct_layouts }
-}
-
-/// Enumerate the tree, then cross every serial variant with the pool's
-/// schedules, pruning illegal (layout, schedule, kernel) triples via
-/// `concretize::supports` (TrSv stays `Serial`; only row-partitionable
-/// layouts parallelize; only CSR SpMV tiles). Ids are reassigned so the
-/// result is a self-consistent `Tree` whose variant space is
-/// Layout × Traversal × Schedule.
-pub fn enumerate_scheduled(kernel: Kernel, pool: &SchedulePool) -> Tree {
-    let base = enumerate(kernel);
-    let mut variants: Vec<Variant> = Vec::new();
-    for v in &base.variants {
-        for &schedule in &pool.schedules {
-            let plan = v.plan.with_schedule(schedule);
-            if !concretize::supports(&plan, kernel) {
+    // Cross the serial tree with the space's schedules, pruning illegal
+    // triples (TrSv stays Serial; only row-partitionable layouts
+    // parallelize; only CSR SpMV tiles).
+    let mut plans: Vec<Plan> = Vec::new();
+    for (state, derivation, exec) in &serial {
+        for &schedule in &space.schedules {
+            let scheduled = exec.with_schedule(schedule);
+            if !concretize::supports(&scheduled, kernel) {
                 continue;
             }
             let derivation = if schedule.is_serial() {
-                v.derivation.clone()
+                derivation.clone()
             } else {
-                format!("{} \u{2192} schedule({})", v.derivation, schedule.label())
+                format!("{derivation} \u{2192} schedule({})", schedule.label())
             };
-            variants.push(Variant {
-                id: String::new(),
-                derivation,
-                state: v.state.clone(),
-                plan,
-            });
+            plans.push(Plan::new(state.clone(), derivation, scheduled));
         }
     }
-    variants.sort_by(|a, b| a.derivation.cmp(&b.derivation));
-    for (i, v) in variants.iter_mut().enumerate() {
-        v.id = format!("v{:03}", i + 1);
-    }
-    let distinct_layouts = variants
+
+    // Cost-rank: predicted seconds on the space's reference statistics,
+    // stable ids as the deterministic tiebreak.
+    let stats = space.ranking_stats();
+    let mut scored: Vec<(f64, Plan)> = plans
+        .into_iter()
+        .map(|p| (cost::predict(kernel, space.dense_k, &p.exec, &stats, &space.params), p))
+        .collect();
+    scored.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.id.cmp(&b.1.id))
+    });
+    let plans: Vec<Plan> = scored.into_iter().map(|(_, p)| p).collect();
+
+    let distinct_layouts = plans
         .iter()
-        .map(|v| format!("{:?}", v.plan.layout))
+        .map(|p| format!("{:?}", p.exec.layout))
         .collect::<HashSet<_>>()
         .len();
-    Tree {
-        kernel,
-        variants,
-        nodes_explored: base.nodes_explored,
-        chains_concretized: base.chains_concretized,
-        distinct_layouts,
-    }
+    Tree { kernel, plans, nodes_explored: nodes, chains_concretized: chains, distinct_layouts }
 }
 
-/// Summarize the tree as (layout → variant count), for the Fig 10 report.
+/// Summarize the tree as (layout → plan count), for the Fig 10 report.
 pub fn layout_histogram(tree: &Tree) -> BTreeMap<String, usize> {
     let mut h = BTreeMap::new();
-    for v in &tree.variants {
-        *h.entry(format!("{:?}", v.plan.layout)).or_insert(0) += 1;
+    for p in &tree.plans {
+        *h.entry(format!("{:?}", p.exec.layout)).or_insert(0) += 1;
     }
     h
 }
@@ -235,22 +162,23 @@ pub fn layout_histogram(tree: &Tree) -> BTreeMap<String, usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::concretize::Layout;
 
     #[test]
     fn spmv_tree_is_rich() {
-        let t = enumerate(Kernel::Spmv);
+        let t = enumerate(Kernel::Spmv, &PlanSpace::serial_only());
         // The paper reports 130 executables / 25 structures for SpMM×k;
         // our deduplicated tree must be the same order of magnitude.
-        assert!(t.variants.len() >= 15, "only {} variants", t.variants.len());
+        assert!(t.plans.len() >= 15, "only {} plans", t.plans.len());
         assert!(t.distinct_layouts >= 12, "only {} layouts", t.distinct_layouts);
-        assert!(t.nodes_explored > t.variants.len());
+        assert!(t.nodes_explored > t.plans.len());
     }
 
     #[test]
     fn spmv_tree_contains_named_formats() {
-        let t = enumerate(Kernel::Spmv);
+        let t = enumerate(Kernel::Spmv, &PlanSpace::serial_only());
         let names: HashSet<String> =
-            t.variants.iter().map(|v| v.plan.layout.literature_name().to_string()).collect();
+            t.plans.iter().map(|p| p.exec.layout.literature_name().to_string()).collect();
         for want in [
             "Compressed Row Storage (CSR)",
             "Compressed Column Storage (CCS)",
@@ -267,75 +195,99 @@ mod tests {
 
     #[test]
     fn trsv_tree_is_restricted() {
-        let spmv = enumerate(Kernel::Spmv);
-        let trsv = enumerate(Kernel::Trsv);
-        assert!(trsv.variants.len() < spmv.variants.len());
+        let spmv = enumerate(Kernel::Spmv, &PlanSpace::serial_only());
+        let trsv = enumerate(Kernel::Trsv, &PlanSpace::serial_only());
+        assert!(trsv.plans.len() < spmv.plans.len());
         // no JDS/interchange variants for TrSv
-        assert!(trsv.variants.iter().all(|v| !v.state.interchanged && !v.state.sorted));
+        assert!(trsv.plans.iter().all(|p| !p.state.interchanged && !p.state.sorted));
     }
 
     #[test]
-    fn ids_unique_and_ordered() {
-        let t = enumerate(Kernel::Spmm);
-        let ids: HashSet<&String> = t.variants.iter().map(|v| &v.id).collect();
-        assert_eq!(ids.len(), t.variants.len());
-        assert_eq!(t.variants[0].id, "v001");
+    fn ids_unique_and_stable() {
+        let t = enumerate(Kernel::Spmm, &PlanSpace::serial_only());
+        let ids: HashSet<&String> = t.plans.iter().map(|p| &p.id).collect();
+        assert_eq!(ids.len(), t.plans.len());
+        // Content-derived: the CSR row-wise serial plan keeps its id
+        // no matter where the ranking puts it.
+        assert!(t.plans.iter().any(|p| p.id == "csr.row.serial"));
     }
 
     #[test]
-    fn scheduled_tree_extends_serial_tree() {
-        let serial = enumerate(Kernel::Spmv);
-        let pool = SchedulePool::host(4, 4096);
-        let t = enumerate_scheduled(Kernel::Spmv, &pool);
-        // Every serial variant survives, plus the scheduled ones.
-        let serial_in_t =
-            t.variants.iter().filter(|v| v.plan.schedule.is_serial()).count();
-        assert_eq!(serial_in_t, serial.variants.len());
-        assert!(t.variants.len() > serial.variants.len());
+    fn scheduled_space_extends_serial_tree() {
+        let serial = enumerate(Kernel::Spmv, &PlanSpace::serial_only());
+        let t = enumerate(Kernel::Spmv, &PlanSpace::host(4, 4096));
+        // Every serial plan survives, plus the scheduled ones.
+        let serial_in_t = t.plans.iter().filter(|p| p.exec.schedule.is_serial()).count();
+        assert_eq!(serial_in_t, serial.plans.len());
+        assert!(t.plans.len() > serial.plans.len());
         // CSR gets all four schedules (RowWise CSR SpMV tiles).
-        let csr: Vec<_> = t
-            .variants
-            .iter()
-            .filter(|v| v.plan.layout == concretize::Layout::Csr)
-            .collect();
+        let csr: Vec<_> =
+            t.plans.iter().filter(|p| p.exec.layout == Layout::Csr).collect();
         assert!(csr.len() >= 4, "CSR schedules missing: {:?}", csr.len());
         // Scheduled derivations record the schedule step.
-        for v in &t.variants {
-            if !v.plan.schedule.is_serial() {
-                assert!(v.derivation.contains("schedule("), "{}", v.derivation);
+        for p in &t.plans {
+            if !p.exec.schedule.is_serial() {
+                assert!(p.derivation.contains("schedule("), "{}", p.derivation);
             }
         }
         // Ids stay unique.
-        let ids: HashSet<&String> = t.variants.iter().map(|v| &v.id).collect();
-        assert_eq!(ids.len(), t.variants.len());
+        let ids: HashSet<&String> = t.plans.iter().map(|p| &p.id).collect();
+        assert_eq!(ids.len(), t.plans.len());
     }
 
     #[test]
-    fn scheduled_tree_trsv_stays_serial() {
-        let pool = SchedulePool::host(8, 1024);
-        let t = enumerate_scheduled(Kernel::Trsv, &pool);
-        assert!(!t.variants.is_empty());
-        assert!(t.variants.iter().all(|v| v.plan.schedule.is_serial()));
-        let serial = enumerate(Kernel::Trsv);
-        assert_eq!(t.variants.len(), serial.variants.len());
+    fn scheduled_space_trsv_stays_serial() {
+        let t = enumerate(Kernel::Trsv, &PlanSpace::host(8, 1024));
+        assert!(!t.plans.is_empty());
+        assert!(t.plans.iter().all(|p| p.exec.schedule.is_serial()));
+        let serial = enumerate(Kernel::Trsv, &PlanSpace::serial_only());
+        assert_eq!(t.plans.len(), serial.plans.len());
     }
 
     #[test]
-    fn serial_only_pool_reproduces_paper_tree() {
-        let a = enumerate(Kernel::Spmv);
-        let b = enumerate_scheduled(Kernel::Spmv, &SchedulePool::serial_only());
-        assert_eq!(a.variants.len(), b.variants.len());
-        let pa: Vec<_> = a.variants.iter().map(|v| v.plan).collect();
-        let pb: Vec<_> = b.variants.iter().map(|v| v.plan).collect();
+    fn serial_only_space_reproduces_paper_tree() {
+        let a = enumerate(Kernel::Spmv, &PlanSpace::serial_only());
+        let b = enumerate(Kernel::Spmv, &PlanSpace::host(4, 4096));
+        // The serial subset of the scheduled space is exactly the
+        // serial-only tree (same execution triples).
+        let mut pa: Vec<ExecPlan> = a.plans.iter().map(|p| p.exec).collect();
+        let mut pb: Vec<ExecPlan> =
+            b.plans.iter().filter(|p| p.exec.schedule.is_serial()).map(|p| p.exec).collect();
+        let key = |e: &ExecPlan| format!("{e:?}");
+        pa.sort_by_key(key);
+        pb.sort_by_key(key);
         assert_eq!(pa, pb);
     }
 
     #[test]
+    fn plans_are_cost_ranked() {
+        let space = PlanSpace::serial_only();
+        let t = enumerate(Kernel::Spmv, &space);
+        let stats = space.ranking_stats();
+        let scores: Vec<f64> = t
+            .plans
+            .iter()
+            .map(|p| cost::predict(Kernel::Spmv, space.dense_k, &p.exec, &stats, &space.params))
+            .collect();
+        for w in scores.windows(2) {
+            assert!(w[0] <= w[1], "plans not cost-ranked: {w:?}");
+        }
+        // Ranking against concrete statistics also holds.
+        let banded = crate::matrix::MatrixStats::synthetic(2000, 2000, 7.0, 1.0, 9, 4);
+        let ranked = PlanSpace::serial_only().with_rank_stats(banded);
+        let t2 = enumerate(Kernel::Spmv, &ranked);
+        assert_eq!(t2.plans.len(), t.plans.len());
+    }
+
+    #[test]
     fn enumeration_is_deterministic() {
-        let a = enumerate(Kernel::Spmv);
-        let b = enumerate(Kernel::Spmv);
-        let da: Vec<&String> = a.variants.iter().map(|v| &v.derivation).collect();
-        let db: Vec<&String> = b.variants.iter().map(|v| &v.derivation).collect();
+        let a = enumerate(Kernel::Spmv, &PlanSpace::host(3, 512));
+        let b = enumerate(Kernel::Spmv, &PlanSpace::host(3, 512));
+        let ia: Vec<&String> = a.plans.iter().map(|p| &p.id).collect();
+        let ib: Vec<&String> = b.plans.iter().map(|p| &p.id).collect();
+        assert_eq!(ia, ib);
+        let da: Vec<&String> = a.plans.iter().map(|p| &p.derivation).collect();
+        let db: Vec<&String> = b.plans.iter().map(|p| &p.derivation).collect();
         assert_eq!(da, db);
     }
 }

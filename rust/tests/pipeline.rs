@@ -7,6 +7,7 @@ use forelem::baselines::Kernel;
 use forelem::concretize;
 use forelem::matrix::gen;
 use forelem::matrix::TriMat;
+use forelem::search::plan::PlanSpace;
 use forelem::search::tree;
 use forelem::util::prop::assert_close;
 
@@ -22,13 +23,13 @@ fn matrices() -> Vec<(&'static str, TriMat)> {
 
 #[test]
 fn every_spmv_variant_matches_oracle_on_every_class() {
-    let t = tree::enumerate(Kernel::Spmv);
-    assert!(t.variants.len() >= 15);
+    let t = tree::enumerate(Kernel::Spmv, &PlanSpace::serial_only());
+    assert!(t.plans.len() >= 15);
     for (name, m) in matrices() {
         let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.7).cos() + 0.2).collect();
         let want = m.spmv_ref(&x);
-        for v in &t.variants {
-            let p = concretize::prepare(v.plan, &m);
+        for v in &t.plans {
+            let p = concretize::prepare(v.exec, &m);
             let mut y = vec![0.0; m.nrows];
             p.spmv(&x, &mut y);
             assert_close(&y, &want, 1e-10)
@@ -39,13 +40,13 @@ fn every_spmv_variant_matches_oracle_on_every_class() {
 
 #[test]
 fn every_spmm_variant_matches_oracle() {
-    let t = tree::enumerate(Kernel::Spmm);
+    let t = tree::enumerate(Kernel::Spmm, &PlanSpace::serial_only());
     let k = 7;
     for (name, m) in matrices() {
         let b: Vec<f64> = (0..m.ncols * k).map(|i| ((i * 13 % 29) as f64 - 14.0) * 0.1).collect();
         let want = m.spmm_ref(&b, k);
-        for v in &t.variants {
-            let p = concretize::prepare(v.plan, &m);
+        for v in &t.plans {
+            let p = concretize::prepare(v.exec, &m);
             let mut c = vec![0.0; m.nrows * k];
             p.spmm(&b, k, &mut c);
             assert_close(&c, &want, 1e-10)
@@ -56,7 +57,7 @@ fn every_spmm_variant_matches_oracle() {
 
 #[test]
 fn every_trsv_variant_matches_oracle() {
-    let t = tree::enumerate(Kernel::Trsv);
+    let t = tree::enumerate(Kernel::Trsv, &PlanSpace::serial_only());
     for (name, m) in matrices() {
         if m.nrows != m.ncols {
             continue;
@@ -64,8 +65,8 @@ fn every_trsv_variant_matches_oracle() {
         let l = m.strictly_lower();
         let b: Vec<f64> = (0..l.nrows).map(|i| 1.0 - (i % 9) as f64 * 0.2).collect();
         let want = l.trsv_unit_lower_ref(&b);
-        for v in &t.variants {
-            let p = concretize::prepare(v.plan, &l);
+        for v in &t.plans {
+            let p = concretize::prepare(v.exec, &l);
             let mut x = vec![0.0; l.nrows];
             p.trsv(&b, &mut x);
             assert_close(&x, &want, 1e-8)
@@ -77,9 +78,9 @@ fn every_trsv_variant_matches_oracle() {
 #[test]
 fn codegen_exists_for_every_variant() {
     for kernel in [Kernel::Spmv, Kernel::Spmm, Kernel::Trsv] {
-        let t = tree::enumerate(kernel);
-        for v in &t.variants {
-            let txt = concretize::codegen::emit(kernel, &v.plan);
+        let t = tree::enumerate(kernel, &PlanSpace::serial_only());
+        for v in &t.plans {
+            let txt = concretize::codegen::emit(kernel, &v.exec);
             assert!(txt.starts_with("/* generated:"), "{}: {txt}", v.id);
             assert!(txt.len() > 50, "{}: suspiciously short codegen", v.id);
         }
@@ -110,14 +111,14 @@ fn derivations_are_replayable() {
             other => panic!("unknown history entry '{other}'"),
         })
     };
-    let t = tree::enumerate(Kernel::Spmv);
+    let t = tree::enumerate(Kernel::Spmv, &PlanSpace::serial_only());
     let mut replayed = 0;
-    for v in &t.variants {
+    for v in &t.plans {
         let steps: Option<Vec<Step>> = v.state.history.iter().map(|h| parse(h)).collect();
         let Some(steps) = steps else { continue };
         let s = apply_chain(Kernel::Spmv, &steps).unwrap();
         let plans = concretize::plans(&s).unwrap();
-        assert!(plans.contains(&v.plan), "{}: replay diverged", v.id);
+        assert!(plans.contains(&v.exec), "{}: replay diverged", v.id);
         replayed += 1;
     }
     assert!(replayed >= 10, "too few replayable variants: {replayed}");

@@ -7,7 +7,8 @@ use forelem::baselines::Kernel;
 use forelem::concretize;
 use forelem::matrix::TriMat;
 use forelem::search::coverage::{self, Measurements};
-use forelem::search::tree::{self, SchedulePool};
+use forelem::search::plan::PlanSpace;
+use forelem::search::tree;
 use forelem::util::prop::{assert_close, forall, Gen};
 
 /// A random reservoir of tuples with no duplicate coordinates.
@@ -30,14 +31,14 @@ fn random_trimat(g: &mut Gen) -> TriMat {
 
 #[test]
 fn prop_every_variant_preserves_spmv_semantics() {
-    let t = tree::enumerate(Kernel::Spmv);
+    let t = tree::enumerate(Kernel::Spmv, &PlanSpace::serial_only());
     forall("variant ≡ oracle", 40, |g| {
         let m = random_trimat(g);
         let x = g.vec_f64(m.ncols);
         let want = m.spmv_ref(&x);
         // pick a random variant each case (all covered over the run)
-        let v = g.choose(&t.variants);
-        let p = concretize::prepare(v.plan, &m);
+        let v = g.choose(&t.plans);
+        let p = concretize::prepare(v.exec, &m);
         let mut y = vec![0.0; m.nrows];
         p.spmv(&x, &mut y);
         assert_close(&y, &want, 1e-9).map_err(|e| format!("{}: {e}", v.id))
@@ -49,12 +50,12 @@ fn prop_storage_preserves_tuple_multiset() {
     // Rebuilding the dense expansion from every concretized storage must
     // equal the reservoir's dense expansion — i.e. no tuple is lost,
     // duplicated or reassigned by any generated layout.
-    let t = tree::enumerate(Kernel::Spmv);
+    let t = tree::enumerate(Kernel::Spmv, &PlanSpace::serial_only());
     forall("storage lossless", 30, |g| {
         let m = random_trimat(g);
         let dense = m.to_dense();
-        let v = g.choose(&t.variants);
-        let p = concretize::prepare(v.plan, &m);
+        let v = g.choose(&t.plans);
+        let p = concretize::prepare(v.exec, &m);
         // probe: SpMV against unit vectors reconstructs columns
         for j in 0..m.ncols.min(6) {
             let mut e = vec![0.0; m.ncols];
@@ -74,18 +75,18 @@ fn prop_storage_preserves_tuple_multiset() {
 
 #[test]
 fn prop_spmv_insensitive_to_reservoir_order() {
-    let t = tree::enumerate(Kernel::Spmv);
+    let t = tree::enumerate(Kernel::Spmv, &PlanSpace::serial_only());
     forall("order-insensitive", 25, |g| {
         let mut m = random_trimat(g);
         let x = g.vec_f64(m.ncols);
-        let v = g.choose(&t.variants);
-        let p1 = concretize::prepare(v.plan, &m);
+        let v = g.choose(&t.plans);
+        let p1 = concretize::prepare(v.exec, &m);
         let mut y1 = vec![0.0; m.nrows];
         p1.spmv(&x, &mut y1);
         // shuffle the reservoir (iteration order is explicitly undefined)
         let mut rng = forelem::util::rng::Rng::new(g.usize_in(0, 1 << 30) as u64);
         m.shuffle(&mut rng);
-        let p2 = concretize::prepare(v.plan, &m);
+        let p2 = concretize::prepare(v.exec, &m);
         let mut y2 = vec![0.0; m.nrows];
         p2.spmv(&x, &mut y2);
         assert_close(&y1, &y2, 1e-9).map_err(|e| format!("{}: {e}", v.id))
@@ -132,14 +133,13 @@ fn prop_every_schedule_triple_matches_spmv_oracle() {
     // Every (layout, traversal, schedule) triple in the host pool must
     // match spmv_ref on the adversarial shapes. x_block is small so the
     // band path actually splits these column counts.
-    let pool = SchedulePool::host(4, 8);
-    let t = tree::enumerate_scheduled(Kernel::Spmv, &pool);
-    assert!(t.variants.iter().any(|v| !v.plan.schedule.is_serial()));
+    let t = tree::enumerate(Kernel::Spmv, &PlanSpace::host(4, 8));
+    assert!(t.plans.iter().any(|v| !v.exec.schedule.is_serial()));
     for (name, m) in adversarial_shapes() {
         let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.31).sin() + 0.6).collect();
         let want = m.spmv_ref(&x);
-        for v in &t.variants {
-            let p = concretize::prepare(v.plan, &m);
+        for v in &t.plans {
+            let p = concretize::prepare(v.exec, &m);
             let mut y = vec![0.0; m.nrows];
             p.spmv(&x, &mut y);
             assert_close(&y, &want, 1e-9)
@@ -150,15 +150,14 @@ fn prop_every_schedule_triple_matches_spmv_oracle() {
 
 #[test]
 fn prop_every_schedule_triple_matches_spmm_oracle() {
-    let pool = SchedulePool::host(4, 8);
-    let t = tree::enumerate_scheduled(Kernel::Spmm, &pool);
-    assert!(t.variants.iter().any(|v| !v.plan.schedule.is_serial()));
+    let t = tree::enumerate(Kernel::Spmm, &PlanSpace::host(4, 8));
+    assert!(t.plans.iter().any(|v| !v.exec.schedule.is_serial()));
     let k = 5;
     for (name, m) in adversarial_shapes() {
         let b: Vec<f64> = (0..m.ncols * k).map(|i| ((i * 7 % 13) as f64 - 6.0) * 0.2).collect();
         let want = m.spmm_ref(&b, k);
-        for v in &t.variants {
-            let p = concretize::prepare(v.plan, &m);
+        for v in &t.plans {
+            let p = concretize::prepare(v.exec, &m);
             let mut c = vec![0.0; m.nrows * k];
             p.spmm(&b, k, &mut c);
             assert_close(&c, &want, 1e-9)
@@ -171,14 +170,13 @@ fn prop_every_schedule_triple_matches_spmm_oracle() {
 fn prop_random_schedules_match_oracle() {
     // Random matrices × random schedule variants (threads beyond the
     // machine, tiny x_blocks) still agree with the oracle.
-    let pool = SchedulePool::host(3, 16);
-    let t = tree::enumerate_scheduled(Kernel::Spmv, &pool);
+    let t = tree::enumerate(Kernel::Spmv, &PlanSpace::host(3, 16));
     forall("scheduled variant ≡ oracle", 40, |g| {
         let m = random_trimat(g);
         let x = g.vec_f64(m.ncols);
         let want = m.spmv_ref(&x);
-        let v = g.choose(&t.variants);
-        let p = concretize::prepare(v.plan, &m);
+        let v = g.choose(&t.plans);
+        let p = concretize::prepare(v.exec, &m);
         let mut y = vec![0.0; m.nrows];
         p.spmv(&x, &mut y);
         assert_close(&y, &want, 1e-9).map_err(|e| format!("{} ({}): {e}", v.id, v.name()))
@@ -187,7 +185,7 @@ fn prop_random_schedules_match_oracle() {
 
 #[test]
 fn prop_trsv_solves_system() {
-    let t = tree::enumerate(Kernel::Trsv);
+    let t = tree::enumerate(Kernel::Trsv, &PlanSpace::serial_only());
     forall("(I+L)x = b", 25, |g| {
         let n = g.usize_in(2, 30 + g.size * 3);
         let mut sq = TriMat::new(n, n);
@@ -200,8 +198,8 @@ fn prop_trsv_solves_system() {
             }
         }
         let b = g.vec_f64(n);
-        let v = g.choose(&t.variants);
-        let p = concretize::prepare(v.plan, &sq);
+        let v = g.choose(&t.plans);
+        let p = concretize::prepare(v.exec, &sq);
         let mut x = vec![0.0; n];
         p.trsv(&b, &mut x);
         // verify (I + L) x == b
