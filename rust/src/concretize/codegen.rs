@@ -32,7 +32,7 @@ pub fn emit(kernel: Kernel, plan: &Plan) -> String {
         Kernel::Spmm => emit_spmm(plan),
         Kernel::Trsv => emit_trsv(plan),
     };
-    let body = if legal { apply_schedule(plan, body) } else { body };
+    let body = if legal { apply_schedule(kernel, plan, body) } else { body };
     format!("{header}{body}")
 }
 
@@ -72,21 +72,65 @@ fn indent(body: &str) -> String {
 
 /// Wrap the serial loop nest in the schedule's outer structure: a
 /// `parallel forelem` worker loop over disjoint nnz-balanced row
-/// ranges, a column-band loop over the per-band row splits, or both.
-/// Callers guarantee legality (`schedule_legal`), so the Tiled arms
-/// only ever see the CSR SpMV nest they replace with the band nest.
-fn apply_schedule(plan: &Plan, body: String) -> String {
+/// ranges (or, for TrSv, over the dependence level sets built at
+/// prepare time), a column-band loop over the per-band row splits, or
+/// a B-panel sweep for SpMM. Callers guarantee legality
+/// (`schedule_legal`), so each arm only ever sees the nests it is
+/// generated for.
+fn apply_schedule(kernel: Kernel, plan: &Plan, body: String) -> String {
     match plan.schedule {
         Schedule::Serial => body,
+        // The level nest replaces the serial solve entirely (wrapping
+        // it would nest the full row loop inside the per-level forelem
+        // and shadow its binding): one row's gather — or one finalized
+        // column's scatter — becomes the forelem body.
+        Schedule::Parallel { threads } if kernel == Kernel::Trsv => match plan.layout {
+            // schedule_legal admits exactly (Csr, RowWise) and
+            // (Csc, ColScatter) here.
+            Layout::Csc => format!(
+                "/* level-scheduled solve (scatter): level[] = dependence level sets built at\n   prepare(); x[j] is final when its level is reached; spin barrier between\n   levels; scatter targets owner-partitioned across {threads} workers */\n\
+                 for (i = 0; i < n; i++) x[i] = b[i];\n\
+                 for (l = 0; l < nlevels; l++) {{\n\
+                 \x20 parallel forelem (j; j \u{2208} level[l]) {{\n\
+                 \x20   for (k = L_ptr[j]; k < L_ptr[j+1]; k++)\n\
+                 \x20     x[L_row[k]] -= L_val[k] * x[j];\n\
+                 \x20 }}\n  barrier(t);\n}}\n"
+            ),
+            _ => format!(
+                "/* level-scheduled solve (gather): level[] = dependence level sets built at\n   prepare(); rows within a level are independent; spin barrier between levels */\n\
+                 for (l = 0; l < nlevels; l++) {{\n\
+                 \x20 parallel forelem (i; i \u{2208} level[l]) {{  /* {threads} workers */\n\
+                 \x20   sum = 0;\n\
+                 \x20   for (k = L_ptr[i]; k < L_ptr[i+1]; k++)\n\
+                 \x20     sum += L_val[k] * x[L_col[k]];\n\
+                 \x20   x[i] = b[i] - sum;\n\
+                 \x20 }}\n  barrier(t);\n}}\n"
+            ),
+        },
         Schedule::Parallel { threads } => format!(
             "/* {threads} workers; rows[t] = nnz-balanced disjoint ranges; y chunks owned per worker */\n\
              parallel forelem (t; t \u{2208} 0..{threads}) {{\n{}}}\n",
             indent(&body)
         ),
+        Schedule::Tiled { x_block } if kernel == Kernel::Spmm => format!(
+            "/* B-panel sweep: C columns [p0, p0+{panel}) per pass so the gathered B rows\n   stay L1-resident; the structure is re-streamed once per panel */\n\
+             for (p0 = 0; p0 < k; p0 += {panel}) {{  /* panel of min({panel}, k) B/C columns */\n{}}}\n",
+            indent(&body),
+            // Nominal width from the x_block byte budget; the executor
+            // clamps it to the run's actual dense k.
+            panel = crate::concretize::exec::spmm_panel_cols(x_block, usize::MAX),
+        ),
         Schedule::Tiled { x_block } => format!(
             "/* CSB-style two-pass: x band of {x_block} columns stays L2-resident;\n   band_ptr = per-band row_ptr split built at prepare() */\n\
              for (i = 0; i < nrows; i++) y[i] = 0;\n\
              for (b = 0; b < nbands; b++)\n  for (i = 0; i < nrows; i++)\n    for (k = band_ptr[b][i]; k < band_ptr[b+1][i]; k++)\n      y[i] += PA_val[k] * x[PA_col[k]];\n"
+        ),
+        Schedule::ParallelTiled { threads, x_block } if kernel == Kernel::Spmm => format!(
+            "/* {threads} workers \u{00d7} {panel}-column B panels (rows[t] nnz-balanced) */\n\
+             parallel forelem (t; t \u{2208} 0..{threads}) {{\n\
+             \x20 for (p0 = 0; p0 < k; p0 += {panel}) {{  /* panel of min({panel}, k) B/C columns */\n{}  }}\n}}\n",
+            indent(&indent(&body)),
+            panel = crate::concretize::exec::spmm_panel_cols(x_block, usize::MAX),
         ),
         Schedule::ParallelTiled { threads, x_block } => format!(
             "/* {threads} workers \u{00d7} {x_block}-column L2-resident bands */\n\
@@ -238,18 +282,51 @@ mod tests {
     }
 
     #[test]
-    fn illegal_schedule_falls_back_to_serial_nest() {
-        // Tiled SpMM is pruned by the tree; emit must not mislabel the
-        // SpMV band nest as SpMM code.
+    fn spmm_tiled_schedule_emits_panel_sweep() {
         let p = Plan::serial(Layout::Csr, Traversal::RowWise)
             .with_schedule(Schedule::Tiled { x_block: 4096 });
         let txt = emit(Kernel::Spmm, &p);
-        assert!(txt.contains("illegal here; serial"), "{txt}");
+        assert!(txt.contains("B-panel sweep"), "{txt}");
+        assert!(txt.contains("p0 += 32"), "{txt}");
         assert!(!txt.contains("band_ptr"), "{txt}");
-        // TrSv never reschedules.
+        let pt = Plan::serial(Layout::Bcsr { br: 2, bc: 2 }, Traversal::Blocked)
+            .with_schedule(Schedule::ParallelTiled { threads: 4, x_block: 4096 });
+        let txt = emit(Kernel::Spmm, &pt);
+        assert!(txt.contains("parallel forelem"), "{txt}");
+        assert!(txt.contains("min(32, k) B/C columns"), "{txt}");
+    }
+
+    #[test]
+    fn trsv_parallel_schedule_emits_level_nest() {
         let par = Plan::serial(Layout::Csr, Traversal::RowWise)
             .with_schedule(Schedule::Parallel { threads: 4 });
         let txt = emit(Kernel::Trsv, &par);
+        assert!(txt.contains("level-scheduled"), "{txt}");
+        assert!(txt.contains("parallel forelem (i; i \u{2208} level[l])"), "{txt}");
+        assert!(txt.contains("barrier(t)"), "{txt}");
+        let csc = Plan::serial(Layout::Csc, Traversal::ColScatter)
+            .with_schedule(Schedule::Parallel { threads: 2 });
+        assert!(emit(Kernel::Trsv, &csc).contains("level-scheduled"));
+    }
+
+    #[test]
+    fn illegal_schedule_falls_back_to_serial_nest() {
+        // Tiled SpMM exists only for the micro-kernel formats; an ELL
+        // plan must not be mislabeled with a panel sweep.
+        let p = Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWise)
+            .with_schedule(Schedule::Tiled { x_block: 4096 });
+        let txt = emit(Kernel::Spmm, &p);
+        assert!(txt.contains("illegal here; serial"), "{txt}");
+        assert!(!txt.contains("B-panel"), "{txt}");
+        // TrSv reschedules only onto the level-capable SoA formats.
+        let par = Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWise)
+            .with_schedule(Schedule::Parallel { threads: 4 });
+        let txt = emit(Kernel::Trsv, &par);
         assert!(!txt.contains("parallel forelem"), "{txt}");
+        // Tiled TrSv stays illegal even for CSR.
+        let tiled = Plan::serial(Layout::Csr, Traversal::RowWise)
+            .with_schedule(Schedule::Tiled { x_block: 4096 });
+        let txt = emit(Kernel::Trsv, &tiled);
+        assert!(txt.contains("illegal here; serial"), "{txt}");
     }
 }

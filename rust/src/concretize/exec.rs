@@ -3,56 +3,77 @@
 //! `Prepared` value is "the automatically instantiated routine +
 //! reassembled data structure" of the paper — ready to run on the
 //! native backend.
+//!
+//! Execution is layered (see `storage::ops` for the full picture):
+//! the **registry** ([`build_ops`]) is the single place a [`Layout`] is
+//! bound to its storage builder, yielding an `Arc<dyn SparseOps>`; the
+//! **schedule drivers** on [`Prepared`] then map the plan's
+//! [`Schedule`] onto the trait — serial nest, nnz-balanced parallel
+//! ranges, cache-blocked band sweep, or B-panel sweep. There is no
+//! schedule × storage × kernel match pyramid left here: formats are
+//! behind the trait, schedules are one `match` each.
+//!
+//! [`prepare_many`] is the plan-keyed **storage cache**: the sweep's
+//! shortlist typically contains several schedule/traversal variants of
+//! the same layout, and the cache builds each distinct
+//! `(layout, matrix)` storage exactly once, sharing it (`Arc`) across
+//! all its variants — a large constant-factor win for the
+//! predict→measure pipeline's prepare phase.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use crate::baselines::Kernel;
 use crate::concretize::layout::{schedule_legal, Layout, Plan, Schedule, Traversal};
-use crate::kernels::{par, spmm, spmv, trsv};
+use crate::kernels::levels::LevelSets;
+use crate::kernels::par;
 use crate::matrix::TriMat;
 use crate::storage::*;
 
-/// Physical storage instance for a plan.
-pub enum Storage {
-    CooAos(CooAos),
-    CooSoa(CooSoa),
-    Csr(Csr),
-    CsrAos(CsrAos),
-    Csc(Csc),
-    CscAos(CscAos),
-    Ell(Ell),
-    Jds(Jds, JdsRows),
-    Bcsr(Bcsr),
-    Hybrid(HybridEllCoo),
-    Sell(Sell),
-    Dia(Dia),
-}
-
-impl Storage {
-    pub fn bytes(&self) -> usize {
-        match self {
-            Storage::CooAos(s) => s.bytes(),
-            Storage::CooSoa(s) => s.bytes(),
-            Storage::Csr(s) => s.bytes(),
-            Storage::CsrAos(s) => s.bytes(),
-            Storage::Csc(s) => s.bytes(),
-            Storage::CscAos(s) => s.bytes(),
-            Storage::Ell(s) => s.bytes(),
-            Storage::Jds(s, r) => s.bytes() + r.rows.iter().map(|v| v.len() * 4).sum::<usize>(),
-            Storage::Bcsr(s) => s.bytes(),
-            Storage::Hybrid(s) => s.bytes(),
-            Storage::Sell(s) => s.bytes(),
-            Storage::Dia(s) => s.bytes(),
+/// The format registry — the one place a `Layout` is bound to its
+/// storage builder. Adding a format = one `SparseOps` impl
+/// (`storage::ops`) + one arm here + its chain in `layout::plans`.
+pub fn build_ops(layout: Layout, m: &TriMat) -> Arc<dyn SparseOps> {
+    match layout {
+        Layout::CooAos(order) => Arc::new(CooAos::from_tuples(m, order)),
+        Layout::CooSoa(order) => Arc::new(CooSoa::from_tuples(m, order)),
+        Layout::Csr => Arc::new(Csr::from_tuples(m)),
+        Layout::CsrAos => Arc::new(CsrAos::from_tuples(m)),
+        Layout::Csc => Arc::new(Csc::from_tuples(m)),
+        Layout::CscAos => Arc::new(CscAos::from_tuples(m)),
+        Layout::Ell(order) => Arc::new(Ell::from_tuples(m, order)),
+        Layout::Jds { permuted } => {
+            let jds = Jds::from_tuples(m, permuted);
+            let rows = JdsRows::build(&jds, m);
+            Arc::new(JdsOps { jds, rows })
         }
+        Layout::Bcsr { br, bc } => Arc::new(Bcsr::from_tuples(m, br, bc)),
+        Layout::HybridEllCoo => {
+            Arc::new(HybridEllCoo::from_tuples(m, None, EllOrder::ColMajor))
+        }
+        Layout::Sell { s } => Arc::new(Sell::from_tuples(m, s)),
+        Layout::Dia => Arc::new(Dia::from_tuples(m)),
     }
 }
 
 /// A concretized routine + data structure, bound to a matrix.
 pub struct Prepared {
     pub plan: Plan,
-    pub storage: Storage,
+    /// The format storage behind the `SparseOps` trait — `Arc`-shared
+    /// across schedule/traversal variants by the `prepare_many` cache.
+    pub ops: Arc<dyn SparseOps>,
     /// Per-band CSR row splits for `Schedule::Tiled` /
-    /// `Schedule::ParallelTiled` plans — part of the generated data
-    /// structure, built once here at prepare time.
-    pub bands: Option<CsrBands>,
+    /// `Schedule::ParallelTiled` SpMV plans — part of the generated
+    /// data structure. Built once on first SpMV use (or eagerly via
+    /// [`Prepared::ensure_bands`]): a tiled plan prepared for SpMM
+    /// sweeps B panels and never reads them, so building eagerly would
+    /// waste O(nbands × nrows) per SpMM-only prepare.
+    bands: OnceLock<Option<CsrBands>>,
+    /// Dependence level sets for `Schedule::Parallel` TrSv plans.
+    /// Built on demand (`ensure_levels` hoists the build out of timed
+    /// regions); `OnceLock` so sharing a `Prepared` across threads
+    /// stays safe.
+    levels: OnceLock<LevelSets>,
     pub nrows: usize,
     pub ncols: usize,
 }
@@ -61,7 +82,8 @@ pub struct Prepared {
 /// dependence-respecting traversal; SpMM is generated for every layout
 /// the SpMV nest covers except DIA, which the tree prunes for SpMM).
 /// The plan's schedule must also be legal for the kernel
-/// (`layout::schedule_legal`): TrSv stays `Serial`, and non-serial
+/// (`layout::schedule_legal`): TrSv reschedules only onto the
+/// level-capable compressed formats, and non-serial SpMV/SpMM
 /// schedules exist only for row-partitionable layouts.
 pub fn supports(plan: &Plan, kernel: Kernel) -> bool {
     if !schedule_legal(plan.layout, plan.traversal, plan.schedule, kernel) {
@@ -83,155 +105,220 @@ pub fn supports(plan: &Plan, kernel: Kernel) -> bool {
     }
 }
 
+/// Dense-column panel width of a `Tiled`/`ParallelTiled` SpMM plan.
+/// The schedule's `x_block` knob is a byte budget for the gathered
+/// operand band; for SpMM the gathered operand is a B row per visited
+/// slot, so the panel spans a few cache lines (the default
+/// `x_block = 4096` gives 32 columns = 256 B) — narrow enough that a
+/// mean row's worth of B panels stays L1-resident at the paper's
+/// k = 100, wide enough for the 4-wide register-blocked micro-kernel.
+pub fn spmm_panel_cols(x_block: usize, k: usize) -> usize {
+    (x_block / 128).max(4).min(k.max(1))
+}
+
+fn with_ops(plan: Plan, m: &TriMat, ops: Arc<dyn SparseOps>) -> Prepared {
+    Prepared {
+        plan,
+        ops,
+        bands: OnceLock::new(),
+        levels: OnceLock::new(),
+        nrows: m.nrows,
+        ncols: m.ncols,
+    }
+}
+
 /// Build the storage for a plan from the tuple reservoir.
 pub fn prepare(plan: Plan, m: &TriMat) -> Prepared {
-    let storage = match plan.layout {
-        Layout::CooAos(order) => Storage::CooAos(CooAos::from_tuples(m, order)),
-        Layout::CooSoa(order) => Storage::CooSoa(CooSoa::from_tuples(m, order)),
-        Layout::Csr => Storage::Csr(Csr::from_tuples(m)),
-        Layout::CsrAos => Storage::CsrAos(CsrAos::from_tuples(m)),
-        Layout::Csc => Storage::Csc(Csc::from_tuples(m)),
-        Layout::CscAos => Storage::CscAos(CscAos::from_tuples(m)),
-        Layout::Ell(order) => Storage::Ell(Ell::from_tuples(m, order)),
-        Layout::Jds { permuted } => {
-            let j = Jds::from_tuples(m, permuted);
-            let r = JdsRows::build(&j, m);
-            Storage::Jds(j, r)
-        }
-        Layout::Bcsr { br, bc } => Storage::Bcsr(Bcsr::from_tuples(m, br, bc)),
-        Layout::HybridEllCoo => {
-            Storage::Hybrid(HybridEllCoo::from_tuples(m, None, EllOrder::ColMajor))
-        }
-        Layout::Sell { s } => Storage::Sell(Sell::from_tuples(m, s)),
-        Layout::Dia => Storage::Dia(Dia::from_tuples(m)),
-    };
-    // Tiled CSR schedules carry their per-band row splits as part of
-    // the generated data structure.
-    let x_block = match plan.schedule {
-        Schedule::Tiled { x_block } => Some(x_block),
-        Schedule::ParallelTiled { x_block, .. } => Some(x_block),
-        _ => None,
-    };
-    let bands = match (&storage, x_block) {
-        (Storage::Csr(s), Some(xb)) => Some(CsrBands::build(s, xb)),
-        _ => None,
-    };
-    Prepared { plan, storage, bands, nrows: m.nrows, ncols: m.ncols }
+    with_ops(plan, m, build_ops(plan.layout, m))
 }
 
 /// Build the storage for many plans against the same reservoir in
-/// parallel (`util::pool::parallel_map` over plans). Used by the sweep
-/// so the large suite's CSR/ELL/SELL planes are assembled on all cores
-/// while *measurement* stays single-threaded per the paper protocol.
+/// parallel. This is the plan-keyed storage cache: each distinct
+/// layout's storage is assembled exactly once (`build_ops`) and shared
+/// (`Arc`) across every schedule/traversal variant that uses it, so a
+/// predict→measure shortlist with, say, five CSR variants pays for one
+/// CSR build. Assembly runs on all cores while *measurement* stays
+/// single-threaded per the paper protocol.
 pub fn prepare_many(plans: &[Plan], m: &TriMat, workers: usize) -> Vec<Prepared> {
-    crate::util::pool::parallel_map(plans.len(), workers.max(1), |i| prepare(plans[i], m))
+    prepare_many_counted(plans, m, workers).0
+}
+
+/// [`prepare_many`] plus the number of storages actually built — the
+/// observable the cache tests pin (`builds == distinct layouts`).
+pub fn prepare_many_counted(
+    plans: &[Plan],
+    m: &TriMat,
+    workers: usize,
+) -> (Vec<Prepared>, usize) {
+    let mut layouts: Vec<Layout> = Vec::new();
+    for p in plans {
+        if !layouts.contains(&p.layout) {
+            layouts.push(p.layout);
+        }
+    }
+    let builds = AtomicUsize::new(0);
+    let built: Vec<Arc<dyn SparseOps>> =
+        crate::util::pool::parallel_map(layouts.len(), workers.max(1), |i| {
+            builds.fetch_add(1, Ordering::Relaxed);
+            build_ops(layouts[i], m)
+        });
+    let prepared = crate::util::pool::parallel_map(plans.len(), workers.max(1), |i| {
+        let plan = plans[i];
+        let li = layouts.iter().position(|l| *l == plan.layout).expect("layout interned above");
+        with_ops(plan, m, Arc::clone(&built[li]))
+    });
+    (prepared, builds.into_inner())
 }
 
 impl Prepared {
     /// Total bytes of the generated data structure, including the
-    /// tiled schedules' per-band row splits (part of what the plan
-    /// allocates, unlike the transient workspace of e.g. permuted JDS).
+    /// tiled schedules' per-band row splits and (once built) the level
+    /// sets of a parallel TrSv plan.
     pub fn bytes(&self) -> usize {
-        self.storage.bytes() + self.bands.as_ref().map_or(0, |b| b.bytes())
+        self.ops.bytes()
+            + self.bands.get().and_then(|b| b.as_ref()).map_or(0, |b| b.bytes())
+            + self.levels.get().map_or(0, |l| l.bytes())
+    }
+
+    fn tile_width(&self) -> Option<usize> {
+        match self.plan.schedule {
+            Schedule::Tiled { x_block } => Some(x_block),
+            Schedule::ParallelTiled { x_block, .. } => Some(x_block),
+            _ => None,
+        }
+    }
+
+    /// The tiled plan's per-band row splits, built on first call
+    /// (formats without a band structure — and non-tiled plans —
+    /// return `None` and fall back to their serial/panel nests).
+    pub fn bands(&self) -> Option<&CsrBands> {
+        self.bands
+            .get_or_init(|| self.tile_width().and_then(|xb| self.ops.build_bands(xb)))
+            .as_ref()
+    }
+
+    /// Build the tiled-SpMV band splits now (idempotent) so a timed
+    /// run doesn't pay for them.
+    pub fn ensure_bands(&self) {
+        let _ = self.bands();
+    }
+
+    /// Build the TrSv level sets now (idempotent) so a timed solve
+    /// doesn't pay for them. No-op unless this is a level-scheduled
+    /// TrSv plan (`Parallel` over a level-capable format).
+    pub fn ensure_levels(&self) {
+        if self.levels.get().is_some()
+            || !matches!(self.plan.schedule, Schedule::Parallel { .. })
+            || !supports(&self.plan, Kernel::Trsv)
+        {
+            return;
+        }
+        if let Some(lv) = self.ops.build_levels() {
+            let _ = self.levels.set(lv);
+        }
     }
 
     /// Run the generated SpMV under the plan's schedule.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        let t = self.plan.traversal;
         match self.plan.schedule {
-            Schedule::Serial => self.spmv_serial(x, y),
-            Schedule::Parallel { threads } => match &self.storage {
-                Storage::Csr(s) => par::csr_spmv(s, x, y, threads),
-                Storage::Ell(s) => par::ell_spmv(s, x, y, threads),
-                Storage::Sell(s) => par::sell_spmv(s, x, y, threads),
-                Storage::Bcsr(s) => par::bcsr_spmv(s, x, y, threads),
-                Storage::Jds(s, _) if s.permuted => par::jds_spmv(s, x, y, threads),
-                _ => self.spmv_serial(x, y), // pruned by schedule_legal
+            Schedule::Serial => self.ops.spmv_serial(t, x, y),
+            Schedule::Parallel { threads } => self.ops.spmv_parallel(t, x, y, threads),
+            Schedule::Tiled { .. } => match self.bands() {
+                Some(bands) => self.ops.spmv_tiled(bands, x, y),
+                None => self.ops.spmv_serial(t, x, y),
             },
-            Schedule::Tiled { .. } => match (&self.storage, &self.bands) {
-                (Storage::Csr(s), Some(bands)) => par::csr_spmv_tiled(s, bands, x, y),
-                _ => self.spmv_serial(x, y),
+            Schedule::ParallelTiled { threads, .. } => match self.bands() {
+                Some(bands) => self.ops.spmv_parallel_tiled(bands, x, y, threads),
+                None => self.ops.spmv_parallel(t, x, y, threads),
             },
-            Schedule::ParallelTiled { threads, .. } => match (&self.storage, &self.bands) {
-                (Storage::Csr(s), Some(bands)) => {
-                    par::csr_spmv_parallel_tiled(s, bands, x, y, threads)
-                }
-                _ => self.spmv_serial(x, y),
-            },
-        }
-    }
-
-    /// The serial loop nest (the paper's single-core executors).
-    fn spmv_serial(&self, x: &[f64], y: &mut [f64]) {
-        match (&self.storage, self.plan.traversal) {
-            (Storage::CooAos(s), _) => spmv::coo_aos(s, x, y),
-            (Storage::CooSoa(s), _) => spmv::coo_soa(s, x, y),
-            (Storage::Csr(s), _) => spmv::csr(s, x, y),
-            (Storage::CsrAos(s), _) => spmv::csr_aos(s, x, y),
-            (Storage::Csc(s), _) => spmv::csc(s, x, y),
-            (Storage::CscAos(s), _) => spmv::csc_aos(s, x, y),
-            (Storage::Ell(s), Traversal::RowWisePadded) => spmv::ell_rowwise_padded(s, x, y),
-            (Storage::Ell(s), Traversal::PlaneWise) => spmv::ell_planewise(s, x, y),
-            (Storage::Ell(s), _) => spmv::ell_rowwise(s, x, y),
-            (Storage::Jds(s, _), _) if s.permuted => spmv::jds_permuted(s, x, y),
-            (Storage::Jds(s, r), _) => spmv::jds(s, r, x, y),
-            (Storage::Bcsr(s), _) => spmv::bcsr(s, x, y),
-            (Storage::Hybrid(s), _) => spmv::hybrid(s, x, y),
-            (Storage::Sell(s), _) => crate::storage::sell::spmv(s, x, y),
-            (Storage::Dia(s), _) => spmv::dia(s, x, y),
         }
     }
 
     /// Run the generated SpMM (`b` is ncols×k row-major) under the
-    /// plan's schedule.
+    /// plan's schedule. Tiled schedules sweep B/C column panels so the
+    /// gathered B-row granule stays L1-resident.
     pub fn spmm(&self, b: &[f64], k: usize, c: &mut [f64]) {
+        let t = self.plan.traversal;
         match self.plan.schedule {
-            // Tiling is only generated for the SpMV gather; a tiled
-            // plan asked for SpMM falls back to the serial nest.
-            Schedule::Serial | Schedule::Tiled { .. } => self.spmm_serial(b, k, c),
-            Schedule::Parallel { threads } | Schedule::ParallelTiled { threads, .. } => {
-                match &self.storage {
-                    Storage::Csr(s) => par::csr_spmm(s, b, k, c, threads),
-                    Storage::Ell(s) => par::ell_spmm(s, b, k, c, threads),
-                    Storage::Sell(s) => par::sell_spmm(s, b, k, c, threads),
-                    Storage::Bcsr(s) => par::bcsr_spmm(s, b, k, c, threads),
-                    Storage::Jds(s, _) if s.permuted => par::jds_spmm(s, b, k, c, threads),
-                    _ => self.spmm_serial(b, k, c), // pruned by schedule_legal
-                }
+            Schedule::Serial => self.ops.spmm_serial(t, b, k, c),
+            Schedule::Parallel { threads } => self.ops.spmm_parallel(t, b, k, c, threads),
+            Schedule::Tiled { x_block } => spmm_tiled(&*self.ops, t, b, k, c, x_block),
+            Schedule::ParallelTiled { threads, x_block } => {
+                spmm_parallel_tiled(&*self.ops, t, b, k, c, threads, x_block)
             }
         }
     }
 
-    fn spmm_serial(&self, b: &[f64], k: usize, c: &mut [f64]) {
-        match (&self.storage, self.plan.traversal) {
-            (Storage::CooAos(s), _) => spmm::coo_aos(s, b, k, c),
-            (Storage::CooSoa(s), _) => spmm::coo_soa(s, b, k, c),
-            (Storage::Csr(s), _) => spmm::csr(s, b, k, c),
-            (Storage::CsrAos(s), _) => spmm::csr_aos(s, b, k, c),
-            (Storage::Csc(s), _) => spmm::csc(s, b, k, c),
-            (Storage::CscAos(s), _) => spmm::csc_aos(s, b, k, c),
-            (Storage::Ell(s), Traversal::PlaneWise) => spmm::ell_planewise(s, b, k, c),
-            (Storage::Ell(s), _) => spmm::ell_rowwise(s, b, k, c),
-            (Storage::Jds(s, r), _) => spmm::jds(s, r, b, k, c),
-            (Storage::Bcsr(s), _) => spmm::bcsr(s, b, k, c),
-            (Storage::Hybrid(s), _) => spmm::hybrid(s, b, k, c),
-            (Storage::Sell(s), _) => crate::storage::sell::spmm(s, b, k, c),
-            (Storage::Dia(_), _) => panic!("SpMM over DIA pruned by the tree"),
-        }
-    }
-
-    /// Run the generated unit-lower TrSv (storage holds strictly-lower L).
+    /// Run the generated unit-lower TrSv (storage holds strictly-lower
+    /// L). Parallel plans execute the barrier-light level schedule over
+    /// the level sets built at prepare time.
     pub fn trsv(&self, b: &[f64], x: &mut [f64]) {
-        match &self.storage {
-            Storage::Csr(s) => trsv::csr(s, b, x),
-            Storage::CsrAos(s) => trsv::csr_aos(s, b, x),
-            Storage::Csc(s) => trsv::csc(s, b, x),
-            Storage::CscAos(s) => trsv::csc_aos(s, b, x),
-            Storage::CooAos(s) => trsv::coo_rowmajor(s, b, x),
-            Storage::Ell(s) => trsv::ell_rowwise(s, b, x),
-            Storage::Hybrid(s) => trsv::hybrid(s, b, x),
-            _ => panic!("TrSv unsupported for this plan (checked by supports())"),
+        match self.plan.schedule {
+            Schedule::Parallel { threads } => {
+                let lv = self.levels.get_or_init(|| {
+                    self.ops
+                        .build_levels()
+                        .expect("schedule_legal admits parallel TrSv only with level sets")
+                });
+                self.ops.trsv_level(lv, b, x, threads);
+            }
+            _ => self.ops.trsv_serial(b, x),
         }
     }
+}
+
+/// Serial B-panel sweep (`Schedule::Tiled` SpMM).
+fn spmm_tiled(ops: &dyn SparseOps, t: Traversal, b: &[f64], k: usize, c: &mut [f64], xb: usize) {
+    if !ops.supports_spmm_panel() || k == 0 {
+        return ops.spmm_serial(t, b, k, c);
+    }
+    let panel = spmm_panel_cols(xb, k);
+    if panel >= k {
+        return ops.spmm_serial(t, b, k, c);
+    }
+    let units = ops.par_units();
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + panel).min(k);
+        ops.spmm_panel(t, b, k, c, k0..k1, 0..units);
+        k0 = k1;
+    }
+}
+
+/// Parallel rows × B-panel sweep (`Schedule::ParallelTiled` SpMM):
+/// nnz-balanced unit ranges, each worker sweeping its chunk panel by
+/// panel.
+fn spmm_parallel_tiled(
+    ops: &dyn SparseOps,
+    t: Traversal,
+    b: &[f64],
+    k: usize,
+    c: &mut [f64],
+    threads: usize,
+    xb: usize,
+) {
+    if !ops.supports_spmm_panel() || k == 0 {
+        return ops.spmm_parallel(t, b, k, c, threads);
+    }
+    let ranges = par::balanced_ranges(ops.par_units(), threads, |u| ops.unit_weight_prefix(u));
+    if ranges.len() <= 1 {
+        return spmm_tiled(ops, t, b, k, c, xb);
+    }
+    let panel = spmm_panel_cols(xb, k);
+    let chunks = par::chunks_for(c, &ranges, ops.rows_per_unit() * k);
+    let mut tasks = Vec::with_capacity(ranges.len());
+    for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+        tasks.push(move || {
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + panel).min(k);
+                ops.spmm_panel(t, b, k, chunk, k0..k1, lo..hi);
+                k0 = k1;
+            }
+        });
+    }
+    crate::util::pool::scoped_run(tasks);
 }
 
 #[cfg(test)]
@@ -311,6 +398,49 @@ mod tests {
     }
 
     #[test]
+    fn level_scheduled_trsv_matches_serial() {
+        let m = gen::uniform_random(40, 40, 320, 67);
+        let l = m.strictly_lower();
+        let bvec: Vec<f64> = (0..40).map(|i| (i as f64 * 0.21).cos()).collect();
+        let want = l.trsv_unit_lower_ref(&bvec);
+        let par = Schedule::Parallel { threads: 4 };
+        let mut ran = 0;
+        for base in all_spmv_plans() {
+            let plan = base.with_schedule(par);
+            if !supports(&plan, Kernel::Trsv) {
+                continue;
+            }
+            ran += 1;
+            let p = prepare(plan, &l);
+            p.ensure_levels();
+            assert!(p.levels.get().is_some(), "{plan:?}: levels not built by ensure_levels");
+            let bytes_with_levels = p.bytes();
+            assert!(bytes_with_levels > p.ops.bytes(), "{plan:?}: levels not in bytes()");
+            let mut x = vec![0.0; 40];
+            p.trsv(&bvec, &mut x);
+            assert_close(&x, &want, 1e-9).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+        }
+        assert_eq!(ran, 2, "expected the CSR and CSC level-scheduled TrSv plans");
+    }
+
+    #[test]
+    fn trsv_non_serial_only_for_level_capable_layouts() {
+        let par = Schedule::Parallel { threads: 2 };
+        for base in all_spmv_plans() {
+            let plan = base.with_schedule(par);
+            let legal = supports(&plan, Kernel::Trsv);
+            let expected =
+                matches!(plan.layout, Layout::Csr | Layout::Csc) && supports(&base, Kernel::Trsv);
+            assert_eq!(legal, expected, "{plan:?}");
+        }
+        // Tiling never applies to TrSv.
+        for base in all_spmv_plans() {
+            let tiled = base.with_schedule(Schedule::Tiled { x_block: 64 });
+            assert!(!supports(&tiled, Kernel::Trsv), "{tiled:?}");
+        }
+    }
+
+    #[test]
     fn prepare_many_matches_serial_prepare() {
         let m = gen::powerlaw(40, 2.0, 20, 66);
         let plans = all_spmv_plans();
@@ -329,11 +459,67 @@ mod tests {
     }
 
     #[test]
+    fn storage_cache_builds_each_layout_once() {
+        let m = gen::uniform_random(30, 30, 180, 68);
+        // Five CSR variants + two ELL variants + one SELL: 3 layouts.
+        let plans = vec![
+            Plan::serial(Layout::Csr, Traversal::RowWise),
+            Plan::serial(Layout::Csr, Traversal::RowWise)
+                .with_schedule(Schedule::Parallel { threads: 3 }),
+            Plan::serial(Layout::Csr, Traversal::RowWise)
+                .with_schedule(Schedule::Tiled { x_block: 8 }),
+            Plan::serial(Layout::Csr, Traversal::RowWise)
+                .with_schedule(Schedule::ParallelTiled { threads: 3, x_block: 8 }),
+            Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWise),
+            Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWisePadded),
+            Plan::serial(Layout::Sell { s: 4 }, Traversal::SlicePlane),
+        ];
+        let (prepared, builds) = prepare_many_counted(&plans, &m, 4);
+        assert_eq!(builds, 3, "storage built more than once per distinct layout");
+        // All CSR variants share one storage; the two ELL traversals too.
+        for i in 1..4 {
+            assert!(Arc::ptr_eq(&prepared[0].ops, &prepared[i].ops), "CSR not shared at {i}");
+        }
+        assert!(Arc::ptr_eq(&prepared[4].ops, &prepared[5].ops), "ELL not shared");
+        assert!(!Arc::ptr_eq(&prepared[0].ops, &prepared[4].ops));
+        // Tiled variants still get their own bands (lazily, per plan).
+        assert!(prepared[0].bands().is_none());
+        assert!(prepared[2].bands().is_some());
+        assert!(prepared[3].bands().is_some());
+    }
+
+    #[test]
+    fn shared_storage_results_are_bit_identical_to_fresh_prepare() {
+        let m = gen::powerlaw(36, 2.0, 18, 69);
+        let x: Vec<f64> = (0..36).map(|i| (i as f64 * 0.17).sin() - 0.2).collect();
+        let schedules = [
+            Schedule::Serial,
+            Schedule::Parallel { threads: 3 },
+            Schedule::Tiled { x_block: 8 },
+            Schedule::ParallelTiled { threads: 2, x_block: 8 },
+        ];
+        let plans: Vec<Plan> = schedules
+            .iter()
+            .map(|&s| Plan::serial(Layout::Csr, Traversal::RowWise).with_schedule(s))
+            .collect();
+        let shared = prepare_many(&plans, &m, 4);
+        for (plan, p) in plans.iter().zip(&shared) {
+            let fresh = prepare(*plan, &m);
+            let mut y_shared = vec![0.0; 36];
+            let mut y_fresh = vec![0.0; 36];
+            p.spmv(&x, &mut y_shared);
+            fresh.spmv(&x, &mut y_fresh);
+            assert_eq!(y_shared, y_fresh, "{plan:?}: shared storage changed the result bits");
+        }
+    }
+
+    #[test]
     fn storage_bytes_positive() {
         let m = gen::banded(30, 3, 0.8, 63);
         for plan in all_spmv_plans() {
             let p = prepare(plan, &m);
-            assert!(p.storage.bytes() > 0);
+            assert!(p.ops.bytes() > 0);
+            assert_eq!(p.ops.slug(), plan.layout.slug(), "{plan:?}: slug drifted");
         }
     }
 
@@ -357,7 +543,8 @@ mod tests {
                 ran += 1;
                 let p = prepare(plan, &m);
                 if matches!(sch, Schedule::Tiled { .. } | Schedule::ParallelTiled { .. }) {
-                    assert!(p.bands.is_some(), "{plan:?}: bands not built at prepare time");
+                    p.ensure_bands();
+                    assert!(p.bands().is_some(), "{plan:?}: tiled plan has no band splits");
                 }
                 let mut y = vec![0.0; 52];
                 p.spmv(&x, &mut y);
@@ -373,23 +560,36 @@ mod tests {
         let k = 6;
         let b: Vec<f64> = (0..31 * k).map(|i| i as f64 * 0.04 - 0.6).collect();
         let want = m.spmm_ref(&b, k);
+        let schedules = [
+            Schedule::Parallel { threads: 4 },
+            Schedule::Tiled { x_block: 256 },
+            Schedule::ParallelTiled { threads: 3, x_block: 256 },
+        ];
+        let mut panel_ran = 0;
         for base in all_spmv_plans() {
-            let plan = base.with_schedule(Schedule::Parallel { threads: 4 });
-            if !supports(&plan, Kernel::Spmm) {
-                continue;
+            for sch in schedules {
+                let plan = base.with_schedule(sch);
+                if !supports(&plan, Kernel::Spmm) {
+                    continue;
+                }
+                if !matches!(sch, Schedule::Parallel { .. }) {
+                    panel_ran += 1;
+                }
+                let p = prepare(plan, &m);
+                let mut c = vec![0.0; 24 * k];
+                p.spmm(&b, k, &mut c);
+                assert_close(&c, &want, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
             }
-            let p = prepare(plan, &m);
-            let mut c = vec![0.0; 24 * k];
-            p.spmm(&b, k, &mut c);
-            assert_close(&c, &want, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
         }
+        // CSR and BCSR × {Tiled, ParallelTiled}.
+        assert_eq!(panel_ran, 4, "B-panel SpMM plans missing from the space");
     }
 
     #[test]
-    fn trsv_rejects_non_serial_schedules() {
-        for base in all_spmv_plans() {
-            let par = base.with_schedule(Schedule::Parallel { threads: 2 });
-            assert!(!supports(&par, Kernel::Trsv), "{par:?}");
-        }
+    fn spmm_panel_cols_is_sane() {
+        assert_eq!(spmm_panel_cols(4096, 100), 32);
+        assert_eq!(spmm_panel_cols(4096, 16), 16); // clamped to k
+        assert_eq!(spmm_panel_cols(64, 100), 4); // floor of 4 columns
+        assert_eq!(spmm_panel_cols(4096, 1), 1); // k = 1 degenerates
     }
 }

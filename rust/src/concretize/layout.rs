@@ -93,7 +93,7 @@ impl Layout {
     }
 }
 
-fn coo_order_slug(o: CooOrder) -> &'static str {
+pub(crate) fn coo_order_slug(o: CooOrder) -> &'static str {
     match o {
         CooOrder::Unsorted => "any",
         CooOrder::RowMajor => "rm",
@@ -207,20 +207,29 @@ impl Plan {
 ///
 /// Pruning rules:
 /// - `Serial` is always legal.
-/// - TrSv is never rescheduled: its loop nest carries a true dependence
-///   over rows (x[i] needs all x[j<i]), so parallel row ranges and
-///   band-reordered accumulation are both illegal.
-/// - `Parallel` requires a layout whose output rows partition into
-///   disjoint contiguous ranges: CSR (SoA), ELL, SELL (slice ranges),
-///   BCSR (block-row ranges) and permuted JDS (prefix-property row
-///   ranges in the permuted output). Scatter-shaped layouts (COO, CSC,
-///   DIA, hybrid tails, unpermuted JDS) would need atomics or merges.
-///   The branch-free `RowWisePadded` ELL traversal is excluded: its
-///   parallel executor would be identical to the exact-length row-wise
-///   one, and duplicating the executable under two names would skew
-///   the variant tables.
-/// - `Tiled` is generated for the CSR SpMV gather only (the band split
-///   is a CSR-specific auxiliary structure).
+/// - TrSv reschedules only onto dependence **level sets**: the loop
+///   nest carries a true dependence over rows (x[i] needs all x[j]
+///   with L[i][j] ≠ 0), so plain row ranges are illegal — but the
+///   compressed SoA formats (CSR gather, CSC scatter) build level sets
+///   at `prepare()` and run each level's mutually independent rows in
+///   parallel (`Schedule::Parallel`). Band-reordered accumulation
+///   (`Tiled`) stays illegal: it would reassociate a row's sum across
+///   the dependence.
+/// - `Parallel` SpMV/SpMM requires a layout whose output rows
+///   partition into disjoint contiguous ranges: CSR (SoA), ELL, SELL
+///   (slice ranges), BCSR (block-row ranges) and permuted JDS
+///   (prefix-property row ranges in the permuted output).
+///   Scatter-shaped layouts (COO, CSC, DIA, hybrid tails, unpermuted
+///   JDS) would need atomics or merges. The branch-free
+///   `RowWisePadded` ELL traversal is excluded: its parallel executor
+///   would be identical to the exact-length row-wise one, and
+///   duplicating the executable under two names would skew the
+///   variant tables.
+/// - `Tiled` SpMV is generated for the CSR gather only (the band
+///   split is a CSR-specific auxiliary structure). `Tiled` SpMM is
+///   the B-panel sweep, generated for the register-blocked
+///   micro-kernel formats (CSR, BCSR) where a panel keeps the
+///   gathered B rows L1-resident.
 pub fn schedule_legal(
     layout: Layout,
     traversal: Traversal,
@@ -231,7 +240,16 @@ pub fn schedule_legal(
         return true;
     }
     if kernel == Kernel::Trsv {
-        return false;
+        return match schedule {
+            Schedule::Parallel { threads } => {
+                threads > 0
+                    && matches!(
+                        (layout, traversal),
+                        (Layout::Csr, Traversal::RowWise) | (Layout::Csc, Traversal::ColScatter)
+                    )
+            }
+            _ => false,
+        };
     }
     let row_partitionable = matches!(
         layout,
@@ -241,15 +259,16 @@ pub fn schedule_legal(
             | Layout::Bcsr { .. }
             | Layout::Jds { permuted: true }
     ) && traversal != Traversal::RowWisePadded;
+    let tileable = match kernel {
+        Kernel::Spmv => layout == Layout::Csr,
+        Kernel::Spmm => matches!(layout, Layout::Csr | Layout::Bcsr { .. }),
+        Kernel::Trsv => false,
+    };
     match schedule {
         Schedule::Serial => true,
         Schedule::Parallel { threads } => threads > 0 && row_partitionable,
-        Schedule::Tiled { x_block } => {
-            x_block > 0 && kernel == Kernel::Spmv && layout == Layout::Csr
-        }
-        Schedule::ParallelTiled { threads, x_block } => {
-            threads > 0 && x_block > 0 && kernel == Kernel::Spmv && layout == Layout::Csr
-        }
+        Schedule::Tiled { x_block } => x_block > 0 && tileable,
+        Schedule::ParallelTiled { threads, x_block } => threads > 0 && x_block > 0 && tileable,
     }
 }
 
@@ -508,8 +527,18 @@ mod tests {
         use Traversal::RowWise;
         let par = Schedule::Parallel { threads: 4 };
         let tiled = Schedule::Tiled { x_block: 4096 };
-        // TrSv is never rescheduled.
-        assert!(!schedule_legal(Layout::Csr, RowWise, par, Kernel::Trsv));
+        // TrSv reschedules only onto the level-capable SoA formats.
+        assert!(schedule_legal(Layout::Csr, RowWise, par, Kernel::Trsv));
+        assert!(schedule_legal(Layout::Csc, Traversal::ColScatter, par, Kernel::Trsv));
+        assert!(!schedule_legal(Layout::CsrAos, RowWise, par, Kernel::Trsv));
+        assert!(!schedule_legal(Layout::Ell(EllOrder::RowMajor), RowWise, par, Kernel::Trsv));
+        assert!(!schedule_legal(Layout::Csr, RowWise, tiled, Kernel::Trsv));
+        assert!(!schedule_legal(
+            Layout::Csr,
+            RowWise,
+            Schedule::ParallelTiled { threads: 4, x_block: 4096 },
+            Kernel::Trsv
+        ));
         assert!(schedule_legal(Layout::Csr, RowWise, Schedule::Serial, Kernel::Trsv));
         // Parallel only for row-partitionable layouts.
         assert!(schedule_legal(Layout::Csr, RowWise, par, Kernel::Spmv));
@@ -528,12 +557,17 @@ mod tests {
             par,
             Kernel::Spmv
         ));
-        // Tiling is the CSR SpMV gather optimization only.
+        // Tiled SpMV is the CSR band gather; tiled SpMM is the B-panel
+        // sweep of the register-blocked micro-kernel formats.
         assert!(schedule_legal(Layout::Csr, RowWise, tiled, Kernel::Spmv));
-        assert!(!schedule_legal(Layout::Csr, RowWise, tiled, Kernel::Spmm));
+        assert!(schedule_legal(Layout::Csr, RowWise, tiled, Kernel::Spmm));
+        assert!(schedule_legal(Layout::Bcsr { br: 2, bc: 2 }, Traversal::Blocked, tiled, Kernel::Spmm));
+        assert!(!schedule_legal(Layout::Bcsr { br: 2, bc: 2 }, Traversal::Blocked, tiled, Kernel::Spmv));
         assert!(!schedule_legal(Layout::Ell(EllOrder::RowMajor), RowWise, tiled, Kernel::Spmv));
+        assert!(!schedule_legal(Layout::Ell(EllOrder::RowMajor), RowWise, tiled, Kernel::Spmm));
         let pt = Schedule::ParallelTiled { threads: 4, x_block: 4096 };
         assert!(schedule_legal(Layout::Csr, RowWise, pt, Kernel::Spmv));
-        assert!(!schedule_legal(Layout::Csr, RowWise, pt, Kernel::Spmm));
+        assert!(schedule_legal(Layout::Csr, RowWise, pt, Kernel::Spmm));
+        assert!(!schedule_legal(Layout::Sell { s: 8 }, Traversal::SlicePlane, pt, Kernel::Spmm));
     }
 }

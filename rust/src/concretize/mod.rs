@@ -1,12 +1,16 @@
 //! Concretization (paper §6.2.1): the one-to-one mapping of materialized
 //! loop structures and symbolic `PA` sequences onto physically allocated
 //! arrays + executable loops. Three stages: `layout` (state → plan),
-//! `exec` (plan + reservoir → storage + bound executor), `codegen`
-//! (plan → inspectable C-like source text).
+//! `exec` (plan + reservoir → `SparseOps` storage + schedule driver),
+//! `codegen` (plan → inspectable C-like source text). The format
+//! registry (`exec::build_ops`) and the `storage::ops::SparseOps` trait
+//! replace the old per-storage enum dispatch.
 
 pub mod codegen;
 pub mod exec;
 pub mod layout;
 
-pub use exec::{prepare, prepare_many, supports, Prepared, Storage};
+pub use exec::{
+    build_ops, prepare, prepare_many, prepare_many_counted, spmm_panel_cols, supports, Prepared,
+};
 pub use layout::{plans, schedule_legal, ConcretizeError, Layout, Plan, Schedule, Traversal};

@@ -383,12 +383,27 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
         }
 
         // Stage 3 — measure the shortlist. Storage for the whole
-        // shortlist is assembled in parallel (`prepare_many`); timing
+        // shortlist is assembled in parallel through the plan-keyed
+        // cache (`prepare_many` builds each distinct layout once and
+        // Arc-shares it across schedule/traversal variants); timing
         // itself stays single-threaded per the paper protocol.
         let shortlist_execs: Vec<concretize::Plan> =
             shortlist.iter().map(|&pi| execs[pi]).collect();
         let prepared =
             concretize::prepare_many(&shortlist_execs, m, crate::util::pool::default_workers());
+        // Schedule auxiliaries (band splits, TrSv level sets) are part
+        // of the generated data structure: build them here — in
+        // parallel, like the storage itself — not inside the timed
+        // region.
+        crate::util::pool::parallel_map(
+            prepared.len(),
+            crate::util::pool::default_workers(),
+            |i| match kernel {
+                Kernel::Spmv => prepared[i].ensure_bands(),
+                Kernel::Trsv => prepared[i].ensure_levels(),
+                Kernel::Spmm => {}
+            },
+        );
         for (si, &pi) in shortlist.iter().enumerate() {
             let p = &prepared[si];
             let id = &plans[pi].id;
@@ -676,6 +691,20 @@ mod tests {
         let r = run(Kernel::Trsv, Arch::HostSmall, &cfg, None);
         assert_eq!(r.libs.routines.len(), 4); // MTL4 + SL++ CRS/CCS
         assert!(!r.gens.routines.is_empty());
+    }
+
+    #[test]
+    fn scheduled_trsv_sweep_measures_level_plans() {
+        // The last Serial-pinned kernel is unpinned: a scheduled TrSv
+        // sweep enumerates (and oracle-validates, inside run()) the
+        // level-scheduled CSR/CSC plans.
+        let mut cfg = SweepConfig::quick_scheduled();
+        cfg.matrices = Some(vec![0]);
+        let r = run(Kernel::Trsv, Arch::HostLarge, &cfg, None);
+        let level_plans: Vec<_> =
+            r.gens.routines.iter().filter(|n| n.contains("@par(")).collect();
+        assert_eq!(level_plans.len(), 2, "csr+csc level plans: {:?}", r.gens.routines);
+        assert!(r.gens.routines.iter().all(|n| !n.contains("@tile")));
     }
 
     #[test]

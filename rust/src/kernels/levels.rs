@@ -1,0 +1,390 @@
+//! Level-scheduled triangular solve — the executor behind
+//! `Schedule::Parallel` TrSv plans, removing the last kernel that was
+//! pinned to `Serial`.
+//!
+//! Forward substitution carries a true dependence (`x[i]` needs every
+//! `x[j]` with `L[i][j] != 0`), so row ranges cannot simply be split
+//! across workers the way SpMV output rows can. But the dependence
+//! graph is a DAG whose *level sets* — row `i` belongs to level
+//! `1 + max(level[j])` over its dependencies — partition the rows into
+//! waves of mutually independent solves. [`LevelSets`] materializes
+//! that partition once at `prepare()` time (O(nnz)); the kernels then
+//! execute level-by-level with all workers advancing in lockstep.
+//!
+//! Synchronization is a spin barrier over `std::sync::atomic` (no
+//! locks, no per-level thread spawns): workers are spawned once per
+//! solve and the `x` cells are shared as relaxed `AtomicU64` bit
+//! patterns, with the barrier's acquire/release edges ordering every
+//! cross-level read after the write it depends on. Within a level each
+//! row is written by exactly one worker, and the per-row dot product
+//! runs in the same order as the serial kernel, so the CSR solve is
+//! *bit-identical* to `trsv::csr` (the CSC scatter reassociates sums
+//! across levels and agrees to rounding).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::storage::{Csc, Csr};
+use crate::util::pool::scoped_run;
+
+/// Rows of a strictly-lower triangular matrix grouped into dependence
+/// level sets: every row in level `l` depends only on rows in levels
+/// `< l`. Built once at `prepare()` time; part of the generated data
+/// structure of a parallel TrSv plan.
+#[derive(Clone, Debug)]
+pub struct LevelSets {
+    /// `level_ptr[l]..level_ptr[l+1]` indexes `rows` for level `l`.
+    pub level_ptr: Vec<u32>,
+    /// All rows, grouped by level, ascending within each level.
+    pub rows: Vec<u32>,
+}
+
+impl LevelSets {
+    fn from_levels(level: &[u32]) -> Self {
+        let n = level.len();
+        let nlevels = level.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
+        let mut level_ptr = vec![0u32; nlevels + 1];
+        for &l in level {
+            level_ptr[l as usize + 1] += 1;
+        }
+        for l in 0..nlevels {
+            level_ptr[l + 1] += level_ptr[l];
+        }
+        let mut rows = vec![0u32; n];
+        let mut next = level_ptr.clone();
+        // Row index order is ascending, so each level's slice stays
+        // ascending — the deterministic intra-level visit order.
+        for (i, &l) in level.iter().enumerate() {
+            rows[next[l as usize] as usize] = i as u32;
+            next[l as usize] += 1;
+        }
+        LevelSets { level_ptr, rows }
+    }
+
+    /// Level sets of a strictly-lower CSR matrix:
+    /// `level[i] = 1 + max(level[j])` over row `i`'s stored columns.
+    pub fn from_csr(l: &Csr) -> Self {
+        LevelSets::from_levels(&assign_levels(&l.row_ptr, &l.cols))
+    }
+
+    /// Level sets of a strictly-lower CSC matrix: when column `j` is
+    /// visited, `level[j]` is final (all its updates came from earlier
+    /// columns), so its entries push `level[j] + 1` to their rows.
+    pub fn from_csc(l: &Csc) -> Self {
+        let n = l.nrows;
+        let mut level = vec![0u32; n];
+        for j in 0..l.ncols.min(n) {
+            let lj = level[j] + 1;
+            let (s, e) = (l.col_ptr[j] as usize, l.col_ptr[j + 1] as usize);
+            for &r in &l.rows[s..e] {
+                debug_assert!((r as usize) > j, "storage must be strictly lower");
+                let cell = &mut level[r as usize];
+                *cell = (*cell).max(lj);
+            }
+        }
+        LevelSets::from_levels(&level)
+    }
+
+    pub fn nlevels(&self) -> usize {
+        self.level_ptr.len().saturating_sub(1)
+    }
+
+    /// Rows of level `l`, ascending.
+    pub fn level_rows(&self, l: usize) -> &[u32] {
+        &self.rows[self.level_ptr[l] as usize..self.level_ptr[l + 1] as usize]
+    }
+
+    /// Widest level — the solve's maximum exploitable parallelism.
+    pub fn max_width(&self) -> usize {
+        (0..self.nlevels()).map(|l| self.level_rows(l).len()).max().unwrap_or(0)
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.level_ptr.len() + self.rows.len()) * 4
+    }
+}
+
+/// Dependence-level assignment over CSR-shaped `(row_ptr, cols)` arrays
+/// of a strictly-lower structure: `level[i] = 1 + max(level[dep])`.
+/// Shared by [`LevelSets::from_csr`] and `MatrixStats`' `dep_levels`
+/// estimate so the two can never drift.
+pub fn assign_levels(row_ptr: &[u32], cols: &[u32]) -> Vec<u32> {
+    let n = row_ptr.len().saturating_sub(1);
+    let mut level = vec![0u32; n];
+    for i in 0..n {
+        let (s, e) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
+        let mut lv = 0u32;
+        for &c in &cols[s..e] {
+            debug_assert!((c as usize) < i, "storage must be strictly lower");
+            lv = lv.max(level[c as usize] + 1);
+        }
+        level[i] = lv;
+    }
+    level
+}
+
+/// Sense-reversing spin barrier over atomics: one `wait()` per worker
+/// per level, no locks, no syscalls on the fast path. The release on
+/// the generation bump pairs with the acquire in the spin loop, so
+/// every write before a `wait()` is visible after it.
+struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    fn new(n: usize) -> Self {
+        SpinBarrier { n, count: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
+    }
+
+    fn wait(&self) {
+        let arrived_gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::AcqRel);
+        } else {
+            let mut polls = 0u32;
+            while self.generation.load(Ordering::Acquire) == arrived_gen {
+                std::hint::spin_loop();
+                polls += 1;
+                // Pure spin on the fast path; after ~2^12 polls assume
+                // oversubscription (fewer cores than workers — CI
+                // runners) and let the OS run the stragglers.
+                if polls >= 1 << 12 {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// The contiguous share of `len` items worker `w` of `t` owns.
+fn share(len: usize, w: usize, t: usize) -> Range<usize> {
+    (w * len / t)..((w + 1) * len / t)
+}
+
+fn read(xa: &[AtomicU64], i: usize) -> f64 {
+    f64::from_bits(xa[i].load(Ordering::Relaxed))
+}
+
+fn write(xa: &[AtomicU64], i: usize, v: f64) {
+    xa[i].store(v.to_bits(), Ordering::Relaxed);
+}
+
+/// Level-scheduled CSR forward substitution (gather form). Each level's
+/// rows are split contiguously across the workers; every row's dot
+/// product runs in serial order, so the result is bit-identical to
+/// `trsv::csr`.
+pub fn csr_trsv_level(l: &Csr, lv: &LevelSets, b: &[f64], x: &mut [f64], threads: usize) {
+    let t = threads.max(1).min(l.nrows.max(1));
+    if t <= 1 || lv.nlevels() <= 1 {
+        return crate::kernels::trsv::csr(l, b, x);
+    }
+    let xa: Vec<AtomicU64> = b.iter().map(|v| AtomicU64::new(v.to_bits())).collect();
+    {
+        let barrier = SpinBarrier::new(t);
+        let xa = &xa;
+        let barrier = &barrier;
+        let tasks: Vec<_> = (0..t)
+            .map(|w| {
+                move || {
+                    for li in 0..lv.nlevels() {
+                        let rows = lv.level_rows(li);
+                        for &i in &rows[share(rows.len(), w, t)] {
+                            let i = i as usize;
+                            let (s, e) = (l.row_ptr[i] as usize, l.row_ptr[i + 1] as usize);
+                            let sum: f64 = l.cols[s..e]
+                                .iter()
+                                .zip(&l.vals[s..e])
+                                .map(|(&c, &v)| v * read(xa, c as usize))
+                                .sum();
+                            write(xa, i, read(xa, i) - sum);
+                        }
+                        barrier.wait();
+                    }
+                }
+            })
+            .collect();
+        scoped_run(tasks);
+    }
+    for (xi, a) in x.iter_mut().zip(&xa) {
+        *xi = f64::from_bits(a.load(Ordering::Relaxed));
+    }
+}
+
+/// Level-scheduled CSC forward substitution (scatter / right-looking
+/// form, owner-computes). Workers own disjoint contiguous ranges of
+/// `x`; in each level every worker scans the level's columns and
+/// applies only the updates landing in its range (column entries are
+/// row-sorted, so the owned slice is found by binary search). Each `x`
+/// cell therefore receives its updates from a single worker in a fixed
+/// (level, column) order — deterministic for every thread count, equal
+/// to the serial solve up to rounding (the level grouping reassociates
+/// the per-row sums).
+pub fn csc_trsv_level(l: &Csc, lv: &LevelSets, b: &[f64], x: &mut [f64], threads: usize) {
+    let n = l.nrows;
+    let t = threads.max(1).min(n.max(1));
+    if t <= 1 || lv.nlevels() <= 1 {
+        return crate::kernels::trsv::csc(l, b, x);
+    }
+    let xa: Vec<AtomicU64> = b.iter().map(|v| AtomicU64::new(v.to_bits())).collect();
+    {
+        let barrier = SpinBarrier::new(t);
+        let xa = &xa;
+        let barrier = &barrier;
+        let tasks: Vec<_> = (0..t)
+            .map(|w| {
+                let own = share(n, w, t);
+                move || {
+                    for li in 0..lv.nlevels() {
+                        // x[j] is final for every level-li column j: all
+                        // its updates were scattered in earlier levels.
+                        for &j in lv.level_rows(li) {
+                            let j = j as usize;
+                            if j >= l.ncols {
+                                continue;
+                            }
+                            let xj = read(xa, j);
+                            let (s, e) = (l.col_ptr[j] as usize, l.col_ptr[j + 1] as usize);
+                            let rows = &l.rows[s..e];
+                            let lo = s + rows.partition_point(|&r| (r as usize) < own.start);
+                            let hi = s + rows.partition_point(|&r| (r as usize) < own.end);
+                            for p in lo..hi {
+                                let r = l.rows[p] as usize;
+                                write(xa, r, read(xa, r) - l.vals[p] * xj);
+                            }
+                        }
+                        barrier.wait();
+                    }
+                }
+            })
+            .collect();
+        scoped_run(tasks);
+    }
+    for (xi, a) in x.iter_mut().zip(&xa) {
+        *xi = f64::from_bits(a.load(Ordering::Relaxed));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gen, TriMat};
+    use crate::util::prop::assert_close;
+
+    fn lower(m: &TriMat) -> TriMat {
+        m.strictly_lower()
+    }
+
+    fn check_both(l: &TriMat, threads: usize) {
+        let b: Vec<f64> = (0..l.nrows).map(|i| ((i % 11) as f64 - 5.0) * 0.4 + 0.1).collect();
+        let want = l.trsv_unit_lower_ref(&b);
+        let csr = Csr::from_tuples(l);
+        let lv = LevelSets::from_csr(&csr);
+        let mut x = vec![0.0; l.nrows];
+        csr_trsv_level(&csr, &lv, &b, &mut x, threads);
+        assert_close(&x, &want, 1e-9).unwrap_or_else(|e| panic!("csr t={threads}: {e}"));
+
+        let csc = Csc::from_tuples(l);
+        let lvc = LevelSets::from_csc(&csc);
+        assert_eq!(lv.level_ptr, lvc.level_ptr, "CSR/CSC level structure must agree");
+        assert_eq!(lv.rows, lvc.rows);
+        csc_trsv_level(&csc, &lvc, &b, &mut x, threads);
+        assert_close(&x, &want, 1e-9).unwrap_or_else(|e| panic!("csc t={threads}: {e}"));
+    }
+
+    #[test]
+    fn level_sets_partition_rows() {
+        let l = lower(&gen::uniform_random(40, 40, 300, 91));
+        let csr = Csr::from_tuples(&l);
+        let lv = LevelSets::from_csr(&csr);
+        assert_eq!(lv.rows.len(), 40);
+        let mut seen: Vec<u32> = lv.rows.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..40).collect::<Vec<u32>>());
+        // Every row's dependencies sit in strictly earlier levels.
+        let mut level_of = vec![0usize; 40];
+        for li in 0..lv.nlevels() {
+            for &i in lv.level_rows(li) {
+                level_of[i as usize] = li;
+            }
+        }
+        for i in 0..csr.nrows {
+            let (s, e) = (csr.row_ptr[i] as usize, csr.row_ptr[i + 1] as usize);
+            for &c in &csr.cols[s..e] {
+                assert!(level_of[c as usize] < level_of[i], "dep not in earlier level");
+            }
+        }
+        assert!(lv.max_width() >= 1);
+        assert!(lv.bytes() > 0);
+    }
+
+    #[test]
+    fn single_chain_is_fully_serial() {
+        // x[i] depends on x[i-1]: one row per level, nlevels == n.
+        let mut m = TriMat::new(12, 12);
+        for i in 1..12 {
+            m.push(i, i - 1, 0.5);
+        }
+        let csr = Csr::from_tuples(&m);
+        let lv = LevelSets::from_csr(&csr);
+        assert_eq!(lv.nlevels(), 12);
+        assert_eq!(lv.max_width(), 1);
+        check_both(&m, 4);
+    }
+
+    #[test]
+    fn empty_matrix_is_one_level() {
+        let m = TriMat::new(8, 8);
+        let lv = LevelSets::from_csr(&Csr::from_tuples(&m));
+        assert_eq!(lv.nlevels(), 1);
+        assert_eq!(lv.max_width(), 8);
+        check_both(&m, 3);
+    }
+
+    #[test]
+    fn matches_serial_on_random_triangles() {
+        for seed in [92, 93, 94] {
+            let l = lower(&gen::uniform_random(50, 50, 420, seed));
+            for t in [1, 2, 3, 4, 8] {
+                check_both(&l, t);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_serial_on_dense_rows_and_banded() {
+        // One dense row depending on everything before it.
+        let mut m = TriMat::new(20, 20);
+        for j in 0..19 {
+            m.push(19, j, (j as f64 - 9.0) * 0.1);
+        }
+        m.push(3, 1, 0.7);
+        m.push(7, 3, -0.4);
+        check_both(&m, 4);
+        // Banded: long dependence chains, narrow levels.
+        check_both(&lower(&gen::banded(40, 3, 0.9, 95)), 4);
+    }
+
+    #[test]
+    fn csr_level_solve_is_bit_identical_to_serial() {
+        let l = lower(&gen::uniform_random(60, 60, 500, 96));
+        let csr = Csr::from_tuples(&l);
+        let lv = LevelSets::from_csr(&csr);
+        let b: Vec<f64> = (0..60).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut serial = vec![0.0; 60];
+        crate::kernels::trsv::csr(&csr, &b, &mut serial);
+        for t in [2, 3, 5] {
+            let mut x = vec![0.0; 60];
+            csr_trsv_level(&csr, &lv, &b, &mut x, t);
+            assert_eq!(x, serial, "t={t}: per-row dot order must match serial exactly");
+        }
+    }
+
+    #[test]
+    fn threads_beyond_rows_ok() {
+        let l = lower(&gen::uniform_random(5, 5, 8, 97));
+        check_both(&l, 16);
+    }
+}

@@ -3,6 +3,7 @@
 //! transformation chain. `search::tree` binds these into the paper's
 //! variant space; `concretize::codegen` emits the matching C-like text.
 
+pub mod levels;
 pub mod par;
 pub mod spmm;
 pub mod spmv;

@@ -73,7 +73,7 @@ pub fn balanced_ranges(
 
 /// Split `y` into per-range `&mut` chunks (range `(lo, hi)` gets
 /// `y[lo * unit..hi * unit]`, the tail chunk clamped to `y.len()`).
-fn chunks_for<'a>(
+pub(crate) fn chunks_for<'a>(
     mut y: &'a mut [f64],
     ranges: &[(usize, usize)],
     unit: usize,
@@ -94,7 +94,7 @@ fn chunks_for<'a>(
 
 // ---------------------------------------------------------------- CSR
 
-fn csr_rows(a: &Csr, x: &[f64], y: &mut [f64], row0: usize) {
+pub(crate) fn csr_rows(a: &Csr, x: &[f64], y: &mut [f64], row0: usize) {
     for (r, yi) in y.iter_mut().enumerate() {
         let i = row0 + r;
         let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
@@ -122,7 +122,7 @@ pub fn csr_spmv(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
     scoped_run(tasks);
 }
 
-fn csr_rows_mm(a: &Csr, b: &[f64], k: usize, c: &mut [f64], row0: usize) {
+pub(crate) fn csr_rows_mm(a: &Csr, b: &[f64], k: usize, c: &mut [f64], row0: usize) {
     for r in 0..c.len() / k {
         let i = row0 + r;
         let crow = &mut c[r * k..r * k + k];
@@ -213,7 +213,7 @@ fn ell_len_prefix(a: &Ell) -> Vec<usize> {
     pref
 }
 
-fn ell_rows(a: &Ell, x: &[f64], y: &mut [f64], row0: usize) {
+pub(crate) fn ell_rows(a: &Ell, x: &[f64], y: &mut [f64], row0: usize) {
     for (r, yi) in y.iter_mut().enumerate() {
         let i = row0 + r;
         let mut sum = 0.0;
@@ -241,7 +241,7 @@ pub fn ell_spmv(a: &Ell, x: &[f64], y: &mut [f64], threads: usize) {
     scoped_run(tasks);
 }
 
-fn ell_rows_mm(a: &Ell, b: &[f64], k: usize, c: &mut [f64], row0: usize) {
+pub(crate) fn ell_rows_mm(a: &Ell, b: &[f64], k: usize, c: &mut [f64], row0: usize) {
     for r in 0..c.len() / k {
         let i = row0 + r;
         let crow = &mut c[r * k..r * k + k];
@@ -272,7 +272,14 @@ pub fn ell_spmm(a: &Ell, b: &[f64], k: usize, c: &mut [f64], threads: usize) {
 
 // --------------------------------------------------------------- SELL
 
-fn sell_slices(a: &Sell, x: &[f64], y: &mut [f64], slice0: usize, slice1: usize, row0: usize) {
+pub(crate) fn sell_slices(
+    a: &Sell,
+    x: &[f64],
+    y: &mut [f64],
+    slice0: usize,
+    slice1: usize,
+    row0: usize,
+) {
     for sb in slice0..slice1 {
         let lo = sb * a.s;
         let hi = ((sb + 1) * a.s).min(a.nrows);
@@ -308,7 +315,7 @@ pub fn sell_spmv(a: &Sell, x: &[f64], y: &mut [f64], threads: usize) {
     scoped_run(tasks);
 }
 
-fn sell_slices_mm(
+pub(crate) fn sell_slices_mm(
     a: &Sell,
     bm: &[f64],
     k: usize,
@@ -358,7 +365,14 @@ pub fn sell_spmm(a: &Sell, bm: &[f64], k: usize, c: &mut [f64], threads: usize) 
 
 // --------------------------------------------------------------- BCSR
 
-fn bcsr_block_rows(a: &Bcsr, x: &[f64], y: &mut [f64], brow0: usize, brow1: usize, row0: usize) {
+pub(crate) fn bcsr_block_rows(
+    a: &Bcsr,
+    x: &[f64],
+    y: &mut [f64],
+    brow0: usize,
+    brow1: usize,
+    row0: usize,
+) {
     y.fill(0.0);
     let (br, bc) = (a.br, a.bc);
     for bi in brow0..brow1 {
@@ -394,7 +408,7 @@ pub fn bcsr_spmv(a: &Bcsr, x: &[f64], y: &mut [f64], threads: usize) {
     scoped_run(tasks);
 }
 
-fn bcsr_block_rows_mm(
+pub(crate) fn bcsr_block_rows_mm(
     a: &Bcsr,
     b: &[f64],
     k: usize,

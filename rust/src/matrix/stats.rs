@@ -32,6 +32,11 @@ pub struct MatrixStats {
     pub avg_bandwidth: f64,
     /// `nnz / (nrows * ncols)`.
     pub density: f64,
+    /// Dependence level count of the strictly-lower triangle (the TrSv
+    /// critical path): rows partition into `dep_levels` waves of
+    /// mutually independent solves. 1 = fully parallel, `nrows` = one
+    /// serial chain. Drives the level-scheduled TrSv cost term.
+    pub dep_levels: usize,
 }
 
 impl MatrixStats {
@@ -63,6 +68,7 @@ impl MatrixStats {
         }
         let avg_bandwidth = band_sum as f64 / (nnz.max(1)) as f64;
         let density = nnz as f64 / (nr * ncols.max(1) as f64);
+        let dep_levels = dep_levels(m);
         MatrixStats {
             nrows,
             ncols,
@@ -74,6 +80,7 @@ impl MatrixStats {
             bandwidth,
             avg_bandwidth,
             density,
+            dep_levels,
         }
     }
 
@@ -99,7 +106,18 @@ impl MatrixStats {
             bandwidth,
             avg_bandwidth: bandwidth as f64 * 0.5,
             density: nnz as f64 / (nrows.max(1) * ncols.max(1)) as f64,
+            // Pessimistic default: a full serial chain. Tests that
+            // exercise the TrSv level term override via
+            // `with_dep_levels`.
+            dep_levels: nrows.max(1),
         }
+    }
+
+    /// `self` with the TrSv dependence level count replaced (synthetic
+    /// statistics for the cost-model tests).
+    pub fn with_dep_levels(mut self, dep_levels: usize) -> Self {
+        self.dep_levels = dep_levels.max(1);
+        self
     }
 
     /// The "typical suite matrix" used to rank plans when no concrete
@@ -126,6 +144,45 @@ impl MatrixStats {
         }
         (self.nrows * self.row_max) as f64 / self.nnz as f64
     }
+
+    /// Mean rows per dependence level — the average parallel width a
+    /// level-scheduled TrSv can exploit.
+    pub fn level_width(&self) -> f64 {
+        self.nrows.max(1) as f64 / self.dep_levels.max(1) as f64
+    }
+}
+
+/// Number of dependence level sets of `m`'s strictly-lower triangle
+/// (only entries with `col < row` participate — for the lowered TrSv
+/// operand that is every entry). One counting-sort pass groups the
+/// lower columns by row, then the level assignment shared with the
+/// executable level sets (`kernels::levels::assign_levels`) runs over
+/// the CSR-shaped arrays, so the estimate cannot drift from
+/// `LevelSets::from_csr` on strictly-lower storage.
+fn dep_levels(m: &TriMat) -> usize {
+    let n = m.nrows;
+    if n == 0 {
+        return 1;
+    }
+    let mut row_ptr = vec![0u32; n + 1];
+    for e in &m.entries {
+        if (e.col as usize) < (e.row as usize) {
+            row_ptr[e.row as usize + 1] += 1;
+        }
+    }
+    for i in 0..n {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let mut cols = vec![0u32; row_ptr[n] as usize];
+    let mut next = row_ptr.clone();
+    for e in &m.entries {
+        if (e.col as usize) < (e.row as usize) {
+            cols[next[e.row as usize] as usize] = e.col;
+            next[e.row as usize] += 1;
+        }
+    }
+    let level = crate::kernels::levels::assign_levels(&row_ptr, &cols);
+    level.iter().copied().max().unwrap_or(0) as usize + 1
 }
 
 #[cfg(test)]
@@ -184,6 +241,42 @@ mod tests {
         assert_eq!(s.row_cv(), 0.0);
         assert_eq!(s.ell_fill(), 1.0);
         assert_eq!(s.density, 0.0);
+        assert_eq!(s.dep_levels, 1);
+        assert_eq!(s.level_width(), 6.0);
+    }
+
+    #[test]
+    fn dep_levels_track_the_lower_critical_path() {
+        // Single chain: x[i] depends on x[i-1] → n levels.
+        let mut chain = TriMat::new(10, 10);
+        for i in 1..10 {
+            chain.push(i, i - 1, 1.0);
+        }
+        assert_eq!(MatrixStats::of(&chain).dep_levels, 10);
+        // Strictly-upper entries carry no TrSv dependence.
+        let mut upper = TriMat::new(10, 10);
+        for i in 1..10 {
+            upper.push(i - 1, i, 1.0);
+        }
+        assert_eq!(MatrixStats::of(&upper).dep_levels, 1);
+        // One fan-in row: everything else is level 0.
+        let mut fan = TriMat::new(10, 10);
+        for j in 0..9 {
+            fan.push(9, j, 1.0);
+        }
+        let s = MatrixStats::of(&fan);
+        assert_eq!(s.dep_levels, 2);
+        assert_eq!(s.level_width(), 5.0);
+        // Matches the executable level sets on a lowered matrix.
+        let l = gen::uniform_random(30, 30, 180, 12).strictly_lower();
+        let lv = crate::kernels::levels::LevelSets::from_csr(
+            &crate::storage::Csr::from_tuples(&l),
+        );
+        assert_eq!(MatrixStats::of(&l).dep_levels, lv.nlevels());
+        // Synthetic stats default to the pessimistic serial chain.
+        let syn = MatrixStats::synthetic(100, 100, 4.0, 1.0, 8, 50);
+        assert_eq!(syn.dep_levels, 100);
+        assert_eq!(syn.with_dep_levels(4).dep_levels, 4);
     }
 
     #[test]

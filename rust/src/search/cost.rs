@@ -33,8 +33,6 @@ use crate::storage::CooOrder;
 /// summary of an `coordinator::sweep::Arch`.
 #[derive(Clone, Copy, Debug)]
 pub struct CostParams {
-    /// Per-core L1 data cache (bytes).
-    pub l1_bytes: f64,
     /// Last-level cache a working set must fit in to gather cheaply.
     pub l2_bytes: f64,
     /// Sequential stream bandwidth (bytes/s).
@@ -47,6 +45,9 @@ pub struct CostParams {
     pub loop_overhead: f64,
     /// Per-thread spawn+join cost of one scoped-thread invocation.
     pub spawn_overhead: f64,
+    /// Per-level spin-barrier cost of the level-scheduled TrSv
+    /// (atomics only, no syscalls — far below `spawn_overhead`).
+    pub sync_overhead: f64,
     /// Worker threads the architecture exposes to parallel schedules.
     pub threads: usize,
 }
@@ -55,13 +56,13 @@ impl CostParams {
     /// The paper-protocol single-core machine (Xeon 5150 stand-in).
     pub fn host_small() -> Self {
         CostParams {
-            l1_bytes: 32e3,
             l2_bytes: 4e6,
             stream_bw: 8e9,
             gather_bw: 1.5e9,
             flop_rate: 4e9,
             loop_overhead: 1.5e-9,
             spawn_overhead: 2.5e-5,
+            sync_overhead: 4e-7,
             threads: 1,
         }
     }
@@ -69,13 +70,13 @@ impl CostParams {
     /// The modern multi-core machine (Xeon E5 stand-in).
     pub fn host_large(threads: usize) -> Self {
         CostParams {
-            l1_bytes: 48e3,
             l2_bytes: 8e6,
             stream_bw: 20e9,
             gather_bw: 4e9,
             flop_rate: 8e9,
             loop_overhead: 1.0e-9,
             spawn_overhead: 2.5e-5,
+            sync_overhead: 3e-7,
             threads: threads.max(1),
         }
     }
@@ -87,13 +88,13 @@ impl CostParams {
 pub struct Resources {
     /// Sequentially streamed bytes per invocation (structure + output).
     pub streamed_bytes: f64,
+    /// The stored-structure part of `streamed_bytes` alone — what a
+    /// B-panel SpMM sweep re-streams once per panel.
+    pub structure_bytes: f64,
     /// Randomly gathered bytes per invocation (`x` reads / `y` scatter).
     pub gathered_bytes: f64,
     /// Working set the gathers revisit (what wants to be L2-resident).
     pub gather_working_set: f64,
-    /// Per-row working set (one row of structure + one output row) —
-    /// what wants to be L1-resident.
-    pub l1_working_set: f64,
     /// Floating-point operations per invocation.
     pub flops: f64,
     /// Inner-loop headers executed (rows / planes / diagonals / blocks).
@@ -216,17 +217,20 @@ fn layout_resources(
 
     Resources {
         streamed_bytes: stored + out_bytes + x_stream,
+        structure_bytes: stored,
         gathered_bytes: gathered,
         gather_working_set: ws,
-        l1_working_set: stats.row_mean * 12.0 + 8.0 * kf,
         flops: 2.0 * slots * kf,
         loop_headers: headers,
         parallel_grain: grain.max(1),
     }
 }
 
-/// Full resource descriptor of a plan (schedule-aware: tiled schedules
-/// add their per-band split traffic and shrink the gather working set).
+/// Full resource descriptor of a plan (schedule-aware). Tiled SpMV
+/// adds its per-band split traffic and shrinks the gather working set
+/// to one `x` band; tiled SpMM re-streams the stored structure once
+/// per B panel in exchange for shrinking the gathered B-row granule
+/// (and working set) to the panel width.
 pub fn resources(
     kernel: Kernel,
     dense_k: usize,
@@ -237,11 +241,26 @@ pub fn resources(
     let n = stats.nrows.max(1) as f64;
     let nc = stats.ncols.max(1) as f64;
     if let Schedule::Tiled { x_block } | Schedule::ParallelTiled { x_block, .. } = exec.schedule {
-        let nbands = (nc / x_block.max(1) as f64).ceil().max(1.0);
-        // Each band re-streams the split row and the partial sums, but
-        // the gather working set shrinks to one x band.
-        r.streamed_bytes += nbands * n * (4.0 + 16.0);
-        r.gather_working_set = r.gather_working_set.min(x_block as f64 * 8.0);
+        match kernel {
+            Kernel::Spmv => {
+                let nbands = (nc / x_block.max(1) as f64).ceil().max(1.0);
+                // Each band re-streams the split row and the partial
+                // sums, but the gather working set shrinks to one x
+                // band.
+                r.streamed_bytes += nbands * n * (4.0 + 16.0);
+                r.gather_working_set = r.gather_working_set.min(x_block as f64 * 8.0);
+            }
+            Kernel::Spmm => {
+                let k = dense_k.max(1);
+                let panel = crate::concretize::spmm_panel_cols(x_block, k);
+                let npanels = (k as f64 / panel as f64).ceil().max(1.0);
+                r.streamed_bytes += r.structure_bytes * (npanels - 1.0);
+                r.loop_headers *= npanels;
+                r.gather_working_set =
+                    r.gather_working_set.min(nc * 8.0 * panel as f64);
+            }
+            Kernel::Trsv => {}
+        }
     }
     r
 }
@@ -275,6 +294,18 @@ pub fn predict(
         Schedule::Serial | Schedule::Tiled { .. } => {
             let dep = if kernel == Kernel::Trsv { 1.2 } else { 1.0 };
             (core + headers) * dep
+        }
+        Schedule::Parallel { threads } if kernel == Kernel::Trsv => {
+            // Level-scheduled solve: the speedup is capped by the mean
+            // level width (`nrows / dep_levels`) and every level pays
+            // one spin-barrier sync — a banded matrix with its
+            // near-serial chain is predicted (correctly) to lose badly.
+            let t = threads.max(1);
+            let eff_threads = (t.min(p.threads.max(1)) as f64).min(stats.level_width()).max(1.0);
+            let eff = 0.9 / (1.0 + stats.row_cv() * 0.25);
+            (core + headers) / (eff_threads * eff).max(1.0)
+                + stats.dep_levels as f64 * p.sync_overhead * t as f64
+                + p.spawn_overhead * t as f64
         }
         Schedule::Parallel { threads } | Schedule::ParallelTiled { threads, .. } => {
             let t = threads.max(1);
@@ -402,6 +433,50 @@ mod tests {
             predict(Kernel::Spmv, 1, &l2_band, &huge, &p)
                 < predict(Kernel::Spmv, 1, &csr(), &huge, &p),
             "tiling must pay off once the gather working set spills"
+        );
+    }
+
+    #[test]
+    fn level_trsv_wins_only_when_levels_are_wide() {
+        let p = CostParams::host_large(8);
+        let serial = Plan::serial(Layout::Csr, Traversal::RowWise);
+        let par = serial.with_schedule(Schedule::Parallel { threads: 8 });
+        // Wide levels: 200k rows in ~40 waves → near-full speedup.
+        let wide = MatrixStats::synthetic(200_000, 200_000, 12.0, 16.0, 30, 100_000)
+            .with_dep_levels(40);
+        assert!(
+            predict(Kernel::Trsv, 1, &par, &wide, &p) < predict(Kernel::Trsv, 1, &serial, &wide, &p),
+            "level schedule should win on wide level sets"
+        );
+        // A serial chain (banded): one row per level, per-level sync
+        // swamps any parallelism.
+        let chain = MatrixStats::synthetic(200_000, 200_000, 12.0, 16.0, 30, 3);
+        assert!(
+            predict(Kernel::Trsv, 1, &par, &chain, &p) > predict(Kernel::Trsv, 1, &serial, &chain, &p),
+            "level schedule must lose on a serial dependence chain"
+        );
+    }
+
+    #[test]
+    fn spmm_panel_tiling_pays_off_when_b_spills() {
+        let p = CostParams::host_small();
+        let k = 100;
+        let serial = Plan::serial(Layout::Csr, Traversal::RowWise);
+        let tiled = serial.with_schedule(Schedule::Tiled { x_block: 4096 });
+        // Scattered columns, B = 200k × 100 doubles ≫ L2: the panel
+        // sweep shrinks the gathered working set ~3×.
+        let huge = MatrixStats::synthetic(200_000, 200_000, 20.0, 100.0, 80, 150_000);
+        assert!(
+            predict(Kernel::Spmm, k, &tiled, &huge, &p)
+                < predict(Kernel::Spmm, k, &serial, &huge, &p),
+            "B-panel tiling must win once B spills the cache"
+        );
+        // Small matrix: B fits, the extra structure streams only cost.
+        let small = MatrixStats::synthetic(2000, 2000, 10.0, 9.0, 20, 1000);
+        assert!(
+            predict(Kernel::Spmm, k, &tiled, &small, &p)
+                > predict(Kernel::Spmm, k, &serial, &small, &p),
+            "B-panel tiling must cost extra when B is already resident"
         );
     }
 

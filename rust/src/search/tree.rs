@@ -236,12 +236,23 @@ mod tests {
     }
 
     #[test]
-    fn scheduled_space_trsv_stays_serial() {
+    fn scheduled_space_trsv_adds_only_level_plans() {
         let t = enumerate(Kernel::Trsv, &PlanSpace::host(8, 1024));
         assert!(!t.plans.is_empty());
-        assert!(t.plans.iter().all(|p| p.exec.schedule.is_serial()));
+        // TrSv reschedules onto level sets for SoA CSR/CSC only —
+        // never tiles, never parallelizes the other traversals.
+        let non_serial: Vec<_> =
+            t.plans.iter().filter(|p| !p.exec.schedule.is_serial()).collect();
+        assert_eq!(non_serial.len(), 2, "expected csr+csc level plans: {non_serial:?}");
+        for p in &non_serial {
+            assert!(matches!(p.exec.schedule, crate::concretize::Schedule::Parallel { .. }));
+            assert!(matches!(p.exec.layout, Layout::Csr | Layout::Csc), "{:?}", p.exec);
+            assert!(p.derivation.contains("schedule("), "{}", p.derivation);
+        }
+        assert!(t.plans.iter().any(|p| p.id == "csr.row.par8"));
+        assert!(t.plans.iter().any(|p| p.id == "csc.colscat.par8"));
         let serial = enumerate(Kernel::Trsv, &PlanSpace::serial_only());
-        assert_eq!(t.plans.len(), serial.plans.len());
+        assert_eq!(t.plans.len(), serial.plans.len() + 2);
     }
 
     #[test]

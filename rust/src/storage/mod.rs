@@ -11,6 +11,7 @@ pub mod dia;
 pub mod ell;
 pub mod hybrid;
 pub mod jds;
+pub mod ops;
 pub mod sell;
 
 pub use bcsr::Bcsr;
@@ -21,4 +22,5 @@ pub use dia::Dia;
 pub use ell::{Ell, EllOrder};
 pub use hybrid::HybridEllCoo;
 pub use jds::{Jds, JdsRows};
+pub use ops::{JdsOps, SparseOps};
 pub use sell::Sell;

@@ -1,0 +1,785 @@
+//! `SparseOps` — the format-agnostic execution interface every physical
+//! storage layout implements, replacing the executor's old
+//! schedule × storage × kernel `match` pyramids with trait dispatch.
+//!
+//! # How execution is wired
+//!
+//! A concretization plan is executed in two layers:
+//!
+//! 1. **Format layer (this trait).** Each of the 12 storage formats
+//!    implements [`SparseOps`]: the serial kernels
+//!    ([`spmv_serial`](SparseOps::spmv_serial) /
+//!    [`spmm_serial`](SparseOps::spmm_serial) /
+//!    [`trsv_serial`](SparseOps::trsv_serial), traversal-dispatched
+//!    *inside* the format), the parallel partition interface
+//!    ([`par_units`](SparseOps::par_units) +
+//!    [`spmv_range`](SparseOps::spmv_range) /
+//!    [`spmm_range`](SparseOps::spmm_range) over contiguous output
+//!    units), the B-panel SpMM kernel
+//!    ([`spmm_panel`](SparseOps::spmm_panel)), and builders for the
+//!    auxiliary structures a schedule may need
+//!    ([`build_bands`](SparseOps::build_bands) for cache-blocked SpMV,
+//!    [`build_levels`](SparseOps::build_levels) for level-scheduled
+//!    TrSv). Introspection (`bytes`, `slug`) lives here too, so the
+//!    executor never re-derives storage sizes by hand.
+//! 2. **Schedule layer (`concretize::exec`).** The registry
+//!    (`exec::build_ops`) binds a `Layout` to its storage builder once;
+//!    `Prepared` then drives the trait object through the plan's
+//!    schedule: `Serial` calls the serial kernel, `Parallel` the
+//!    partitioned driver, `Tiled`/`ParallelTiled` the band or panel
+//!    sweeps.
+//!
+//! # Adding a format (or a kernel) in one place
+//!
+//! * **New format:** implement `SparseOps` below (the serial methods
+//!   are the only mandatory ones — every schedule hook defaults to a
+//!   safe fallback), add one arm to `exec::build_ops`, and teach
+//!   `concretize::layout` how chains map to the new `Layout`. Nothing
+//!   in the executor or the sweep changes.
+//! * **New schedule capability:** formats opt in by overriding the
+//!   matching hook (`par_units` + `*_range` for row partitioning,
+//!   `supports_spmm_panel` + `spmm_panel` for B tiling, `build_levels`
+//!   + `trsv_level` for dependence-level scheduling) and declaring
+//!   legality in `layout::schedule_legal`.
+//!
+//! The default `spmv_parallel`/`spmm_parallel` drivers split the output
+//! into nnz-balanced contiguous unit ranges (rows for CSR/ELL, slices
+//! for SELL, block rows for BCSR) with each worker owning a disjoint
+//! `&mut` chunk — no locks, no atomics. Formats whose parallel
+//! decomposition is not a plain output split (permuted JDS accumulates
+//! into the permuted vector and scatters once at the end) override the
+//! drivers themselves.
+
+use std::ops::Range;
+
+use crate::concretize::layout::{coo_order_slug, Traversal};
+use crate::kernels::levels::LevelSets;
+use crate::kernels::{levels, par, spmm, spmv, trsv};
+use crate::storage::{
+    sell, Bcsr, CooAos, CooOrder, CooSoa, Csc, CscAos, Csr, CsrAos, CsrBands, Dia, Ell,
+    EllOrder, HybridEllCoo, Jds, JdsRows, Sell,
+};
+use crate::util::pool::scoped_run;
+
+/// Format-agnostic execution interface of a physical storage layout.
+/// See the module docs for the layering and the extension recipe.
+pub trait SparseOps: Send + Sync {
+    /// Stable format slug (matches `Layout::slug` for the same layout).
+    fn slug(&self) -> String;
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+    /// Total bytes of the stored structure (indices + values + any
+    /// auxiliary lists the format itself owns).
+    fn bytes(&self) -> usize;
+
+    // ---- serial executors (traversal dispatched inside the format) --
+
+    fn spmv_serial(&self, t: Traversal, x: &[f64], y: &mut [f64]);
+    fn spmm_serial(&self, t: Traversal, b: &[f64], k: usize, c: &mut [f64]);
+    fn trsv_serial(&self, _b: &[f64], _x: &mut [f64]) {
+        panic!("TrSv not generated for {} (checked by supports())", self.slug());
+    }
+
+    // ---- parallel partition interface ------------------------------
+
+    /// Number of disjoint contiguous output partitions (rows, slices,
+    /// block rows); 0 means the format has no lock-free output split.
+    fn par_units(&self) -> usize {
+        0
+    }
+
+    /// Output rows covered by one partition unit.
+    fn rows_per_unit(&self) -> usize {
+        1
+    }
+
+    /// Cumulative weight (nonzeros) of units `0..u` — the balance
+    /// function handed to `par::balanced_ranges`.
+    fn unit_weight_prefix(&self, u: usize) -> usize {
+        u
+    }
+
+    /// SpMV over units `[u0, u1)`, writing into the chunk of `y` that
+    /// starts at row `u0 * rows_per_unit()`.
+    fn spmv_range(&self, _t: Traversal, _x: &[f64], _y: &mut [f64], _u0: usize, _u1: usize) {
+        panic!("{} has no partitioned SpMV (schedule_legal admits none)", self.slug());
+    }
+
+    /// SpMM over units `[u0, u1)` into the matching chunk of `c`.
+    fn spmm_range(
+        &self,
+        _t: Traversal,
+        _b: &[f64],
+        _k: usize,
+        _c: &mut [f64],
+        _u0: usize,
+        _u1: usize,
+    ) {
+        panic!("{} has no partitioned SpMM (schedule_legal admits none)", self.slug());
+    }
+
+    /// `Schedule::Parallel` SpMV driver: nnz-balanced unit ranges, one
+    /// owned output chunk per worker. Falls back to the serial nest
+    /// when the format exposes no partitions or one range suffices.
+    fn spmv_parallel(&self, t: Traversal, x: &[f64], y: &mut [f64], threads: usize) {
+        let ranges =
+            par::balanced_ranges(self.par_units(), threads, |u| self.unit_weight_prefix(u));
+        if ranges.len() <= 1 {
+            return self.spmv_serial(t, x, y);
+        }
+        let chunks = par::chunks_for(y, &ranges, self.rows_per_unit());
+        let mut tasks = Vec::with_capacity(ranges.len());
+        for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+            tasks.push(move || self.spmv_range(t, x, chunk, lo, hi));
+        }
+        scoped_run(tasks);
+    }
+
+    /// `Schedule::Parallel` SpMM driver (same split over `c` rows).
+    fn spmm_parallel(&self, t: Traversal, b: &[f64], k: usize, c: &mut [f64], threads: usize) {
+        let ranges =
+            par::balanced_ranges(self.par_units(), threads, |u| self.unit_weight_prefix(u));
+        if ranges.len() <= 1 {
+            return self.spmm_serial(t, b, k, c);
+        }
+        let chunks = par::chunks_for(c, &ranges, self.rows_per_unit() * k);
+        let mut tasks = Vec::with_capacity(ranges.len());
+        for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+            tasks.push(move || self.spmm_range(t, b, k, chunk, lo, hi));
+        }
+        scoped_run(tasks);
+    }
+
+    // ---- SpMM B-panel tiling ---------------------------------------
+
+    /// Whether `spmm_panel` is implemented (`Tiled`/`ParallelTiled`
+    /// SpMM legality mirrors this in `layout::schedule_legal`).
+    fn supports_spmm_panel(&self) -> bool {
+        false
+    }
+
+    /// SpMM restricted to the B/C column panel `cols` over the unit
+    /// range `units` (`c` is the chunk for those units, full row
+    /// stride `k`). Every (row, panel) cell is written exactly once.
+    fn spmm_panel(
+        &self,
+        _t: Traversal,
+        _b: &[f64],
+        _k: usize,
+        _c: &mut [f64],
+        _cols: Range<usize>,
+        _units: Range<usize>,
+    ) {
+        panic!("{} has no B-panel SpMM (schedule_legal admits none)", self.slug());
+    }
+
+    // ---- cache-blocked SpMV auxiliaries ----------------------------
+
+    /// Per-band row splits for `Schedule::Tiled` SpMV, built once at
+    /// `prepare()` (CSR only; other formats return `None`).
+    fn build_bands(&self, _x_block: usize) -> Option<CsrBands> {
+        None
+    }
+
+    fn spmv_tiled(&self, _bands: &CsrBands, _x: &[f64], _y: &mut [f64]) {
+        panic!("{} has no cache-blocked SpMV (schedule_legal admits none)", self.slug());
+    }
+
+    fn spmv_parallel_tiled(&self, bands: &CsrBands, x: &[f64], y: &mut [f64], _threads: usize) {
+        self.spmv_tiled(bands, x, y);
+    }
+
+    // ---- level-scheduled TrSv --------------------------------------
+
+    /// Dependence level sets for `Schedule::Parallel` TrSv, built once
+    /// at `prepare()` (compressed SoA formats only).
+    fn build_levels(&self) -> Option<LevelSets> {
+        None
+    }
+
+    fn trsv_level(&self, _lv: &LevelSets, b: &[f64], x: &mut [f64], _threads: usize) {
+        self.trsv_serial(b, x);
+    }
+}
+
+// ------------------------------------------------------------- COO --
+
+impl SparseOps for CooAos {
+    fn slug(&self) -> String {
+        format!("coo-aos-{}", coo_order_slug(self.order))
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        CooAos::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        spmv::coo_aos(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        spmm::coo_aos(self, b, k, c);
+    }
+    fn trsv_serial(&self, b: &[f64], x: &mut [f64]) {
+        trsv::coo_rowmajor(self, b, x);
+    }
+}
+
+impl SparseOps for CooSoa {
+    fn slug(&self) -> String {
+        format!("coo-soa-{}", coo_order_slug(self.order))
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        CooSoa::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        spmv::coo_soa(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        spmm::coo_soa(self, b, k, c);
+    }
+}
+
+// ------------------------------------------------------------- CSR --
+
+impl SparseOps for Csr {
+    fn slug(&self) -> String {
+        "csr".into()
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        Csr::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        spmv::csr(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        spmm::csr(self, b, k, c);
+    }
+    fn trsv_serial(&self, b: &[f64], x: &mut [f64]) {
+        trsv::csr(self, b, x);
+    }
+    fn par_units(&self) -> usize {
+        self.nrows
+    }
+    fn unit_weight_prefix(&self, u: usize) -> usize {
+        self.row_ptr[u] as usize
+    }
+    fn spmv_range(&self, _t: Traversal, x: &[f64], y: &mut [f64], u0: usize, _u1: usize) {
+        par::csr_rows(self, x, y, u0);
+    }
+    fn spmm_range(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64], u0: usize, _u1: usize) {
+        par::csr_rows_mm(self, b, k, c, u0);
+    }
+    fn supports_spmm_panel(&self) -> bool {
+        true
+    }
+    fn spmm_panel(
+        &self,
+        _t: Traversal,
+        b: &[f64],
+        k: usize,
+        c: &mut [f64],
+        cols: Range<usize>,
+        units: Range<usize>,
+    ) {
+        spmm::csr_panel(self, b, k, c, cols, units.start);
+    }
+    fn build_bands(&self, x_block: usize) -> Option<CsrBands> {
+        Some(CsrBands::build(self, x_block))
+    }
+    fn spmv_tiled(&self, bands: &CsrBands, x: &[f64], y: &mut [f64]) {
+        par::csr_spmv_tiled(self, bands, x, y);
+    }
+    fn spmv_parallel_tiled(&self, bands: &CsrBands, x: &[f64], y: &mut [f64], threads: usize) {
+        par::csr_spmv_parallel_tiled(self, bands, x, y, threads);
+    }
+    fn build_levels(&self) -> Option<LevelSets> {
+        Some(LevelSets::from_csr(self))
+    }
+    fn trsv_level(&self, lv: &LevelSets, b: &[f64], x: &mut [f64], threads: usize) {
+        levels::csr_trsv_level(self, lv, b, x, threads);
+    }
+}
+
+impl SparseOps for CsrAos {
+    fn slug(&self) -> String {
+        "csr-aos".into()
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        CsrAos::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        spmv::csr_aos(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        spmm::csr_aos(self, b, k, c);
+    }
+    fn trsv_serial(&self, b: &[f64], x: &mut [f64]) {
+        trsv::csr_aos(self, b, x);
+    }
+}
+
+// ------------------------------------------------------------- CSC --
+
+impl SparseOps for Csc {
+    fn slug(&self) -> String {
+        "csc".into()
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        Csc::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        spmv::csc(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        spmm::csc(self, b, k, c);
+    }
+    fn trsv_serial(&self, b: &[f64], x: &mut [f64]) {
+        trsv::csc(self, b, x);
+    }
+    fn build_levels(&self) -> Option<LevelSets> {
+        Some(LevelSets::from_csc(self))
+    }
+    fn trsv_level(&self, lv: &LevelSets, b: &[f64], x: &mut [f64], threads: usize) {
+        levels::csc_trsv_level(self, lv, b, x, threads);
+    }
+}
+
+impl SparseOps for CscAos {
+    fn slug(&self) -> String {
+        "csc-aos".into()
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        CscAos::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        spmv::csc_aos(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        spmm::csc_aos(self, b, k, c);
+    }
+    fn trsv_serial(&self, b: &[f64], x: &mut [f64]) {
+        trsv::csc_aos(self, b, x);
+    }
+}
+
+// ------------------------------------------------------------- ELL --
+
+impl SparseOps for Ell {
+    fn slug(&self) -> String {
+        match self.order {
+            EllOrder::RowMajor => "ell-rm".into(),
+            EllOrder::ColMajor => "ell-cm".into(),
+        }
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        Ell::bytes(self)
+    }
+    fn spmv_serial(&self, t: Traversal, x: &[f64], y: &mut [f64]) {
+        match t {
+            Traversal::RowWisePadded => spmv::ell_rowwise_padded(self, x, y),
+            Traversal::PlaneWise => spmv::ell_planewise(self, x, y),
+            _ => spmv::ell_rowwise(self, x, y),
+        }
+    }
+    fn spmm_serial(&self, t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        match t {
+            Traversal::PlaneWise => spmm::ell_planewise(self, b, k, c),
+            _ => spmm::ell_rowwise(self, b, k, c),
+        }
+    }
+    fn trsv_serial(&self, b: &[f64], x: &mut [f64]) {
+        trsv::ell_rowwise(self, b, x);
+    }
+    fn par_units(&self) -> usize {
+        self.nrows
+    }
+    // The row-length prefix is O(nrows) to recompute; the dedicated
+    // driver builds it once per call instead of per balance probe.
+    fn spmv_parallel(&self, t: Traversal, x: &[f64], y: &mut [f64], threads: usize) {
+        if threads <= 1 {
+            return self.spmv_serial(t, x, y);
+        }
+        par::ell_spmv(self, x, y, threads);
+    }
+    fn spmm_parallel(&self, t: Traversal, b: &[f64], k: usize, c: &mut [f64], threads: usize) {
+        if threads <= 1 {
+            return self.spmm_serial(t, b, k, c);
+        }
+        par::ell_spmm(self, b, k, c, threads);
+    }
+}
+
+// ------------------------------------------------------------- JDS --
+
+/// Jagged-diagonal storage + the per-diagonal row lists its unpermuted
+/// traversal needs — bound together so the executor sees one format.
+pub struct JdsOps {
+    pub jds: Jds,
+    pub rows: JdsRows,
+}
+
+impl SparseOps for JdsOps {
+    fn slug(&self) -> String {
+        if self.jds.permuted {
+            "jds".into()
+        } else {
+            "jds-unperm".into()
+        }
+    }
+    fn nrows(&self) -> usize {
+        self.jds.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.jds.ncols
+    }
+    fn bytes(&self) -> usize {
+        self.jds.bytes() + self.rows.bytes()
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        if self.jds.permuted {
+            spmv::jds_permuted(&self.jds, x, y);
+        } else {
+            spmv::jds(&self.jds, &self.rows, x, y);
+        }
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        spmm::jds(&self.jds, &self.rows, b, k, c);
+    }
+    fn par_units(&self) -> usize {
+        if self.jds.permuted {
+            self.jds.nrows
+        } else {
+            0
+        }
+    }
+    // Permuted JDS accumulates into the permuted output and scatters
+    // through `perm` once at the end — not a plain output split, so the
+    // format owns its parallel drivers.
+    fn spmv_parallel(&self, t: Traversal, x: &[f64], y: &mut [f64], threads: usize) {
+        if !self.jds.permuted || threads <= 1 {
+            return self.spmv_serial(t, x, y);
+        }
+        par::jds_spmv(&self.jds, x, y, threads);
+    }
+    fn spmm_parallel(&self, t: Traversal, b: &[f64], k: usize, c: &mut [f64], threads: usize) {
+        if !self.jds.permuted || threads <= 1 {
+            return self.spmm_serial(t, b, k, c);
+        }
+        par::jds_spmm(&self.jds, b, k, c, threads);
+    }
+}
+
+// ------------------------------------------------------------ BCSR --
+
+impl SparseOps for Bcsr {
+    fn slug(&self) -> String {
+        format!("bcsr{}x{}", self.br, self.bc)
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        Bcsr::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        spmv::bcsr(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        spmm::bcsr(self, b, k, c);
+    }
+    fn par_units(&self) -> usize {
+        self.nblock_rows
+    }
+    fn rows_per_unit(&self) -> usize {
+        self.br
+    }
+    fn unit_weight_prefix(&self, u: usize) -> usize {
+        self.block_row_ptr[u] as usize
+    }
+    fn spmv_range(&self, _t: Traversal, x: &[f64], y: &mut [f64], u0: usize, u1: usize) {
+        par::bcsr_block_rows(self, x, y, u0, u1, u0 * self.br);
+    }
+    fn spmm_range(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64], u0: usize, u1: usize) {
+        par::bcsr_block_rows_mm(self, b, k, c, u0, u1, u0 * self.br);
+    }
+    fn supports_spmm_panel(&self) -> bool {
+        true
+    }
+    fn spmm_panel(
+        &self,
+        _t: Traversal,
+        b: &[f64],
+        k: usize,
+        c: &mut [f64],
+        cols: Range<usize>,
+        units: Range<usize>,
+    ) {
+        spmm::bcsr_panel(self, b, k, c, cols, units.start, units.end);
+    }
+}
+
+// ---------------------------------------------------------- hybrid --
+
+impl SparseOps for HybridEllCoo {
+    fn slug(&self) -> String {
+        "hyb".into()
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        HybridEllCoo::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        spmv::hybrid(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        spmm::hybrid(self, b, k, c);
+    }
+    fn trsv_serial(&self, b: &[f64], x: &mut [f64]) {
+        trsv::hybrid(self, b, x);
+    }
+}
+
+// ------------------------------------------------------------ SELL --
+
+impl SparseOps for Sell {
+    fn slug(&self) -> String {
+        format!("sell{}", self.s)
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        Sell::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        sell::spmv(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        sell::spmm(self, b, k, c);
+    }
+    fn par_units(&self) -> usize {
+        self.nslices
+    }
+    fn rows_per_unit(&self) -> usize {
+        self.s
+    }
+    fn unit_weight_prefix(&self, u: usize) -> usize {
+        self.slice_ptr[u] as usize
+    }
+    fn spmv_range(&self, _t: Traversal, x: &[f64], y: &mut [f64], u0: usize, u1: usize) {
+        par::sell_slices(self, x, y, u0, u1, u0 * self.s);
+    }
+    fn spmm_range(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64], u0: usize, u1: usize) {
+        par::sell_slices_mm(self, b, k, c, u0, u1, u0 * self.s);
+    }
+}
+
+// ------------------------------------------------------------- DIA --
+
+impl SparseOps for Dia {
+    fn slug(&self) -> String {
+        "dia".into()
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        Dia::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        spmv::dia(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, _b: &[f64], _k: usize, _c: &mut [f64]) {
+        panic!("SpMM over DIA pruned by the tree");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::TriMat;
+
+    /// The fixed 8×8 reservoir the byte pins are computed against:
+    /// row lengths [2,1,3,1,2,1,3,1], nnz = 14, row_max = 3,
+    /// 5 distinct diagonals {-6,-3,-2,0,4}.
+    fn fixed8() -> TriMat {
+        let mut m = TriMat::new(8, 8);
+        for (r, c, v) in [
+            (0, 0, 1.0),
+            (0, 4, 2.0),
+            (1, 1, 3.0),
+            (2, 0, 4.0),
+            (2, 2, 5.0),
+            (2, 6, 6.0),
+            (3, 3, 7.0),
+            (4, 4, 8.0),
+            (4, 1, 9.0),
+            (5, 5, 10.0),
+            (6, 6, 11.0),
+            (6, 0, 12.0),
+            (6, 3, 13.0),
+            (7, 7, 14.0),
+        ] {
+            m.push(r, c, v);
+        }
+        m
+    }
+
+    /// The dedupe satellite: `bytes()` now lives on the trait, so pin
+    /// the exact per-format sizes once — any accidental re-derivation
+    /// (like the executor's old hand-rolled JDS arm) shows up here.
+    #[test]
+    fn bytes_pinned_per_format_on_fixed_8x8() {
+        let m = fixed8();
+        let cases: Vec<(Box<dyn SparseOps>, usize)> = vec![
+            // 14 tuples × 16B (padded ⟨u32,u32,f64⟩)
+            (Box::new(CooAos::from_tuples(&m, CooOrder::RowMajor)), 224),
+            // 14 × (4 + 4 + 8)
+            (Box::new(CooSoa::from_tuples(&m, CooOrder::Unsorted)), 224),
+            // row_ptr 9×4 + cols 14×4 + vals 14×8
+            (Box::new(Csr::from_tuples(&m)), 204),
+            // row_ptr 9×4 + pairs 14×16 (padded ⟨u32,f64⟩)
+            (Box::new(CsrAos::from_tuples(&m)), 260),
+            (Box::new(Csc::from_tuples(&m)), 204),
+            (Box::new(CscAos::from_tuples(&m)), 260),
+            // 8×3 padded slots ×12 + row_len 8×4 (both element orders)
+            (Box::new(Ell::from_tuples(&m, EllOrder::RowMajor)), 320),
+            (Box::new(Ell::from_tuples(&m, EllOrder::ColMajor)), 320),
+            // Jds 216 (perm 32 + jd_ptr 16 + cols 56 + vals 112 +
+            // diag_len 12) + JdsRows (8+4+2)×4 = 56
+            (Box::new(build_jds(&m, true)), 272),
+            (Box::new(build_jds(&m, false)), 272),
+            // 10 2×2 blocks ×32 + block_cols 10×4 + block_row_ptr 5×4
+            (Box::new(Bcsr::from_tuples(&m, 2, 2)), 380),
+            // best cutoff 1: ELL head 8 slots (128B) + 6-entry COO tail
+            (Box::new(HybridEllCoo::from_tuples(&m, None, EllOrder::ColMajor)), 224),
+            // 2 slices of width 3: 24 slots ×12 + widths 2×4 +
+            // slice_ptr 3×4 + row_len 8×4
+            (Box::new(Sell::from_tuples(&m, 4)), 340),
+            // 5 diagonals: offsets 5×4 + planes 5×8 ×8
+            (Box::new(Dia::from_tuples(&m)), 340),
+        ];
+        for (ops, want) in &cases {
+            assert_eq!(ops.bytes(), *want, "{} bytes drifted", ops.slug());
+            assert_eq!(ops.nrows(), 8);
+            assert_eq!(ops.ncols(), 8);
+        }
+    }
+
+    fn build_jds(m: &TriMat, permuted: bool) -> JdsOps {
+        let jds = Jds::from_tuples(m, permuted);
+        let rows = JdsRows::build(&jds, m);
+        JdsOps { jds, rows }
+    }
+
+    /// Every layout variant the registry can build: the trait slug must
+    /// never drift from `Layout::slug`.
+    #[test]
+    fn slugs_match_layout_slugs() {
+        let m = fixed8();
+        use crate::concretize::Layout;
+        let pairs: Vec<(Box<dyn SparseOps>, Layout)> = vec![
+            (Box::new(CooAos::from_tuples(&m, CooOrder::Unsorted)), {
+                Layout::CooAos(CooOrder::Unsorted)
+            }),
+            (Box::new(CooAos::from_tuples(&m, CooOrder::RowMajor)), {
+                Layout::CooAos(CooOrder::RowMajor)
+            }),
+            (Box::new(CooSoa::from_tuples(&m, CooOrder::ColMajor)), {
+                Layout::CooSoa(CooOrder::ColMajor)
+            }),
+            (Box::new(Csr::from_tuples(&m)), Layout::Csr),
+            (Box::new(CsrAos::from_tuples(&m)), Layout::CsrAos),
+            (Box::new(Csc::from_tuples(&m)), Layout::Csc),
+            (Box::new(CscAos::from_tuples(&m)), Layout::CscAos),
+            (Box::new(Ell::from_tuples(&m, EllOrder::RowMajor)), Layout::Ell(EllOrder::RowMajor)),
+            (Box::new(Ell::from_tuples(&m, EllOrder::ColMajor)), Layout::Ell(EllOrder::ColMajor)),
+            (Box::new(build_jds(&m, true)), Layout::Jds { permuted: true }),
+            (Box::new(build_jds(&m, false)), Layout::Jds { permuted: false }),
+            (Box::new(Bcsr::from_tuples(&m, 2, 3)), Layout::Bcsr { br: 2, bc: 3 }),
+            (Box::new(HybridEllCoo::from_tuples(&m, None, EllOrder::ColMajor)), {
+                Layout::HybridEllCoo
+            }),
+            (Box::new(Sell::from_tuples(&m, 4)), Layout::Sell { s: 4 }),
+            (Box::new(Dia::from_tuples(&m)), Layout::Dia),
+        ];
+        for (ops, layout) in &pairs {
+            assert_eq!(ops.slug(), layout.slug());
+        }
+    }
+
+    #[test]
+    fn default_parallel_driver_splits_and_matches() {
+        let m = fixed8();
+        let x: Vec<f64> = (0..8).map(|i| i as f64 * 0.3 - 1.0).collect();
+        let mut want = vec![0.0; 8];
+        let csr = Csr::from_tuples(&m);
+        csr.spmv_serial(Traversal::RowWise, &x, &mut want);
+        for formats in [
+            Box::new(Csr::from_tuples(&m)) as Box<dyn SparseOps>,
+            Box::new(Sell::from_tuples(&m, 4)),
+            Box::new(Bcsr::from_tuples(&m, 2, 2)),
+        ] {
+            for t in [1, 2, 3, 8] {
+                let mut y = vec![0.0; 8];
+                formats.spmv_parallel(Traversal::RowWise, &x, &mut y, t);
+                crate::util::prop::assert_close(&y, &want, 1e-12)
+                    .unwrap_or_else(|e| panic!("{} t={t}: {e}", formats.slug()));
+            }
+        }
+    }
+}

@@ -209,6 +209,122 @@ fn prop_trsv_solves_system() {
     });
 }
 
+/// A random strictly-lower triangular reservoir (unit diagonal implied).
+fn random_lower(g: &mut Gen) -> TriMat {
+    let n = g.usize_in(2, 30 + g.size * 3);
+    let mut sq = TriMat::new(n, n);
+    let mut used = std::collections::HashSet::new();
+    for _ in 0..g.usize_in(0, n * 3) {
+        let r = g.usize_in(1, n - 1);
+        let c = g.usize_in(0, r - 1);
+        if used.insert((r, c)) {
+            sq.push(r, c, g.f64_in(-1.0, 1.0));
+        }
+    }
+    sq
+}
+
+/// Adversarial triangular shapes for the level schedule: a dense row
+/// depending on everything, a single serial dependency chain, a wide
+/// independent level, and an empty (identity) system.
+fn adversarial_triangles() -> Vec<(&'static str, TriMat)> {
+    let mut dense_row = TriMat::new(16, 16);
+    for j in 0..15 {
+        dense_row.push(15, j, (j as f64 - 7.0) * 0.21);
+    }
+    dense_row.push(4, 2, 0.9);
+    dense_row.push(9, 4, -0.6);
+
+    let mut chain = TriMat::new(24, 24);
+    for i in 1..24 {
+        chain.push(i, i - 1, if i % 2 == 0 { 0.8 } else { -0.7 });
+    }
+
+    let mut wide = TriMat::new(20, 20);
+    for i in 1..20 {
+        wide.push(i, 0, i as f64 * 0.05);
+    }
+
+    vec![
+        ("dense-row", dense_row),
+        ("single-chain", chain),
+        ("wide-level", wide),
+        ("identity", TriMat::new(7, 7)),
+    ]
+}
+
+#[test]
+fn prop_level_trsv_equals_serial_on_adversarial_triangles() {
+    // Every non-serial TrSv plan in the host pool must agree with its
+    // serial counterpart on the adversarial shapes, for any thread
+    // count.
+    let t = tree::enumerate(Kernel::Trsv, &PlanSpace::host(4, 1024));
+    let par_plans: Vec<_> = t.plans.iter().filter(|v| !v.exec.schedule.is_serial()).collect();
+    assert_eq!(par_plans.len(), 2, "expected csr+csc level plans");
+    for (name, l) in adversarial_triangles() {
+        let b: Vec<f64> = (0..l.nrows).map(|i| (i as f64 * 0.29).cos() + 0.4).collect();
+        let want = l.trsv_unit_lower_ref(&b);
+        for v in &par_plans {
+            let serial = concretize::prepare(
+                forelem::concretize::Plan::serial(v.exec.layout, v.exec.traversal),
+                &l,
+            );
+            let mut x_serial = vec![0.0; l.nrows];
+            serial.trsv(&b, &mut x_serial);
+            assert_close(&x_serial, &want, 1e-9).unwrap();
+
+            let p = concretize::prepare(v.exec, &l);
+            p.ensure_levels();
+            let mut x = vec![0.0; l.nrows];
+            p.trsv(&b, &mut x);
+            assert_close(&x, &x_serial, 1e-9)
+                .unwrap_or_else(|e| panic!("{name}/{}: level ≠ serial: {e}", v.id));
+        }
+    }
+}
+
+#[test]
+fn prop_level_trsv_solves_random_triangles() {
+    let t = tree::enumerate(Kernel::Trsv, &PlanSpace::host(3, 512));
+    assert!(t.plans.iter().any(|v| !v.exec.schedule.is_serial()));
+    forall("level TrSv ≡ oracle", 30, |g| {
+        let sq = random_lower(g);
+        let b = g.vec_f64(sq.nrows);
+        let want = sq.trsv_unit_lower_ref(&b);
+        let v = g.choose(&t.plans);
+        let p = concretize::prepare(v.exec, &sq);
+        let mut x = vec![0.0; sq.nrows];
+        p.trsv(&b, &mut x);
+        assert_close(&x, &want, 1e-7).map_err(|e| format!("{}: {e}", v.id))
+    });
+}
+
+#[test]
+fn prop_storage_cache_is_transparent() {
+    // prepare_many Arc-shares one storage per distinct layout; the
+    // shared executors must return bit-identical results to fresh
+    // per-plan prepares for every (plan, kernel) in the pool.
+    let t = tree::enumerate(Kernel::Spmv, &PlanSpace::host(3, 16));
+    let execs: Vec<forelem::concretize::Plan> = t.plans.iter().map(|p| p.exec).collect();
+    let m = {
+        let mut g = Gen { rng: forelem::util::rng::Rng::new(0xCAFE), size: 3 };
+        random_trimat(&mut g)
+    };
+    let (shared, builds) = concretize::prepare_many_counted(&execs, &m, 4);
+    let distinct: std::collections::HashSet<String> =
+        t.plans.iter().map(|p| format!("{:?}", p.exec.layout)).collect();
+    assert_eq!(builds, distinct.len(), "cache built storages more than once");
+    let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.41).sin() - 0.1).collect();
+    for (exec, p) in execs.iter().zip(&shared) {
+        let fresh = concretize::prepare(*exec, &m);
+        let mut y_shared = vec![0.0; m.nrows];
+        let mut y_fresh = vec![0.0; m.nrows];
+        p.spmv(&x, &mut y_shared);
+        fresh.spmv(&x, &mut y_fresh);
+        assert_eq!(y_shared, y_fresh, "{exec:?}: cache changed SpMV bits");
+    }
+}
+
 #[test]
 fn prop_coverage_monotone_and_bounded() {
     forall("coverage monotone in t", 30, |g| {
