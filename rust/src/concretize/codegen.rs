@@ -184,6 +184,10 @@ fn emit_spmv(plan: &Plan) -> String {
             "/* sliced ELLPACK, slice height {s}: per-slice padded planes */\n\
              for (b = 0; b < nslices; b++)\n  for (p = 0; p < width[b]; p++)\n    for (r = 0; r < rows(b); r++)\n      y[b*{s}+r] += val[ptr[b] + p*rows(b) + r] * x[col[ptr[b] + p*rows(b) + r]];\n"
         ),
+        (Layout::SellSigma { s, sigma }, _) => format!(
+            "/* SELL-\u{3c3}: rows sorted by length within \u{3c3}={sigma} windows (perm[]),\n   then sliced by {s} with per-slice padded planes; output scattered\n   through the window-bounded permutation */\n\
+             for (b = 0; b < nslices; b++)\n  for (p = 0; p < width[b]; p++)\n    for (r = 0; r < rows(b); r++)\n      y[perm[b*{s}+r]] += val[ptr[b] + p*rows(b) + r] * x[col[ptr[b] + p*rows(b) + r]];\n"
+        ),
         (Layout::Dia, _) =>
             "/* diagonal storage: offsets[] and dense planes */\n\
              for (d = 0; d < ndiags; d++)\n  for (i = lo(d); i < hi(d); i++)\n    y[i] += plane[d][i] * x[i + offsets[d]];\n".into(),

@@ -52,6 +52,7 @@ pub fn build_ops(layout: Layout, m: &TriMat) -> Arc<dyn SparseOps> {
             Arc::new(HybridEllCoo::from_tuples(m, None, EllOrder::ColMajor))
         }
         Layout::Sell { s } => Arc::new(Sell::from_tuples(m, s)),
+        Layout::SellSigma { s, sigma } => Arc::new(SellSigma::from_tuples(m, s, sigma)),
         Layout::Dia => Arc::new(Dia::from_tuples(m)),
     }
 }
@@ -343,6 +344,7 @@ mod tests {
             Plan::serial(Layout::Jds { permuted: false }, Traversal::DiagMajor),
             Plan::serial(Layout::Bcsr { br: 2, bc: 3 }, Traversal::Blocked),
             Plan::serial(Layout::HybridEllCoo, Traversal::RowWise),
+            Plan::serial(Layout::SellSigma { s: 8, sigma: 64 }, Traversal::SlicePlane),
             Plan::serial(Layout::Dia, Traversal::DiagMajor),
         ]
     }

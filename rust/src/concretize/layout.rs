@@ -50,6 +50,9 @@ pub enum Layout {
     HybridEllCoo,
     /// Sliced ELLPACK with slice height `s`.
     Sell { s: usize },
+    /// Row-sigma-sorted sliced ELLPACK: rows sorted by length within
+    /// windows of `sigma` rows before slicing (SELL-σ).
+    SellSigma { s: usize, sigma: usize },
     Dia,
 }
 
@@ -71,6 +74,7 @@ impl Layout {
             Layout::Bcsr { br, bc } => format!("bcsr{br}x{bc}"),
             Layout::HybridEllCoo => "hyb".to_string(),
             Layout::Sell { s } => format!("sell{s}"),
+            Layout::SellSigma { s, sigma } => format!("sell{s}s{sigma}"),
             Layout::Dia => "dia".to_string(),
         }
     }
@@ -88,6 +92,7 @@ impl Layout {
             Layout::Bcsr { .. } => "Blocked CSR (BCSR)",
             Layout::HybridEllCoo => "hybrid ELL+COO",
             Layout::Sell { .. } => "Sliced ELLPACK (SELL)",
+            Layout::SellSigma { .. } => "row-sorted Sliced ELLPACK (SELL-\u{3c3})",
             Layout::Dia => "diagonal storage (DIA)",
         }
     }
@@ -309,8 +314,19 @@ pub fn plans(s: &ChainState) -> Result<Vec<Plan>, ConcretizeError> {
             Blocking::FillCutoff => {
                 Ok(vec![Plan::serial(Layout::HybridEllCoo, Traversal::RowWise)])
             }
-            Blocking::RowSlice { s } => {
-                Ok(vec![Plan::serial(Layout::Sell { s }, Traversal::SlicePlane)])
+            Blocking::RowSlice { s: h } => {
+                // ℕ* sorting applied to the sliced nest permutes rows by
+                // length within a bounded window before the per-slice
+                // padding: SELL-σ (σ = 8·s keeps the output scatter
+                // cache-local while covering several slices).
+                if s.sorted {
+                    Ok(vec![Plan::serial(
+                        Layout::SellSigma { s: h, sigma: h * 8 },
+                        Traversal::SlicePlane,
+                    )])
+                } else {
+                    Ok(vec![Plan::serial(Layout::Sell { s: h }, Traversal::SlicePlane)])
+                }
             }
         };
     }
@@ -489,6 +505,44 @@ mod tests {
         assert_eq!(p.len(), 2);
         assert_eq!(p[0].layout, p[1].layout);
         assert_ne!(p[0].traversal, p[1].traversal);
+    }
+
+    #[test]
+    fn sorted_row_slice_yields_sell_sigma() {
+        // The SELL-σ derivation: block(slice) → materialize → nstar_sort.
+        let s = state(&[
+            Step::Orthogonalize(Orth::Row),
+            Step::Block(transforms::BlockStep::RowSlice32),
+            Step::Materialize,
+            Step::NStarSort,
+        ]);
+        let p = plans(&s).unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].layout, Layout::SellSigma { s: 32, sigma: 256 });
+        assert_eq!(p[0].traversal, Traversal::SlicePlane);
+        assert_eq!(p[0].layout.slug(), "sell32s256");
+        assert_eq!(p[0].layout.literature_name(), "row-sorted Sliced ELLPACK (SELL-\u{3c3})");
+        // Unsorted slicing still maps to plain SELL.
+        let plain = state(&[
+            Step::Orthogonalize(Orth::Row),
+            Step::Block(transforms::BlockStep::RowSlice32),
+            Step::Materialize,
+        ]);
+        assert_eq!(plans(&plain).unwrap()[0].layout, Layout::Sell { s: 32 });
+        // The window permutation scatters the output: serial-only.
+        let par = Schedule::Parallel { threads: 4 };
+        assert!(!schedule_legal(
+            Layout::SellSigma { s: 32, sigma: 256 },
+            Traversal::SlicePlane,
+            par,
+            Kernel::Spmv
+        ));
+        assert!(schedule_legal(
+            Layout::SellSigma { s: 32, sigma: 256 },
+            Traversal::SlicePlane,
+            Schedule::Serial,
+            Kernel::Spmm
+        ));
     }
 
     #[test]

@@ -19,8 +19,9 @@ use crate::bench::harness::{black_box, time_fn, BenchConfig};
 use crate::concretize::{self, Schedule};
 use crate::matrix::suite::{SuiteEntry, SUITE};
 use crate::matrix::{MatrixStats, TriMat};
-use crate::runtime::XlaBackend;
-use crate::search::cost::{self, CostParams};
+use crate::runtime::{artifacts, XlaBackend};
+use crate::search::calibrate::{self, Sample};
+use crate::search::cost::{self, CostParams, FEATURE_NAMES};
 use crate::search::coverage::Measurements;
 use crate::search::plan::{Plan, PlanSpace};
 use crate::search::{select, tree};
@@ -48,6 +49,15 @@ impl Arch {
         match self {
             Arch::HostSmall => "host-small (Xeon 5150 stand-in)",
             Arch::HostLarge => "host-large (Xeon E5 stand-in)",
+        }
+    }
+
+    /// Short stable slug — the tuning-profile file stem
+    /// (`target/tuning/<slug>.profile`).
+    pub fn slug(&self) -> &'static str {
+        match self {
+            Arch::HostSmall => "host-small",
+            Arch::HostLarge => "host-large",
         }
     }
 
@@ -104,6 +114,12 @@ pub struct SweepConfig {
     /// Measure only the top-K predicted plans per matrix; 0 measures
     /// everything (exhaustive, paper protocol).
     pub shortlist: usize,
+    /// Auto-load the fitted tuning profile for the architecture
+    /// (`target/tuning/<arch>.profile`, written by `forelem
+    /// calibrate`) and rank on its weights instead of the seed. Off by
+    /// default so library users and tests stay hermetic; the CLI turns
+    /// it on (`--no-profile` opts back out).
+    pub use_profile: bool,
 }
 
 impl Default for SweepConfig {
@@ -115,6 +131,7 @@ impl Default for SweepConfig {
             validate: true,
             use_schedules: false,
             shortlist: 0,
+            use_profile: false,
         }
     }
 }
@@ -128,6 +145,7 @@ impl SweepConfig {
             validate: true,
             use_schedules: false,
             shortlist: 0,
+            use_profile: false,
         }
     }
 
@@ -158,6 +176,16 @@ pub struct SweepResult {
     /// Which generated cells were actually measured (`[plan][matrix]`);
     /// the rest of `gens` holds calibrated predictions.
     pub measured: Vec<Vec<bool>>,
+    /// The cost parameters the sweep ranked on (seed or loaded
+    /// profile).
+    pub params: CostParams,
+    /// Whether `params` came from a fitted tuning profile on disk.
+    pub profile_loaded: bool,
+    /// One calibration sample per measured generated cell — the
+    /// plan's feature vector on that matrix plus measured/predicted
+    /// seconds, in measurement order. The raw material of
+    /// `search::calibrate`.
+    pub samples: Vec<Sample>,
 }
 
 impl SweepResult {
@@ -260,12 +288,28 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
     );
 
     // Stage 1 — enumerate: one cost-ranked plan space serves both the
-    // serial-only (paper protocol) and scheduled sweeps.
+    // serial-only (paper protocol) and scheduled sweeps. A fitted
+    // tuning profile, when opted in and present, replaces the seed
+    // weights (thread count stays the running machine's).
     let mut space = arch.plan_space();
     if !cfg.use_schedules {
         space.schedules = vec![Schedule::Serial];
     }
     space.dense_k = cfg.spmm_k;
+    let mut profile_loaded = false;
+    if cfg.use_profile {
+        if let Some(prof) = artifacts::load_profile(arch.slug()) {
+            space.params = prof.params_for(space.params.threads);
+            profile_loaded = true;
+            // Surface it: fitted rankings must never silently replace
+            // the seed model in paper-table output.
+            eprintln!(
+                "note: {} ranking under fitted profile {} (--no-profile for the seed model)",
+                arch.slug(),
+                artifacts::profile_path_in(&artifacts::tuning_dir(), arch.slug()).display()
+            );
+        }
+    }
     let tree = tree::enumerate(kernel, &space);
     let plans = tree.plans;
 
@@ -287,6 +331,7 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
     let mut stats_per_mat: Vec<MatrixStats> = Vec::with_capacity(mats.len());
     let mut predicted: Vec<Vec<f64>> = vec![vec![f64::NAN; mats.len()]; plans.len()];
     let mut measured: Vec<Vec<bool>> = vec![vec![false; mats.len()]; plans.len()];
+    let mut samples: Vec<Sample> = Vec::new();
     let execs: Vec<concretize::Plan> = plans.iter().map(|p| p.exec).collect();
 
     for (mi, m) in mats.iter().enumerate() {
@@ -299,8 +344,17 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
             entries[mi].stats_scaled(arch.scale())
         };
         stats_per_mat.push(stats);
-        for (pi, p) in plans.iter().enumerate() {
-            predicted[pi][mi] = cost::predict(kernel, cfg.spmm_k, &p.exec, &stats, &space.params);
+        // Extract each plan's feature vector once: the prediction is
+        // its dot product with the ranked weights (identical to
+        // `cost::predict` by construction), and the same vector is
+        // archived with the cell's measurement below — so the sample
+        // features structurally match what ranked the cell.
+        let fvs: Vec<cost::FeatureVec> = plans
+            .iter()
+            .map(|p| cost::features(kernel, cfg.spmm_k, &p.exec, &stats, &space.params))
+            .collect();
+        for (pi, fv) in fvs.iter().enumerate() {
+            predicted[pi][mi] = fv.dot(&space.params.weights).max(1e-12);
         }
         // Shortlist order: ascending predicted time, index tie-break —
         // the same ordering contract as `cost::rank_execs`, computed
@@ -443,6 +497,15 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
                 }
             };
             gens.set(pi, mi, t.median);
+            // Archive the calibration sample: the feature vector this
+            // cell was ranked with, plus what the clock said.
+            samples.push(Sample {
+                matrix: mat_names[mi].clone(),
+                plan_id: plans[pi].id.clone(),
+                features: fvs[pi].0,
+                measured_secs: t.median,
+                predicted_secs: predicted[pi][mi],
+            });
         }
 
         // Fill the unmeasured cells with calibrated predictions so the
@@ -533,6 +596,9 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
         stats: stats_per_mat,
         predicted,
         measured,
+        params: space.params,
+        profile_loaded,
+        samples,
     }
 }
 
@@ -614,6 +680,40 @@ pub fn bench_json(scheduled: &SweepResult) -> String {
     out.push_str(&format!("    \"per_matrix\": [\n{}\n    ]\n", per.join(",\n")));
     out.push_str("  },\n");
 
+    // The calibration archive: one sample per measured cell (feature
+    // vectors in the FEATURE_NAMES order) plus a preview refit — the
+    // exact material `forelem calibrate` consumes to close the
+    // predict→measure→refit loop.
+    let names: Vec<String> = FEATURE_NAMES.iter().map(|s| s.to_string()).collect();
+    out.push_str("  \"calibration\": {\n");
+    out.push_str(&format!("    \"feature_names\": {},\n", json_str_array(&names)));
+    out.push_str(&format!("    \"profile_loaded\": {},\n", scheduled.profile_loaded));
+    out.push_str(&format!(
+        "    \"ranked_weights\": {},\n",
+        json_num_array(&scheduled.params.weights)
+    ));
+    let sample_lines: Vec<String> = scheduled
+        .samples
+        .iter()
+        .map(|s| format!("      {}", calibrate::sample_to_json(s)))
+        .collect();
+    out.push_str(&format!("    \"samples\": [\n{}\n    ],\n", sample_lines.join(",\n")));
+    let refit = calibrate::fit(&scheduled.samples, &scheduled.params);
+    let (rm, rtot) = calibrate::top1_agreement_recorded(&scheduled.samples);
+    let (fm, ftot) = calibrate::top1_agreement(&scheduled.samples, &refit.weights);
+    out.push_str("    \"refit\": {\n");
+    out.push_str(&format!("      \"weights\": {},\n", json_num_array(&refit.weights)));
+    out.push_str(&format!(
+        "      \"recorded_top1_agreement\": {:.4},\n",
+        rm as f64 / rtot.max(1) as f64
+    ));
+    out.push_str(&format!(
+        "      \"fitted_top1_agreement\": {:.4}\n",
+        fm as f64 / ftot.max(1) as f64
+    ));
+    out.push_str("    }\n");
+    out.push_str("  },\n");
+
     // Coverage with and without the schedule axis (vs the all-plan
     // optimum), the ROADMAP's schedule-aware-selection deliverable.
     let ts: Vec<f64> = (0..=10).map(|t| t as f64 * 5.0).collect();
@@ -678,6 +778,16 @@ mod tests {
         assert_eq!(r.libs.matrices.len(), 3);
         // exhaustive sweep: every generated cell is measured
         assert!(r.measured.iter().all(|row| row.iter().all(|&b| b)));
+        // …and every measured cell left a calibration sample whose
+        // features reproduce the prediction under the ranked weights.
+        assert_eq!(r.samples.len(), r.plans.len() * r.gens.matrices.len());
+        assert!(!r.profile_loaded);
+        for s in &r.samples {
+            let dot: f64 =
+                s.features.iter().zip(&r.params.weights).map(|(f, w)| f * w).sum();
+            assert_eq!(dot.max(1e-12), s.predicted_secs, "{} on {}", s.plan_id, s.matrix);
+            assert!(s.measured_secs > 0.0 && s.measured_secs.is_finite());
+        }
         // the generated pool must beat or match the libraries somewhere
         let best_gen = r.best_gen();
         let best_lib = r.libs.best_per_matrix(None);
@@ -790,6 +900,50 @@ mod tests {
     }
 
     #[test]
+    fn shortlist_samples_only_measured_cells() {
+        let mut cfg = SweepConfig::quick();
+        cfg.matrices = Some(vec![0, 2]);
+        cfg.shortlist = 3;
+        let r = run(Kernel::Spmv, Arch::HostSmall, &cfg, None);
+        // 3 measured plans per matrix → exactly 6 samples, and every
+        // sample names a measured (plan, matrix) cell.
+        assert_eq!(r.samples.len(), 6);
+        for s in &r.samples {
+            let pi = r.plans.iter().position(|p| p.id == s.plan_id).expect("known plan");
+            let mi = r.gens.matrices.iter().position(|m| *m == s.matrix).expect("known matrix");
+            assert!(r.measured[pi][mi], "sample for unmeasured cell {}/{}", s.plan_id, s.matrix);
+            assert_eq!(s.measured_secs, r.gens.times[pi][mi]);
+        }
+    }
+
+    /// The closed loop, end to end in-process: sweep → bench-json →
+    /// parse samples back → NNLS refit → agreement re-score. The
+    /// fitted weights must reproduce the archive losslessly enough
+    /// that the refit's sample count and per-matrix grouping match,
+    /// and fitting must never *hurt* agreement on its own training
+    /// samples by more than the seed's (the CI guard asserts the same
+    /// on the real bench record).
+    #[test]
+    fn bench_json_samples_refit_roundtrip() {
+        let mut cfg = SweepConfig::quick_scheduled();
+        cfg.matrices = Some(vec![0, 2]);
+        let r = run(Kernel::Spmv, Arch::HostLarge, &cfg, None);
+        let js = bench_json(&r);
+        let parsed = calibrate::samples_from_json(&js);
+        assert_eq!(parsed.len(), r.samples.len());
+        for (a, b) in parsed.iter().zip(&r.samples) {
+            assert_eq!(a.matrix, b.matrix);
+            assert_eq!(a.plan_id, b.plan_id);
+            assert_eq!(a.features, b.features, "features must round-trip bit-exactly");
+            assert_eq!(a.measured_secs, b.measured_secs);
+        }
+        let fitted = calibrate::fit(&parsed, &r.params);
+        assert!(fitted.weights.iter().all(|w| w.is_finite() && *w >= 0.0));
+        let (_, total) = calibrate::top1_agreement(&parsed, &fitted.weights);
+        assert_eq!(total, 2, "one agreement group per matrix");
+    }
+
+    #[test]
     fn bench_json_is_well_formed() {
         let mut cfg = SweepConfig::quick_scheduled();
         cfg.matrices = Some(vec![0]);
@@ -805,6 +959,13 @@ mod tests {
         assert!(js.contains("\"predict\""));
         assert!(js.contains("\"top1_agreement\""));
         assert!(js.contains("\"predicted_best\""));
+        // the calibration archive
+        assert!(js.contains("\"calibration\""));
+        assert!(js.contains("\"feature_names\""));
+        assert!(js.contains("\"samples\""));
+        assert!(js.contains("\"refit\""));
+        assert!(js.contains("\"recorded_top1_agreement\""));
+        assert!(js.contains("\"fitted_top1_agreement\""));
         assert!(js.contains("\"coverage\""));
         assert!(js.contains("\"serial_only\""));
         assert!(js.contains("\"with_schedules\""));

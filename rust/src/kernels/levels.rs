@@ -20,6 +20,22 @@
 //! runs in the same order as the serial kernel, so the CSR solve is
 //! *bit-identical* to `trsv::csr` (the CSC scatter reassociates sums
 //! across levels and agrees to rounding).
+//!
+//! # Supernoded waves
+//!
+//! Banded matrices degenerate to near-per-row levels, where a barrier
+//! per level costs more than the row it guards. [`LevelSets`] therefore
+//! groups levels into *waves*: a maximal run of adjacent levels, each
+//! narrower than [`SUPERNODE_MAX_WIDTH`], merges into one **serial
+//! wave** (worker 0 executes the whole run in level order — the
+//! dependences inside the run are satisfied by that single-thread
+//! ordering — and everyone barriers once at the end); a wide level is
+//! its own **parallel wave**, split across workers as before. The
+//! barrier count drops from `nlevels` to [`LevelSets::nwaves`], which
+//! is what the cost model's sync feature charges
+//! (`MatrixStats::sync_waves`). Execution order per row/column is
+//! unchanged, so CSR stays bit-identical to serial and CSC stays
+//! deterministic.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -27,16 +43,67 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::storage::{Csc, Csr};
 use crate::util::pool::scoped_run;
 
+/// Levels at or below this width join a supernoded serial wave: too
+/// narrow for a useful parallel split, so trading their barriers for a
+/// short single-worker run is a straight win. Shared with
+/// `MatrixStats`' `sync_waves` estimate so planner and executor agree.
+pub const SUPERNODE_MAX_WIDTH: usize = 4;
+
+/// The supernode merge rule, in one place: partition levels (given
+/// their widths) into waves — each maximal run of adjacent levels of
+/// width ≤ [`SUPERNODE_MAX_WIDTH`] is one wave, every wide level is
+/// its own wave. Returns the `wave_ptr` level-offset array
+/// (`wave_ptr[w]..wave_ptr[w+1]` = the levels of wave `w`). Both the
+/// executable [`LevelSets`] and the planner's `MatrixStats.sync_waves`
+/// estimate are built from this routine, so they cannot drift.
+pub fn wave_partition(widths: &[usize]) -> Vec<u32> {
+    let mut wave_ptr: Vec<u32> = vec![0];
+    let mut in_narrow_run = false;
+    for (l, &w) in widths.iter().enumerate() {
+        if w <= SUPERNODE_MAX_WIDTH {
+            if in_narrow_run {
+                *wave_ptr.last_mut().unwrap() = (l + 1) as u32;
+                continue;
+            }
+            in_narrow_run = true;
+        } else {
+            in_narrow_run = false;
+        }
+        wave_ptr.push((l + 1) as u32);
+    }
+    if wave_ptr.len() == 1 {
+        wave_ptr.push(0); // no levels: one empty wave
+    }
+    wave_ptr
+}
+
+/// Number of barrier waves the supernoded schedule executes over the
+/// given per-level widths.
+pub fn count_waves(widths: &[usize]) -> usize {
+    wave_partition(widths).len() - 1
+}
+
 /// Rows of a strictly-lower triangular matrix grouped into dependence
 /// level sets: every row in level `l` depends only on rows in levels
-/// `< l`. Built once at `prepare()` time; part of the generated data
-/// structure of a parallel TrSv plan.
+/// `< l` — plus the supernoded wave partition over those levels (see
+/// the module docs). Built once at `prepare()` time; part of the
+/// generated data structure of a parallel TrSv plan.
 #[derive(Clone, Debug)]
 pub struct LevelSets {
     /// `level_ptr[l]..level_ptr[l+1]` indexes `rows` for level `l`.
     pub level_ptr: Vec<u32>,
     /// All rows, grouped by level, ascending within each level.
     pub rows: Vec<u32>,
+    /// `wave_ptr[w]..wave_ptr[w+1]` is the range of *levels* wave `w`
+    /// executes between two barriers ([`wave_partition`]). A wave
+    /// spanning more than one level — or a single level of width ≤
+    /// [`SUPERNODE_MAX_WIDTH`] — is a serial wave (worker 0 runs it
+    /// alone).
+    pub wave_ptr: Vec<u32>,
+    /// Widest level, cached at build time so the executors' serial
+    /// fallback check is O(1) per solve, not an O(nlevels) rescan
+    /// inside the timed region.
+    pub max_level_width: u32,
 }
 
 impl LevelSets {
@@ -58,7 +125,12 @@ impl LevelSets {
             rows[next[l as usize] as usize] = i as u32;
             next[l as usize] += 1;
         }
-        LevelSets { level_ptr, rows }
+        // Supernode: group levels into waves with the shared merge rule.
+        let widths: Vec<usize> =
+            (0..nlevels).map(|l| (level_ptr[l + 1] - level_ptr[l]) as usize).collect();
+        let wave_ptr = wave_partition(&widths);
+        let max_level_width = widths.iter().copied().max().unwrap_or(0) as u32;
+        LevelSets { level_ptr, rows, wave_ptr, max_level_width }
     }
 
     /// Level sets of a strictly-lower CSR matrix:
@@ -94,13 +166,31 @@ impl LevelSets {
         &self.rows[self.level_ptr[l] as usize..self.level_ptr[l + 1] as usize]
     }
 
-    /// Widest level — the solve's maximum exploitable parallelism.
+    /// Widest level — the solve's maximum exploitable parallelism
+    /// (cached at build time).
     pub fn max_width(&self) -> usize {
-        (0..self.nlevels()).map(|l| self.level_rows(l).len()).max().unwrap_or(0)
+        self.max_level_width as usize
+    }
+
+    /// Barrier waves of the supernoded schedule (≤ [`nlevels`](Self::nlevels)).
+    pub fn nwaves(&self) -> usize {
+        self.wave_ptr.len().saturating_sub(1)
+    }
+
+    /// The level range wave `w` executes between two barriers.
+    pub fn wave_levels(&self, w: usize) -> Range<usize> {
+        self.wave_ptr[w] as usize..self.wave_ptr[w + 1] as usize
+    }
+
+    /// Serial waves (supernoded narrow runs) run on worker 0 alone;
+    /// the rest are single wide levels split across all workers.
+    pub fn wave_is_serial(&self, w: usize) -> bool {
+        let lr = self.wave_levels(w);
+        lr.len() != 1 || self.level_rows(lr.start).len() <= SUPERNODE_MAX_WIDTH
     }
 
     pub fn bytes(&self) -> usize {
-        (self.level_ptr.len() + self.rows.len()) * 4
+        (self.level_ptr.len() + self.rows.len() + self.wave_ptr.len()) * 4
     }
 }
 
@@ -172,13 +262,16 @@ fn write(xa: &[AtomicU64], i: usize, v: f64) {
     xa[i].store(v.to_bits(), Ordering::Relaxed);
 }
 
-/// Level-scheduled CSR forward substitution (gather form). Each level's
-/// rows are split contiguously across the workers; every row's dot
-/// product runs in serial order, so the result is bit-identical to
-/// `trsv::csr`.
+/// Level-scheduled CSR forward substitution (gather form), one barrier
+/// per supernoded wave. A parallel wave's rows are split contiguously
+/// across the workers; a serial wave's levels run on worker 0 in level
+/// order. Every row's dot product runs in serial order, so the result
+/// is bit-identical to `trsv::csr`.
 pub fn csr_trsv_level(l: &Csr, lv: &LevelSets, b: &[f64], x: &mut [f64], threads: usize) {
     let t = threads.max(1).min(l.nrows.max(1));
-    if t <= 1 || lv.nlevels() <= 1 {
+    if t <= 1 || lv.nlevels() <= 1 || lv.max_width() <= SUPERNODE_MAX_WIDTH {
+        // No exploitable width anywhere: the supernoded schedule would
+        // be one serial wave — skip the spawns entirely.
         return crate::kernels::trsv::csr(l, b, x);
     }
     let xa: Vec<AtomicU64> = b.iter().map(|v| AtomicU64::new(v.to_bits())).collect();
@@ -186,20 +279,34 @@ pub fn csr_trsv_level(l: &Csr, lv: &LevelSets, b: &[f64], x: &mut [f64], threads
         let barrier = SpinBarrier::new(t);
         let xa = &xa;
         let barrier = &barrier;
+        let solve_row = |i: usize| {
+            let (s, e) = (l.row_ptr[i] as usize, l.row_ptr[i + 1] as usize);
+            let sum: f64 = l.cols[s..e]
+                .iter()
+                .zip(&l.vals[s..e])
+                .map(|(&c, &v)| v * read(xa, c as usize))
+                .sum();
+            write(xa, i, read(xa, i) - sum);
+        };
+        let solve_row = &solve_row;
         let tasks: Vec<_> = (0..t)
             .map(|w| {
                 move || {
-                    for li in 0..lv.nlevels() {
-                        let rows = lv.level_rows(li);
-                        for &i in &rows[share(rows.len(), w, t)] {
-                            let i = i as usize;
-                            let (s, e) = (l.row_ptr[i] as usize, l.row_ptr[i + 1] as usize);
-                            let sum: f64 = l.cols[s..e]
-                                .iter()
-                                .zip(&l.vals[s..e])
-                                .map(|(&c, &v)| v * read(xa, c as usize))
-                                .sum();
-                            write(xa, i, read(xa, i) - sum);
+                    for wi in 0..lv.nwaves() {
+                        let levels = lv.wave_levels(wi);
+                        if lv.wave_is_serial(wi) {
+                            if w == 0 {
+                                for li in levels {
+                                    for &i in lv.level_rows(li) {
+                                        solve_row(i as usize);
+                                    }
+                                }
+                            }
+                        } else {
+                            let rows = lv.level_rows(levels.start);
+                            for &i in &rows[share(rows.len(), w, t)] {
+                                solve_row(i as usize);
+                            }
                         }
                         barrier.wait();
                     }
@@ -225,7 +332,7 @@ pub fn csr_trsv_level(l: &Csr, lv: &LevelSets, b: &[f64], x: &mut [f64], threads
 pub fn csc_trsv_level(l: &Csc, lv: &LevelSets, b: &[f64], x: &mut [f64], threads: usize) {
     let n = l.nrows;
     let t = threads.max(1).min(n.max(1));
-    if t <= 1 || lv.nlevels() <= 1 {
+    if t <= 1 || lv.nlevels() <= 1 || lv.max_width() <= SUPERNODE_MAX_WIDTH {
         return crate::kernels::trsv::csc(l, b, x);
     }
     let xa: Vec<AtomicU64> = b.iter().map(|v| AtomicU64::new(v.to_bits())).collect();
@@ -233,26 +340,49 @@ pub fn csc_trsv_level(l: &Csc, lv: &LevelSets, b: &[f64], x: &mut [f64], threads
         let barrier = SpinBarrier::new(t);
         let xa = &xa;
         let barrier = &barrier;
+        // Scatter every update of column j landing in `rows[lo..hi]` of
+        // the owner range; `own = 0..n` scatters unconditionally (the
+        // serial-wave path, where worker 0 is the only one running).
+        let scatter_col = |j: usize, own: &Range<usize>| {
+            if j >= l.ncols {
+                return;
+            }
+            let xj = read(xa, j);
+            let (s, e) = (l.col_ptr[j] as usize, l.col_ptr[j + 1] as usize);
+            let rows = &l.rows[s..e];
+            let lo = s + rows.partition_point(|&r| (r as usize) < own.start);
+            let hi = s + rows.partition_point(|&r| (r as usize) < own.end);
+            for p in lo..hi {
+                let r = l.rows[p] as usize;
+                write(xa, r, read(xa, r) - l.vals[p] * xj);
+            }
+        };
+        let scatter_col = &scatter_col;
         let tasks: Vec<_> = (0..t)
             .map(|w| {
                 let own = share(n, w, t);
                 move || {
-                    for li in 0..lv.nlevels() {
-                        // x[j] is final for every level-li column j: all
-                        // its updates were scattered in earlier levels.
-                        for &j in lv.level_rows(li) {
-                            let j = j as usize;
-                            if j >= l.ncols {
-                                continue;
+                    let all = 0..n;
+                    for wi in 0..lv.nwaves() {
+                        let levels = lv.wave_levels(wi);
+                        if lv.wave_is_serial(wi) {
+                            // Worker 0 walks the merged levels in order,
+                            // applying *all* updates — the single-thread
+                            // level ordering satisfies the run's internal
+                            // dependences; everyone else waits.
+                            if w == 0 {
+                                for li in levels {
+                                    for &j in lv.level_rows(li) {
+                                        scatter_col(j as usize, &all);
+                                    }
+                                }
                             }
-                            let xj = read(xa, j);
-                            let (s, e) = (l.col_ptr[j] as usize, l.col_ptr[j + 1] as usize);
-                            let rows = &l.rows[s..e];
-                            let lo = s + rows.partition_point(|&r| (r as usize) < own.start);
-                            let hi = s + rows.partition_point(|&r| (r as usize) < own.end);
-                            for p in lo..hi {
-                                let r = l.rows[p] as usize;
-                                write(xa, r, read(xa, r) - l.vals[p] * xj);
+                        } else {
+                            // x[j] is final for every column j of this
+                            // wave's level: all its updates were
+                            // scattered in earlier waves.
+                            for &j in lv.level_rows(levels.start) {
+                                scatter_col(j as usize, &own);
                             }
                         }
                         barrier.wait();
@@ -322,7 +452,9 @@ mod tests {
 
     #[test]
     fn single_chain_is_fully_serial() {
-        // x[i] depends on x[i-1]: one row per level, nlevels == n.
+        // x[i] depends on x[i-1]: one row per level, nlevels == n —
+        // and the supernode rule collapses the whole chain into a
+        // single serial wave (one barrier instead of twelve).
         let mut m = TriMat::new(12, 12);
         for i in 1..12 {
             m.push(i, i - 1, 0.5);
@@ -331,6 +463,8 @@ mod tests {
         let lv = LevelSets::from_csr(&csr);
         assert_eq!(lv.nlevels(), 12);
         assert_eq!(lv.max_width(), 1);
+        assert_eq!(lv.nwaves(), 1);
+        assert!(lv.wave_is_serial(0));
         check_both(&m, 4);
     }
 
@@ -340,7 +474,53 @@ mod tests {
         let lv = LevelSets::from_csr(&Csr::from_tuples(&m));
         assert_eq!(lv.nlevels(), 1);
         assert_eq!(lv.max_width(), 8);
+        assert_eq!(lv.nwaves(), 1);
+        assert!(!lv.wave_is_serial(0)); // one wide level: parallel wave
         check_both(&m, 3);
+    }
+
+    #[test]
+    fn supernoding_merges_narrow_runs_only() {
+        // Level widths by construction: level 0 = {0..8} (8 rows, wide),
+        // then a 6-deep chain 8→9→…→14 of width-1 levels, then a wide
+        // fan level {15..20} depending on row 14. Expected waves:
+        // [wide 0][merged narrow run 1..7][wide 7].
+        let mut m = TriMat::new(21, 21);
+        for i in 8..15 {
+            m.push(i, i - 1, 0.5); // the chain
+        }
+        for i in 15..21 {
+            m.push(i, 14, 0.25); // wide fan off the chain's end
+        }
+        let csr = Csr::from_tuples(&m);
+        let lv = LevelSets::from_csr(&csr);
+        assert_eq!(lv.nlevels(), 9); // level 0 + 7 chain levels + fan
+        assert_eq!(lv.nwaves(), 3, "wave_ptr = {:?}", lv.wave_ptr);
+        assert!(!lv.wave_is_serial(0));
+        assert!(lv.wave_is_serial(1));
+        assert_eq!(lv.wave_levels(1), 1..8);
+        assert!(!lv.wave_is_serial(2));
+        assert_eq!(count_waves(&[8, 1, 1, 1, 1, 1, 1, 1, 6]), 3);
+        // Wave execution stays correct and (for CSR) bit-identical.
+        check_both(&m, 4);
+        let b: Vec<f64> = (0..21).map(|i| (i as f64 * 0.31).cos()).collect();
+        let mut serial = vec![0.0; 21];
+        crate::kernels::trsv::csr(&csr, &b, &mut serial);
+        for t in [2, 3, 8] {
+            let mut x = vec![0.0; 21];
+            csr_trsv_level(&csr, &lv, &b, &mut x, t);
+            assert_eq!(x, serial, "t={t}: supernoded solve drifted from serial");
+        }
+    }
+
+    #[test]
+    fn count_waves_rule() {
+        assert_eq!(count_waves(&[]), 1);
+        assert_eq!(count_waves(&[1, 1, 1]), 1);
+        assert_eq!(count_waves(&[10, 10]), 2);
+        assert_eq!(count_waves(&[10, 1, 1, 10, 2]), 4);
+        assert_eq!(count_waves(&[1, 10, 1]), 3);
+        assert_eq!(count_waves(&[SUPERNODE_MAX_WIDTH, SUPERNODE_MAX_WIDTH + 1]), 2);
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! forelem table1|table2|table3 [--quick]          paper reduction tables (both archs)
 //! forelem table4|table5|fig11  [--quick]          coverage / selection analyses
 //! forelem bench-all [--quick] [--out FILE]        everything, appended to FILE
-//! forelem bench-json [--shortlist K]              BENCH_spmv.json + planner audit
+//! forelem bench-json [--shortlist K]              BENCH_spmv.json + planner audit + samples
+//! forelem calibrate [FILES…] [--arch A] [--check] fit a tuning profile from BENCH_*.json
 //! forelem suite                                   print the 20-matrix suite statistics
 //! ```
 
@@ -45,6 +46,15 @@ fn sweep_cfg(args: &Args) -> SweepConfig {
     // Predict→measure shortlist: time only the top-K cost-ranked plans
     // per matrix. 0 (default) = exhaustive, paper protocol.
     cfg.shortlist = args.get_usize("shortlist", 0);
+    // CLI sweeps auto-load the fitted tuning profile when one exists
+    // (target/tuning/<arch>.profile, written by `forelem calibrate`);
+    // --no-profile ranks on the seed parameters instead (capture-aware
+    // so `--no-profile ARG` orderings can't silently re-enable it).
+    let (no_profile, swallowed) = args.flag_with_capture("no-profile");
+    if let Some(tok) = swallowed {
+        eprintln!("warning: '--no-profile {tok}' — '{tok}' was not used (sweeps take no positional args)");
+    }
+    cfg.use_profile = !no_profile;
     cfg
 }
 
@@ -179,6 +189,102 @@ fn cmd_codegen(args: &Args) -> String {
     )
 }
 
+/// `forelem calibrate [FILES…] [--arch host-small|host-large]
+/// [--out PATH] [--check]` — fit the cost-model weights from the
+/// calibration samples one or more `bench-json` records archived,
+/// persist the profile (default `target/tuning/<arch>.profile`), and
+/// report predicted-vs-measured top-1 agreement under the recording
+/// planner (the archived predictions) and under the fitted weights. A
+/// fit that regresses agreement is never persisted; `--check`
+/// additionally exits nonzero on regression — the CI planner-guard's
+/// refit gate — and an existing on-disk profile that outscores the new
+/// fit is kept.
+fn cmd_calibrate(args: &Args) {
+    use forelem::runtime::artifacts;
+    use forelem::search::calibrate::{self, Profile};
+    let arch = match args.get_or("arch", "host-large") {
+        "host-small" => Arch::HostSmall,
+        "host-large" => Arch::HostLarge,
+        other => {
+            eprintln!("unknown arch '{other}' (host-small|host-large)");
+            std::process::exit(2);
+        }
+    };
+    // `--check BENCH.json` orderings: the parser swallows the file as
+    // the flag's value — recover it into the file list so the gate
+    // can't be silently disabled by argument order.
+    let (check, swallowed) = args.flag_with_capture("check");
+    let mut files: Vec<String> = args.positional.clone();
+    files.extend(swallowed.map(str::to_string));
+    if files.is_empty() {
+        files.push("BENCH_spmv.json".to_string());
+    }
+    let mut samples = Vec::new();
+    for f in &files {
+        let text = std::fs::read_to_string(f)
+            .unwrap_or_else(|e| panic!("reading bench record {f}: {e}"));
+        let n0 = samples.len();
+        samples.extend(calibrate::samples_from_json(&text));
+        println!("{f}: {} samples", samples.len() - n0);
+    }
+    if samples.is_empty() {
+        eprintln!("no calibration samples found (re-run `forelem bench-json` first)");
+        std::process::exit(2);
+    }
+    let seed = arch.cost_params();
+    let fitted = calibrate::fit(&samples, &seed);
+    // Baseline = the planner that *ranked the record* (its archived
+    // predictions), not a re-dot with seed weights — records produced
+    // under an already-loaded profile would otherwise be mis-scored.
+    let (rm, total) = calibrate::top1_agreement_recorded(&samples);
+    let (fm, _) = calibrate::top1_agreement(&samples, &fitted.weights);
+    println!("fitted {} weights from {} samples over {} matrices:", arch.slug(), samples.len(), total);
+    for (name, (s, f)) in forelem::search::cost::FEATURE_NAMES
+        .iter()
+        .zip(seed.weights.iter().zip(&fitted.weights))
+    {
+        println!("  {name:<16} seed {s:>12.4e}  fitted {f:>12.4e}");
+    }
+    println!("recorded_top1_agreement: {:.4}", rm as f64 / total.max(1) as f64);
+    println!("fitted_top1_agreement: {:.4}", fm as f64 / total.max(1) as f64);
+    // A fit that loses to the planner that produced the record never
+    // lands in target/tuning (where the next sweep would auto-load
+    // it) — with or without --check; --check additionally fails the
+    // build for CI.
+    if fm < rm {
+        eprintln!(
+            "refit regressed top-1 agreement: fitted {fm}/{total} < recorded {rm}/{total}; \
+             profile NOT written"
+        );
+        std::process::exit(if check { 1 } else { 0 });
+    }
+    // Ratchet: never overwrite an existing profile that outscores the
+    // new fit on this same sample set.
+    if args.get("out").is_none() {
+        if let Some(old) = artifacts::load_profile(arch.slug()) {
+            let (om, _) = calibrate::top1_agreement(&samples, &old.weights);
+            if om > fm {
+                println!(
+                    "existing profile scores {om}/{total} > fitted {fm}/{total}; keeping it"
+                );
+                return;
+            }
+        }
+    }
+    let profile = Profile::from_params(arch.slug(), &fitted, samples.len());
+    let path = match args.get("out") {
+        Some(p) => {
+            if let Some(dir) = std::path::Path::new(p).parent() {
+                std::fs::create_dir_all(dir).expect("creating --out directory");
+            }
+            std::fs::write(p, profile.render()).expect("writing --out profile");
+            std::path::PathBuf::from(p)
+        }
+        None => artifacts::save_profile(&profile).expect("writing tuning profile"),
+    };
+    println!("wrote {} ({} sweeps will auto-load it)", path.display(), arch.slug());
+}
+
 fn cmd_suite() -> String {
     let mut out = String::from("## 20-matrix suite (synthetic stand-ins; DESIGN.md §5)\n");
     out.push_str(&format!(
@@ -245,9 +351,11 @@ fn main() {
             )
             .expect("writing bench json");
             println!(
-                "wrote {path} (serial vs best-schedule SpMV medians + predicted-vs-measured audit)"
+                "wrote {path} (serial vs best-schedule SpMV medians + predicted-vs-measured \
+                 audit + calibration samples)"
             );
         }
+        "calibrate" => cmd_calibrate(&args),
         "bench-all" => {
             let cfg = sweep_cfg(&args);
             let xla = tables::try_xla();
@@ -274,11 +382,16 @@ fn main() {
             println!(
                 "forelem — automatic compiler-based data structure generation\n\
                  subcommands: enumerate derive codegen suite table1 table2 table3\n\
-                 \x20            table4 table5 fig11 bench-all bench-json\n\
+                 \x20            table4 table5 fig11 bench-all bench-json calibrate\n\
                  flags: --quick --kernel K --variant ID --spmm-k N --matrices N --out FILE\n\
                  \x20      --schedules (add the parallel/tiled schedule axis on host-large)\n\
                  \x20      --shortlist K (measure only the top-K cost-ranked plans per\n\
-                 \x20                     matrix; 0 = exhaustive, the paper protocol)"
+                 \x20                     matrix; 0 = exhaustive, the paper protocol)\n\
+                 \x20      --no-profile (rank on the seed cost parameters even when a\n\
+                 \x20                    fitted target/tuning/<arch>.profile exists)\n\
+                 calibrate: forelem calibrate [BENCH_*.json…] [--arch host-large]\n\
+                 \x20          [--out PATH] [--check (fail if fitted agreement < the\n\
+                 \x20          record's own planner; regressed fits are never persisted)]"
             );
         }
     }

@@ -35,8 +35,15 @@ pub struct MatrixStats {
     /// Dependence level count of the strictly-lower triangle (the TrSv
     /// critical path): rows partition into `dep_levels` waves of
     /// mutually independent solves. 1 = fully parallel, `nrows` = one
-    /// serial chain. Drives the level-scheduled TrSv cost term.
+    /// serial chain. Caps the level-scheduled TrSv speedup.
     pub dep_levels: usize,
+    /// Barrier waves the *supernoded* level schedule executes: maximal
+    /// runs of adjacent levels narrower than
+    /// `kernels::levels::SUPERNODE_MAX_WIDTH` merge into one serial
+    /// wave (`kernels::levels` applies the same rule to the executable
+    /// level sets). `sync_waves ≤ dep_levels`; drives the sync feature
+    /// of the cost model.
+    pub sync_waves: usize,
 }
 
 impl MatrixStats {
@@ -68,7 +75,7 @@ impl MatrixStats {
         }
         let avg_bandwidth = band_sum as f64 / (nnz.max(1)) as f64;
         let density = nnz as f64 / (nr * ncols.max(1) as f64);
-        let dep_levels = dep_levels(m);
+        let (dep_levels, sync_waves) = dep_structure(m);
         MatrixStats {
             nrows,
             ncols,
@@ -81,6 +88,7 @@ impl MatrixStats {
             avg_bandwidth,
             density,
             dep_levels,
+            sync_waves,
         }
     }
 
@@ -108,15 +116,25 @@ impl MatrixStats {
             density: nnz as f64 / (nrows.max(1) * ncols.max(1)) as f64,
             // Pessimistic default: a full serial chain. Tests that
             // exercise the TrSv level term override via
-            // `with_dep_levels`.
+            // `with_dep_levels`. With uniform width-1 levels the
+            // supernode rule merges everything into a single wave.
             dep_levels: nrows.max(1),
+            sync_waves: 1,
         }
     }
 
     /// `self` with the TrSv dependence level count replaced (synthetic
-    /// statistics for the cost-model tests).
+    /// statistics for the cost-model tests). `sync_waves` follows the
+    /// supernode rule under the uniform-width assumption: levels of
+    /// mean width ≤ the supernode threshold all merge into one wave.
     pub fn with_dep_levels(mut self, dep_levels: usize) -> Self {
         self.dep_levels = dep_levels.max(1);
+        self.sync_waves =
+            if self.level_width() <= crate::kernels::levels::SUPERNODE_MAX_WIDTH as f64 {
+                1
+            } else {
+                self.dep_levels
+            };
         self
     }
 
@@ -152,17 +170,18 @@ impl MatrixStats {
     }
 }
 
-/// Number of dependence level sets of `m`'s strictly-lower triangle
-/// (only entries with `col < row` participate — for the lowered TrSv
-/// operand that is every entry). One counting-sort pass groups the
-/// lower columns by row, then the level assignment shared with the
-/// executable level sets (`kernels::levels::assign_levels`) runs over
-/// the CSR-shaped arrays, so the estimate cannot drift from
+/// Dependence structure of `m`'s strictly-lower triangle: `(level
+/// count, supernoded wave count)`. Only entries with `col < row`
+/// participate — for the lowered TrSv operand that is every entry. One
+/// counting-sort pass groups the lower columns by row, then the level
+/// assignment *and* the wave merge rule shared with the executable
+/// level sets (`kernels::levels::assign_levels` / `count_waves`) run
+/// over the CSR-shaped arrays, so the estimate cannot drift from
 /// `LevelSets::from_csr` on strictly-lower storage.
-fn dep_levels(m: &TriMat) -> usize {
+fn dep_structure(m: &TriMat) -> (usize, usize) {
     let n = m.nrows;
     if n == 0 {
-        return 1;
+        return (1, 1);
     }
     let mut row_ptr = vec![0u32; n + 1];
     for e in &m.entries {
@@ -182,7 +201,12 @@ fn dep_levels(m: &TriMat) -> usize {
         }
     }
     let level = crate::kernels::levels::assign_levels(&row_ptr, &cols);
-    level.iter().copied().max().unwrap_or(0) as usize + 1
+    let nlevels = level.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut widths = vec![0usize; nlevels];
+    for &l in &level {
+        widths[l as usize] += 1;
+    }
+    (nlevels, crate::kernels::levels::count_waves(&widths))
 }
 
 #[cfg(test)]
@@ -242,6 +266,7 @@ mod tests {
         assert_eq!(s.ell_fill(), 1.0);
         assert_eq!(s.density, 0.0);
         assert_eq!(s.dep_levels, 1);
+        assert_eq!(s.sync_waves, 1);
         assert_eq!(s.level_width(), 6.0);
     }
 
@@ -252,7 +277,10 @@ mod tests {
         for i in 1..10 {
             chain.push(i, i - 1, 1.0);
         }
-        assert_eq!(MatrixStats::of(&chain).dep_levels, 10);
+        let cs = MatrixStats::of(&chain);
+        assert_eq!(cs.dep_levels, 10);
+        // Width-1 levels all merge into a single supernoded wave.
+        assert_eq!(cs.sync_waves, 1);
         // Strictly-upper entries carry no TrSv dependence.
         let mut upper = TriMat::new(10, 10);
         for i in 1..10 {
@@ -267,16 +295,26 @@ mod tests {
         let s = MatrixStats::of(&fan);
         assert_eq!(s.dep_levels, 2);
         assert_eq!(s.level_width(), 5.0);
+        // Level 0 is wide (9 rows), level 1 is the narrow fan-in row:
+        // 2 waves (a narrow run never merges into a wide neighbor).
+        assert_eq!(s.sync_waves, 2);
         // Matches the executable level sets on a lowered matrix.
         let l = gen::uniform_random(30, 30, 180, 12).strictly_lower();
         let lv = crate::kernels::levels::LevelSets::from_csr(
             &crate::storage::Csr::from_tuples(&l),
         );
-        assert_eq!(MatrixStats::of(&l).dep_levels, lv.nlevels());
-        // Synthetic stats default to the pessimistic serial chain.
+        let ls = MatrixStats::of(&l);
+        assert_eq!(ls.dep_levels, lv.nlevels());
+        assert_eq!(ls.sync_waves, lv.nwaves());
+        assert!(ls.sync_waves <= ls.dep_levels);
+        // Synthetic stats default to the pessimistic serial chain
+        // (whose uniform width-1 levels supernode into one wave).
         let syn = MatrixStats::synthetic(100, 100, 4.0, 1.0, 8, 50);
         assert_eq!(syn.dep_levels, 100);
-        assert_eq!(syn.with_dep_levels(4).dep_levels, 4);
+        assert_eq!(syn.sync_waves, 1);
+        let wide = syn.with_dep_levels(4);
+        assert_eq!(wide.dep_levels, 4);
+        assert_eq!(wide.sync_waves, 4); // width 25 > threshold: no merge
     }
 
     #[test]

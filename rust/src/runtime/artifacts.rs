@@ -1,10 +1,13 @@
-//! Artifact manifest: the shape-bucketed executables `aot.py` emitted.
-//! Plain-text manifest (`file kernel nrows k ncols kcols` per line) —
-//! no JSON dependency offline.
+//! Runtime artifacts: the shape-bucketed AOT executables `aot.py`
+//! emitted (plain-text manifest, `file kernel nrows k ncols kcols` per
+//! line — no JSON dependency offline) and the fitted cost-model
+//! tuning profiles `forelem calibrate` persists
+//! (`target/tuning/<arch>.profile`, auto-loaded by the CLI sweeps).
 
 use std::path::{Path, PathBuf};
 
 use crate::baselines::Kernel;
+use crate::search::calibrate::Profile;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct ManifestEntry {
@@ -97,6 +100,66 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------- tuning profiles -----
+
+/// Directory the fitted cost-model profiles live in:
+/// `$FORELEM_TUNING_DIR` or `target/tuning`.
+pub fn tuning_dir() -> PathBuf {
+    std::env::var("FORELEM_TUNING_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/tuning"))
+}
+
+/// Path a profile for `arch_slug` is persisted at, inside `dir`.
+pub fn profile_path_in(dir: &Path, arch_slug: &str) -> PathBuf {
+    dir.join(format!("{arch_slug}.profile"))
+}
+
+/// Persist a fitted profile into `dir` (created if needed); returns
+/// the written path.
+pub fn save_profile_in(dir: &Path, profile: &Profile) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = profile_path_in(dir, &profile.arch_slug);
+    std::fs::write(&path, profile.render())?;
+    Ok(path)
+}
+
+/// Persist a fitted profile into the default [`tuning_dir`].
+pub fn save_profile(profile: &Profile) -> std::io::Result<PathBuf> {
+    save_profile_in(&tuning_dir(), profile)
+}
+
+/// Load the profile for `arch_slug` from `dir`, if present and
+/// parseable. A corrupt file is reported on stderr and ignored (the
+/// sweep then runs on the seed parameters).
+pub fn load_profile_in(dir: &Path, arch_slug: &str) -> Option<Profile> {
+    let path = profile_path_in(dir, arch_slug);
+    let text = std::fs::read_to_string(&path).ok()?;
+    match Profile::parse(&text) {
+        // A profile copied/renamed across architectures carries the
+        // wrong structural shape (l2_bytes) — refuse it rather than
+        // silently mis-ranking every gather-heavy plan.
+        Ok(p) if p.arch_slug != arch_slug => {
+            eprintln!(
+                "ignoring tuning profile {}: fitted for '{}', requested '{arch_slug}'",
+                path.display(),
+                p.arch_slug
+            );
+            None
+        }
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("ignoring corrupt tuning profile {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+/// Load the profile for `arch_slug` from the default [`tuning_dir`].
+pub fn load_profile(arch_slug: &str) -> Option<Profile> {
+    load_profile_in(&tuning_dir(), arch_slug)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +211,36 @@ mod tests {
         let dir = std::env::temp_dir().join("forelem_manifest_bad");
         write_manifest(&dir, "only three fields\n");
         assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// The ISSUE's round-trip property: a fitted profile persisted
+    /// through the artifact store reloads bit-for-bit — including
+    /// weights with no short decimal representation.
+    #[test]
+    fn profile_roundtrip_through_disk_is_lossless() {
+        use crate::search::cost::CostParams;
+        let dir = std::env::temp_dir().join("forelem_tuning_roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut params = CostParams::host_large(8);
+        // Perturb to awkward bit patterns (1/3, subnormal-ish tails).
+        for (i, w) in params.weights.iter_mut().enumerate() {
+            *w = (*w + 1e-13) / 3.0 + i as f64 * 1.7e-17;
+        }
+        let p = Profile::from_params("host-large", &params, 99);
+        let path = save_profile_in(&dir, &p).expect("save");
+        assert!(path.ends_with("host-large.profile"));
+        let q = load_profile_in(&dir, "host-large").expect("load");
+        assert_eq!(p, q);
+        assert_eq!(q.params_for(8).weights, params.weights);
+        // Absent and corrupt profiles both come back as None.
+        assert!(load_profile_in(&dir, "host-small").is_none());
+        std::fs::write(dir.join("host-small.profile"), "arch host-small\n").unwrap();
+        assert!(load_profile_in(&dir, "host-small").is_none());
+        // A profile renamed across architectures is refused: its
+        // structural l2_bytes belongs to the other machine.
+        std::fs::copy(dir.join("host-large.profile"), dir.join("host-small.profile")).unwrap();
+        assert!(load_profile_in(&dir, "host-small").is_none());
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -18,7 +18,23 @@
 //!   branch-free padded traversals win on perfectly uniform matrices),
 //! * **schedule terms** — parallel speedup limited by grain, row-length
 //!   imbalance (`row_cv`) and per-invocation thread spawn cost; tiled
-//!   schedules trade the gather penalty for per-band split/`y` traffic.
+//!   schedules trade the gather penalty for per-band split/`y` traffic;
+//!   level-scheduled TrSv pays one spin barrier per supernoded wave.
+//!
+//! # The fittable feature form
+//!
+//! Since the calibration refactor the model is *linear in its
+//! parameters*: [`features`] maps a plan + statistics to a fixed-order
+//! [`FeatureVec`] (streamed bytes, gathered bytes, flops, loop headers,
+//! spawn count, barrier-wave count, imbalance bytes) and the predicted
+//! time is the dot product with [`CostParams::weights`]. All
+//! nonlinearity — the L2 miss split, the memory/flop roofline, the
+//! effective parallel speedup — is resolved *inside the extractor*
+//! against the structural machine shape (`l2_bytes`, `threads`) and the
+//! reference weights, so a `(FeatureVec, measured_time)` sample archive
+//! can be refit by non-negative least squares (`search::calibrate`)
+//! without touching this module. The hand-set `host_small`/`host_large`
+//! bandwidth numbers survive as the *seed* weight vectors.
 //!
 //! The point is *ranking*, not absolute accuracy: the sweep measures
 //! the top of the predicted order and reports predicted-vs-measured
@@ -29,56 +45,116 @@ use crate::concretize::{Layout, Plan as ExecPlan, Schedule, Traversal};
 use crate::matrix::MatrixStats;
 use crate::storage::CooOrder;
 
+/// Number of entries in a [`FeatureVec`] / weight vector.
+pub const N_FEATURES: usize = 7;
+
+/// Fixed feature order — the contract between this extractor, the
+/// sample archive in `BENCH_*.json`, and `search::calibrate`'s fit.
+/// Index `i` of every persisted weight/feature array means
+/// `FEATURE_NAMES[i]`, forever; new features are appended, never
+/// reordered.
+pub const FEATURE_NAMES: [&str; N_FEATURES] = [
+    "stream_bytes",   // sequentially streamed bytes (incl. cache-hit gathers)
+    "gather_bytes",   // cache-missing randomly gathered bytes
+    "flops",          // floating-point operations (when compute-bound)
+    "loop_headers",   // inner-loop headers executed
+    "spawns",         // scoped threads spawned per invocation
+    "syncs",          // barrier waves × threads (level-scheduled TrSv)
+    "imbalance_bytes", // row-cv-weighted parallel byte volume (seed weight 0)
+];
+
+pub const F_STREAM: usize = 0;
+pub const F_GATHER: usize = 1;
+pub const F_FLOPS: usize = 2;
+pub const F_HEADERS: usize = 3;
+pub const F_SPAWNS: usize = 4;
+pub const F_SYNCS: usize = 5;
+pub const F_IMBALANCE: usize = 6;
+
+/// A plan's footprint on one matrix in the fixed [`FEATURE_NAMES`]
+/// order. Predicted seconds = `dot(features, CostParams::weights)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FeatureVec(pub [f64; N_FEATURES]);
+
+impl FeatureVec {
+    pub fn zero() -> Self {
+        FeatureVec([0.0; N_FEATURES])
+    }
+
+    /// Fixed-order dot product with a weight vector — deterministic
+    /// summation order, index 0 first.
+    pub fn dot(&self, w: &[f64; N_FEATURES]) -> f64 {
+        let mut acc = 0.0;
+        for (f, wi) in self.0.iter().zip(w.iter()) {
+            acc += f * wi;
+        }
+        acc
+    }
+}
+
 /// Architecture parameters of the cost model — the planner-facing
-/// summary of an `coordinator::sweep::Arch`.
-#[derive(Clone, Copy, Debug)]
+/// summary of a `coordinator::sweep::Arch`, split into the *structural*
+/// machine shape (`l2_bytes`, `threads` — resolved inside the feature
+/// extractor) and the *fitted* linear weight vector (`weights`, in the
+/// [`FEATURE_NAMES`] order: seconds per byte / flop / header / spawn /
+/// sync / imbalance-byte).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostParams {
-    /// Last-level cache a working set must fit in to gather cheaply.
+    /// Last-level cache a working set must fit in to gather cheaply
+    /// (structural — not fitted).
     pub l2_bytes: f64,
-    /// Sequential stream bandwidth (bytes/s).
-    pub stream_bw: f64,
-    /// Effective bandwidth of cache-missing random gathers (bytes/s).
-    pub gather_bw: f64,
-    /// Scalar flop rate (flops/s).
-    pub flop_rate: f64,
-    /// Cost of one inner-loop header (row / plane / diagonal), seconds.
-    pub loop_overhead: f64,
-    /// Per-thread spawn+join cost of one scoped-thread invocation.
-    pub spawn_overhead: f64,
-    /// Per-level spin-barrier cost of the level-scheduled TrSv
-    /// (atomics only, no syscalls — far below `spawn_overhead`).
-    pub sync_overhead: f64,
-    /// Worker threads the architecture exposes to parallel schedules.
+    /// Worker threads the architecture exposes to parallel schedules
+    /// (structural — not fitted).
     pub threads: usize,
+    /// The fitted coefficients, `FEATURE_NAMES` order.
+    pub weights: [f64; N_FEATURES],
 }
 
 impl CostParams {
+    /// Build a parameter vector from bandwidth-style rates — how the
+    /// seed machines are specified. `imbalance` seeds at 0 so the seed
+    /// predictions equal the pre-calibration closed formula.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_rates(
+        l2_bytes: f64,
+        threads: usize,
+        stream_bw: f64,
+        gather_bw: f64,
+        flop_rate: f64,
+        loop_overhead: f64,
+        spawn_overhead: f64,
+        sync_overhead: f64,
+    ) -> Self {
+        CostParams {
+            l2_bytes,
+            threads: threads.max(1),
+            weights: [
+                1.0 / stream_bw,
+                1.0 / gather_bw,
+                1.0 / flop_rate,
+                loop_overhead,
+                spawn_overhead,
+                sync_overhead,
+                0.0,
+            ],
+        }
+    }
+
     /// The paper-protocol single-core machine (Xeon 5150 stand-in).
     pub fn host_small() -> Self {
-        CostParams {
-            l2_bytes: 4e6,
-            stream_bw: 8e9,
-            gather_bw: 1.5e9,
-            flop_rate: 4e9,
-            loop_overhead: 1.5e-9,
-            spawn_overhead: 2.5e-5,
-            sync_overhead: 4e-7,
-            threads: 1,
-        }
+        CostParams::from_rates(4e6, 1, 8e9, 1.5e9, 4e9, 1.5e-9, 2.5e-5, 4e-7)
     }
 
     /// The modern multi-core machine (Xeon E5 stand-in).
     pub fn host_large(threads: usize) -> Self {
-        CostParams {
-            l2_bytes: 8e6,
-            stream_bw: 20e9,
-            gather_bw: 4e9,
-            flop_rate: 8e9,
-            loop_overhead: 1.0e-9,
-            spawn_overhead: 2.5e-5,
-            sync_overhead: 3e-7,
-            threads: threads.max(1),
-        }
+        CostParams::from_rates(8e6, threads.max(1), 20e9, 4e9, 8e9, 1.0e-9, 2.5e-5, 3e-7)
+    }
+
+    /// `self` with the weight vector replaced (what a calibration fit
+    /// returns — the structural shape is kept).
+    pub fn with_weights(mut self, weights: [f64; N_FEATURES]) -> Self {
+        self.weights = weights;
+        self
     }
 }
 
@@ -193,6 +269,19 @@ fn layout_resources(
                 stats.nrows.div_ceil(s)
             })
         }
+        Layout::SellSigma { s, sigma: _ } => {
+            // Rows sorted by length within σ windows before slicing:
+            // slice widths track the local maximum, so the padding
+            // collapses to a sliver of plain SELL's. The output is
+            // scattered through the window permutation (bounded by σ,
+            // so still near-streamed); perm + row_len lists are the
+            // extra stored arrays.
+            let pad = (n * stats.row_var.max(0.0).sqrt() * 0.15)
+                .min((n * row_max - nnz).max(0.0));
+            let slots = nnz + pad;
+            let nslices = n / s as f64 + 1.0;
+            (slots * 12.0 + nslices * 8.0 + n * 8.0, slots, nslices + slots / s as f64, 1)
+        }
         Layout::Dia => {
             let ndiags = (2.0 * stats.bandwidth as f64 + 1.0).min(n + nc - 1.0).max(1.0);
             // Dense diagonal planes; x and y are both streamed per plane.
@@ -265,16 +354,44 @@ pub fn resources(
     r
 }
 
-/// Predict the execution time (seconds) of one invocation of `exec` on
-/// a matrix with statistics `stats`, on architecture `p`. Always finite
-/// and positive; deterministic.
-pub fn predict(
+/// Extract the fixed-order feature vector of a plan on a matrix — the
+/// fittable half of the model. `p` supplies the *structural* machine
+/// shape (`l2_bytes`, `threads`) and the reference weights the
+/// extractor resolves the nonlinearity against:
+///
+/// * the L2 miss fraction splits the gathered bytes between the stream
+///   and gather entries,
+/// * the memory/flop roofline keeps only the dominant side's entries,
+/// * parallel schedules pre-divide the work entries by the effective
+///   speedup (thread cap × grain cap × `row_cv` efficiency) and record
+///   spawn / barrier-wave counts,
+/// * the level-scheduled TrSv charges one barrier wave per *supernoded*
+///   wave (`MatrixStats::sync_waves`, not raw `dep_levels` — narrow
+///   adjacent levels merge into one wave in `kernels::levels`).
+///
+/// The `imbalance_bytes` entry carries `row_cv × parallel byte volume`
+/// with a zero seed weight — a refit can learn a linear imbalance
+/// penalty without perturbing seed predictions.
+///
+/// Seed-identity scope: SpMV/SpMM predictions (and serial TrSv)
+/// reproduce the pre-refactor closed formula under the seed weights
+/// *up to floating-point reassociation* — the stream-charged byte
+/// terms are pre-summed into one feature and the bandwidths applied
+/// as reciprocal weights (`x * (1/bw)` instead of `x / bw`), which can
+/// move the last ulp; the same formula, bracketed differently, so
+/// rankings are unchanged except for sub-ulp ties. The **parallel
+/// TrSv** arm intentionally changed alongside the supernoding
+/// satellite: it now carries the same ×1.2 dependence stall factor as
+/// the serial solve (the supernoded executor runs narrow runs
+/// serially, so the stall does not vanish under the level schedule)
+/// and charges `sync_waves` instead of per-level barriers.
+pub fn features(
     kernel: Kernel,
     dense_k: usize,
     exec: &ExecPlan,
     stats: &MatrixStats,
     p: &CostParams,
-) -> f64 {
+) -> FeatureVec {
     let r = resources(kernel, dense_k, exec, stats);
 
     // Gather: the fraction of accesses whose working set spills past L2
@@ -282,30 +399,48 @@ pub fn predict(
     // streams.
     let ws = r.gather_working_set;
     let miss = if ws > p.l2_bytes { ((ws - p.l2_bytes) / ws).clamp(0.0, 1.0) } else { 0.0 };
-    let gather_time = r.gathered_bytes * miss / p.gather_bw
-        + (r.gathered_bytes * (1.0 - miss) + ws) / p.stream_bw;
+    let stream_units = r.streamed_bytes + r.gathered_bytes * (1.0 - miss) + ws;
+    let gather_units = r.gathered_bytes * miss;
 
-    let mem_time = r.streamed_bytes / p.stream_bw + gather_time;
-    let flop_time = r.flops / p.flop_rate;
-    let core = mem_time.max(flop_time);
-    let headers = r.loop_headers * p.loop_overhead;
+    // Roofline: memory-bound keeps the byte entries, compute-bound the
+    // flop entry — resolved against the reference weights so the dot
+    // product reproduces `max(mem_time, flop_time)`.
+    let mem_time = stream_units * p.weights[F_STREAM] + gather_units * p.weights[F_GATHER];
+    let flop_time = r.flops * p.weights[F_FLOPS];
+    let (su, gu, fu) = if flop_time > mem_time {
+        (0.0, 0.0, r.flops)
+    } else {
+        (stream_units, gather_units, 0.0)
+    };
+    let hu = r.loop_headers;
 
-    let total = match exec.schedule {
+    let mut f = [0.0; N_FEATURES];
+    match exec.schedule {
         Schedule::Serial | Schedule::Tiled { .. } => {
             let dep = if kernel == Kernel::Trsv { 1.2 } else { 1.0 };
-            (core + headers) * dep
+            f[F_STREAM] = su * dep;
+            f[F_GATHER] = gu * dep;
+            f[F_FLOPS] = fu * dep;
+            f[F_HEADERS] = hu * dep;
         }
         Schedule::Parallel { threads } if kernel == Kernel::Trsv => {
             // Level-scheduled solve: the speedup is capped by the mean
-            // level width (`nrows / dep_levels`) and every level pays
-            // one spin-barrier sync — a banded matrix with its
-            // near-serial chain is predicted (correctly) to lose badly.
+            // level width (`nrows / dep_levels`) and every supernoded
+            // wave pays one spin-barrier sync — a banded matrix with
+            // its near-serial chain collapses to few waves but also to
+            // no parallelism (the dependence stall factor stays).
             let t = threads.max(1);
-            let eff_threads = (t.min(p.threads.max(1)) as f64).min(stats.level_width()).max(1.0);
+            let eff_threads =
+                (t.min(p.threads.max(1)) as f64).min(stats.level_width()).max(1.0);
             let eff = 0.9 / (1.0 + stats.row_cv() * 0.25);
-            (core + headers) / (eff_threads * eff).max(1.0)
-                + stats.dep_levels as f64 * p.sync_overhead * t as f64
-                + p.spawn_overhead * t as f64
+            let inv = 1.2 / (eff_threads * eff).max(1.0);
+            f[F_STREAM] = su * inv;
+            f[F_GATHER] = gu * inv;
+            f[F_FLOPS] = fu * inv;
+            f[F_HEADERS] = hu * inv;
+            f[F_SPAWNS] = t as f64;
+            f[F_SYNCS] = stats.sync_waves as f64 * t as f64;
+            f[F_IMBALANCE] = stats.row_cv() * (su + gu) * inv;
         }
         Schedule::Parallel { threads } | Schedule::ParallelTiled { threads, .. } => {
             let t = threads.max(1);
@@ -313,11 +448,31 @@ pub fn predict(
             // Row-length imbalance erodes the speedup even with
             // nnz-balanced ranges (one huge row caps the partition).
             let eff = 0.9 / (1.0 + stats.row_cv() * 0.25);
-            (core + headers) / (eff_threads * eff).max(1.0)
-                + p.spawn_overhead * t as f64
+            let inv = 1.0 / (eff_threads * eff).max(1.0);
+            f[F_STREAM] = su * inv;
+            f[F_GATHER] = gu * inv;
+            f[F_FLOPS] = fu * inv;
+            f[F_HEADERS] = hu * inv;
+            f[F_SPAWNS] = t as f64;
+            f[F_IMBALANCE] = stats.row_cv() * (su + gu) * inv;
         }
-    };
-    total.max(1e-12)
+    }
+    FeatureVec(f)
+}
+
+/// Predict the execution time (seconds) of one invocation of `exec` on
+/// a matrix with statistics `stats`, on architecture `p`: the dot
+/// product of the extracted [`FeatureVec`] with `p.weights`. Always
+/// finite and positive; deterministic; bit-identical to
+/// `features(..).dot(&p.weights).max(1e-12)` by construction.
+pub fn predict(
+    kernel: Kernel,
+    dense_k: usize,
+    exec: &ExecPlan,
+    stats: &MatrixStats,
+    p: &CostParams,
+) -> f64 {
+    features(kernel, dense_k, exec, stats, p).dot(&p.weights).max(1e-12)
 }
 
 /// Indices of `plans`' execution triples sorted by predicted time
@@ -448,13 +603,39 @@ mod tests {
             predict(Kernel::Trsv, 1, &par, &wide, &p) < predict(Kernel::Trsv, 1, &serial, &wide, &p),
             "level schedule should win on wide level sets"
         );
-        // A serial chain (banded): one row per level, per-level sync
-        // swamps any parallelism.
+        // A serial chain (banded): one row per level, no exploitable
+        // parallelism — the supernoded waves save the barriers, but the
+        // spawn cost still makes the level schedule a loser.
         let chain = MatrixStats::synthetic(200_000, 200_000, 12.0, 16.0, 30, 3);
         assert!(
             predict(Kernel::Trsv, 1, &par, &chain, &p) > predict(Kernel::Trsv, 1, &serial, &chain, &p),
             "level schedule must lose on a serial dependence chain"
         );
+    }
+
+    #[test]
+    fn supernoded_waves_cut_the_sync_term() {
+        // Same dependence depth; one stats object with per-level waves,
+        // one with the narrow levels merged — the merged one must be
+        // predicted cheaper (fewer barriers), all else equal.
+        let p = CostParams::host_large(8);
+        let par = Plan::serial(Layout::Csr, Traversal::RowWise)
+            .with_schedule(Schedule::Parallel { threads: 8 });
+        let base = MatrixStats::synthetic(50_000, 50_000, 6.0, 2.0, 10, 30);
+        let mut per_level = base.with_dep_levels(20_000);
+        per_level.sync_waves = 20_000; // pre-supernode behavior
+        let mut merged = base.with_dep_levels(20_000);
+        merged.sync_waves = 700;
+        let t_per_level = predict(Kernel::Trsv, 1, &par, &per_level, &p);
+        let t_merged = predict(Kernel::Trsv, 1, &par, &merged, &p);
+        assert!(
+            t_merged < t_per_level,
+            "supernoding must reduce the predicted sync cost: {t_merged:e} vs {t_per_level:e}"
+        );
+        // The saving is exactly the sync weight times the wave delta.
+        let saved = t_per_level - t_merged;
+        let expect = (20_000.0 - 700.0) * 8.0 * p.weights[F_SYNCS];
+        assert!((saved - expect).abs() <= 1e-9 * expect, "{saved:e} vs {expect:e}");
     }
 
     #[test]
@@ -490,6 +671,74 @@ mod tests {
             assert!(a.is_finite() && a > 0.0);
             assert_eq!(a, b);
         }
+    }
+
+    /// The calibration contract: the prediction *is* the dot product of
+    /// the extracted features with the weight vector — bit-identical,
+    /// for every schedule shape, so a fit over archived `(FeatureVec,
+    /// measured)` samples scores plans exactly like the planner does.
+    #[test]
+    fn predict_is_exactly_features_dot_weights() {
+        let plans = [
+            csr(),
+            csr().with_schedule(Schedule::Parallel { threads: 4 }),
+            csr().with_schedule(Schedule::Tiled { x_block: 4096 }),
+            csr().with_schedule(Schedule::ParallelTiled { threads: 4, x_block: 4096 }),
+            Plan::serial(Layout::Ell(EllOrder::ColMajor), Traversal::PlaneWise),
+            Plan::serial(Layout::Dia, Traversal::DiagMajor),
+        ];
+        let stats = [
+            MatrixStats::nominal(),
+            MatrixStats::synthetic(100, 100, 5.0, 2.0, 8, 50),
+            MatrixStats::synthetic(400_000, 400_000, 40.0, 100.0, 80, 200_000),
+        ];
+        for p in [CostParams::host_small(), CostParams::host_large(8)] {
+            for e in &plans {
+                for s in &stats {
+                    for k in [Kernel::Spmv, Kernel::Spmm] {
+                        let direct = predict(k, 16, e, s, &p);
+                        let via = features(k, 16, e, s, &p).dot(&p.weights).max(1e-12);
+                        assert_eq!(direct, via, "{e:?} on {k:?}");
+                    }
+                }
+            }
+        }
+        // TrSv (incl. the level-scheduled path with its sync feature).
+        let tri = MatrixStats::synthetic(50_000, 50_000, 6.0, 2.0, 10, 25_000)
+            .with_dep_levels(100);
+        let par = csr().with_schedule(Schedule::Parallel { threads: 8 });
+        let p = CostParams::host_large(8);
+        let f = features(Kernel::Trsv, 1, &par, &tri, &p);
+        assert_eq!(predict(Kernel::Trsv, 1, &par, &tri, &p), f.dot(&p.weights));
+        assert!(f.0[F_SYNCS] > 0.0 && f.0[F_SPAWNS] > 0.0);
+    }
+
+    /// Seed vectors keep the hand-set machine numbers; the imbalance
+    /// entry seeds at zero so the closed-formula predictions are
+    /// reproduced; serial plans never carry schedule features.
+    #[test]
+    fn seed_weights_and_feature_shape() {
+        let p = CostParams::host_small();
+        assert_eq!(p.weights[F_STREAM], 1.0 / 8e9);
+        assert_eq!(p.weights[F_GATHER], 1.0 / 1.5e9);
+        assert_eq!(p.weights[F_FLOPS], 1.0 / 4e9);
+        assert_eq!(p.weights[F_HEADERS], 1.5e-9);
+        assert_eq!(p.weights[F_SPAWNS], 2.5e-5);
+        assert_eq!(p.weights[F_SYNCS], 4e-7);
+        assert_eq!(p.weights[F_IMBALANCE], 0.0);
+        assert_eq!(p.threads, 1);
+        assert_eq!(FEATURE_NAMES.len(), N_FEATURES);
+        let f = features(Kernel::Spmv, 1, &csr(), &MatrixStats::nominal(), &p);
+        assert_eq!(f.0[F_SPAWNS], 0.0);
+        assert_eq!(f.0[F_SYNCS], 0.0);
+        assert_eq!(f.0[F_IMBALANCE], 0.0);
+        assert!(f.0[F_STREAM] > 0.0);
+        // with_weights swaps the fitted half only.
+        let w2 = [1e-10, 1e-9, 1e-10, 1e-9, 1e-5, 1e-7, 1e-12];
+        let q = p.with_weights(w2);
+        assert_eq!(q.weights, w2);
+        assert_eq!(q.l2_bytes, p.l2_bytes);
+        assert_eq!(q.threads, p.threads);
     }
 
     #[test]

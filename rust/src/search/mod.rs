@@ -2,17 +2,21 @@
 //!
 //! `tree` enumerates the transformation tree (Fig 10) into cost-ranked
 //! first-class plans (`plan::Plan`); `cost` is the analytic model that
-//! ranks them; `coverage` is the coverage metric (§6.4.4); `select`
-//! picks per-matrix best triples and per-architecture all-round
-//! kernels (§6.4.5).
+//! ranks them (a fittable `FeatureVec · weights` form); `calibrate`
+//! closes the predict→measure→refit loop (NNLS fit of the weights from
+//! archived samples, persisted as per-machine profiles); `coverage` is
+//! the coverage metric (§6.4.4); `select` picks per-matrix best triples
+//! and per-architecture all-round kernels (§6.4.5).
 
+pub mod calibrate;
 pub mod cost;
 pub mod coverage;
 pub mod plan;
 pub mod select;
 pub mod tree;
 
-pub use cost::CostParams;
+pub use calibrate::Profile;
+pub use cost::{CostParams, FeatureVec};
 pub use coverage::Measurements;
 pub use plan::{Plan, PlanSpace};
 pub use tree::{enumerate, Tree};

@@ -32,7 +32,7 @@ use crate::baselines::Kernel;
 use crate::concretize::{self, Plan as ExecPlan, Schedule};
 use crate::forelem::ir::ChainState;
 use crate::matrix::MatrixStats;
-use crate::search::cost::{self, CostParams, Resources};
+use crate::search::cost::{self, CostParams, FeatureVec, Resources};
 
 /// One automatically instantiated routine + data structure: the unit
 /// the planner enumerates, ranks, shortlists and measures.
@@ -98,6 +98,20 @@ impl Plan {
         params: &CostParams,
     ) -> f64 {
         cost::predict(kernel, dense_k, &self.exec, stats, params)
+    }
+
+    /// The fittable feature vector behind [`predict`](Self::predict):
+    /// `predict == features.dot(&params.weights)` (clamped positive).
+    /// This is what the sweep archives per measured cell for
+    /// `search::calibrate`.
+    pub fn features(
+        &self,
+        kernel: Kernel,
+        dense_k: usize,
+        stats: &MatrixStats,
+        params: &CostParams,
+    ) -> FeatureVec {
+        cost::features(kernel, dense_k, &self.exec, stats, params)
     }
 }
 
@@ -218,8 +232,12 @@ mod tests {
         let r = p.resources(Kernel::Spmv, 1, &stats);
         assert!(r.streamed_bytes > 0.0 && r.flops > 0.0);
         assert!(r.parallel_grain >= 1);
-        let t = p.predict(Kernel::Spmv, 1, &stats, &CostParams::host_small());
+        let params = CostParams::host_small();
+        let t = p.predict(Kernel::Spmv, 1, &stats, &params);
         assert!(t.is_finite() && t > 0.0);
+        // The fittable form is exposed and consistent with predict.
+        let f = p.features(Kernel::Spmv, 1, &stats, &params);
+        assert_eq!(f.dot(&params.weights).max(1e-12), t);
     }
 
     #[test]

@@ -188,9 +188,15 @@ mod tests {
             "Blocked CSR (BCSR)",
             "hybrid ELL+COO",
             "diagonal storage (DIA)",
+            "Sliced ELLPACK (SELL)",
+            "row-sorted Sliced ELLPACK (SELL-\u{3c3})",
         ] {
             assert!(names.contains(want), "missing {want}; have {names:?}");
         }
+        // The SELL-σ chain (block(slice) → materialize → nstar_sort)
+        // concretizes with its content-derived id.
+        assert!(t.plans.iter().any(|p| p.id == "sell32s256.slice.serial"));
+        assert!(t.plans.iter().any(|p| p.id == "sell128s1024.slice.serial"));
     }
 
     #[test]

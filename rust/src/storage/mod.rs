@@ -13,6 +13,7 @@ pub mod hybrid;
 pub mod jds;
 pub mod ops;
 pub mod sell;
+pub mod sell_sigma;
 
 pub use bcsr::Bcsr;
 pub use coo::{CooAos, CooOrder, CooSoa};
@@ -24,3 +25,4 @@ pub use hybrid::HybridEllCoo;
 pub use jds::{Jds, JdsRows};
 pub use ops::{JdsOps, SparseOps};
 pub use sell::Sell;
+pub use sell_sigma::SellSigma;

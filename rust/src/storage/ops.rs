@@ -56,8 +56,8 @@ use crate::concretize::layout::{coo_order_slug, Traversal};
 use crate::kernels::levels::LevelSets;
 use crate::kernels::{levels, par, spmm, spmv, trsv};
 use crate::storage::{
-    sell, Bcsr, CooAos, CooOrder, CooSoa, Csc, CscAos, Csr, CsrAos, CsrBands, Dia, Ell,
-    EllOrder, HybridEllCoo, Jds, JdsRows, Sell,
+    sell, sell_sigma, Bcsr, CooAos, CooOrder, CooSoa, Csc, CscAos, Csr, CsrAos, CsrBands, Dia,
+    Ell, EllOrder, HybridEllCoo, Jds, JdsRows, Sell, SellSigma,
 };
 use crate::util::pool::scoped_run;
 
@@ -625,6 +625,32 @@ impl SparseOps for Sell {
     }
 }
 
+// ---------------------------------------------------------- SELL-σ --
+
+// The extension-recipe litmus: one trait impl + one registry arm. The
+// window permutation scatters the output, so no partition interface —
+// `schedule_legal` keeps SELL-σ serial.
+impl SparseOps for SellSigma {
+    fn slug(&self) -> String {
+        format!("sell{}s{}", self.s, self.sigma)
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn bytes(&self) -> usize {
+        SellSigma::bytes(self)
+    }
+    fn spmv_serial(&self, _t: Traversal, x: &[f64], y: &mut [f64]) {
+        sell_sigma::spmv(self, x, y);
+    }
+    fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        sell_sigma::spmm(self, b, k, c);
+    }
+}
+
 // ------------------------------------------------------------- DIA --
 
 impl SparseOps for Dia {
@@ -710,6 +736,10 @@ mod tests {
             // 2 slices of width 3: 24 slots ×12 + widths 2×4 +
             // slice_ptr 3×4 + row_len 8×4
             (Box::new(Sell::from_tuples(&m, 4)), 340),
+            // full-window sort groups lengths [3,3,2,2|1,1,1,1]:
+            // slices of width 3 and 1 → 16 slots ×12 + widths 2×4 +
+            // slice_ptr 3×4 + row_len 8×4 + perm 8×4
+            (Box::new(SellSigma::from_tuples(&m, 4, 8)), 276),
             // 5 diagonals: offsets 5×4 + planes 5×8 ×8
             (Box::new(Dia::from_tuples(&m)), 340),
         ];
@@ -755,6 +785,7 @@ mod tests {
                 Layout::HybridEllCoo
             }),
             (Box::new(Sell::from_tuples(&m, 4)), Layout::Sell { s: 4 }),
+            (Box::new(SellSigma::from_tuples(&m, 4, 32)), Layout::SellSigma { s: 4, sigma: 32 }),
             (Box::new(Dia::from_tuples(&m)), Layout::Dia),
         ];
         for (ops, layout) in &pairs {

@@ -45,6 +45,22 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Boolean-flag lookup that survives the parser's greedy option
+    /// rule: `--check FILE` parses as option `check=FILE`, silently
+    /// disabling `flag("check")`. This treats the key's presence —
+    /// with or without a swallowed value — as the flag being set, and
+    /// returns the swallowed token so the caller can restore it to its
+    /// intended positional role.
+    pub fn flag_with_capture(&self, name: &str) -> (bool, Option<&str>) {
+        if self.flag(name) {
+            (true, None)
+        } else if let Some(v) = self.get(name) {
+            (true, Some(v))
+        } else {
+            (false, None)
+        }
+    }
+
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
@@ -108,5 +124,20 @@ mod tests {
         let a = parse(&["x"]);
         assert_eq!(a.get_or("backend", "native"), "native");
         assert_eq!(a.get_f64("t", 0.1), 0.1);
+    }
+
+    #[test]
+    fn flag_with_capture_recovers_swallowed_positionals() {
+        // `--check FILE`: the parser records check=FILE; the loose
+        // lookup must still see the flag and hand the file back.
+        let a = parse(&["calibrate", "--check", "BENCH.json"]);
+        assert!(!a.flag("check"));
+        assert_eq!(a.flag_with_capture("check"), (true, Some("BENCH.json")));
+        // Trailing flag: set, nothing swallowed.
+        let b = parse(&["calibrate", "BENCH.json", "--check"]);
+        assert_eq!(b.flag_with_capture("check"), (true, None));
+        assert_eq!(b.positional, vec!["BENCH.json"]);
+        // Absent entirely.
+        assert_eq!(parse(&["calibrate"]).flag_with_capture("check"), (false, None));
     }
 }
