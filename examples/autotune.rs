@@ -1,19 +1,19 @@
-//! Autotuning walk-through on one matrix: enumerate the cost-ranked
-//! plan space, benchmark every generated plan and all 7 library
-//! routines, and report the winner (plus where the analytic cost model
-//! had ranked it) — the per-matrix specialization the paper's
-//! framework delivers, now with the predict→measure planner visible.
+//! Autotuning walk-through on one matrix: the engine ranks the
+//! cost-model's shortlist, measures the top-K plans
+//! (`Autotune::TopK`), keeps the fastest, and archives every
+//! measurement as a calibration sample — the per-matrix specialization
+//! the paper's framework delivers, served through the one-call
+//! `Engine::compile` API. The winner is then compared against all 7
+//! library routines.
 //!
 //! ```bash
 //! cargo run --release --example autotune -- [matrix-name] [--quick]
 //! ```
 
-use forelem::baselines::{Kernel, ALL_ROUTINES};
+use forelem::baselines::ALL_ROUTINES;
 use forelem::bench::harness::{black_box, time_fn, BenchConfig};
-use forelem::concretize;
+use forelem::engine::{Autotune, Engine, Kernel};
 use forelem::matrix::suite;
-use forelem::search::plan::PlanSpace;
-use forelem::search::tree;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -38,36 +38,33 @@ fn main() {
         m.nnz() as f64 / m.nrows as f64
     );
 
+    // One call: enumerate → calibrated predict → measure the top-8 →
+    // prepare the winner. Samples land in the tuning archive so
+    // `forelem calibrate` can refit the profile from this very run.
+    let topk = 8;
+    let engine = Engine::builder().autotune(Autotune::TopK(topk)).bench(cfg).build();
+    let t0 = std::time::Instant::now();
+    let exe = engine.compile(Kernel::Spmv, &m);
+    println!(
+        "\nengine.compile: ranked {} plans, measured top-{topk}, in {:.1} ms",
+        engine.plans(Kernel::Spmv).len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!("{}", exe.explain());
+
+    // Validate + time the winner against the library baselines.
     let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.013).sin()).collect();
     let want = m.spmv_ref(&x);
-
-    let mut results: Vec<(String, f64, String)> = Vec::new();
-
-    // Generated plans, ranked by the analytic cost model on this
-    // matrix's statistics.
-    let space = PlanSpace::serial_only()
-        .with_rank_stats(forelem::matrix::MatrixStats::of(&m));
-    let t = tree::enumerate(Kernel::Spmv, &space);
-    println!("benchmarking {} generated plans + {} library routines ...", t.plans.len(), 7);
-    for (rank, v) in t.plans.iter().enumerate() {
-        let p = concretize::prepare(v.exec, &m);
-        let mut y = vec![0.0; m.nrows];
-        p.spmv(&x, &mut y);
-        for (i, (g, w)) in y.iter().zip(&want).enumerate() {
-            assert!((g - w).abs() <= 1e-9 * w.abs().max(1.0), "{} wrong at {i}", v.id);
-        }
-        let s = time_fn(&cfg, || {
-            p.spmv(&x, &mut y);
-            black_box(&y);
-        });
-        results.push((
-            format!("{} {} (predicted #{})", v.id, v.name(), rank + 1),
-            s.median,
-            v.derivation.clone(),
-        ));
-    }
-
-    // Library baselines.
+    let mut y = vec![0.0; m.nrows];
+    exe.spmv(&x, &mut y);
+    forelem::util::prop::assert_close(&y, &want, 1e-9)
+        .unwrap_or_else(|e| panic!("{} diverged from the oracle: {e}", exe.plan().id));
+    let s = time_fn(&cfg, || {
+        exe.spmv(&x, &mut y);
+        black_box(&y);
+    });
+    let mut results: Vec<(String, f64)> =
+        vec![(format!("[gen] {} ({} B)", exe.plan().id, exe.bytes()), s.median)];
     for r in ALL_ROUTINES {
         let inst = r.prepare(&m);
         let mut y = vec![0.0; m.nrows];
@@ -75,25 +72,25 @@ fn main() {
             inst.spmv(&x, &mut y);
             black_box(&y);
         });
-        results.push((format!("[lib] {}", r.label()), s.median, "hand-written library".into()));
+        results.push((format!("[lib] {}", r.label()), s.median));
     }
-
     results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-    println!("\n{:<52} {:>12} {:>9}", "routine", "median", "vs best");
+
+    println!("{:<52} {:>12} {:>9}", "routine", "median", "vs best");
     let best = results[0].1;
-    for (name, t, _) in &results {
+    for (name, t) in &results {
         println!("{name:<52} {:>9.2} µs {:>8.2}x", t * 1e6, t / best);
     }
-    let (winner, tbest, derivation) = &results[0];
-    println!("\nwinner: {winner}");
-    println!("derivation: {derivation}");
-    let best_lib = results
-        .iter()
-        .find(|(n, ..)| n.starts_with("[lib]"))
-        .expect("library routines present");
+    let gen_time = results.iter().find(|(n, _)| n.starts_with("[gen]")).unwrap().1;
+    let best_lib = results.iter().find(|(n, _)| n.starts_with("[lib]")).unwrap();
+    println!(
+        "\nengine winner: {} — derivation: {}",
+        exe.plan().id,
+        exe.plan().derivation
+    );
     println!(
         "reduction vs best library routine ({}): {:.1}%",
         best_lib.0,
-        100.0 * (1.0 - tbest / best_lib.1)
+        100.0 * (1.0 - gen_time / best_lib.1)
     );
 }

@@ -1,16 +1,15 @@
 //! Quickstart: express SpMV as a forelem program over a tuple reservoir,
-//! let the framework derive a data structure + routine, and run it.
+//! let the engine derive a data structure + routine, and run it —
+//! specification in, tuned executable out, in under ten lines.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use forelem::baselines::Kernel;
-use forelem::concretize;
-use forelem::forelem::ir::{NStarMat, Orth};
+use forelem::engine::{Engine, Kernel};
 use forelem::forelem::{build, pretty};
 use forelem::matrix::TriMat;
-use forelem::transforms::{apply_chain, Step};
+use forelem::transforms::apply_chain;
 
 fn main() {
     // 1. A sparse matrix is just a reservoir of ⟨row, col⟩_A tuples.
@@ -27,27 +26,22 @@ fn main() {
     let initial = apply_chain(Kernel::Spmv, &[]).unwrap();
     println!("== specification ==\n{}", pretty::render(&build::program(&initial)));
 
-    // 3. Apply a transformation chain; the compiler derives CSR.
-    let chain = [
-        Step::Orthogonalize(Orth::Row),
-        Step::Materialize,
-        Step::Split,
-        Step::NStar(NStarMat::Exact),
-        Step::DimReduce,
-    ];
-    let state = apply_chain(Kernel::Spmv, &chain).unwrap();
-    println!("== after {} ==\n{}", state.history.join(" → "), pretty::render(&build::program(&state)));
+    // 3. The compiler does the rest: enumerate the transformation
+    //    tree, rank the plans on this matrix, assemble the storage.
+    let engine = Engine::builder().build();
+    let exe = engine.compile(Kernel::Spmv, &a);
+    println!("== derived ==");
+    println!("plan {} via: {}", exe.plan().id, exe.plan().derivation);
+    println!("{}", exe.codegen());
 
-    // 4. Concretize: physical storage + executable routine.
-    let plan = concretize::plans(&state).unwrap()[0];
-    println!("derived data structure: {}", plan.layout.literature_name());
-    println!("{}", concretize::codegen::emit(Kernel::Spmv, &plan));
-
-    let prepared = concretize::prepare(plan, &a);
+    // 4. Execute the generated routine on its generated structure.
     let x = vec![1.0, 2.0, 3.0, 4.0];
     let mut y = vec![0.0; 4];
-    prepared.spmv(&x, &mut y);
+    exe.spmv(&x, &mut y);
     println!("y = A x = {y:?}");
     assert_eq!(y, a.spmv_ref(&x));
     println!("matches the tuple-reservoir oracle ✓");
+
+    // 5. Observability: why the engine picked this plan.
+    println!("\n{}", exe.explain());
 }

@@ -1,17 +1,15 @@
 //! Micro-benchmarks of the generated kernels per format on one matrix
 //! class — the profiling entry point for the L3 §Perf pass (DESIGN §7).
 //!
-//! With the schedule axis: every (layout × traversal × schedule) plan
-//! in the host schedule pool is timed, and the CSR serial-vs-parallel
+//! The pool is swept through the engine: every (layout × traversal ×
+//! schedule) plan in the host schedule pool is pinned
+//! (`Engine::compile_pinned`) and timed, and the CSR serial-vs-parallel
 //! SpMV speedup is reported explicitly (the headline number for the
 //! `Schedule::Parallel` generated kernels — expect ≥2× on ≥4 cores).
-use forelem::baselines::Kernel;
 use forelem::bench::harness::{black_box, time_fn, BenchConfig};
-use forelem::concretize::{self, Layout, Schedule};
-use forelem::coordinator::sweep::DEFAULT_X_BLOCK;
+use forelem::concretize::{Layout, Schedule};
+use forelem::engine::{Arch, Engine, Kernel};
 use forelem::matrix::suite;
-use forelem::search::plan::PlanSpace;
-use forelem::search::tree;
 
 fn main() {
     let cfg = if std::env::var("FORELEM_QUICK").is_ok() {
@@ -20,31 +18,22 @@ fn main() {
         BenchConfig::from_env()
     };
     let threads = forelem::util::pool::default_workers().clamp(2, 8);
-    let space = PlanSpace::host(threads, DEFAULT_X_BLOCK);
+    let engine = Engine::builder().arch(Arch::HostLarge).profile(false).build();
+    let plans = engine.plans(Kernel::Spmv);
     let names = ["Erdos971", "blckhole", "consph", "Raj1", "net150"];
-    let t = tree::enumerate(Kernel::Spmv, &space);
-    println!(
-        "plan space: {} schedules, {} worker threads",
-        space.schedules.len(),
-        threads
-    );
+    println!("plan space: {} plans, {} worker threads", plans.len(), threads);
     for name in names {
         let m = suite::by_name(name).unwrap().build();
         let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.01).sin()).collect();
-        println!(
-            "## {name}: n={} nnz={} maxrow={}",
-            m.nrows,
-            m.nnz(),
-            m.max_row_nnz()
-        );
+        println!("## {name}: n={} nnz={} maxrow={}", m.nrows, m.nnz(), m.max_row_nnz());
         let mut rows: Vec<(String, f64, usize)> = Vec::new();
         let mut csr_serial = None;
         let mut csr_parallel = None;
-        for v in &t.plans {
-            let p = concretize::prepare(v.exec, &m);
+        for v in &plans {
+            let exe = engine.compile_pinned(Kernel::Spmv, &m, &v.id).expect("pool plan");
             let mut y = vec![0.0; m.nrows];
             let s = time_fn(&cfg, || {
-                p.spmv(&x, &mut y);
+                exe.spmv(&x, &mut y);
                 black_box(&y);
             });
             if v.exec.layout == Layout::Csr {
@@ -54,7 +43,7 @@ fn main() {
                     _ => {}
                 }
             }
-            rows.push((format!("{} {}", v.id, v.name()), s.median, p.bytes()));
+            rows.push((format!("{} {}", v.id, v.name()), s.median, exe.bytes()));
         }
         rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         for (name, median, bytes) in rows {

@@ -129,6 +129,12 @@ fn with_ops(plan: Plan, m: &TriMat, ops: Arc<dyn SparseOps>) -> Prepared {
 }
 
 /// Build the storage for a plan from the tuple reservoir.
+///
+/// Internal seam: this is the post-selection half of the pipeline.
+/// Library users should go through `crate::engine::Engine::compile`,
+/// which picks the plan, shares storage across repeated compiles and
+/// returns the serving-ready `Executable`; `prepare` remains public
+/// for the engine, the sweep's exhaustive path, and tests.
 pub fn prepare(plan: Plan, m: &TriMat) -> Prepared {
     with_ops(plan, m, build_ops(plan.layout, m))
 }

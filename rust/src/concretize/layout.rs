@@ -222,8 +222,11 @@ impl Plan {
 ///   the dependence.
 /// - `Parallel` SpMV/SpMM requires a layout whose output rows
 ///   partition into disjoint contiguous ranges: CSR (SoA), ELL, SELL
-///   (slice ranges), BCSR (block-row ranges) and permuted JDS
-///   (prefix-property row ranges in the permuted output).
+///   (slice ranges), BCSR (block-row ranges), permuted JDS
+///   (prefix-property row ranges in the permuted output) and SELL-σ
+///   with slice-aligned sort windows (`σ % s == 0`: whole-window
+///   ranges own exactly their σ output rows, since the permutation
+///   never crosses a window).
 ///   Scatter-shaped layouts (COO, CSC, DIA, hybrid tails, unpermuted
 ///   JDS) would need atomics or merges. The branch-free
 ///   `RowWisePadded` ELL traversal is excluded: its parallel executor
@@ -256,14 +259,21 @@ pub fn schedule_legal(
             _ => false,
         };
     }
-    let row_partitionable = matches!(
-        layout,
-        Layout::Csr
-            | Layout::Ell(_)
-            | Layout::Sell { .. }
-            | Layout::Bcsr { .. }
-            | Layout::Jds { permuted: true }
-    ) && traversal != Traversal::RowWisePadded;
+    // SELL-σ joins the row-partitionable pool when its σ windows are
+    // slice-aligned: the sort permutation never crosses a window, so
+    // whole-window ranges are a lock-free output split (σ = 8·s from
+    // the chain mapping always qualifies).
+    let sigma_aligned = matches!(layout, Layout::SellSigma { s, sigma } if sigma % s == 0);
+    let row_partitionable = (sigma_aligned
+        || matches!(
+            layout,
+            Layout::Csr
+                | Layout::Ell(_)
+                | Layout::Sell { .. }
+                | Layout::Bcsr { .. }
+                | Layout::Jds { permuted: true }
+        ))
+        && traversal != Traversal::RowWisePadded;
     let tileable = match kernel {
         Kernel::Spmv => layout == Layout::Csr,
         Kernel::Spmm => matches!(layout, Layout::Csr | Layout::Bcsr { .. }),
@@ -529,9 +539,10 @@ mod tests {
             Step::Materialize,
         ]);
         assert_eq!(plans(&plain).unwrap()[0].layout, Layout::Sell { s: 32 });
-        // The window permutation scatters the output: serial-only.
+        // Slice-aligned σ windows (σ = 8·s) are a lock-free output
+        // split, so the litmus format sits in the scheduled pool…
         let par = Schedule::Parallel { threads: 4 };
-        assert!(!schedule_legal(
+        assert!(schedule_legal(
             Layout::SellSigma { s: 32, sigma: 256 },
             Traversal::SlicePlane,
             par,
@@ -542,6 +553,26 @@ mod tests {
             Traversal::SlicePlane,
             Schedule::Serial,
             Kernel::Spmm
+        ));
+        // …but an unaligned window cuts a slice: serial-only, and no
+        // schedule ever tiles or TrSv-reschedules the permuted format.
+        assert!(!schedule_legal(
+            Layout::SellSigma { s: 32, sigma: 40 },
+            Traversal::SlicePlane,
+            par,
+            Kernel::Spmv
+        ));
+        assert!(!schedule_legal(
+            Layout::SellSigma { s: 32, sigma: 256 },
+            Traversal::SlicePlane,
+            Schedule::Tiled { x_block: 4096 },
+            Kernel::Spmv
+        ));
+        assert!(!schedule_legal(
+            Layout::SellSigma { s: 32, sigma: 256 },
+            Traversal::SlicePlane,
+            par,
+            Kernel::Trsv
         ));
     }
 

@@ -5,6 +5,15 @@
 //! `codegen` (plan → inspectable C-like source text). The format
 //! registry (`exec::build_ops`) and the `storage::ops::SparseOps` trait
 //! replace the old per-storage enum dispatch.
+//!
+//! **Internal plumbing.** Since the `forelem::engine` redesign this
+//! module is the engine's backend, not the crate's front door: the
+//! free functions re-exported here (`prepare`, `prepare_many`, …) are
+//! the thin seam `Engine::compile` (and the sweep's exhaustive path)
+//! drive after plan selection. Embedding users should call
+//! [`crate::engine::Engine`] — it owns plan selection, calibrated
+//! prediction, the process-wide storage cache and autotuning, none of
+//! which a bare `prepare` gives you.
 
 pub mod codegen;
 pub mod exec;

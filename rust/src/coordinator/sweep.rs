@@ -16,15 +16,15 @@
 
 use crate::baselines::{Kernel, LibRoutine, ALL_ROUTINES};
 use crate::bench::harness::{black_box, time_fn, BenchConfig};
-use crate::concretize::{self, Schedule};
+use crate::concretize;
 use crate::matrix::suite::{SuiteEntry, SUITE};
 use crate::matrix::{MatrixStats, TriMat};
-use crate::runtime::{artifacts, XlaBackend};
+use crate::runtime::XlaBackend;
 use crate::search::calibrate::{self, Sample};
 use crate::search::cost::{self, CostParams, FEATURE_NAMES};
 use crate::search::coverage::Measurements;
 use crate::search::plan::{Plan, PlanSpace};
-use crate::search::{select, tree};
+use crate::search::select;
 use crate::storage::{Ell, EllOrder};
 use crate::util::rng::Rng;
 
@@ -287,31 +287,22 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
         },
     );
 
-    // Stage 1 — enumerate: one cost-ranked plan space serves both the
-    // serial-only (paper protocol) and scheduled sweeps. A fitted
-    // tuning profile, when opted in and present, replaces the seed
-    // weights (thread count stays the running machine's).
-    let mut space = arch.plan_space();
-    if !cfg.use_schedules {
-        space.schedules = vec![Schedule::Serial];
-    }
-    space.dense_k = cfg.spmm_k;
-    let mut profile_loaded = false;
-    if cfg.use_profile {
-        if let Some(prof) = artifacts::load_profile(arch.slug()) {
-            space.params = prof.params_for(space.params.threads);
-            profile_loaded = true;
-            // Surface it: fitted rankings must never silently replace
-            // the seed model in paper-table output.
-            eprintln!(
-                "note: {} ranking under fitted profile {} (--no-profile for the seed model)",
-                arch.slug(),
-                artifacts::profile_path_in(&artifacts::tuning_dir(), arch.slug()).display()
-            );
-        }
-    }
-    let tree = tree::enumerate(kernel, &space);
-    let plans = tree.plans;
+    // Stage 1 — enumerate through the engine's planner seam: one
+    // cost-ranked plan space serves both the serial-only (paper
+    // protocol) and scheduled sweeps, with the same profile-loading
+    // behavior as `Engine::compile` (the sweep is the exhaustive
+    // measure path of the very pipeline the engine serves).
+    let pool = crate::engine::planned_pool(
+        kernel,
+        arch,
+        cfg.use_schedules,
+        cfg.spmm_k,
+        cfg.use_profile,
+        true,
+    );
+    let space = pool.space;
+    let profile_loaded = pool.profile_loaded;
+    let plans = pool.plans;
 
     let lib_routines: Vec<LibRoutine> =
         ALL_ROUTINES.iter().copied().filter(|r| r.supports(kernel)).collect();

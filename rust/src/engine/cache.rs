@@ -1,0 +1,116 @@
+//! The process-wide compile cache — the serving path.
+//!
+//! Keyed by `(kernel, arch, matrix fingerprint, config digest)`: the
+//! fingerprint is `TriMat::fingerprint` (content + shape + order), the
+//! digest folds in everything else that can change the winning plan or
+//! its storage — the ranked weight vector (so loading a new tuning
+//! profile cold-starts the cache instead of serving stale plans), the
+//! schedule axis, the SpMM dense width, the autotune depth, and a
+//! pinned plan id if any. Entries hold the `Arc`-shared `Compiled`
+//! (plan + storage), so a hit is a pointer clone: repeated compiles of
+//! the same matrix are free. This layers *above*
+//! `concretize::prepare_many`'s plan-keyed storage cache, which
+//! de-duplicates storage *within* one compile's shortlist.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::baselines::Kernel;
+use crate::search::cost::CostParams;
+
+use super::executable::Compiled;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(crate) struct Key {
+    kernel: Kernel,
+    arch: &'static str,
+    fingerprint: u64,
+    digest: u64,
+}
+
+impl Key {
+    pub(crate) fn new(kernel: Kernel, arch: &'static str, fingerprint: u64, digest: u64) -> Self {
+        Key { kernel, arch, fingerprint, digest }
+    }
+}
+
+/// FNV-1a fold (`util::fnv::Fnv1a`, the same primitive as
+/// `TriMat::fingerprint`) of the engine-configuration facets that
+/// affect compile results (see module docs for the list).
+pub(crate) fn config_digest(
+    params: &CostParams,
+    schedules: bool,
+    spmm_k: usize,
+    autotune_k: usize,
+    pinned: Option<&str>,
+) -> u64 {
+    let mut h = crate::util::fnv::Fnv1a::new();
+    h.eat_u64(params.l2_bytes.to_bits());
+    h.eat_u64(params.threads as u64);
+    for w in &params.weights {
+        h.eat_u64(w.to_bits());
+    }
+    h.eat_u64(schedules as u64);
+    h.eat_u64(spmm_k as u64);
+    h.eat_u64(autotune_k as u64);
+    if let Some(id) = pinned {
+        h.eat_bytes(id.as_bytes());
+    }
+    h.finish()
+}
+
+fn cache() -> &'static Mutex<HashMap<Key, Arc<Compiled>>> {
+    static CACHE: OnceLock<Mutex<HashMap<Key, Arc<Compiled>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+pub(crate) fn lookup(key: &Key) -> Option<Arc<Compiled>> {
+    cache().lock().unwrap().get(key).cloned()
+}
+
+pub(crate) fn insert(key: Key, compiled: Arc<Compiled>) {
+    cache().lock().unwrap().insert(key, compiled);
+}
+
+pub(crate) fn clear() {
+    cache().lock().unwrap().clear();
+}
+
+pub(crate) fn len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_separates_configurations() {
+        let seed = CostParams::host_small();
+        let base = config_digest(&seed, true, 100, 0, None);
+        assert_eq!(base, config_digest(&seed, true, 100, 0, None), "deterministic");
+        assert_ne!(base, config_digest(&seed, false, 100, 0, None), "schedule axis");
+        assert_ne!(base, config_digest(&seed, true, 16, 0, None), "spmm_k");
+        assert_ne!(base, config_digest(&seed, true, 100, 4, None), "autotune depth");
+        assert_ne!(base, config_digest(&seed, true, 100, 0, Some("csr.row.serial")), "pin");
+        // A fitted profile (different weights) cold-starts the cache.
+        let mut w = seed.weights;
+        w[0] *= 1.5;
+        let fitted = seed.with_weights(w);
+        assert_ne!(base, config_digest(&fitted, true, 100, 0, None), "weights");
+        // Structural shape participates too.
+        let mut big = seed;
+        big.l2_bytes *= 2.0;
+        assert_ne!(base, config_digest(&big, true, 100, 0, None), "l2");
+    }
+
+    #[test]
+    fn keys_are_exact() {
+        let d = config_digest(&CostParams::host_small(), true, 100, 0, None);
+        let a = Key::new(Kernel::Spmv, "host-small", 1, d);
+        assert_eq!(a, Key::new(Kernel::Spmv, "host-small", 1, d));
+        assert_ne!(a, Key::new(Kernel::Spmm, "host-small", 1, d));
+        assert_ne!(a, Key::new(Kernel::Spmv, "host-large", 1, d));
+        assert_ne!(a, Key::new(Kernel::Spmv, "host-small", 2, d));
+    }
+}

@@ -1,0 +1,220 @@
+//! The engine's output artifact: a tuned routine bound to its
+//! generated data structure, plus the observability surface
+//! (`plan()`, `bytes()`, `explain()`).
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::baselines::Kernel;
+use crate::concretize::{self, Prepared};
+use crate::matrix::MatrixStats;
+use crate::search::cost::{CostParams, FeatureVec, FEATURE_NAMES, N_FEATURES};
+use crate::search::plan::Plan;
+use crate::storage::SparseOps;
+
+/// The cached result of one `Engine::compile`: the winning plan, its
+/// assembled storage, and everything `explain()` needs to say why.
+pub(crate) struct Compiled {
+    pub plan: Plan,
+    pub prepared: Arc<Prepared>,
+    pub stats: MatrixStats,
+    pub params: CostParams,
+    pub features: FeatureVec,
+    pub predicted_secs: f64,
+    pub measured_secs: Option<f64>,
+    pub profile_loaded: bool,
+}
+
+/// A compiled routine + data structure, bound to one matrix — what
+/// `Engine::compile` returns. Cloning is cheap (the storage is
+/// `Arc`-shared, as it is across the engine's process-wide cache).
+#[derive(Clone)]
+pub struct Executable {
+    kernel: Kernel,
+    dense_k: usize,
+    inner: Arc<Compiled>,
+}
+
+impl Executable {
+    pub(crate) fn new(kernel: Kernel, dense_k: usize, inner: Arc<Compiled>) -> Self {
+        Executable { kernel, dense_k, inner }
+    }
+
+    /// The kernel this executable was compiled (and tuned) for.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The winning plan: stable id, derivation chain, execution triple.
+    pub fn plan(&self) -> &Plan {
+        &self.inner.plan
+    }
+
+    /// Total bytes of the generated data structure (storage + schedule
+    /// auxiliaries built at compile time).
+    pub fn bytes(&self) -> usize {
+        self.inner.prepared.bytes()
+    }
+
+    /// The plan's predicted seconds per invocation on this matrix,
+    /// under the engine's (possibly fitted) parameters.
+    pub fn predicted_secs(&self) -> f64 {
+        self.inner.predicted_secs
+    }
+
+    /// Median measured seconds from the autotune loop, if the engine
+    /// measured this compile (`Autotune::TopK(k ≥ 2)`).
+    pub fn measured_secs(&self) -> Option<f64> {
+        self.inner.measured_secs
+    }
+
+    /// The `Arc`-shared storage behind the executable — exposed so
+    /// callers (and the cache tests) can observe sharing across
+    /// repeated compiles.
+    pub fn storage(&self) -> Arc<dyn SparseOps> {
+        Arc::clone(&self.inner.prepared.ops)
+    }
+
+    /// Run the generated SpMV: `y = A x`.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.check(Kernel::Spmv);
+        self.inner.prepared.spmv(x, y);
+    }
+
+    /// Run the generated SpMM with the engine's configured dense
+    /// column count (`EngineBuilder::spmm_k`, default 100): `C = A B`,
+    /// `b` is `ncols × k` row-major.
+    pub fn spmm(&self, b: &[f64], c: &mut [f64]) {
+        self.spmm_k(b, self.dense_k, c);
+    }
+
+    /// Run the generated SpMM with an explicit dense column count.
+    pub fn spmm_k(&self, b: &[f64], k: usize, c: &mut [f64]) {
+        self.check(Kernel::Spmm);
+        self.inner.prepared.spmm(b, k, c);
+    }
+
+    /// Run the generated unit-lower TrSv (the storage holds the
+    /// strictly-lower triangle): solve `L x = b`.
+    pub fn trsv(&self, b: &[f64], x: &mut [f64]) {
+        self.check(Kernel::Trsv);
+        self.inner.prepared.trsv(b, x);
+    }
+
+    /// The generated C-like code of the winning plan — the inspectable
+    /// artifact, headed by the predicted footprint that ranked it.
+    pub fn codegen(&self) -> String {
+        concretize::codegen::emit_with_cost(
+            self.kernel,
+            &self.inner.plan.exec,
+            self.dense_k,
+            &self.inner.stats,
+            &self.inner.params,
+        )
+    }
+
+    /// The cost/feature breakdown of the winning plan on this matrix:
+    /// one term per cost-model feature (value × fitted weight =
+    /// seconds), the predicted and — when autotuned — measured time,
+    /// and the storage footprint. The observability face of the
+    /// planner: render with `Display` or consume the fields.
+    pub fn explain(&self) -> CostBreakdown {
+        let c = &*self.inner;
+        let terms: Vec<CostTerm> = (0..N_FEATURES)
+            .map(|i| CostTerm {
+                name: FEATURE_NAMES[i],
+                feature: c.features.0[i],
+                weight: c.params.weights[i],
+                seconds: c.features.0[i] * c.params.weights[i],
+            })
+            .collect();
+        CostBreakdown {
+            kernel: self.kernel,
+            plan_id: c.plan.id.clone(),
+            derivation: c.plan.derivation.clone(),
+            predicted_secs: c.predicted_secs,
+            measured_secs: c.measured_secs,
+            bytes: self.bytes(),
+            profile_loaded: c.profile_loaded,
+            terms,
+        }
+    }
+
+    /// A kernel mismatch is a caller bug, not a degraded mode: an
+    /// executable tuned for one kernel may not even generate a legal
+    /// loop nest for another (e.g. a parallel SpMV plan has no TrSv).
+    fn check(&self, called: Kernel) {
+        if self.kernel == called {
+            return;
+        }
+        assert!(
+            concretize::supports(&self.inner.plan.exec, called),
+            "executable was compiled for {:?} (plan {}); its generated nest does not \
+             support {:?} — compile({:?}, ..) instead",
+            self.kernel,
+            self.inner.plan.id,
+            called,
+            called
+        );
+    }
+}
+
+/// One feature's contribution to a predicted time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostTerm {
+    /// Feature name (`search::cost::FEATURE_NAMES` order).
+    pub name: &'static str,
+    /// Extracted feature value on this matrix.
+    pub feature: f64,
+    /// The (seed or fitted) weight applied to it.
+    pub weight: f64,
+    /// `feature × weight` — this term's share of the prediction.
+    pub seconds: f64,
+}
+
+/// The `explain()` report: why the engine picked this plan and what it
+/// expects it to cost. `predicted_secs` is the dot product of the
+/// terms (clamped positive), exactly what ranked the plan.
+#[derive(Clone, Debug)]
+pub struct CostBreakdown {
+    pub kernel: Kernel,
+    pub plan_id: String,
+    pub derivation: String,
+    pub predicted_secs: f64,
+    /// Autotune median, when the engine measured this compile.
+    pub measured_secs: Option<f64>,
+    /// Bytes of the generated data structure.
+    pub bytes: usize,
+    /// Whether the weights came from a fitted tuning profile.
+    pub profile_loaded: bool,
+    pub terms: Vec<CostTerm>,
+}
+
+impl fmt::Display for CostBreakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{} plan {} ({} bytes, {} weights)",
+            self.kernel.label(),
+            self.plan_id,
+            self.bytes,
+            if self.profile_loaded { "fitted" } else { "seed" }
+        )?;
+        writeln!(f, "  derivation: {}", self.derivation)?;
+        for t in &self.terms {
+            writeln!(
+                f,
+                "  {:<16} {:>12.4e} x {:>10.3e} = {:>9.3} us",
+                t.name,
+                t.feature,
+                t.weight,
+                t.seconds * 1e6
+            )?;
+        }
+        write!(f, "  predicted {:.3} us", self.predicted_secs * 1e6)?;
+        if let Some(m) = self.measured_secs {
+            write!(f, ", measured {:.3} us (autotuned)", m * 1e6)?;
+        }
+        writeln!(f)
+    }
+}

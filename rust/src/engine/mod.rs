@@ -1,0 +1,629 @@
+//! `forelem::engine` — the production-facing compile-and-serve facade.
+//!
+//! The paper's promise is "specification in, tuned executable out":
+//! the user writes a data-structure-free forelem program and the
+//! compiler derives the loop nest *and* the physical data structure.
+//! This module is the single front door that delivers that contract as
+//! an embedding API, wrapping the whole planner pipeline behind one
+//! call:
+//!
+//! ```text
+//! Engine::compile(kernel, &matrix)
+//!   = enumerate (search::tree, the transformation-tree walk)
+//!   → calibrated predict (search::cost under the fitted profile)
+//!   → optional measure loop (Autotune::TopK(k) times the shortlist)
+//!   → prepare (concretize — storage assembly + schedule auxiliaries)
+//!   → Executable (spmv / spmm / trsv + plan() + bytes() + explain())
+//! ```
+//!
+//! # Serving path
+//!
+//! Compiles are memoized in a **process-wide cache** keyed by
+//! `(kernel, arch, matrix fingerprint, config digest)`: the second
+//! `compile` of the same reservoir returns the same `Arc`-shared
+//! storage without touching the planner — the repeated-traffic serving
+//! path. Within a single compile, the autotune shortlist is prepared
+//! through `concretize::prepare_many`'s plan-keyed storage cache, so
+//! schedule/traversal variants of one layout share one assembly.
+//!
+//! # Online calibration
+//!
+//! Every autotune measurement is archived as a
+//! [`search::calibrate::Sample`](crate::search::calibrate::Sample)
+//! (`target/tuning/<arch>.samples.jsonl` — the same line format
+//! `forelem calibrate` consumes), so serving traffic keeps feeding the
+//! predict→measure→refit loop. The builder auto-loads the fitted
+//! `target/tuning/<arch>.profile` like the CLI sweeps do; call
+//! [`EngineBuilder::profile`]`(false)` to rank on the seed model
+//! (library tests do, for hermeticity).
+//!
+//! # Example
+//!
+//! ```
+//! use forelem::engine::{Engine, Kernel};
+//! use forelem::matrix::TriMat;
+//!
+//! let mut a = TriMat::new(2, 2);
+//! a.push(0, 0, 2.0);
+//! a.push(1, 0, 1.0);
+//! a.push(1, 1, 3.0);
+//! let engine = Engine::builder().profile(false).build();
+//! let exe = engine.compile(Kernel::Spmv, &a);
+//! let mut y = [0.0; 2];
+//! exe.spmv(&[1.0, 2.0], &mut y);
+//! assert_eq!(y, [2.0, 7.0]);
+//! ```
+
+mod cache;
+mod executable;
+
+pub use executable::{CostBreakdown, CostTerm, Executable};
+
+pub use crate::baselines::Kernel;
+pub use crate::coordinator::sweep::Arch;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::bench::harness::{black_box, time_fn, BenchConfig};
+use crate::concretize::{self, Schedule};
+use crate::matrix::{MatrixStats, TriMat};
+use crate::runtime::artifacts;
+use crate::search::calibrate::Sample;
+use crate::search::cost::{self, FeatureVec};
+use crate::search::plan::{Plan, PlanSpace};
+use crate::search::tree;
+
+use executable::Compiled;
+
+/// How much measuring `compile` may do on top of the calibrated
+/// prediction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Autotune {
+    /// Predict-only: trust the (calibrated) cost model's first pick.
+    Off,
+    /// Measure the top-`k` predicted plans and keep the fastest;
+    /// `TopK(0)` and `TopK(1)` degenerate to predict-only. Each
+    /// measurement is archived as a calibration sample.
+    TopK(usize),
+}
+
+impl Autotune {
+    fn k(&self) -> usize {
+        match self {
+            Autotune::Off => 0,
+            Autotune::TopK(k) => *k,
+        }
+    }
+}
+
+/// Builder for [`Engine`] — the knobs of the compile pipeline.
+#[derive(Clone, Debug)]
+pub struct EngineBuilder {
+    arch: Arch,
+    schedules: bool,
+    spmm_k: usize,
+    autotune: Autotune,
+    profile: bool,
+    archive: bool,
+    bench: BenchConfig,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            arch: Arch::HostSmall,
+            schedules: true,
+            spmm_k: 100,
+            autotune: Autotune::Off,
+            profile: true,
+            archive: true,
+            bench: BenchConfig::quick(),
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Target architecture: selects the plan space (`HostSmall` stays
+    /// serial-only, `HostLarge` adds the parallel/tiled schedules) and
+    /// the cost-model seed parameters / tuning-profile slug.
+    pub fn arch(mut self, arch: Arch) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    /// Force the serial-only plan space even on a scheduled
+    /// architecture (`false`); `true` (default) uses the architecture's
+    /// full space.
+    pub fn schedules(mut self, on: bool) -> Self {
+        self.schedules = on;
+        self
+    }
+
+    /// Dense-operand column count SpMM plans are ranked for and
+    /// [`Executable::spmm`] executes with (default 100, the paper's k).
+    pub fn spmm_k(mut self, k: usize) -> Self {
+        self.spmm_k = k.max(1);
+        self
+    }
+
+    /// Measure-based autotuning policy (default [`Autotune::Off`]).
+    pub fn autotune(mut self, autotune: Autotune) -> Self {
+        self.autotune = autotune;
+        self
+    }
+
+    /// Auto-load the fitted `target/tuning/<arch>.profile` written by
+    /// `forelem calibrate` (default `true`, like the CLI sweeps; pass
+    /// `false` to rank on the seed cost model — tests do, for
+    /// hermeticity).
+    pub fn profile(mut self, on: bool) -> Self {
+        self.profile = on;
+        self
+    }
+
+    /// Append every autotune measurement to the per-arch calibration
+    /// archive (`target/tuning/<arch>.samples.jsonl`, default `true`)
+    /// so serving traffic keeps feeding the refit loop.
+    pub fn archive(mut self, on: bool) -> Self {
+        self.archive = on;
+        self
+    }
+
+    /// Measurement protocol of the autotune loop (default
+    /// `BenchConfig::quick()` — serving compiles should be cheap).
+    pub fn bench(mut self, bench: BenchConfig) -> Self {
+        self.bench = bench;
+        self
+    }
+
+    pub fn build(self) -> Engine {
+        Engine { cfg: self, pools: Mutex::new(HashMap::new()) }
+    }
+}
+
+/// The engine-internal per-kernel planner state: the schedule-crossed
+/// plan space (profile-resolved parameters) and the enumerated,
+/// cost-ranked plan pool. `coordinator::sweep` drives the same seam
+/// ([`planned_pool`]) for its exhaustive paper-table path instead of
+/// duplicating the profile-loading + enumeration logic.
+pub(crate) struct PlannedPool {
+    pub space: PlanSpace,
+    pub plans: Vec<Plan>,
+    /// Whether `space.params` came from a fitted on-disk profile.
+    pub profile_loaded: bool,
+}
+
+/// Build the plan space + enumerated pool for one kernel — stage 1 of
+/// every pipeline (engine compiles and sweeps alike). A fitted tuning
+/// profile, when opted in and present, replaces the seed weights (the
+/// thread count stays the running machine's). `announce` prints the
+/// profile note to stderr — the sweep passes `true` so fitted rankings
+/// never silently replace the seed model in paper-table output; the
+/// engine stays quiet (embedding hosts read
+/// `CostBreakdown::profile_loaded` instead of scraping logs).
+pub(crate) fn planned_pool(
+    kernel: Kernel,
+    arch: Arch,
+    use_schedules: bool,
+    dense_k: usize,
+    use_profile: bool,
+    announce: bool,
+) -> PlannedPool {
+    let mut space = arch.plan_space();
+    if !use_schedules {
+        space.schedules = vec![Schedule::Serial];
+    }
+    space.dense_k = dense_k;
+    let mut profile_loaded = false;
+    if use_profile {
+        if let Some(prof) = artifacts::load_profile(arch.slug()) {
+            space.params = prof.params_for(space.params.threads);
+            profile_loaded = true;
+            if announce {
+                eprintln!(
+                    "note: {} ranking under fitted profile {} (--no-profile for the seed model)",
+                    arch.slug(),
+                    artifacts::profile_path_in(&artifacts::tuning_dir(), arch.slug()).display()
+                );
+            }
+        }
+    }
+    let tree = tree::enumerate(kernel, &space);
+    PlannedPool { space, plans: tree.plans, profile_loaded }
+}
+
+/// The compile-and-serve facade. Construct once per process (or per
+/// configuration) via [`Engine::builder`], then [`compile`](Engine::compile)
+/// per (kernel, matrix); repeated compiles of the same matrix are
+/// served from the process-wide cache.
+pub struct Engine {
+    cfg: EngineBuilder,
+    pools: Mutex<HashMap<Kernel, Arc<PlannedPool>>>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// The architecture this engine compiles for.
+    pub fn arch(&self) -> Arch {
+        self.cfg.arch
+    }
+
+    /// The enumerated, cost-ranked plan pool for `kernel` (ranked
+    /// against the space's nominal statistics; `compile` re-ranks per
+    /// matrix).
+    pub fn plans(&self, kernel: Kernel) -> Vec<Plan> {
+        self.pool(kernel).plans.clone()
+    }
+
+    /// The generated C-like code of one plan, prefixed with its
+    /// predicted resource footprint under this engine's (possibly
+    /// fitted) parameters — the inspectable artifact.
+    pub fn emit(&self, kernel: Kernel, plan: &Plan) -> String {
+        let pool = self.pool(kernel);
+        concretize::codegen::emit_with_cost(
+            kernel,
+            &plan.exec,
+            pool.space.dense_k,
+            &pool.space.ranking_stats(),
+            &pool.space.params,
+        )
+    }
+
+    /// Compile `kernel` against a tuple reservoir: rank the enumerated
+    /// pool on the matrix's statistics under the calibrated parameters,
+    /// optionally measure the shortlist ([`Autotune::TopK`]), assemble
+    /// the winning storage, and return the bound [`Executable`].
+    ///
+    /// For TrSv the reservoir must hold the strictly-lower triangle
+    /// (as everywhere else in the crate).
+    pub fn compile(&self, kernel: Kernel, m: &TriMat) -> Executable {
+        self.compile_inner(kernel, m, None)
+    }
+
+    /// [`compile`](Engine::compile) pinned to one plan by stable id
+    /// (e.g. `"csr.row.serial"`), bypassing selection — for harnesses
+    /// that sweep the whole pool and for serving setups that fix a
+    /// plan out-of-band. Returns `None` if the pool has no such plan.
+    pub fn compile_pinned(&self, kernel: Kernel, m: &TriMat, plan_id: &str) -> Option<Executable> {
+        if !self.pool(kernel).plans.iter().any(|p| p.id == plan_id) {
+            return None;
+        }
+        Some(self.compile_inner(kernel, m, Some(plan_id)))
+    }
+
+    /// Drop every cached compile in the process (all engines). Mostly
+    /// for long-running hosts that want to bound memory and for
+    /// benchmarks that need cold compiles.
+    pub fn clear_cache() {
+        cache::clear();
+    }
+
+    /// Number of compiles currently cached process-wide.
+    pub fn cache_len() -> usize {
+        cache::len()
+    }
+
+    fn pool(&self, kernel: Kernel) -> Arc<PlannedPool> {
+        let mut pools = self.pools.lock().unwrap();
+        pools
+            .entry(kernel)
+            .or_insert_with(|| {
+                Arc::new(planned_pool(
+                    kernel,
+                    self.cfg.arch,
+                    self.cfg.schedules,
+                    self.cfg.spmm_k,
+                    self.cfg.profile,
+                    false,
+                ))
+            })
+            .clone()
+    }
+
+    fn compile_inner(&self, kernel: Kernel, m: &TriMat, pinned: Option<&str>) -> Executable {
+        let pool = self.pool(kernel);
+        let fingerprint = m.fingerprint();
+        let key = cache::Key::new(
+            kernel,
+            self.cfg.arch.slug(),
+            fingerprint,
+            cache::config_digest(
+                &pool.space.params,
+                self.cfg.schedules,
+                self.cfg.spmm_k,
+                self.cfg.autotune.k(),
+                pinned,
+            ),
+        );
+        if let Some(hit) = cache::lookup(&key) {
+            return Executable::new(kernel, self.cfg.spmm_k, hit);
+        }
+
+        let stats = MatrixStats::of(m);
+        // Shortlist selection: `cost::rank_execs` is the one
+        // implementation of the predicted-ascending, index-tie
+        // ordering contract (shared with the sweep's shortlist). A
+        // pinned compile skips ranking the pool entirely (pool sweeps
+        // like `kernels_micro` would otherwise pay O(pool²)).
+        let shortlist: Vec<usize> = match pinned {
+            Some(id) => {
+                vec![pool.plans.iter().position(|p| p.id == id).expect("checked by caller")]
+            }
+            None => {
+                assert!(!pool.plans.is_empty(), "empty plan pool for {kernel:?}");
+                let execs: Vec<concretize::Plan> = pool.plans.iter().map(|p| p.exec).collect();
+                let order =
+                    cost::rank_execs(kernel, self.cfg.spmm_k, &execs, &stats, &pool.space.params);
+                let k = self.cfg.autotune.k().clamp(1, pool.plans.len());
+                order[..k].to_vec()
+            }
+        };
+        // Features/predictions for the shortlist only — what the
+        // measure loop archives and the winner's explain() reports.
+        // `rank_execs` scored with the same dot product, so the
+        // re-extraction is bit-identical to the ranking pass above.
+        let short_fvs: Vec<FeatureVec> = shortlist
+            .iter()
+            .map(|&pi| pool.plans[pi].features(kernel, self.cfg.spmm_k, &stats, &pool.space.params))
+            .collect();
+        let short_pred: Vec<f64> =
+            short_fvs.iter().map(|f| f.dot(&pool.space.params.weights).max(1e-12)).collect();
+        let (win_si, prepared, measured, mut samples) =
+            self.select(kernel, m, &pool, &shortlist, &short_fvs, &short_pred);
+
+        // The online-calibration hook: archive what the clock said so
+        // `forelem calibrate` can refit the serving profile. The label
+        // reuses the fingerprint already computed for the cache key;
+        // archive failures must never fail a compile.
+        if self.cfg.archive && !samples.is_empty() {
+            let label = format!("fp{fingerprint:016x}");
+            for s in &mut samples {
+                s.matrix = label.clone();
+            }
+            if let Err(e) = artifacts::append_samples(self.cfg.arch.slug(), &samples) {
+                eprintln!("warning: could not archive autotune samples: {e}");
+            }
+        }
+
+        let compiled = Arc::new(Compiled {
+            plan: pool.plans[shortlist[win_si]].clone(),
+            prepared,
+            stats,
+            params: pool.space.params,
+            features: short_fvs[win_si],
+            predicted_secs: short_pred[win_si],
+            measured_secs: measured,
+            profile_loaded: pool.profile_loaded,
+        });
+        cache::insert(key, Arc::clone(&compiled));
+        Executable::new(kernel, self.cfg.spmm_k, compiled)
+    }
+
+    /// Prepare the shortlist (plan-keyed storage cache) and, when it
+    /// has more than one entry, run the measure loop: time each
+    /// candidate under the quick protocol and keep the fastest.
+    /// `fvs`/`predicted` are aligned with `shortlist` (which holds
+    /// pool indices). Returns `(winning shortlist index, its storage,
+    /// its measured seconds, one calibration sample per measurement)`
+    /// — samples come back with an empty `matrix` label; the caller
+    /// stamps the fingerprint and archives them.
+    fn select(
+        &self,
+        kernel: Kernel,
+        m: &TriMat,
+        pool: &PlannedPool,
+        shortlist: &[usize],
+        fvs: &[FeatureVec],
+        predicted: &[f64],
+    ) -> (usize, Arc<concretize::Prepared>, Option<f64>, Vec<Sample>) {
+        let execs: Vec<concretize::Plan> =
+            shortlist.iter().map(|&pi| pool.plans[pi].exec).collect();
+        let prepared = concretize::prepare_many(&execs, m, crate::util::pool::default_workers());
+        // Schedule auxiliaries (band splits, TrSv level sets) are part
+        // of the generated data structure — built at compile time, not
+        // on the first serve (and never inside a timed region).
+        for p in &prepared {
+            match kernel {
+                Kernel::Spmv => p.ensure_bands(),
+                Kernel::Trsv => p.ensure_levels(),
+                Kernel::Spmm => {}
+            }
+        }
+        let mut prepared: Vec<Arc<concretize::Prepared>> =
+            prepared.into_iter().map(Arc::new).collect();
+        if shortlist.len() <= 1 {
+            return (0, prepared.remove(0), None, Vec::new());
+        }
+
+        let x = workload(m.ncols.max(m.nrows), 0xC0FFEE);
+        let b = if kernel == Kernel::Spmm {
+            workload(m.ncols * self.cfg.spmm_k, 0xBEEF)
+        } else {
+            Vec::new()
+        };
+        let mut samples: Vec<Sample> = Vec::with_capacity(shortlist.len());
+        let mut best: Option<(usize, f64)> = None;
+        for (si, &pi) in shortlist.iter().enumerate() {
+            let p = &prepared[si];
+            let t = match kernel {
+                Kernel::Spmv => {
+                    let mut y = vec![0.0; m.nrows];
+                    time_fn(&self.cfg.bench, || {
+                        p.spmv(&x[..m.ncols], &mut y);
+                        black_box(&y);
+                    })
+                }
+                Kernel::Spmm => {
+                    let mut c = vec![0.0; m.nrows * self.cfg.spmm_k];
+                    time_fn(&self.cfg.bench, || {
+                        p.spmm(&b, self.cfg.spmm_k, &mut c);
+                        black_box(&c);
+                    })
+                }
+                Kernel::Trsv => {
+                    let mut xs = vec![0.0; m.nrows];
+                    time_fn(&self.cfg.bench, || {
+                        p.trsv(&x[..m.nrows], &mut xs);
+                        black_box(&xs);
+                    })
+                }
+            };
+            samples.push(Sample {
+                matrix: String::new(), // stamped by the caller
+                plan_id: pool.plans[pi].id.clone(),
+                features: fvs[si].0,
+                measured_secs: t.median,
+                predicted_secs: predicted[si],
+            });
+            if best.map(|(_, bt)| t.median < bt).unwrap_or(true) {
+                best = Some((si, t.median));
+            }
+        }
+        let (si, secs) = best.expect("non-empty shortlist");
+        (si, prepared.swap_remove(si), Some(secs), samples)
+    }
+}
+
+/// Deterministic measurement workload (same generator family as the
+/// sweep's, so engine measurements are comparable across processes).
+fn workload(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..n).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    fn engine_small() -> Engine {
+        Engine::builder().arch(Arch::HostSmall).profile(false).archive(false).build()
+    }
+
+    #[test]
+    fn compile_executes_all_three_kernels_correctly() {
+        let m = gen::uniform_random(40, 40, 280, 900);
+        let e = engine_small();
+
+        let x: Vec<f64> = (0..40).map(|i| (i as f64 * 0.11).sin() + 0.4).collect();
+        let exe = e.compile(Kernel::Spmv, &m);
+        let mut y = vec![0.0; 40];
+        exe.spmv(&x, &mut y);
+        crate::util::prop::assert_close(&y, &m.spmv_ref(&x), 1e-10).unwrap();
+        assert!(exe.bytes() > 0);
+        assert!(exe.predicted_secs() > 0.0);
+
+        let k = 5;
+        let b: Vec<f64> = (0..40 * k).map(|i| i as f64 * 0.03 - 0.5).collect();
+        let exe = e.compile(Kernel::Spmm, &m);
+        let mut c = vec![0.0; 40 * k];
+        exe.spmm_k(&b, k, &mut c);
+        crate::util::prop::assert_close(&c, &m.spmm_ref(&b, k), 1e-10).unwrap();
+
+        let l = m.strictly_lower();
+        let exe = e.compile(Kernel::Trsv, &l);
+        let mut xs = vec![0.0; 40];
+        exe.trsv(&x, &mut xs);
+        crate::util::prop::assert_close(&xs, &l.trsv_unit_lower_ref(&x), 1e-9).unwrap();
+    }
+
+    #[test]
+    fn repeated_compiles_share_the_cached_storage() {
+        let m = gen::powerlaw(36, 2.0, 18, 901);
+        let e = engine_small();
+        let a = e.compile(Kernel::Spmv, &m);
+        let b = e.compile(Kernel::Spmv, &m);
+        assert!(Arc::ptr_eq(&a.storage(), &b.storage()), "cache must Arc-share storage");
+        assert_eq!(a.plan().id, b.plan().id);
+        // A different matrix is a different key.
+        let m2 = gen::powerlaw(36, 2.0, 18, 902);
+        let c = e.compile(Kernel::Spmv, &m2);
+        assert!(!Arc::ptr_eq(&a.storage(), &c.storage()));
+        // A different config digest (spmm_k affects SpMM ranking) does
+        // not collide either — via a second engine.
+        let e2 = Engine::builder()
+            .arch(Arch::HostSmall)
+            .profile(false)
+            .archive(false)
+            .spmm_k(7)
+            .build();
+        let d = e2.compile(Kernel::Spmm, &m);
+        assert!(!Arc::ptr_eq(&a.storage(), &d.storage()) || a.plan().id != d.plan().id);
+    }
+
+    #[test]
+    fn autotune_topk_measures_and_picks_a_shortlisted_plan() {
+        let m = gen::uniform_random(50, 50, 400, 903);
+        let e = Engine::builder()
+            .arch(Arch::HostSmall)
+            .profile(false)
+            .archive(false)
+            .autotune(Autotune::TopK(3))
+            .build();
+        let exe = e.compile(Kernel::Spmv, &m);
+        let secs = exe.measured_secs().expect("TopK(3) must measure");
+        assert!(secs > 0.0 && secs.is_finite());
+        // The winner is one of the top-3 predicted plans.
+        let pool = e.plans(Kernel::Spmv);
+        let stats = MatrixStats::of(&m);
+        let params = crate::coordinator::sweep::Arch::HostSmall.cost_params();
+        let execs: Vec<concretize::Plan> = pool.iter().map(|p| p.exec).collect();
+        let order = crate::search::cost::rank_execs(Kernel::Spmv, 100, &execs, &stats, &params);
+        let top3: Vec<&str> = order[..3].iter().map(|&i| pool[i].id.as_str()).collect();
+        assert!(top3.contains(&exe.plan().id.as_str()), "{} not in {top3:?}", exe.plan().id);
+        // Correctness is untouched by autotuning.
+        let x: Vec<f64> = (0..50).map(|i| (i as f64 * 0.2).cos()).collect();
+        let mut y = vec![0.0; 50];
+        exe.spmv(&x, &mut y);
+        crate::util::prop::assert_close(&y, &m.spmv_ref(&x), 1e-10).unwrap();
+    }
+
+    #[test]
+    fn compile_pinned_respects_the_plan_id() {
+        let m = gen::banded(30, 4, 0.7, 904);
+        let e = engine_small();
+        let exe = e.compile_pinned(Kernel::Spmv, &m, "csr.row.serial").expect("csr exists");
+        assert_eq!(exe.plan().id, "csr.row.serial");
+        assert!(e.compile_pinned(Kernel::Spmv, &m, "no.such.plan").is_none());
+        let x: Vec<f64> = (0..30).map(|i| i as f64 * 0.1).collect();
+        let mut y = vec![0.0; 30];
+        exe.spmv(&x, &mut y);
+        crate::util::prop::assert_close(&y, &m.spmv_ref(&x), 1e-10).unwrap();
+    }
+
+    #[test]
+    fn explain_breaks_the_prediction_down() {
+        let m = gen::uniform_random(25, 25, 120, 905);
+        let e = engine_small();
+        let exe = e.compile(Kernel::Spmv, &m);
+        let ex = exe.explain();
+        assert_eq!(ex.plan_id, exe.plan().id);
+        assert_eq!(ex.terms.len(), crate::search::cost::N_FEATURES);
+        let sum: f64 = ex.terms.iter().map(|t| t.seconds).sum();
+        assert!((sum.max(1e-12) - ex.predicted_secs).abs() <= 1e-18 + 1e-12 * ex.predicted_secs);
+        let text = ex.to_string();
+        for name in crate::search::cost::FEATURE_NAMES {
+            assert!(text.contains(name), "explain text missing {name}");
+        }
+        assert!(text.contains(&ex.plan_id));
+        assert!(text.contains("bytes"));
+    }
+
+    #[test]
+    fn engine_pool_matches_direct_enumeration() {
+        let e = engine_small();
+        let pool = e.plans(Kernel::Spmv);
+        let direct = tree::enumerate(Kernel::Spmv, &PlanSpace::serial_only());
+        let a: Vec<&String> = pool.iter().map(|p| &p.id).collect();
+        let b: Vec<&String> = direct.plans.iter().map(|p| &p.id).collect();
+        assert_eq!(a, b, "HostSmall engine pool must be the serial-only tree");
+        // And the emitted artifact carries the cost header.
+        let txt = e.emit(Kernel::Spmv, &pool[0]);
+        assert!(txt.contains("/* predicted on"));
+        assert!(txt.contains("/* generated:"));
+    }
+}

@@ -1,11 +1,58 @@
 //! # forelem
 //!
 //! Reproduction of Rietveld & Wijshoff, *Automatic Compiler-Based Data
-//! Structure Generation* (CS.DC 2022): the forelem framework — programs
-//! specified over tuple reservoirs with no fixed data structure, from
-//! which the "compiler" (this library) derives both loop nests and
-//! physical data structures via chains of IR transformations, then
-//! concretizes and executes them. See DESIGN.md for the experiment map.
+//! Structure Generation* (CS.DC 2022), grown into an embeddable
+//! compile-and-serve library: programs are specified over tuple
+//! reservoirs with **no fixed data structure**, and the "compiler"
+//! (this crate) derives both the loop nest and the physical data
+//! structure, tunes the choice per matrix, and hands back a ready
+//! executable.
+//!
+//! ## Quickstart
+//!
+//! The documented front door is [`engine::Engine`]: specification in,
+//! tuned executable out.
+//!
+//! ```
+//! use forelem::engine::{Engine, Kernel};
+//! use forelem::matrix::TriMat;
+//!
+//! // A sparse matrix is just a reservoir of <row, col>_A tuples.
+//! let mut a = TriMat::new(2, 2);
+//! a.push(0, 0, 2.0);
+//! a.push(1, 0, 1.0);
+//! a.push(1, 1, 3.0);
+//!
+//! // Compile: enumerate -> calibrated predict -> prepare.
+//! let engine = Engine::builder().profile(false).build();
+//! let exe = engine.compile(Kernel::Spmv, &a);
+//!
+//! // Execute the generated routine on its generated data structure.
+//! let mut y = [0.0; 2];
+//! exe.spmv(&[1.0, 2.0], &mut y);
+//! assert_eq!(y, [2.0, 7.0]);
+//! println!("picked {} ({} bytes)\n{}", exe.plan().id, exe.bytes(), exe.explain());
+//! ```
+//!
+//! `Engine::builder()` takes the architecture ([`Arch`]), an
+//! [`engine::Autotune`] policy (`TopK(k)` measures the k best-predicted
+//! plans and keeps the fastest, archiving every measurement for the
+//! calibration loop), and auto-loads the machine's fitted tuning
+//! profile (`target/tuning/<arch>.profile`, written by
+//! `forelem calibrate`). Repeated compiles of the same matrix are
+//! served from a process-wide plan + storage cache.
+//!
+//! ## Layers
+//!
+//! The engine fronts the layered pipeline (see DESIGN.md for the
+//! diagram): `forelem` (specification IR) → `transforms` (the chain
+//! steps of the paper) → `search` (tree enumeration, analytic cost
+//! model, calibration) → `concretize` (layout mapping, storage
+//! registry, codegen) → `storage`/`kernels` (the 13 formats behind the
+//! `SparseOps` trait and their schedule-aware executors). The lower
+//! layers stay public for the paper-reproduction surfaces
+//! (`coordinator::sweep`, `bench::tables`, the CLI) and for tests, but
+//! embedding users should not need anything below [`engine`].
 
 pub mod matrix;
 pub mod storage;
@@ -15,9 +62,16 @@ pub mod forelem;
 pub mod transforms;
 pub mod concretize;
 pub mod search;
+pub mod engine;
 pub mod bench;
 pub mod runtime;
 pub mod coordinator;
 pub mod distrib;
 pub mod relational;
 pub mod util;
+
+// The crate's documented API surface — everything an embedding user
+// needs, re-exported from one place.
+pub use baselines::Kernel;
+pub use coordinator::sweep::Arch;
+pub use engine::{Autotune, CostBreakdown, Engine, Executable};

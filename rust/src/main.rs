@@ -1,6 +1,8 @@
 //! forelem CLI — the L3 entrypoint.
 //!
 //! ```text
+//! forelem run [--kernel K] [--matrix NAME]        compile-and-serve demo: Engine::compile
+//!             [--arch A] [--autotune K]           + explain() + one timed serve
 //! forelem enumerate [--kernel spmv|spmm|trsv]     Fig 10 tree report
 //! forelem derive                                  Fig 8 derivation chains (IR at each step)
 //! forelem codegen --variant ID [--kernel spmv]    generated C-like code for a plan
@@ -13,11 +15,11 @@
 //! forelem suite                                   print the 20-matrix suite statistics
 //! ```
 
-use forelem::baselines::Kernel;
 use forelem::bench::tables;
-use forelem::coordinator::sweep::{Arch, SweepConfig, DEFAULT_X_BLOCK};
-use forelem::search::plan::PlanSpace;
+use forelem::coordinator::sweep::SweepConfig;
+use forelem::engine::{Autotune, Engine};
 use forelem::util::cli::Args;
+use forelem::{Arch, Kernel};
 
 fn kernel_of(args: &Args) -> Kernel {
     match args.get_or("kernel", "spmv") {
@@ -31,8 +33,34 @@ fn kernel_of(args: &Args) -> Kernel {
     }
 }
 
+fn arch_of(args: &Args, default: &str) -> Arch {
+    match args.get_or("arch", default) {
+        "host-small" => Arch::HostSmall,
+        "host-large" => Arch::HostLarge,
+        other => {
+            eprintln!("unknown arch '{other}' (host-small|host-large)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// The shared boolean-flag set of every sweep-style subcommand,
+/// validated uniformly: stray positional tokens — bare or swallowed by
+/// a boolean flag (`--quick 3`) — are rejected instead of silently
+/// changing behavior. Returns `(quick, schedules, no_profile)`.
+fn sweep_flags(args: &Args) -> (bool, bool, bool) {
+    match args.strict_bool_flags(&["quick", "schedules", "no-profile"]) {
+        Ok(v) => (v[0], v[1], v[2]),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn sweep_cfg(args: &Args) -> SweepConfig {
-    let mut cfg = if args.flag("quick") { SweepConfig::quick() } else { SweepConfig::default() };
+    let (quick, schedules, no_profile) = sweep_flags(args);
+    let mut cfg = if quick { SweepConfig::quick() } else { SweepConfig::default() };
     if let Some(k) = args.get("spmm-k") {
         cfg.spmm_k = k.parse().expect("--spmm-k integer");
     }
@@ -42,18 +70,13 @@ fn sweep_cfg(args: &Args) -> SweepConfig {
     }
     // Opt into the schedule axis (parallel / cache-blocked generated
     // kernels on the HostLarge arch; HostSmall stays single-core).
-    cfg.use_schedules = args.flag("schedules");
+    cfg.use_schedules = schedules;
     // Predict→measure shortlist: time only the top-K cost-ranked plans
     // per matrix. 0 (default) = exhaustive, paper protocol.
     cfg.shortlist = args.get_usize("shortlist", 0);
     // CLI sweeps auto-load the fitted tuning profile when one exists
     // (target/tuning/<arch>.profile, written by `forelem calibrate`);
-    // --no-profile ranks on the seed parameters instead (capture-aware
-    // so `--no-profile ARG` orderings can't silently re-enable it).
-    let (no_profile, swallowed) = args.flag_with_capture("no-profile");
-    if let Some(tok) = swallowed {
-        eprintln!("warning: '--no-profile {tok}' — '{tok}' was not used (sweeps take no positional args)");
-    }
+    // --no-profile ranks on the seed parameters instead.
     cfg.use_profile = !no_profile;
     cfg
 }
@@ -148,29 +171,29 @@ fn cmd_derive() -> String {
 
 fn cmd_codegen(args: &Args) -> String {
     let kernel = kernel_of(args);
-    let space = if args.flag("schedules") {
-        PlanSpace::host(forelem::util::pool::default_workers().clamp(2, 8), DEFAULT_X_BLOCK)
-    } else {
-        PlanSpace::serial_only()
-    };
-    let tree = forelem::search::enumerate(kernel, &space);
+    let (_, schedules, no_profile) = sweep_flags(args);
+    // The pipeline runs through the engine: `--schedules` selects the
+    // scheduled host-large space, otherwise the paper's serial tree.
+    let arch = arch_of(args, if schedules { "host-large" } else { "host-small" });
+    let engine = Engine::builder().arch(arch).schedules(schedules).profile(!no_profile).build();
+    let plans = engine.plans(kernel);
     // Accept a stable id ("csr.row.serial"), a cost-rank ordinal
     // ("v003" = third-cheapest plan), or default to the top-ranked one.
     let sel = args.get_or("variant", "v001");
     let plan = if let Some(ord) = sel
         .strip_prefix('v')
         .and_then(|n| n.parse::<usize>().ok())
-        .filter(|&n| n >= 1 && n <= tree.plans.len())
+        .filter(|&n| n >= 1 && n <= plans.len())
     {
-        Some(&tree.plans[ord - 1])
+        Some(&plans[ord - 1])
     } else {
-        tree.plans.iter().find(|p| p.id == sel)
+        plans.iter().find(|p| p.id == sel)
     };
     let Some(p) = plan else {
-        let ids: Vec<&str> = tree.plans.iter().map(|p| p.id.as_str()).collect();
+        let ids: Vec<&str> = plans.iter().map(|p| p.id.as_str()).collect();
         return format!(
             "no plan '{sel}' (use v1..v{} by predicted rank, or one of: {})",
-            tree.plans.len(),
+            plans.len(),
             ids.join(", ")
         );
     };
@@ -179,14 +202,104 @@ fn cmd_codegen(args: &Args) -> String {
         p.id,
         p.exec.layout.literature_name(),
         p.derivation,
-        forelem::concretize::codegen::emit_with_cost(
-            kernel,
-            &p.exec,
-            space.dense_k,
-            &space.ranking_stats(),
-            &space.params,
-        )
+        engine.emit(kernel, p)
     )
+}
+
+/// `forelem run` — the compile-and-serve demo: one suite matrix
+/// through `Engine::compile` (optionally autotuned), the `explain()`
+/// cost breakdown, an oracle-checked timed serve, and a recompile to
+/// show the process-wide cache hit.
+fn cmd_run(args: &Args) {
+    use forelem::bench::harness::{black_box, time_fn, BenchConfig};
+    use forelem::util::prop::assert_close;
+    let (quick, schedules, no_profile) = sweep_flags(args);
+    let kernel = kernel_of(args);
+    let arch = arch_of(args, "host-large");
+    let name = args.get_or("matrix", "Raj1");
+    let entry = forelem::matrix::suite::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown matrix '{name}'; available:");
+        for e in &forelem::matrix::suite::SUITE {
+            eprintln!("  {}", e.name);
+        }
+        std::process::exit(2);
+    });
+    let built = entry.build_scaled(arch.scale());
+    let m = if kernel == Kernel::Trsv { built.strictly_lower() } else { built };
+    let k_dense = args.get_usize("spmm-k", if quick { 16 } else { 100 });
+    let autotune = args.get_usize("autotune", 0);
+    let bench = if quick { BenchConfig::quick() } else { BenchConfig::from_env() };
+    // Like the sweep subcommands, the schedule axis is an explicit
+    // opt-in: without --schedules the engine ranks the serial tree
+    // (the paper protocol) even on host-large.
+    let engine = Engine::builder()
+        .arch(arch)
+        .schedules(schedules)
+        .spmm_k(k_dense)
+        .autotune(if autotune >= 2 { Autotune::TopK(autotune) } else { Autotune::Off })
+        .profile(!no_profile)
+        .bench(bench)
+        .build();
+
+    let t0 = std::time::Instant::now();
+    let exe = engine.compile(kernel, &m);
+    println!(
+        "compiled {} for {} on {} in {:.1} ms ({} plans ranked{})",
+        kernel.label(),
+        name,
+        arch.slug(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        engine.plans(kernel).len(),
+        if autotune >= 2 { format!(", top-{autotune} measured") } else { String::new() }
+    );
+    println!("{}", exe.explain());
+
+    match kernel {
+        Kernel::Spmv => {
+            let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.013).sin()).collect();
+            let mut y = vec![0.0; m.nrows];
+            exe.spmv(&x, &mut y);
+            assert_close(&y, &m.spmv_ref(&x), 1e-9).expect("generated SpMV vs oracle");
+            let s = time_fn(&bench, || {
+                exe.spmv(&x, &mut y);
+                black_box(&y);
+            });
+            println!("serve: {:.2} us/SpMV (oracle-checked)", s.median * 1e6);
+        }
+        Kernel::Spmm => {
+            let b: Vec<f64> = (0..m.ncols * k_dense).map(|i| (i as f64 * 0.007).cos()).collect();
+            let mut c = vec![0.0; m.nrows * k_dense];
+            exe.spmm(&b, &mut c);
+            assert_close(&c, &m.spmm_ref(&b, k_dense), 1e-9).expect("generated SpMM vs oracle");
+            let s = time_fn(&bench, || {
+                exe.spmm(&b, &mut c);
+                black_box(&c);
+            });
+            println!("serve: {:.2} us/SpMM k={k_dense} (oracle-checked)", s.median * 1e6);
+        }
+        Kernel::Trsv => {
+            let b: Vec<f64> = (0..m.nrows).map(|i| 1.0 - (i % 9) as f64 * 0.2).collect();
+            let mut x = vec![0.0; m.nrows];
+            exe.trsv(&b, &mut x);
+            assert_close(&x, &m.trsv_unit_lower_ref(&b), 1e-8).expect("generated TrSv vs oracle");
+            let s = time_fn(&bench, || {
+                exe.trsv(&b, &mut x);
+                black_box(&x);
+            });
+            println!("serve: {:.2} us/TrSv (oracle-checked)", s.median * 1e6);
+        }
+    }
+
+    // The serving path: a second compile of the same reservoir is a
+    // cache hit sharing the same assembled storage.
+    let t1 = std::time::Instant::now();
+    let again = engine.compile(kernel, &m);
+    let hit = std::sync::Arc::ptr_eq(&exe.storage(), &again.storage());
+    println!(
+        "recompile: {:.2} us — cache {}",
+        t1.elapsed().as_secs_f64() * 1e6,
+        if hit { "hit (storage Arc-shared)" } else { "miss (unexpected)" }
+    );
 }
 
 /// `forelem calibrate [FILES…] [--arch host-small|host-large]
@@ -202,14 +315,7 @@ fn cmd_codegen(args: &Args) -> String {
 fn cmd_calibrate(args: &Args) {
     use forelem::runtime::artifacts;
     use forelem::search::calibrate::{self, Profile};
-    let arch = match args.get_or("arch", "host-large") {
-        "host-small" => Arch::HostSmall,
-        "host-large" => Arch::HostLarge,
-        other => {
-            eprintln!("unknown arch '{other}' (host-small|host-large)");
-            std::process::exit(2);
-        }
-    };
+    let arch = arch_of(args, "host-large");
     // `--check BENCH.json` orderings: the parser swallows the file as
     // the flag's value — recover it into the file list so the gate
     // can't be silently disabled by argument order.
@@ -217,7 +323,20 @@ fn cmd_calibrate(args: &Args) {
     let mut files: Vec<String> = args.positional.clone();
     files.extend(swallowed.map(str::to_string));
     if files.is_empty() {
-        files.push("BENCH_spmv.json".to_string());
+        // Default material: the last bench record, plus the engine's
+        // rolling autotune archive when serving traffic has left one —
+        // the online half of the refit loop.
+        let bench = std::path::Path::new("BENCH_spmv.json");
+        if bench.exists() {
+            files.push("BENCH_spmv.json".to_string());
+        }
+        let archive = artifacts::samples_path_in(&artifacts::tuning_dir(), arch.slug());
+        if archive.exists() {
+            files.push(archive.display().to_string());
+        }
+        if files.is_empty() {
+            files.push("BENCH_spmv.json".to_string()); // keep the old error path
+        }
     }
     let mut samples = Vec::new();
     for f in &files {
@@ -313,6 +432,7 @@ fn main() {
     let args = Args::parse();
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     match sub.as_str() {
+        "run" => cmd_run(&args),
         "enumerate" | "fig10" => emit(&args, &tables::fig10()),
         "derive" => emit(&args, &cmd_derive()),
         "codegen" => emit(&args, &cmd_codegen(&args)),
@@ -381,7 +501,7 @@ fn main() {
         _ => {
             println!(
                 "forelem — automatic compiler-based data structure generation\n\
-                 subcommands: enumerate derive codegen suite table1 table2 table3\n\
+                 subcommands: run enumerate derive codegen suite table1 table2 table3\n\
                  \x20            table4 table5 fig11 bench-all bench-json calibrate\n\
                  flags: --quick --kernel K --variant ID --spmm-k N --matrices N --out FILE\n\
                  \x20      --schedules (add the parallel/tiled schedule axis on host-large)\n\
@@ -389,7 +509,11 @@ fn main() {
                  \x20                     matrix; 0 = exhaustive, the paper protocol)\n\
                  \x20      --no-profile (rank on the seed cost parameters even when a\n\
                  \x20                    fitted target/tuning/<arch>.profile exists)\n\
-                 calibrate: forelem calibrate [BENCH_*.json…] [--arch host-large]\n\
+                 run: forelem run [--kernel spmv|spmm|trsv] [--matrix NAME]\n\
+                 \x20     [--arch host-large] [--autotune K (measure the top-K predicted\n\
+                 \x20     plans, archive the samples)] — Engine::compile + explain + serve\n\
+                 calibrate: forelem calibrate [FILES… (BENCH_*.json and/or the engine's\n\
+                 \x20          target/tuning/<arch>.samples.jsonl archive)] [--arch host-large]\n\
                  \x20          [--out PATH] [--check (fail if fitted agreement < the\n\
                  \x20          record's own planner; regressed fits are never persisted)]"
             );

@@ -89,6 +89,26 @@ impl TriMat {
         rng.shuffle(&mut self.entries);
     }
 
+    /// Order-sensitive 64-bit FNV-1a content fingerprint over the
+    /// shape and every `⟨row, col, value-bits⟩` tuple — the matrix
+    /// identity key of the engine's process-wide compile cache
+    /// (`forelem::engine`). Two reservoirs with identical entries in
+    /// identical order fingerprint identically; a reordered reservoir
+    /// is a different key (storages assembled from it may differ
+    /// bit-for-bit, e.g. unsorted COO), which keeps the cache exact
+    /// rather than merely probable.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        h.eat_u64(self.nrows as u64);
+        h.eat_u64(self.ncols as u64);
+        h.eat_u64(self.entries.len() as u64);
+        for e in &self.entries {
+            h.eat_u64(((e.row as u64) << 32) | e.col as u64);
+            h.eat_u64(e.val.to_bits());
+        }
+        h.finish()
+    }
+
     /// Number of nonzeros per row.
     pub fn row_counts(&self) -> Vec<usize> {
         let mut c = vec![0usize; self.nrows];
@@ -286,5 +306,26 @@ mod tests {
         m.shuffle(&mut rng);
         let y1 = m.spmv_ref(&x);
         assert_eq!(y0, y1);
+    }
+
+    #[test]
+    fn fingerprint_tracks_content_shape_and_order() {
+        let m = small();
+        assert_eq!(m.fingerprint(), small().fingerprint(), "must be deterministic");
+        // Any content change moves the fingerprint.
+        let mut v = small();
+        v.entries[0].val += 1e-300;
+        assert_ne!(m.fingerprint(), v.fingerprint());
+        let mut c = small();
+        c.entries[0].col = 1;
+        assert_ne!(m.fingerprint(), c.fingerprint());
+        // Shape participates even with identical entries.
+        let mut wide = small();
+        wide.ncols = 4;
+        assert_ne!(m.fingerprint(), wide.fingerprint());
+        // Order-sensitive by design (reassembled storages may differ).
+        let mut swapped = small();
+        swapped.entries.swap(0, 1);
+        assert_ne!(m.fingerprint(), swapped.fingerprint());
     }
 }

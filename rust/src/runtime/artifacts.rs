@@ -160,6 +160,55 @@ pub fn load_profile(arch_slug: &str) -> Option<Profile> {
     load_profile_in(&tuning_dir(), arch_slug)
 }
 
+// ------------------------------------------- autotune sample archive --
+
+use crate::search::calibrate::{sample_to_json, samples_from_json, Sample};
+
+/// Path of the rolling autotune sample archive for `arch_slug` inside
+/// `dir` — one `calibrate::sample_to_json` line per measured cell, the
+/// same line format `forelem calibrate` (and `samples_from_json`)
+/// consumes, so the serving-path archive feeds the refit loop directly.
+pub fn samples_path_in(dir: &Path, arch_slug: &str) -> PathBuf {
+    dir.join(format!("{arch_slug}.samples.jsonl"))
+}
+
+/// Append autotune measurements to the archive in `dir` (created if
+/// needed); returns the archive path. The engine calls this after
+/// every measured compile so serving traffic keeps accumulating
+/// refit material.
+pub fn append_samples_in(
+    dir: &Path,
+    arch_slug: &str,
+    samples: &[Sample],
+) -> std::io::Result<PathBuf> {
+    use std::io::Write;
+    std::fs::create_dir_all(dir)?;
+    let path = samples_path_in(dir, arch_slug);
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+    for s in samples {
+        writeln!(f, "{}", sample_to_json(s))?;
+    }
+    Ok(path)
+}
+
+/// Append to the default [`tuning_dir`] archive.
+pub fn append_samples(arch_slug: &str, samples: &[Sample]) -> std::io::Result<PathBuf> {
+    append_samples_in(&tuning_dir(), arch_slug, samples)
+}
+
+/// Load every sample archived for `arch_slug` in `dir` (empty if the
+/// archive does not exist — the parser skips malformed lines).
+pub fn load_samples_in(dir: &Path, arch_slug: &str) -> Vec<Sample> {
+    std::fs::read_to_string(samples_path_in(dir, arch_slug))
+        .map(|t| samples_from_json(&t))
+        .unwrap_or_default()
+}
+
+/// Load the default [`tuning_dir`] archive for `arch_slug`.
+pub fn load_samples(arch_slug: &str) -> Vec<Sample> {
+    load_samples_in(&tuning_dir(), arch_slug)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +290,32 @@ mod tests {
         // structural l2_bytes belongs to the other machine.
         std::fs::copy(dir.join("host-large.profile"), dir.join("host-small.profile")).unwrap();
         assert!(load_profile_in(&dir, "host-small").is_none());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// The serving-path archive: appended autotune samples round-trip
+    /// through the line format and accumulate across appends.
+    #[test]
+    fn sample_archive_appends_and_reloads() {
+        use crate::search::cost::N_FEATURES;
+        let dir = std::env::temp_dir().join("forelem_sample_archive_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(load_samples_in(&dir, "host-large").is_empty());
+        let mk = |i: usize| Sample {
+            matrix: format!("m{i}"),
+            plan_id: "csr.row.par4".into(),
+            features: [1.5e6 + i as f64; N_FEATURES],
+            measured_secs: 1e-4 * (i + 1) as f64,
+            predicted_secs: 2e-4,
+        };
+        let p1 = append_samples_in(&dir, "host-large", &[mk(0), mk(1)]).expect("append");
+        assert!(p1.ends_with("host-large.samples.jsonl"));
+        append_samples_in(&dir, "host-large", &[mk(2)]).expect("append again");
+        let got = load_samples_in(&dir, "host-large");
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[2], mk(2), "samples must round-trip bit-exactly");
+        // Per-arch isolation.
+        assert!(load_samples_in(&dir, "host-small").is_empty());
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -269,18 +269,21 @@ fn layout_resources(
                 stats.nrows.div_ceil(s)
             })
         }
-        Layout::SellSigma { s, sigma: _ } => {
+        Layout::SellSigma { s, sigma } => {
             // Rows sorted by length within σ windows before slicing:
             // slice widths track the local maximum, so the padding
             // collapses to a sliver of plain SELL's. The output is
             // scattered through the window permutation (bounded by σ,
             // so still near-streamed); perm + row_len lists are the
-            // extra stored arrays.
+            // extra stored arrays. Slice-aligned windows are the
+            // parallel partition units (`schedule_legal` mirrors the
+            // same σ % s == 0 condition).
             let pad = (n * stats.row_var.max(0.0).sqrt() * 0.15)
                 .min((n * row_max - nnz).max(0.0));
             let slots = nnz + pad;
             let nslices = n / s as f64 + 1.0;
-            (slots * 12.0 + nslices * 8.0 + n * 8.0, slots, nslices + slots / s as f64, 1)
+            let grain = if sigma % s == 0 { stats.nrows.div_ceil(sigma) } else { 1 };
+            (slots * 12.0 + nslices * 8.0 + n * 8.0, slots, nslices + slots / s as f64, grain)
         }
         Layout::Dia => {
             let ndiags = (2.0 * stats.bandwidth as f64 + 1.0).min(n + nc - 1.0).max(1.0);

@@ -628,8 +628,11 @@ impl SparseOps for Sell {
 // ---------------------------------------------------------- SELL-σ --
 
 // The extension-recipe litmus: one trait impl + one registry arm. The
-// window permutation scatters the output, so no partition interface —
-// `schedule_legal` keeps SELL-σ serial.
+// window permutation bounds the output scatter to its σ window, so
+// slice-aligned windows (`σ % s == 0` — the chain mapping's σ = 8·s
+// always is) are legal lock-free partition units and the litmus format
+// joins the scheduled pool; unaligned constructions expose no units
+// and stay serial.
 impl SparseOps for SellSigma {
     fn slug(&self) -> String {
         format!("sell{}s{}", self.s, self.sigma)
@@ -648,6 +651,26 @@ impl SparseOps for SellSigma {
     }
     fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
         sell_sigma::spmm(self, b, k, c);
+    }
+    fn par_units(&self) -> usize {
+        if self.slices_per_window().is_some() {
+            self.nwindows()
+        } else {
+            0
+        }
+    }
+    fn rows_per_unit(&self) -> usize {
+        self.sigma
+    }
+    fn unit_weight_prefix(&self, u: usize) -> usize {
+        let spw = self.slices_per_window().expect("no units without alignment");
+        self.slice_ptr[(u * spw).min(self.nslices)] as usize
+    }
+    fn spmv_range(&self, _t: Traversal, x: &[f64], y: &mut [f64], u0: usize, u1: usize) {
+        sell_sigma::spmv_range(self, x, y, u0, u1, u0 * self.sigma);
+    }
+    fn spmm_range(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64], u0: usize, u1: usize) {
+        sell_sigma::spmm_range(self, b, k, c, u0, u1, u0 * self.sigma);
     }
 }
 

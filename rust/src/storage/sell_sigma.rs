@@ -116,6 +116,24 @@ impl SellSigma {
             + self.row_len.len() * 4
             + self.vals.len() * 8
     }
+
+    /// Slices per σ window when windows are slice-aligned (`σ % s == 0`
+    /// — always true for the chain mapping's σ = 8·s), else `None`.
+    /// Alignment is what makes the window a legal parallel unit: the
+    /// sort permutation never crosses a window, so a whole-window range
+    /// writes exactly its own contiguous σ rows of the output.
+    pub fn slices_per_window(&self) -> Option<usize> {
+        if self.sigma % self.s == 0 {
+            Some(self.sigma / self.s)
+        } else {
+            None
+        }
+    }
+
+    /// Number of σ windows (the parallel partition units).
+    pub fn nwindows(&self) -> usize {
+        self.nrows.div_ceil(self.sigma)
+    }
 }
 
 /// SELL-σ SpMV: slice loop outer, slot plane loop, row-vector inner;
@@ -136,6 +154,77 @@ pub fn spmv(a: &SellSigma, x: &[f64], y: &mut [f64]) {
                 if (p as u32) < a.row_len[lo + ri] {
                     let ix = plane + ri;
                     y[a.perm[lo + ri] as usize] += a.vals[ix] * x[a.cols[ix] as usize];
+                }
+            }
+        }
+    }
+}
+
+/// SELL-σ SpMV over the σ windows `[w0, w1)`: the slices of those
+/// windows, scattering into the `y` chunk that starts at original row
+/// `row0 = w0·σ`. Callers guarantee slice-aligned windows
+/// (`slices_per_window().is_some()`, checked by `par_units`), so the
+/// window-bounded permutation keeps every write inside the chunk.
+pub fn spmv_range(a: &SellSigma, x: &[f64], y: &mut [f64], w0: usize, w1: usize, row0: usize) {
+    let spw = a.slices_per_window().expect("window not slice-aligned");
+    let sb1 = (w1 * spw).min(a.nslices);
+    for sb in w0 * spw..sb1 {
+        let lo = sb * a.s;
+        let hi = ((sb + 1) * a.s).min(a.nrows);
+        let rows = hi - lo;
+        let base = a.slice_ptr[sb] as usize;
+        let w = a.widths[sb] as usize;
+        for q in lo..hi {
+            y[a.perm[q] as usize - row0] = 0.0;
+        }
+        for p in 0..w {
+            let plane = base + p * rows;
+            for ri in 0..rows {
+                if (p as u32) < a.row_len[lo + ri] {
+                    let ix = plane + ri;
+                    y[a.perm[lo + ri] as usize - row0] += a.vals[ix] * x[a.cols[ix] as usize];
+                }
+            }
+        }
+    }
+}
+
+/// SELL-σ SpMM over the σ windows `[w0, w1)` (see [`spmv_range`]).
+pub fn spmm_range(
+    a: &SellSigma,
+    bm: &[f64],
+    k: usize,
+    c: &mut [f64],
+    w0: usize,
+    w1: usize,
+    row0: usize,
+) {
+    let spw = a.slices_per_window().expect("window not slice-aligned");
+    let sb1 = (w1 * spw).min(a.nslices);
+    for sb in w0 * spw..sb1 {
+        let lo = sb * a.s;
+        let hi = ((sb + 1) * a.s).min(a.nrows);
+        let rows = hi - lo;
+        let base = a.slice_ptr[sb] as usize;
+        let w = a.widths[sb] as usize;
+        for q in lo..hi {
+            let orig = a.perm[q] as usize - row0;
+            c[orig * k..orig * k + k].fill(0.0);
+        }
+        for p in 0..w {
+            let plane = base + p * rows;
+            for ri in 0..rows {
+                if (p as u32) >= a.row_len[lo + ri] {
+                    continue;
+                }
+                let ix = plane + ri;
+                let v = a.vals[ix];
+                let col = a.cols[ix] as usize;
+                let orig = a.perm[lo + ri] as usize - row0;
+                let brow = &bm[col * k..col * k + k];
+                let crow = &mut c[orig * k..orig * k + k];
+                for j in 0..k {
+                    crow[j] += v * brow[j];
                 }
             }
         }
@@ -244,6 +333,59 @@ mod tests {
         for (q, &orig) in a.perm.iter().enumerate() {
             assert_eq!(q / sigma, orig as usize / sigma, "row escaped its window");
         }
+    }
+
+    /// The parallel-promotion satellite: σ-aligned window ranges are a
+    /// legal lock-free output split, and the generic parallel drivers
+    /// must reproduce the serial result bit-for-bit shape-for-shape.
+    #[test]
+    fn window_ranges_match_serial_spmv_and_spmm() {
+        use crate::concretize::Traversal;
+        use crate::storage::SparseOps;
+        let m = gen::powerlaw(90, 1.8, 45, 206);
+        let x: Vec<f64> = (0..90).map(|i| (i as f64 * 0.13).sin() - 0.1).collect();
+        let k = 3;
+        let bm: Vec<f64> = (0..90 * k).map(|i| i as f64 * 0.02 - 0.8).collect();
+        for (s, sigma) in [(4, 8), (8, 8), (8, 64), (16, 32)] {
+            let a = SellSigma::from_tuples(&m, s, sigma);
+            assert_eq!(a.slices_per_window(), Some(sigma / s));
+            assert!(a.par_units() > 0, "aligned windows must partition");
+            let mut want = vec![0.0; 90];
+            spmv(&a, &x, &mut want);
+            let mut want_c = vec![0.0; 90 * k];
+            spmm(&a, &bm, k, &mut want_c);
+            for t in [1, 2, 3, 7] {
+                let mut y = vec![0.0; 90];
+                a.spmv_parallel(Traversal::SlicePlane, &x, &mut y, t);
+                assert_eq!(y, want, "s={s} sigma={sigma} t={t}: spmv bits differ");
+                let mut c = vec![0.0; 90 * k];
+                a.spmm_parallel(Traversal::SlicePlane, &bm, k, &mut c, t);
+                assert_eq!(c, want_c, "s={s} sigma={sigma} t={t}: spmm bits differ");
+            }
+            // The weight prefix is the stored-slot prefix over windows.
+            let nw = a.nwindows();
+            assert_eq!(a.unit_weight_prefix(0), 0);
+            assert_eq!(a.unit_weight_prefix(nw), a.vals.len());
+        }
+    }
+
+    #[test]
+    fn unaligned_windows_stay_serial() {
+        use crate::concretize::Traversal;
+        use crate::storage::SparseOps;
+        // σ = 12 is not a multiple of s = 8: a window boundary cuts a
+        // slice, so no lock-free output split exists.
+        let m = gen::powerlaw(64, 2.0, 32, 207);
+        let a = SellSigma::from_tuples(&m, 8, 12);
+        assert_eq!(a.slices_per_window(), None);
+        assert_eq!(a.par_units(), 0);
+        let x: Vec<f64> = (0..64).map(|i| i as f64 * 0.05).collect();
+        let mut want = vec![0.0; 64];
+        spmv(&a, &x, &mut want);
+        // The generic driver falls back to the serial nest.
+        let mut y = vec![0.0; 64];
+        a.spmv_parallel(Traversal::SlicePlane, &x, &mut y, 4);
+        assert_eq!(y, want);
     }
 
     #[test]

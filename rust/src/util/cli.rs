@@ -61,6 +61,35 @@ impl Args {
         }
     }
 
+    /// Uniform argument validation for subcommands that take **no
+    /// positional arguments** (the sweep-style ones: `table*`,
+    /// `bench-json`, `run`, …): look up the given boolean flags
+    /// capture-aware and reject any stray positional token — whether
+    /// it arrived bare (`forelem table1 foo`) or was swallowed by the
+    /// greedy option rule after a boolean flag (`--quick 3`,
+    /// `--no-profile x`), where it would otherwise silently disable
+    /// the flag. Returns the flag values in `names` order.
+    pub fn strict_bool_flags(&self, names: &[&str]) -> Result<Vec<bool>, String> {
+        let mut stray: Vec<String> = self.positional.iter().map(|p| format!("'{p}'")).collect();
+        let mut vals = Vec::with_capacity(names.len());
+        for n in names {
+            let (set, swallowed) = self.flag_with_capture(n);
+            if let Some(tok) = swallowed {
+                stray.push(format!("'{tok}' (after --{n}, which takes no value)"));
+            }
+            vals.push(set);
+        }
+        if stray.is_empty() {
+            Ok(vals)
+        } else {
+            Err(format!(
+                "unexpected positional argument(s): {} — this subcommand takes only \
+                 --flag and --key value options",
+                stray.join(", ")
+            ))
+        }
+    }
+
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
@@ -124,6 +153,29 @@ mod tests {
         let a = parse(&["x"]);
         assert_eq!(a.get_or("backend", "native"), "native");
         assert_eq!(a.get_f64("t", 0.1), 0.1);
+    }
+
+    #[test]
+    fn strict_bool_flags_rejects_stray_tokens_uniformly() {
+        // Clean: flags in any position, real options untouched.
+        let a = parse(&["table1", "--quick", "--matrices", "3", "--schedules"]);
+        assert_eq!(
+            a.strict_bool_flags(&["quick", "schedules", "no-profile"]),
+            Ok(vec![true, true, false])
+        );
+        assert_eq!(a.get_usize("matrices", 0), 3);
+        // Bare positional: rejected with the token named.
+        let b = parse(&["table1", "mat.mtx", "--quick"]);
+        let err = b.strict_bool_flags(&["quick"]).unwrap_err();
+        assert!(err.contains("'mat.mtx'"), "{err}");
+        // Swallowed by a boolean flag: rejected, not silently dropped
+        // (the old path only warned for --no-profile).
+        let c = parse(&["bench-json", "--quick", "3"]);
+        let err = c.strict_bool_flags(&["quick", "no-profile"]).unwrap_err();
+        assert!(err.contains("'3'") && err.contains("--quick"), "{err}");
+        let d = parse(&["table2", "--no-profile", "x", "--spmm-k", "8"]);
+        let err = d.strict_bool_flags(&["quick", "no-profile"]).unwrap_err();
+        assert!(err.contains("--no-profile"), "{err}");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! contains only the `xla` closure; see DESIGN.md §5 Substitutions).
 
 pub mod cli;
+pub mod fnv;
 pub mod pool;
 pub mod prop;
 pub mod rng;
