@@ -44,7 +44,7 @@ fn main() {
     let topk = 8;
     let engine = Engine::builder().autotune(Autotune::TopK(topk)).bench(cfg).build();
     let t0 = std::time::Instant::now();
-    let exe = engine.compile(Kernel::Spmv, &m);
+    let exe = engine.compile(Kernel::Spmv, &m).expect("generated matrices are valid");
     println!(
         "\nengine.compile: ranked {} plans, measured top-{topk}, in {:.1} ms",
         engine.plans(Kernel::Spmv).len(),

@@ -29,7 +29,7 @@ fn main() {
     // 3. The compiler does the rest: enumerate the transformation
     //    tree, rank the plans on this matrix, assemble the storage.
     let engine = Engine::builder().build();
-    let exe = engine.compile(Kernel::Spmv, &a);
+    let exe = engine.compile(Kernel::Spmv, &a).expect("a hand-built 4x4 matrix is valid");
     println!("== derived ==");
     println!("plan {} via: {}", exe.plan().id, exe.plan().derivation);
     println!("{}", exe.codegen());

@@ -1,0 +1,488 @@
+//! Fault injection for the hardened serving path — the `chaos` feature.
+//!
+//! The robustness layer's contract (`ISSUE 6`) is that a fault at any
+//! seam of `Engine::compile → Executable::spmv` degrades down the
+//! [`crate::engine::Health`] ladder instead of crashing or deadlocking
+//! the process. This module makes that contract *testable*: named
+//! **fault points** are compiled into the artifact-IO, prepare and
+//! measurement seams, and the drill ([`drill`], `forelem chaos`,
+//! `tests/chaos.rs`) arms each point with an IO error, a panic and a
+//! delay in turn, asserting the expected ladder rung engages and the
+//! served numerics stay correct.
+//!
+//! # Zero cost when off
+//!
+//! Without the `chaos` cargo feature, [`trigger`] is an inline empty
+//! function returning `Ok(())` and [`trigger_unwrap`] inlines to
+//! nothing — no registry, no lock, no branch survives optimization.
+//! With the feature, every [`trigger`] consults a process-global
+//! armed-faults table (`arm` / `disarm_all`).
+//!
+//! # Seams
+//!
+//! The registered points are listed in [`POINTS`]; a point is placed
+//! with [`faultpoint!`] (panic-isolated seams — the injected IO error
+//! also manifests as a panic, exercising the same isolation) or
+//! [`faultpoint_io!`] (seams with a real `io::Result` path).
+//!
+//! [`faultpoint!`]: crate::faultpoint
+//! [`faultpoint_io!`]: crate::faultpoint_io
+
+/// Every registered fault point. The chaos drill iterates this list,
+/// so adding a `faultpoint!` without registering it here leaves it
+/// un-drilled (and `arm` rejects unknown names to catch typos).
+pub const POINTS: &[&str] = &[
+    "artifacts.load_profile",
+    "artifacts.append_samples",
+    "artifacts.load_samples",
+    "engine.prepare",
+    "engine.measure",
+];
+
+/// Fire the named fault point. With the `chaos` feature and an armed
+/// fault this returns an injected `io::Error`, panics, or sleeps;
+/// otherwise (and always without the feature) it is `Ok(())`.
+#[cfg(feature = "chaos")]
+pub fn trigger(name: &'static str) -> std::io::Result<()> {
+    imp::trigger(name)
+}
+
+/// Fire the named fault point (no-op build: the `chaos` feature is
+/// off, so this inlines away).
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+pub fn trigger(_name: &'static str) -> std::io::Result<()> {
+    Ok(())
+}
+
+/// [`trigger`] for seams with no `io::Result` path: an injected IO
+/// error is escalated to a panic so it exercises the same
+/// `catch_unwind` isolation as an injected panic.
+#[inline(always)]
+pub fn trigger_unwrap(name: &'static str) {
+    if let Err(e) = trigger(name) {
+        panic!("chaos fault at {name}: {e}");
+    }
+}
+
+/// Place a panic-isolated fault point: `faultpoint!("engine.measure")`.
+#[macro_export]
+macro_rules! faultpoint {
+    ($name:expr) => {
+        $crate::chaos::trigger_unwrap($name)
+    };
+}
+
+/// Place an IO-seam fault point yielding `std::io::Result<()>`:
+/// `faultpoint_io!("artifacts.append_samples")?`.
+#[macro_export]
+macro_rules! faultpoint_io {
+    ($name:expr) => {
+        $crate::chaos::trigger($name)
+    };
+}
+
+/// A fault to arm at a point (chaos builds only).
+#[cfg(feature = "chaos")]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// The point reports an injected `std::io::Error`.
+    IoError,
+    /// The point panics.
+    Panic,
+    /// The point sleeps for the given duration, then proceeds.
+    Delay(std::time::Duration),
+}
+
+#[cfg(feature = "chaos")]
+pub use imp::{arm, disarm_all};
+
+/// Serialize lib tests that *arm* faults against lib tests that merely
+/// cross fault points in the same binary: an armed window must never
+/// bleed into an unrelated concurrently-running test.
+#[cfg(all(test, feature = "chaos"))]
+pub(crate) fn test_arming_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::OnceLock<std::sync::Mutex<()>> = std::sync::OnceLock::new();
+    LOCK.get_or_init(|| std::sync::Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(feature = "chaos")]
+mod imp {
+    use std::collections::HashMap;
+    use std::io;
+    use std::sync::{Mutex, OnceLock};
+
+    use super::Fault;
+
+    fn armed() -> &'static Mutex<HashMap<&'static str, Fault>> {
+        static ARMED: OnceLock<Mutex<HashMap<&'static str, Fault>>> = OnceLock::new();
+        ARMED.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Arm `fault` at `point` (must be one of [`super::POINTS`]).
+    pub fn arm(point: &'static str, fault: Fault) {
+        assert!(super::POINTS.contains(&point), "unknown fault point '{point}'");
+        armed().lock().unwrap_or_else(|p| p.into_inner()).insert(point, fault);
+    }
+
+    /// Disarm every fault.
+    pub fn disarm_all() {
+        armed().lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+
+    pub fn trigger(name: &'static str) -> io::Result<()> {
+        let fault = armed().lock().unwrap_or_else(|p| p.into_inner()).get(name).copied();
+        match fault {
+            None => Ok(()),
+            Some(Fault::IoError) => {
+                Err(io::Error::other(format!("chaos: injected io error at {name}")))
+            }
+            Some(Fault::Panic) => panic!("chaos: injected panic at {name}"),
+            Some(Fault::Delay(d)) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// The drill: arm every registered point with every fault class and
+/// assert the degradation ladder engages without a crash, deadlock or
+/// wrong answer. Shared verbatim by `forelem chaos` and the
+/// `tests/chaos.rs` integration suite so the CLI and CI exercise one
+/// code path.
+#[cfg(feature = "chaos")]
+pub mod drill {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::time::Duration;
+
+    use super::{arm, disarm_all, Fault};
+    use crate::bench::harness::BenchConfig;
+    use crate::concretize;
+    use crate::coordinator::sweep::Arch;
+    use crate::engine::{Autotune, Engine, Health, Kernel};
+    use crate::matrix::gen;
+    use crate::runtime::artifacts;
+    use crate::search::calibrate::{Profile, Sample};
+    use crate::search::cost::N_FEATURES;
+
+    /// One (point × fault) drill result.
+    #[derive(Clone, Debug)]
+    pub struct Outcome {
+        pub point: &'static str,
+        pub fault: &'static str,
+        /// Health of the compile, when the point sits on the compile
+        /// path (`None` for the calibrate-path archive points).
+        pub health: Option<Health>,
+        pub ok: bool,
+        pub detail: String,
+    }
+
+    const MEASURE_TIMEOUT: Duration = Duration::from_millis(150);
+
+    fn faults_for(point: &str) -> [Fault; 3] {
+        // The delay at the measurement seam must exceed the watchdog
+        // timeout (that *is* the drill); elsewhere a short delay just
+        // rides through.
+        let delay = if point == "engine.measure" {
+            Duration::from_millis(400)
+        } else {
+            Duration::from_millis(25)
+        };
+        [Fault::IoError, Fault::Panic, Fault::Delay(delay)]
+    }
+
+    fn fault_label(f: Fault) -> &'static str {
+        match f {
+            Fault::IoError => "io-error",
+            Fault::Panic => "panic",
+            Fault::Delay(_) => "delay",
+        }
+    }
+
+    /// The expected ladder rung when `fault` is armed at `point` on an
+    /// engine whose tuning profile is present and valid.
+    fn expected_health(point: &str, fault: Fault) -> Health {
+        match (point, fault) {
+            // Profile unreadable / loader panicking: seed weights.
+            ("artifacts.load_profile", Fault::IoError | Fault::Panic) => Health::SeedWeights,
+            // Candidate preparation failing wholesale: last resort.
+            ("engine.prepare", Fault::IoError | Fault::Panic) => Health::ReferenceSerial,
+            // Every candidate measurement panics or hangs: serve the
+            // predicted best unmeasured.
+            ("engine.measure", _) => Health::PredictedOnly,
+            // Archive-write failures and benign delays never degrade.
+            _ => Health::Calibrated,
+        }
+    }
+
+    /// Run the full drill. Never panics; failures come back as
+    /// `ok == false` outcomes.
+    pub fn run_all() -> Vec<Outcome> {
+        let dir = std::env::temp_dir().join("forelem_chaos_drill");
+        let _ = std::fs::remove_dir_all(&dir);
+        if let Err(e) = std::fs::create_dir_all(&dir) {
+            return vec![Outcome {
+                point: "setup",
+                fault: "none",
+                health: None,
+                ok: false,
+                detail: format!("could not create drill dir: {e}"),
+            }];
+        }
+        // Route the engine's artifact traffic at the drill directory
+        // and seed a valid profile so the healthy baseline is the
+        // ladder's top rung (Calibrated).
+        std::env::set_var("FORELEM_TUNING_DIR", &dir);
+        let profile = Profile::from_params("host-small", &Arch::HostSmall.cost_params(), 1);
+        if let Err(e) = artifacts::save_profile_in(&dir, &profile) {
+            return vec![Outcome {
+                point: "setup",
+                fault: "none",
+                health: None,
+                ok: false,
+                detail: format!("could not seed drill profile: {e}"),
+            }];
+        }
+
+        let mut out = Vec::new();
+        for (pi, &point) in super::POINTS.iter().enumerate() {
+            for fault in faults_for(point) {
+                disarm_all();
+                Engine::clear_cache();
+                Engine::clear_quarantine();
+                arm(point, fault);
+                let o = if point == "artifacts.load_samples" {
+                    drill_archive_load(&dir, point, fault)
+                } else {
+                    drill_compile(point, fault, pi as u64)
+                };
+                disarm_all();
+                out.push(o);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        out
+    }
+
+    /// Drill a compile-path point: the compile must succeed, land on
+    /// the expected ladder rung, and serve numerics bit-identical to
+    /// preparing the winning plan directly (and, on the bottom rung,
+    /// to the serial CSR reference — which *is* the bottom rung's
+    /// plan).
+    fn drill_compile(point: &'static str, fault: Fault, seed: u64) -> Outcome {
+        let fl = fault_label(fault);
+        let m = gen::uniform_random(48, 48, 360, 0xC0A0 + seed);
+        let engine = Engine::builder()
+            .arch(Arch::HostSmall)
+            .autotune(Autotune::TopK(3))
+            .profile(true)
+            .archive(true)
+            .bench(BenchConfig::quick())
+            .measure_timeout(MEASURE_TIMEOUT)
+            .build();
+        let compiled = catch_unwind(AssertUnwindSafe(|| engine.compile(Kernel::Spmv, &m)));
+        let exe = match compiled {
+            Err(_) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: "compile panicked through the isolation layer".into(),
+                }
+            }
+            Ok(Err(e)) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: format!("compile errored instead of degrading: {e}"),
+                }
+            }
+            Ok(Ok(exe)) => exe,
+        };
+        let health = exe.health();
+        let want = expected_health(point, fault);
+        if health != want {
+            return Outcome {
+                point,
+                fault: fl,
+                health: Some(health),
+                ok: false,
+                detail: format!("health {health:?}, expected {want:?}"),
+            };
+        }
+        if point == "engine.measure" && Engine::quarantine_len() == 0 {
+            return Outcome {
+                point,
+                fault: fl,
+                health: Some(health),
+                ok: false,
+                detail: "measurement faults did not quarantine any candidate".into(),
+            };
+        }
+        // Bit-identity: the served kernel against a direct prepare of
+        // the same winning plan.
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.019).sin() + 0.25).collect();
+        let mut served = vec![0.0; m.nrows];
+        let mut reference = vec![0.0; m.nrows];
+        exe.spmv(&x, &mut served);
+        concretize::prepare(exe.plan().exec, &m).spmv(&x, &mut reference);
+        if served != reference {
+            return Outcome {
+                point,
+                fault: fl,
+                health: Some(health),
+                ok: false,
+                detail: format!("served SpMV drifted from plan {}'s direct prepare", exe.plan().id),
+            };
+        }
+        if health == Health::ReferenceSerial {
+            // The bottom rung must literally be the serial CSR plan.
+            let e = &exe.plan().exec;
+            let is_ref = e.layout == concretize::Layout::Csr
+                && e.traversal == concretize::Traversal::RowWise
+                && e.schedule == concretize::Schedule::Serial;
+            if !is_ref {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: Some(health),
+                    ok: false,
+                    detail: format!("bottom rung served plan {}, not serial CSR", exe.plan().id),
+                };
+            }
+        }
+        Outcome { point, fault: fl, health: Some(health), ok: true, detail: "ok".into() }
+    }
+
+    /// Drill the calibrate-path archive loader: a fault while loading
+    /// must never escape as a panic, and the corrupt-line quarantine
+    /// must keep counting when the fault rides through.
+    fn drill_archive_load(dir: &std::path::Path, point: &'static str, fault: Fault) -> Outcome {
+        let fl = fault_label(fault);
+        let slug = "drill-arch";
+        let mk = |i: usize| Sample {
+            matrix: format!("m{i}"),
+            plan_id: "csr.row.serial".into(),
+            features: [1.0e6; N_FEATURES],
+            measured_secs: 1e-4,
+            predicted_secs: 1e-4,
+        };
+        // Two good lines + one corrupt line, written before arming.
+        disarm_all();
+        let seeded = artifacts::append_samples_in(dir, slug, &[mk(0), mk(1)]).and_then(|path| {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path)?;
+            writeln!(f, "{{corrupt, not a sample}}")?;
+            Ok(())
+        });
+        if let Err(e) = seeded {
+            return Outcome {
+                point,
+                fault: fl,
+                health: None,
+                ok: false,
+                detail: format!("could not seed drill archive: {e}"),
+            };
+        }
+        arm(point, fault);
+        let loaded = catch_unwind(AssertUnwindSafe(|| artifacts::load_samples_counted_in(dir, slug)));
+        let _ = std::fs::remove_file(artifacts::samples_path_in(dir, slug));
+        let archive = match loaded {
+            Err(_) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: "archive load panicked through the isolation layer".into(),
+                }
+            }
+            Ok(a) => a,
+        };
+        let ok = match fault {
+            // Unreadable / panicking loader: the archive is treated as
+            // absent, never a crash.
+            Fault::IoError | Fault::Panic => archive.samples.is_empty(),
+            // A benign delay rides through: both good samples load and
+            // the corrupt line is counted, not silently dropped.
+            Fault::Delay(_) => archive.samples.len() == 2 && archive.corrupt_lines == 1,
+        };
+        Outcome {
+            point,
+            fault: fl,
+            health: None,
+            ok,
+            detail: if ok {
+                "ok".into()
+            } else {
+                format!(
+                    "archive load under {fl}: {} samples, {} corrupt lines",
+                    archive.samples.len(),
+                    archive.corrupt_lines
+                )
+            },
+        }
+    }
+
+    /// Run the drill and print a report; returns overall success.
+    /// `forelem chaos` exits nonzero when this returns false.
+    pub fn run_and_report() -> bool {
+        let outcomes = run_all();
+        println!("## chaos drill — every fault point x {{io-error, panic, delay}}");
+        println!("{:<26} {:<9} {:<16} {}", "point", "fault", "health", "result");
+        let mut all_ok = true;
+        for o in &outcomes {
+            let health = o.health.map(|h| format!("{h:?}")).unwrap_or_else(|| "-".into());
+            println!(
+                "{:<26} {:<9} {:<16} {}",
+                o.point,
+                o.fault,
+                health,
+                if o.ok { "ok".to_string() } else { format!("FAIL: {}", o.detail) }
+            );
+            all_ok &= o.ok;
+        }
+        println!(
+            "{}/{} drills passed",
+            outcomes.iter().filter(|o| o.ok).count(),
+            outcomes.len()
+        );
+        all_ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn trigger_is_ok_when_nothing_armed() {
+        // Holds both with and without the feature: an unarmed point is
+        // a no-op.
+        assert!(super::trigger("artifacts.load_profile").is_ok());
+        super::trigger_unwrap("engine.measure");
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn armed_faults_fire_and_disarm() {
+        use super::{arm, disarm_all, Fault};
+        // Hold the arming guard so the armed window cannot bleed into
+        // an unrelated test crossing the same point concurrently.
+        let _guard = super::test_arming_guard();
+        arm("artifacts.append_samples", Fault::IoError);
+        assert!(super::trigger("artifacts.append_samples").is_err());
+        assert!(super::trigger("artifacts.load_profile").is_ok(), "other points stay clear");
+        let p = std::panic::catch_unwind(|| {
+            arm("artifacts.append_samples", Fault::Panic);
+            super::trigger("artifacts.append_samples")
+        });
+        assert!(p.is_err(), "Panic fault must panic");
+        disarm_all();
+        assert!(super::trigger("artifacts.append_samples").is_ok());
+    }
+}

@@ -139,6 +139,21 @@ pub fn prepare(plan: Plan, m: &TriMat) -> Prepared {
     with_ops(plan, m, build_ops(plan.layout, m))
 }
 
+/// Fallible [`prepare`]: validates the reservoir first and isolates a
+/// panicking storage build behind `catch_unwind`, returning a typed
+/// error either way. This is the seam for callers that must not crash
+/// on a hostile reservoir or a format bug (the engine's candidate
+/// preparation, embedding hosts driving `concretize` directly).
+pub fn try_prepare(plan: Plan, m: &TriMat) -> Result<Prepared, crate::error::ForelemError> {
+    m.validate()?;
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prepare(plan, m))).map_err(|_| {
+        crate::error::ForelemError::UnsupportedPlan {
+            plan_id: format!("{plan:?}"),
+            reason: "storage build panicked".into(),
+        }
+    })
+}
+
 /// Build the storage for many plans against the same reservoir in
 /// parallel. This is the plan-keyed storage cache: each distinct
 /// layout's storage is assembled exactly once (`build_ops`) and shared

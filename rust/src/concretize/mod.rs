@@ -20,6 +20,7 @@ pub mod exec;
 pub mod layout;
 
 pub use exec::{
-    build_ops, prepare, prepare_many, prepare_many_counted, spmm_panel_cols, supports, Prepared,
+    build_ops, prepare, prepare_many, prepare_many_counted, spmm_panel_cols, supports,
+    try_prepare, Prepared,
 };
 pub use layout::{plans, schedule_legal, ConcretizeError, Layout, Plan, Schedule, Traversal};

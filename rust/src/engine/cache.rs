@@ -64,23 +64,31 @@ fn cache() -> &'static Mutex<HashMap<Key, Arc<Compiled>>> {
     CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
+/// Lock the cache, recovering from poison: single-call map updates
+/// leave it consistent even if a holder panicked, and the serving path
+/// must not turn one past panic into a permanent compile failure.
+fn locked() -> std::sync::MutexGuard<'static, HashMap<Key, Arc<Compiled>>> {
+    cache().lock().unwrap_or_else(|p| p.into_inner())
+}
+
 pub(crate) fn lookup(key: &Key) -> Option<Arc<Compiled>> {
-    cache().lock().unwrap().get(key).cloned()
+    locked().get(key).cloned()
 }
 
 pub(crate) fn insert(key: Key, compiled: Arc<Compiled>) {
-    cache().lock().unwrap().insert(key, compiled);
+    locked().insert(key, compiled);
 }
 
 pub(crate) fn clear() {
-    cache().lock().unwrap().clear();
+    locked().clear();
 }
 
 pub(crate) fn len() -> usize {
-    cache().lock().unwrap().len()
+    locked().len()
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

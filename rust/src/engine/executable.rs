@@ -12,6 +12,59 @@ use crate::search::cost::{CostParams, FeatureVec, FEATURE_NAMES, N_FEATURES};
 use crate::search::plan::Plan;
 use crate::storage::SparseOps;
 
+/// Where on the degradation ladder a compile landed — queryable on the
+/// [`Executable`] so a serving host can alarm on degraded compiles
+/// without parsing logs. The variants are ordered top rung first;
+/// `Ord` follows that order, so `health > Health::Calibrated` means
+/// "degraded in some way".
+///
+/// ```text
+/// Calibrated        profile loaded, autotune (if requested) succeeded
+///   └─ SeedWeights      profile missing/corrupt → seed cost weights
+///       └─ PredictedOnly    every measurement failed → predicted best,
+///       │                   unmeasured (quarantined candidates skipped)
+///       └─ ReferenceSerial  candidate preparation failed wholesale →
+///                           the serial CSR reference plan, always valid
+/// ```
+///
+/// `Engine::compile` only *errors* on an invalid matrix
+/// ([`crate::error::ForelemError::InvalidMatrix`]); every other fault
+/// lands a rung down this ladder instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Health {
+    /// Top rung: the fitted tuning profile loaded and — when autotune
+    /// was requested — at least one candidate measured successfully.
+    Calibrated,
+    /// The tuning profile was missing, corrupt, or failed its
+    /// checksum: predictions ran on the seed weights.
+    SeedWeights,
+    /// Autotune was requested but every shortlisted measurement
+    /// panicked, hung, or was already quarantined: the engine serves
+    /// the predicted-best plan unmeasured.
+    PredictedOnly,
+    /// Last resort: candidate preparation itself failed (or a pinned
+    /// plan disappeared), so the engine serves the reference serial
+    /// CSR plan — the one execution that is always valid.
+    ReferenceSerial,
+}
+
+impl Health {
+    /// Stable lowercase label for logs and metrics keys.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Health::Calibrated => "calibrated",
+            Health::SeedWeights => "seed-weights",
+            Health::PredictedOnly => "predicted-only",
+            Health::ReferenceSerial => "reference-serial",
+        }
+    }
+
+    /// True for every rung below [`Health::Calibrated`].
+    pub fn degraded(&self) -> bool {
+        *self != Health::Calibrated
+    }
+}
+
 /// The cached result of one `Engine::compile`: the winning plan, its
 /// assembled storage, and everything `explain()` needs to say why.
 pub(crate) struct Compiled {
@@ -23,6 +76,7 @@ pub(crate) struct Compiled {
     pub predicted_secs: f64,
     pub measured_secs: Option<f64>,
     pub profile_loaded: bool,
+    pub health: Health,
 }
 
 /// A compiled routine + data structure, bound to one matrix — what
@@ -33,6 +87,16 @@ pub struct Executable {
     kernel: Kernel,
     dense_k: usize,
     inner: Arc<Compiled>,
+}
+
+impl fmt::Debug for Executable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Executable")
+            .field("kernel", &self.kernel)
+            .field("plan", &self.inner.plan.id)
+            .field("health", &self.inner.health)
+            .finish_non_exhaustive()
+    }
 }
 
 impl Executable {
@@ -66,6 +130,12 @@ impl Executable {
     /// measured this compile (`Autotune::TopK(k ≥ 2)`).
     pub fn measured_secs(&self) -> Option<f64> {
         self.inner.measured_secs
+    }
+
+    /// Which rung of the degradation ladder this compile landed on —
+    /// [`Health::Calibrated`] when nothing went wrong. See [`Health`].
+    pub fn health(&self) -> Health {
+        self.inner.health
     }
 
     /// The `Arc`-shared storage behind the executable — exposed so
@@ -136,6 +206,7 @@ impl Executable {
             measured_secs: c.measured_secs,
             bytes: self.bytes(),
             profile_loaded: c.profile_loaded,
+            health: c.health,
             terms,
         }
     }
@@ -187,6 +258,8 @@ pub struct CostBreakdown {
     pub bytes: usize,
     /// Whether the weights came from a fitted tuning profile.
     pub profile_loaded: bool,
+    /// The degradation-ladder rung the compile landed on.
+    pub health: Health,
     pub terms: Vec<CostTerm>,
 }
 
@@ -194,11 +267,16 @@ impl fmt::Display for CostBreakdown {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "{} plan {} ({} bytes, {} weights)",
+            "{} plan {} ({} bytes, {} weights{})",
             self.kernel.label(),
             self.plan_id,
             self.bytes,
-            if self.profile_loaded { "fitted" } else { "seed" }
+            if self.profile_loaded { "fitted" } else { "seed" },
+            if self.health.degraded() {
+                format!(", health: {}", self.health.label())
+            } else {
+                String::new()
+            }
         )?;
         writeln!(f, "  derivation: {}", self.derivation)?;
         for t in &self.terms {

@@ -9,7 +9,8 @@
 //!
 //! ```text
 //! Engine::compile(kernel, &matrix)
-//!   = enumerate (search::tree, the transformation-tree walk)
+//!   = validate (TriMat::validate — the one hard error)
+//!   → enumerate (search::tree, the transformation-tree walk)
 //!   → calibrated predict (search::cost under the fitted profile)
 //!   → optional measure loop (Autotune::TopK(k) times the shortlist)
 //!   → prepare (concretize — storage assembly + schedule auxiliaries)
@@ -25,6 +26,20 @@
 //! path. Within a single compile, the autotune shortlist is prepared
 //! through `concretize::prepare_many`'s plan-keyed storage cache, so
 //! schedule/traversal variants of one layout share one assembly.
+//!
+//! # Degradation ladder
+//!
+//! [`Engine::compile`] returns `Err` only for an invalid reservoir
+//! ([`crate::error::ForelemError::InvalidMatrix`]). Every other fault
+//! — a missing/corrupt tuning profile, a panicking storage assembly, a
+//! measurement that panics or hangs past the
+//! [`EngineBuilder::measure_timeout`] watchdog — lands a rung down the
+//! [`Health`] ladder recorded on the [`Executable`] instead of
+//! surfacing. Candidates whose preparation or measurement faulted are
+//! quarantined process-wide per `(matrix fingerprint, plan id)`, so
+//! later compiles of the same matrix fall through to the next-ranked
+//! plan without re-running a measurement already known to take the
+//! process down.
 //!
 //! # Online calibration
 //!
@@ -48,25 +63,36 @@
 //! a.push(1, 0, 1.0);
 //! a.push(1, 1, 3.0);
 //! let engine = Engine::builder().profile(false).build();
-//! let exe = engine.compile(Kernel::Spmv, &a);
+//! // Errs only on an invalid reservoir; runtime faults degrade the
+//! // Health rung instead.
+//! let exe = engine.compile(Kernel::Spmv, &a).unwrap();
 //! let mut y = [0.0; 2];
 //! exe.spmv(&[1.0, 2.0], &mut y);
 //! assert_eq!(y, [2.0, 7.0]);
 //! ```
 
+// The serving path must never take the host down on a recoverable
+// fault; panicking escape hatches are opted into per expression, not
+// reached for by habit.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 mod cache;
 mod executable;
+mod quarantine;
 
-pub use executable::{CostBreakdown, CostTerm, Executable};
+pub use executable::{CostBreakdown, CostTerm, Executable, Health};
 
 pub use crate::baselines::Kernel;
 pub use crate::coordinator::sweep::Arch;
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use crate::bench::harness::{black_box, time_fn, BenchConfig};
-use crate::concretize::{self, Schedule};
+use crate::concretize::{self, Layout, Schedule, Traversal};
+use crate::error::ForelemError;
 use crate::matrix::{MatrixStats, TriMat};
 use crate::runtime::artifacts;
 use crate::search::calibrate::Sample;
@@ -107,6 +133,7 @@ pub struct EngineBuilder {
     profile: bool,
     archive: bool,
     bench: BenchConfig,
+    measure_timeout: Duration,
 }
 
 impl Default for EngineBuilder {
@@ -119,6 +146,7 @@ impl Default for EngineBuilder {
             profile: true,
             archive: true,
             bench: BenchConfig::quick(),
+            measure_timeout: Duration::from_secs(5),
         }
     }
 }
@@ -177,6 +205,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Wall-clock watchdog on each autotune candidate measurement
+    /// (default 5 s). A candidate that has not reported by then is
+    /// quarantined and its measurement thread abandoned; the compile
+    /// falls through to the remaining candidates. Not part of the
+    /// cache digest — the watchdog guards liveness, it does not define
+    /// the plan space.
+    pub fn measure_timeout(mut self, timeout: Duration) -> Self {
+        self.measure_timeout = timeout;
+        self
+    }
+
     pub fn build(self) -> Engine {
         Engine { cfg: self, pools: Mutex::new(HashMap::new()) }
     }
@@ -217,7 +256,13 @@ pub(crate) fn planned_pool(
     space.dense_k = dense_k;
     let mut profile_loaded = false;
     if use_profile {
-        if let Some(prof) = artifacts::load_profile(arch.slug()) {
+        // Panic shield: a corrupt or adversarial profile costs at most
+        // the fitted weights (Health::SeedWeights), never the compile.
+        let loaded = catch_unwind(|| artifacts::load_profile(arch.slug())).unwrap_or_else(|_| {
+            eprintln!("warning: tuning profile loader panicked; {} uses seed weights", arch.slug());
+            None
+        });
+        if let Some(prof) = loaded {
             space.params = prof.params_for(space.params.threads);
             profile_loaded = true;
             if announce {
@@ -231,6 +276,17 @@ pub(crate) fn planned_pool(
     }
     let tree = tree::enumerate(kernel, &space);
     PlannedPool { space, plans: tree.plans, profile_loaded }
+}
+
+/// One shortlisted plan flowing through the fault-isolated pipeline:
+/// pool index, stable id, execution triple, and the prediction that
+/// ranked it.
+struct Candidate {
+    pi: usize,
+    id: String,
+    exec: concretize::Plan,
+    fv: FeatureVec,
+    predicted: f64,
 }
 
 /// The compile-and-serve facade. Construct once per process (or per
@@ -278,21 +334,44 @@ impl Engine {
     /// optionally measure the shortlist ([`Autotune::TopK`]), assemble
     /// the winning storage, and return the bound [`Executable`].
     ///
+    /// # Errors
+    ///
+    /// Only [`ForelemError::InvalidMatrix`] — the reservoir violates
+    /// its invariants ([`TriMat::validate`]). Every runtime fault past
+    /// that point degrades the [`Executable::health`] rung instead of
+    /// erroring (see the module docs).
+    ///
     /// For TrSv the reservoir must hold the strictly-lower triangle
     /// (as everywhere else in the crate).
-    pub fn compile(&self, kernel: Kernel, m: &TriMat) -> Executable {
-        self.compile_inner(kernel, m, None)
+    pub fn compile(&self, kernel: Kernel, m: &TriMat) -> Result<Executable, ForelemError> {
+        m.validate()?;
+        Ok(self.compile_inner(kernel, m, None))
     }
 
     /// [`compile`](Engine::compile) pinned to one plan by stable id
-    /// (e.g. `"csr.row.serial"`), bypassing selection — for harnesses
-    /// that sweep the whole pool and for serving setups that fix a
-    /// plan out-of-band. Returns `None` if the pool has no such plan.
-    pub fn compile_pinned(&self, kernel: Kernel, m: &TriMat, plan_id: &str) -> Option<Executable> {
+    /// (e.g. `"csr.row.serial"`), bypassing selection *and* the
+    /// quarantine denylist — for harnesses that sweep the whole pool
+    /// and for serving setups that fix a plan out-of-band.
+    ///
+    /// # Errors
+    ///
+    /// [`ForelemError::InvalidMatrix`] for a bad reservoir,
+    /// [`ForelemError::UnsupportedPlan`] when the pool has no plan
+    /// with this id.
+    pub fn compile_pinned(
+        &self,
+        kernel: Kernel,
+        m: &TriMat,
+        plan_id: &str,
+    ) -> Result<Executable, ForelemError> {
+        m.validate()?;
         if !self.pool(kernel).plans.iter().any(|p| p.id == plan_id) {
-            return None;
+            return Err(ForelemError::UnsupportedPlan {
+                plan_id: plan_id.to_string(),
+                reason: format!("not in this engine's {kernel:?} pool"),
+            });
         }
-        Some(self.compile_inner(kernel, m, Some(plan_id)))
+        Ok(self.compile_inner(kernel, m, Some(plan_id)))
     }
 
     /// Drop every cached compile in the process (all engines). Mostly
@@ -307,8 +386,20 @@ impl Engine {
         cache::len()
     }
 
+    /// Number of `(matrix fingerprint, plan id)` pairs quarantined
+    /// process-wide after a panicking or hung preparation/measurement.
+    pub fn quarantine_len() -> usize {
+        quarantine::len()
+    }
+
+    /// Drop every quarantine entry (tests and the chaos drill; a
+    /// serving host might call it after a deploy that fixed a kernel).
+    pub fn clear_quarantine() {
+        quarantine::clear();
+    }
+
     fn pool(&self, kernel: Kernel) -> Arc<PlannedPool> {
-        let mut pools = self.pools.lock().unwrap();
+        let mut pools = self.pools.lock().unwrap_or_else(|p| p.into_inner());
         pools
             .entry(kernel)
             .or_insert_with(|| {
@@ -344,147 +435,314 @@ impl Engine {
         }
 
         let stats = MatrixStats::of(m);
+        // Rung 0 or 1 before anything else runs: a requested profile
+        // that did not load (missing, corrupt, bad checksum, loader
+        // panic) means every prediction below ran on seed weights.
+        let base = if self.cfg.profile && !pool.profile_loaded {
+            Health::SeedWeights
+        } else {
+            Health::Calibrated
+        };
+
         // Shortlist selection: `cost::rank_execs` is the one
         // implementation of the predicted-ascending, index-tie
-        // ordering contract (shared with the sweep's shortlist). A
-        // pinned compile skips ranking the pool entirely (pool sweeps
-        // like `kernels_micro` would otherwise pay O(pool²)).
+        // ordering contract (shared with the sweep's shortlist),
+        // thinned by the quarantine denylist so a compile falls
+        // through to the next-ranked plan instead of re-running a
+        // known-bad candidate. A pinned compile skips ranking the pool
+        // entirely (pool sweeps like `kernels_micro` would otherwise
+        // pay O(pool²)) and overrides the denylist.
         let shortlist: Vec<usize> = match pinned {
-            Some(id) => {
-                vec![pool.plans.iter().position(|p| p.id == id).expect("checked by caller")]
-            }
+            Some(id) => pool.plans.iter().position(|p| p.id == id).into_iter().collect(),
             None => {
                 assert!(!pool.plans.is_empty(), "empty plan pool for {kernel:?}");
                 let execs: Vec<concretize::Plan> = pool.plans.iter().map(|p| p.exec).collect();
                 let order =
                     cost::rank_execs(kernel, self.cfg.spmm_k, &execs, &stats, &pool.space.params);
                 let k = self.cfg.autotune.k().clamp(1, pool.plans.len());
-                order[..k].to_vec()
+                let picked: Vec<usize> = order
+                    .iter()
+                    .copied()
+                    .filter(|&pi| !quarantine::is_denied(fingerprint, &pool.plans[pi].id))
+                    .take(k)
+                    .collect();
+                if picked.is_empty() {
+                    // Every plan quarantined for this matrix: serve
+                    // the reference rung rather than re-run a
+                    // candidate already known to fault.
+                    return self.reference_fallback(kernel, m, &pool, stats);
+                }
+                picked
             }
         };
         // Features/predictions for the shortlist only — what the
         // measure loop archives and the winner's explain() reports.
         // `rank_execs` scored with the same dot product, so the
         // re-extraction is bit-identical to the ranking pass above.
-        let short_fvs: Vec<FeatureVec> = shortlist
+        let cands: Vec<Candidate> = shortlist
             .iter()
-            .map(|&pi| pool.plans[pi].features(kernel, self.cfg.spmm_k, &stats, &pool.space.params))
+            .map(|&pi| {
+                let p = &pool.plans[pi];
+                let fv = p.features(kernel, self.cfg.spmm_k, &stats, &pool.space.params);
+                Candidate {
+                    pi,
+                    id: p.id.clone(),
+                    exec: p.exec,
+                    fv,
+                    predicted: fv.dot(&pool.space.params.weights).max(1e-12),
+                }
+            })
             .collect();
-        let short_pred: Vec<f64> =
-            short_fvs.iter().map(|f| f.dot(&pool.space.params.weights).max(1e-12)).collect();
-        let (win_si, prepared, measured, mut samples) =
-            self.select(kernel, m, &pool, &shortlist, &short_fvs, &short_pred);
+
+        let mut survivors = self.prepare_candidates(kernel, m, cands, fingerprint);
+        if survivors.is_empty() {
+            return self.reference_fallback(kernel, m, &pool, stats);
+        }
+        let (win, measured, mut samples, unmeasured) =
+            self.measure_candidates(kernel, m, &survivors, fingerprint);
+        let health = if unmeasured { base.max(Health::PredictedOnly) } else { base };
 
         // The online-calibration hook: archive what the clock said so
         // `forelem calibrate` can refit the serving profile. The label
         // reuses the fingerprint already computed for the cache key;
-        // archive failures must never fail a compile.
+        // archive failures (including a panicking writer) must never
+        // fail a compile.
         if self.cfg.archive && !samples.is_empty() {
             let label = format!("fp{fingerprint:016x}");
             for s in &mut samples {
                 s.matrix = label.clone();
             }
-            if let Err(e) = artifacts::append_samples(self.cfg.arch.slug(), &samples) {
-                eprintln!("warning: could not archive autotune samples: {e}");
+            let slug = self.cfg.arch.slug();
+            match catch_unwind(AssertUnwindSafe(|| artifacts::append_samples(slug, &samples))) {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => eprintln!("warning: could not archive autotune samples: {e}"),
+                Err(_) => eprintln!("warning: sample archiver panicked; samples not archived"),
             }
         }
 
+        let (c, prepared) = survivors.swap_remove(win);
         let compiled = Arc::new(Compiled {
-            plan: pool.plans[shortlist[win_si]].clone(),
+            plan: pool.plans[c.pi].clone(),
             prepared,
             stats,
             params: pool.space.params,
-            features: short_fvs[win_si],
-            predicted_secs: short_pred[win_si],
+            features: c.fv,
+            predicted_secs: c.predicted,
             measured_secs: measured,
             profile_loaded: pool.profile_loaded,
+            health,
         });
-        cache::insert(key, Arc::clone(&compiled));
+        // Degraded compiles (PredictedOnly / ReferenceSerial) are NOT
+        // cached: with the faulty candidates quarantined, the next
+        // compile of this matrix can climb back up the ladder.
+        if health <= Health::SeedWeights {
+            cache::insert(key, Arc::clone(&compiled));
+        }
         Executable::new(kernel, self.cfg.spmm_k, compiled)
     }
 
-    /// Prepare the shortlist (plan-keyed storage cache) and, when it
-    /// has more than one entry, run the measure loop: time each
-    /// candidate under the quick protocol and keep the fastest.
-    /// `fvs`/`predicted` are aligned with `shortlist` (which holds
-    /// pool indices). Returns `(winning shortlist index, its storage,
-    /// its measured seconds, one calibration sample per measurement)`
-    /// — samples come back with an empty `matrix` label; the caller
-    /// stamps the fingerprint and archives them.
-    fn select(
+    /// Assemble storage + schedule auxiliaries for every shortlisted
+    /// candidate, fault-isolated. The fast path is one batch through
+    /// `prepare_many`'s plan-keyed storage cache; if the batch panics,
+    /// each candidate is retried alone and the ones that still panic
+    /// are quarantined — returning only the survivors (possibly none;
+    /// the caller then serves the reference rung).
+    fn prepare_candidates(
+        &self,
+        kernel: Kernel,
+        m: &TriMat,
+        cands: Vec<Candidate>,
+        fingerprint: u64,
+    ) -> Vec<(Candidate, Arc<concretize::Prepared>)> {
+        // Schedule auxiliaries (band splits, TrSv level sets) are part
+        // of the generated data structure — built at compile time, not
+        // on the first serve (and never inside a timed region).
+        let ensure = |p: &concretize::Prepared| match kernel {
+            Kernel::Spmv => p.ensure_bands(),
+            Kernel::Trsv => p.ensure_levels(),
+            Kernel::Spmm => {}
+        };
+        let batch = catch_unwind(AssertUnwindSafe(|| {
+            crate::faultpoint!("engine.prepare");
+            let execs: Vec<concretize::Plan> = cands.iter().map(|c| c.exec).collect();
+            let workers = crate::util::pool::default_workers();
+            let prepared = concretize::prepare_many(&execs, m, workers);
+            for p in &prepared {
+                ensure(p);
+            }
+            prepared.into_iter().map(Arc::new).collect::<Vec<_>>()
+        }));
+        match batch {
+            Ok(prepared) => cands.into_iter().zip(prepared).collect(),
+            Err(_) => {
+                eprintln!("warning: batch candidate preparation panicked; retrying per candidate");
+                let mut out = Vec::new();
+                for c in cands {
+                    let one = catch_unwind(AssertUnwindSafe(|| {
+                        crate::faultpoint!("engine.prepare");
+                        let p = concretize::prepare(c.exec, m);
+                        ensure(&p);
+                        Arc::new(p)
+                    }));
+                    match one {
+                        Ok(p) => out.push((c, p)),
+                        Err(_) => {
+                            quarantine::deny(fingerprint, &c.id, "storage preparation panicked")
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// The fault-isolated measure loop: when more than one candidate
+    /// survived preparation, time each on its own watchdogged thread
+    /// and keep the fastest. A candidate that panics or outlives
+    /// [`EngineBuilder::measure_timeout`] is quarantined (its thread
+    /// abandoned — the price of never deadlocking the compile) and the
+    /// loop falls through. Returns `(winning survivor index, measured
+    /// seconds, one calibration sample per successful measurement,
+    /// every-measurement-failed)`; samples come back with an empty
+    /// `matrix` label — the caller stamps the fingerprint.
+    fn measure_candidates(
+        &self,
+        kernel: Kernel,
+        m: &TriMat,
+        cands: &[(Candidate, Arc<concretize::Prepared>)],
+        fingerprint: u64,
+    ) -> (usize, Option<f64>, Vec<Sample>, bool) {
+        if cands.len() <= 1 {
+            return (0, None, Vec::new(), false);
+        }
+        let x = Arc::new(workload(m.ncols.max(m.nrows), 0xC0FFEE));
+        let b = Arc::new(if kernel == Kernel::Spmm {
+            workload(m.ncols * self.cfg.spmm_k, 0xBEEF)
+        } else {
+            Vec::new()
+        });
+        let (nrows, ncols, dense_k) = (m.nrows, m.ncols, self.cfg.spmm_k);
+        let bench = self.cfg.bench;
+        let mut samples: Vec<Sample> = Vec::with_capacity(cands.len());
+        let mut best: Option<(usize, f64)> = None;
+        for (ci, (c, p)) in cands.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            let (p, x, b) = (Arc::clone(p), Arc::clone(&x), Arc::clone(&b));
+            let spawned = std::thread::Builder::new()
+                .name(format!("forelem-measure-{}", c.id))
+                .spawn(move || {
+                    let timed = catch_unwind(AssertUnwindSafe(|| {
+                        crate::faultpoint!("engine.measure");
+                        let t = match kernel {
+                            Kernel::Spmv => {
+                                let mut y = vec![0.0; nrows];
+                                time_fn(&bench, || {
+                                    p.spmv(&x[..ncols], &mut y);
+                                    black_box(&y);
+                                })
+                            }
+                            Kernel::Spmm => {
+                                let mut cbuf = vec![0.0; nrows * dense_k];
+                                time_fn(&bench, || {
+                                    p.spmm(&b, dense_k, &mut cbuf);
+                                    black_box(&cbuf);
+                                })
+                            }
+                            Kernel::Trsv => {
+                                let mut xs = vec![0.0; nrows];
+                                time_fn(&bench, || {
+                                    p.trsv(&x[..nrows], &mut xs);
+                                    black_box(&xs);
+                                })
+                            }
+                        };
+                        t.median
+                    }));
+                    // The receiver may have given up on us (watchdog
+                    // fired); a dead channel is not our problem.
+                    let _ = tx.send(timed.map_err(|_| ()));
+                });
+            let outcome: Result<f64, String> = match spawned {
+                Err(e) => Err(format!("measurement thread failed to spawn: {e}")),
+                Ok(_detached) => match rx.recv_timeout(self.cfg.measure_timeout) {
+                    Ok(Ok(secs)) => Ok(secs),
+                    Ok(Err(())) => Err("measurement panicked".to_string()),
+                    Err(mpsc::RecvTimeoutError::Timeout) => Err(format!(
+                        "measurement exceeded the {} ms watchdog (thread abandoned)",
+                        self.cfg.measure_timeout.as_millis()
+                    )),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        Err("measurement thread died without reporting".to_string())
+                    }
+                },
+            };
+            match outcome {
+                Ok(secs) => {
+                    samples.push(Sample {
+                        matrix: String::new(), // stamped by the caller
+                        plan_id: c.id.clone(),
+                        features: c.fv.0,
+                        measured_secs: secs,
+                        predicted_secs: c.predicted,
+                    });
+                    if best.map(|(_, bt)| secs < bt).unwrap_or(true) {
+                        best = Some((ci, secs));
+                    }
+                }
+                Err(reason) => quarantine::deny(fingerprint, &c.id, &reason),
+            }
+        }
+        match best {
+            Some((ci, secs)) => (ci, Some(secs), samples, false),
+            // Every measurement failed: serve the predicted best
+            // (survivors are predicted-ascending) unmeasured.
+            None => (0, None, samples, true),
+        }
+    }
+
+    /// The ladder's bottom rung: candidate selection/preparation could
+    /// not produce a single runnable plan, so serve the reference
+    /// serial CSR execution — the one plan whose assembly and loop
+    /// nest are always valid. Never cached, so a later compile retries
+    /// the full pipeline.
+    fn reference_fallback(
         &self,
         kernel: Kernel,
         m: &TriMat,
         pool: &PlannedPool,
-        shortlist: &[usize],
-        fvs: &[FeatureVec],
-        predicted: &[f64],
-    ) -> (usize, Arc<concretize::Prepared>, Option<f64>, Vec<Sample>) {
-        let execs: Vec<concretize::Plan> =
-            shortlist.iter().map(|&pi| pool.plans[pi].exec).collect();
-        let prepared = concretize::prepare_many(&execs, m, crate::util::pool::default_workers());
-        // Schedule auxiliaries (band splits, TrSv level sets) are part
-        // of the generated data structure — built at compile time, not
-        // on the first serve (and never inside a timed region).
-        for p in &prepared {
-            match kernel {
-                Kernel::Spmv => p.ensure_bands(),
-                Kernel::Trsv => p.ensure_levels(),
-                Kernel::Spmm => {}
-            }
+        stats: MatrixStats,
+    ) -> Executable {
+        let pi = pool
+            .plans
+            .iter()
+            .position(|p| {
+                p.exec.layout == Layout::Csr
+                    && p.exec.traversal == Traversal::RowWise
+                    && p.exec.schedule == Schedule::Serial
+            })
+            .unwrap_or(0);
+        let plan = pool.plans[pi].clone();
+        eprintln!("warning: {kernel:?} compile degraded to the reference serial plan {}", plan.id);
+        let prepared = concretize::prepare(plan.exec, m);
+        match kernel {
+            Kernel::Spmv => prepared.ensure_bands(),
+            Kernel::Trsv => prepared.ensure_levels(),
+            Kernel::Spmm => {}
         }
-        let mut prepared: Vec<Arc<concretize::Prepared>> =
-            prepared.into_iter().map(Arc::new).collect();
-        if shortlist.len() <= 1 {
-            return (0, prepared.remove(0), None, Vec::new());
-        }
-
-        let x = workload(m.ncols.max(m.nrows), 0xC0FFEE);
-        let b = if kernel == Kernel::Spmm {
-            workload(m.ncols * self.cfg.spmm_k, 0xBEEF)
-        } else {
-            Vec::new()
-        };
-        let mut samples: Vec<Sample> = Vec::with_capacity(shortlist.len());
-        let mut best: Option<(usize, f64)> = None;
-        for (si, &pi) in shortlist.iter().enumerate() {
-            let p = &prepared[si];
-            let t = match kernel {
-                Kernel::Spmv => {
-                    let mut y = vec![0.0; m.nrows];
-                    time_fn(&self.cfg.bench, || {
-                        p.spmv(&x[..m.ncols], &mut y);
-                        black_box(&y);
-                    })
-                }
-                Kernel::Spmm => {
-                    let mut c = vec![0.0; m.nrows * self.cfg.spmm_k];
-                    time_fn(&self.cfg.bench, || {
-                        p.spmm(&b, self.cfg.spmm_k, &mut c);
-                        black_box(&c);
-                    })
-                }
-                Kernel::Trsv => {
-                    let mut xs = vec![0.0; m.nrows];
-                    time_fn(&self.cfg.bench, || {
-                        p.trsv(&x[..m.nrows], &mut xs);
-                        black_box(&xs);
-                    })
-                }
-            };
-            samples.push(Sample {
-                matrix: String::new(), // stamped by the caller
-                plan_id: pool.plans[pi].id.clone(),
-                features: fvs[si].0,
-                measured_secs: t.median,
-                predicted_secs: predicted[si],
-            });
-            if best.map(|(_, bt)| t.median < bt).unwrap_or(true) {
-                best = Some((si, t.median));
-            }
-        }
-        let (si, secs) = best.expect("non-empty shortlist");
-        (si, prepared.swap_remove(si), Some(secs), samples)
+        let fv = plan.features(kernel, self.cfg.spmm_k, &stats, &pool.space.params);
+        let predicted = fv.dot(&pool.space.params.weights).max(1e-12);
+        let compiled = Arc::new(Compiled {
+            plan,
+            prepared: Arc::new(prepared),
+            stats,
+            params: pool.space.params,
+            features: fv,
+            predicted_secs: predicted,
+            measured_secs: None,
+            profile_loaded: pool.profile_loaded,
+            health: Health::ReferenceSerial,
+        });
+        Executable::new(kernel, self.cfg.spmm_k, compiled)
     }
 }
 
@@ -496,6 +754,7 @@ fn workload(n: usize, seed: u64) -> Vec<f64> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::matrix::gen;
@@ -510,7 +769,7 @@ mod tests {
         let e = engine_small();
 
         let x: Vec<f64> = (0..40).map(|i| (i as f64 * 0.11).sin() + 0.4).collect();
-        let exe = e.compile(Kernel::Spmv, &m);
+        let exe = e.compile(Kernel::Spmv, &m).expect("valid matrix");
         let mut y = vec![0.0; 40];
         exe.spmv(&x, &mut y);
         crate::util::prop::assert_close(&y, &m.spmv_ref(&x), 1e-10).unwrap();
@@ -519,13 +778,13 @@ mod tests {
 
         let k = 5;
         let b: Vec<f64> = (0..40 * k).map(|i| i as f64 * 0.03 - 0.5).collect();
-        let exe = e.compile(Kernel::Spmm, &m);
+        let exe = e.compile(Kernel::Spmm, &m).expect("valid matrix");
         let mut c = vec![0.0; 40 * k];
         exe.spmm_k(&b, k, &mut c);
         crate::util::prop::assert_close(&c, &m.spmm_ref(&b, k), 1e-10).unwrap();
 
         let l = m.strictly_lower();
-        let exe = e.compile(Kernel::Trsv, &l);
+        let exe = e.compile(Kernel::Trsv, &l).expect("valid matrix");
         let mut xs = vec![0.0; 40];
         exe.trsv(&x, &mut xs);
         crate::util::prop::assert_close(&xs, &l.trsv_unit_lower_ref(&x), 1e-9).unwrap();
@@ -535,13 +794,13 @@ mod tests {
     fn repeated_compiles_share_the_cached_storage() {
         let m = gen::powerlaw(36, 2.0, 18, 901);
         let e = engine_small();
-        let a = e.compile(Kernel::Spmv, &m);
-        let b = e.compile(Kernel::Spmv, &m);
+        let a = e.compile(Kernel::Spmv, &m).expect("valid matrix");
+        let b = e.compile(Kernel::Spmv, &m).expect("valid matrix");
         assert!(Arc::ptr_eq(&a.storage(), &b.storage()), "cache must Arc-share storage");
         assert_eq!(a.plan().id, b.plan().id);
         // A different matrix is a different key.
         let m2 = gen::powerlaw(36, 2.0, 18, 902);
-        let c = e.compile(Kernel::Spmv, &m2);
+        let c = e.compile(Kernel::Spmv, &m2).expect("valid matrix");
         assert!(!Arc::ptr_eq(&a.storage(), &c.storage()));
         // A different config digest (spmm_k affects SpMM ranking) does
         // not collide either — via a second engine.
@@ -551,7 +810,7 @@ mod tests {
             .archive(false)
             .spmm_k(7)
             .build();
-        let d = e2.compile(Kernel::Spmm, &m);
+        let d = e2.compile(Kernel::Spmm, &m).expect("valid matrix");
         assert!(!Arc::ptr_eq(&a.storage(), &d.storage()) || a.plan().id != d.plan().id);
     }
 
@@ -564,9 +823,10 @@ mod tests {
             .archive(false)
             .autotune(Autotune::TopK(3))
             .build();
-        let exe = e.compile(Kernel::Spmv, &m);
+        let exe = e.compile(Kernel::Spmv, &m).expect("valid matrix");
         let secs = exe.measured_secs().expect("TopK(3) must measure");
         assert!(secs > 0.0 && secs.is_finite());
+        assert_eq!(exe.health(), Health::Calibrated, "clean autotune stays on the top rung");
         // The winner is one of the top-3 predicted plans.
         let pool = e.plans(Kernel::Spmv);
         let stats = MatrixStats::of(&m);
@@ -588,8 +848,56 @@ mod tests {
         let e = engine_small();
         let exe = e.compile_pinned(Kernel::Spmv, &m, "csr.row.serial").expect("csr exists");
         assert_eq!(exe.plan().id, "csr.row.serial");
-        assert!(e.compile_pinned(Kernel::Spmv, &m, "no.such.plan").is_none());
+        let err = e.compile_pinned(Kernel::Spmv, &m, "no.such.plan").unwrap_err();
+        assert_eq!(err.class(), "unsupported-plan");
         let x: Vec<f64> = (0..30).map(|i| i as f64 * 0.1).collect();
+        let mut y = vec![0.0; 30];
+        exe.spmv(&x, &mut y);
+        crate::util::prop::assert_close(&y, &m.spmv_ref(&x), 1e-10).unwrap();
+    }
+
+    #[test]
+    fn invalid_matrices_are_the_one_hard_error() {
+        let e = engine_small();
+        let empty = TriMat::new(0, 4);
+        let err = e.compile(Kernel::Spmv, &empty).unwrap_err();
+        assert_eq!(err.class(), "invalid-matrix");
+        let err = e.compile_pinned(Kernel::Spmv, &empty, "csr.row.serial").unwrap_err();
+        assert_eq!(err.class(), "invalid-matrix", "pinned path validates too");
+        // A healthy compile sits on the top rung and reports so.
+        let m = gen::uniform_random(20, 20, 80, 907);
+        let exe = e.compile(Kernel::Spmv, &m).expect("valid matrix");
+        assert_eq!(exe.health(), Health::Calibrated);
+        assert!(!exe.health().degraded());
+        assert_eq!(exe.explain().health, Health::Calibrated);
+        // The ladder's order backs `degraded()` and alarm thresholds.
+        assert!(Health::Calibrated < Health::SeedWeights);
+        assert!(Health::SeedWeights < Health::PredictedOnly);
+        assert!(Health::PredictedOnly < Health::ReferenceSerial);
+    }
+
+    #[test]
+    fn quarantined_plans_fall_through_to_the_next_ranked() {
+        let m = gen::uniform_random(30, 30, 200, 906);
+        let e = engine_small();
+        // Rank the pool exactly as compile_inner will, then deny the
+        // predicted best for this matrix before the first compile.
+        let pool = e.plans(Kernel::Spmv);
+        let stats = MatrixStats::of(&m);
+        let params = Arch::HostSmall.cost_params();
+        let execs: Vec<concretize::Plan> = pool.iter().map(|p| p.exec).collect();
+        let order = cost::rank_execs(Kernel::Spmv, 100, &execs, &stats, &params);
+        let top = pool[order[0]].id.clone();
+        let next = pool[order[1]].id.clone();
+        quarantine::deny(m.fingerprint(), &top, "test quarantine");
+        assert!(Engine::quarantine_len() >= 1);
+        let exe = e.compile(Kernel::Spmv, &m).expect("valid matrix");
+        assert_eq!(exe.plan().id, next, "selection must fall through past the denylist");
+        // The pinned API overrides the denylist (explicit request).
+        let pinned = e.compile_pinned(Kernel::Spmv, &m, &top).expect("pin overrides quarantine");
+        assert_eq!(pinned.plan().id, top);
+        // Numerics stay correct on the fallback plan.
+        let x: Vec<f64> = (0..30).map(|i| (i as f64 * 0.07).sin()).collect();
         let mut y = vec![0.0; 30];
         exe.spmv(&x, &mut y);
         crate::util::prop::assert_close(&y, &m.spmv_ref(&x), 1e-10).unwrap();
@@ -599,7 +907,7 @@ mod tests {
     fn explain_breaks_the_prediction_down() {
         let m = gen::uniform_random(25, 25, 120, 905);
         let e = engine_small();
-        let exe = e.compile(Kernel::Spmv, &m);
+        let exe = e.compile(Kernel::Spmv, &m).expect("valid matrix");
         let ex = exe.explain();
         assert_eq!(ex.plan_id, exe.plan().id);
         assert_eq!(ex.terms.len(), crate::search::cost::N_FEATURES);

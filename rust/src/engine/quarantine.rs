@@ -1,0 +1,66 @@
+//! The autotune denylist: candidates whose measurement panicked or
+//! hung are quarantined per `(matrix fingerprint, plan id)` so no
+//! later compile of the same matrix re-runs a measurement already
+//! known to take the process down (or stall it against the watchdog).
+//! Process-wide, like the compile cache it complements.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+type DenyMap = HashMap<(u64, String), String>;
+
+fn deny_map() -> &'static Mutex<DenyMap> {
+    static DENY: OnceLock<Mutex<DenyMap>> = OnceLock::new();
+    DENY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn locked() -> std::sync::MutexGuard<'static, DenyMap> {
+    // A panic while holding this lock poisons it; the map itself is
+    // always in a consistent state (single-call updates), so recover
+    // the inner value instead of propagating the poison forever.
+    deny_map().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Quarantine `plan_id` for the matrix with `fingerprint`, recording
+/// why. Logs on first insertion only.
+pub(crate) fn deny(fingerprint: u64, plan_id: &str, reason: &str) {
+    let prev = locked().insert((fingerprint, plan_id.to_string()), reason.to_string());
+    if prev.is_none() {
+        eprintln!("quarantined plan {plan_id} on matrix fp{fingerprint:016x}: {reason}");
+    }
+}
+
+/// Is `plan_id` quarantined for this matrix?
+pub(crate) fn is_denied(fingerprint: u64, plan_id: &str) -> bool {
+    locked().contains_key(&(fingerprint, plan_id.to_string()))
+}
+
+/// Number of quarantined `(matrix, plan)` pairs process-wide.
+pub(crate) fn len() -> usize {
+    locked().len()
+}
+
+/// Drop every quarantine entry (tests and the chaos drill).
+pub(crate) fn clear() {
+    locked().clear();
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deny_is_keyed_by_matrix_and_plan() {
+        clear();
+        assert!(!is_denied(1, "csr.row.serial"));
+        deny(1, "csr.row.serial", "panicked");
+        deny(1, "csr.row.serial", "panicked again"); // logs once, updates reason
+        assert!(is_denied(1, "csr.row.serial"));
+        assert!(!is_denied(2, "csr.row.serial"), "other matrices unaffected");
+        assert!(!is_denied(1, "csc.col.serial"), "other plans unaffected");
+        assert_eq!(len(), 1);
+        clear();
+        assert_eq!(len(), 0);
+    }
+}

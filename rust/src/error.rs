@@ -1,0 +1,122 @@
+//! The typed error taxonomy of the serving path.
+//!
+//! The paper's contract is that the *compiler* owns the data structure,
+//! so a bad plan, profile or measurement at runtime is the system's
+//! problem to recover from — not a reason to crash the caller. Every
+//! fallible seam of the compile-and-serve pipeline surfaces one of the
+//! [`ForelemError`] variants below; everything that can be *degraded
+//! around* instead (corrupt profile, panicking candidate, hung
+//! measurement) never reaches the caller at all — it lands a rung down
+//! the ladder recorded as [`crate::engine::Health`].
+//!
+//! The taxonomy is deliberately small: four variants, one per failure
+//! *class*, each carrying a human-readable reason rather than a deep
+//! structured payload — embedding hosts branch on the class and log
+//! the string.
+
+use std::fmt;
+
+/// Why a `forelem` operation failed. The only variant
+/// `Engine::compile` itself can return is [`InvalidMatrix`]
+/// (everything else degrades — see the ladder in
+/// [`crate::engine::Health`]); the rest surface from ingestion
+/// (`matrix::mmio`), artifact IO and the pinned-plan API.
+///
+/// [`InvalidMatrix`]: ForelemError::InvalidMatrix
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ForelemError {
+    /// The tuple reservoir violates its invariants: out-of-bounds
+    /// indices, duplicate `(row, col)` pairs, NaN/Inf values, zero or
+    /// overflowing dimensions. Detected at ingestion by
+    /// [`crate::matrix::TriMat::validate`].
+    InvalidMatrix(String),
+    /// An on-disk artifact (tuning profile, sample archive, manifest)
+    /// is unreadable or fails its integrity check.
+    CorruptArtifact {
+        /// Path of the offending artifact (display form).
+        path: String,
+        reason: String,
+    },
+    /// An autotune candidate measurement panicked, timed out under the
+    /// watchdog, or could not produce a finite time. The engine
+    /// quarantines the candidate and falls through; this variant
+    /// surfaces only from APIs that expose single measurements.
+    MeasurementFailure {
+        /// Stable plan id of the candidate (e.g. `csr.row.serial`).
+        plan_id: String,
+        reason: String,
+    },
+    /// A plan id or execution triple that the requested pipeline
+    /// cannot serve (unknown pinned id, kernel/plan mismatch).
+    UnsupportedPlan {
+        plan_id: String,
+        reason: String,
+    },
+}
+
+impl ForelemError {
+    /// Short stable class label (`invalid-matrix`, `corrupt-artifact`,
+    /// `measurement-failure`, `unsupported-plan`) — for metrics keys
+    /// and log grepping.
+    pub fn class(&self) -> &'static str {
+        match self {
+            ForelemError::InvalidMatrix(_) => "invalid-matrix",
+            ForelemError::CorruptArtifact { .. } => "corrupt-artifact",
+            ForelemError::MeasurementFailure { .. } => "measurement-failure",
+            ForelemError::UnsupportedPlan { .. } => "unsupported-plan",
+        }
+    }
+}
+
+impl fmt::Display for ForelemError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ForelemError::InvalidMatrix(reason) => write!(f, "invalid matrix: {reason}"),
+            ForelemError::CorruptArtifact { path, reason } => {
+                write!(f, "corrupt artifact {path}: {reason}")
+            }
+            ForelemError::MeasurementFailure { plan_id, reason } => {
+                write!(f, "measurement of plan {plan_id} failed: {reason}")
+            }
+            ForelemError::UnsupportedPlan { plan_id, reason } => {
+                write!(f, "unsupported plan {plan_id}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ForelemError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_class_and_reason() {
+        let cases: Vec<(ForelemError, &str, &str)> = vec![
+            (ForelemError::InvalidMatrix("nan at (1, 2)".into()), "invalid-matrix", "nan"),
+            (
+                ForelemError::CorruptArtifact { path: "t/p.profile".into(), reason: "checksum".into() },
+                "corrupt-artifact",
+                "t/p.profile",
+            ),
+            (
+                ForelemError::MeasurementFailure { plan_id: "csr.row.serial".into(), reason: "hung".into() },
+                "measurement-failure",
+                "csr.row.serial",
+            ),
+            (
+                ForelemError::UnsupportedPlan { plan_id: "no.such".into(), reason: "not in pool".into() },
+                "unsupported-plan",
+                "no.such",
+            ),
+        ];
+        for (e, class, frag) in cases {
+            assert_eq!(e.class(), class);
+            let text = e.to_string();
+            assert!(text.contains(frag), "{text} missing {frag}");
+            // The taxonomy is a real std error.
+            let _: &dyn std::error::Error = &e;
+        }
+    }
+}

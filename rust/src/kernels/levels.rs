@@ -38,7 +38,8 @@
 //! deterministic.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use crate::storage::{Csc, Csr};
 use crate::util::pool::scoped_run;
@@ -217,18 +218,47 @@ pub fn assign_levels(row_ptr: &[u32], cols: &[u32]) -> Vec<u32> {
 /// per level, no locks, no syscalls on the fast path. The release on
 /// the generation bump pairs with the acquire in the spin loop, so
 /// every write before a `wait()` is visible after it.
+///
+/// The barrier carries a poison flag for worker-panic safety: a worker
+/// that panics mid-wave will never arrive, which without the flag
+/// would spin every sibling forever. The panicking worker calls
+/// [`poison`](Self::poison) before unwinding; waiters observe the flag
+/// at `wait()` entry and inside the spin loop, and `wait()` returns
+/// `false` so they bail out of the wave loop instead of deadlocking.
 struct SpinBarrier {
     n: usize,
     count: AtomicUsize,
     generation: AtomicUsize,
+    poisoned: AtomicBool,
 }
 
 impl SpinBarrier {
     fn new(n: usize) -> Self {
-        SpinBarrier { n, count: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
+        SpinBarrier {
+            n,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        }
     }
 
-    fn wait(&self) {
+    /// Mark the barrier dead: every current and future `wait()` returns
+    /// `false`. Called by a worker about to unwind out of its wave.
+    fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    /// Returns `true` on a normal release, `false` if the barrier was
+    /// poisoned (the caller must stop executing waves).
+    #[must_use]
+    fn wait(&self) -> bool {
+        if self.is_poisoned() {
+            return false;
+        }
         let arrived_gen = self.generation.load(Ordering::Acquire);
         if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
             self.count.store(0, Ordering::Relaxed);
@@ -236,6 +266,9 @@ impl SpinBarrier {
         } else {
             let mut polls = 0u32;
             while self.generation.load(Ordering::Acquire) == arrived_gen {
+                if self.is_poisoned() {
+                    return false;
+                }
                 std::hint::spin_loop();
                 polls += 1;
                 // Pure spin on the fast path; after ~2^12 polls assume
@@ -246,6 +279,7 @@ impl SpinBarrier {
                 }
             }
         }
+        true
     }
 }
 
@@ -293,22 +327,35 @@ pub fn csr_trsv_level(l: &Csr, lv: &LevelSets, b: &[f64], x: &mut [f64], threads
             .map(|w| {
                 move || {
                     for wi in 0..lv.nwaves() {
-                        let levels = lv.wave_levels(wi);
-                        if lv.wave_is_serial(wi) {
-                            if w == 0 {
-                                for li in levels {
-                                    for &i in lv.level_rows(li) {
-                                        solve_row(i as usize);
+                        if barrier.is_poisoned() {
+                            return;
+                        }
+                        let wave = catch_unwind(AssertUnwindSafe(|| {
+                            let levels = lv.wave_levels(wi);
+                            if lv.wave_is_serial(wi) {
+                                if w == 0 {
+                                    for li in levels {
+                                        for &i in lv.level_rows(li) {
+                                            solve_row(i as usize);
+                                        }
                                     }
                                 }
+                            } else {
+                                let rows = lv.level_rows(levels.start);
+                                for &i in &rows[share(rows.len(), w, t)] {
+                                    solve_row(i as usize);
+                                }
                             }
-                        } else {
-                            let rows = lv.level_rows(levels.start);
-                            for &i in &rows[share(rows.len(), w, t)] {
-                                solve_row(i as usize);
-                            }
+                        }));
+                        if let Err(p) = wave {
+                            // Release the siblings before unwinding, or
+                            // they spin on this wave's barrier forever.
+                            barrier.poison();
+                            resume_unwind(p);
                         }
-                        barrier.wait();
+                        if !barrier.wait() {
+                            return;
+                        }
                     }
                 }
             })
@@ -364,28 +411,39 @@ pub fn csc_trsv_level(l: &Csc, lv: &LevelSets, b: &[f64], x: &mut [f64], threads
                 move || {
                     let all = 0..n;
                     for wi in 0..lv.nwaves() {
-                        let levels = lv.wave_levels(wi);
-                        if lv.wave_is_serial(wi) {
-                            // Worker 0 walks the merged levels in order,
-                            // applying *all* updates — the single-thread
-                            // level ordering satisfies the run's internal
-                            // dependences; everyone else waits.
-                            if w == 0 {
-                                for li in levels {
-                                    for &j in lv.level_rows(li) {
-                                        scatter_col(j as usize, &all);
+                        if barrier.is_poisoned() {
+                            return;
+                        }
+                        let wave = catch_unwind(AssertUnwindSafe(|| {
+                            let levels = lv.wave_levels(wi);
+                            if lv.wave_is_serial(wi) {
+                                // Worker 0 walks the merged levels in order,
+                                // applying *all* updates — the single-thread
+                                // level ordering satisfies the run's internal
+                                // dependences; everyone else waits.
+                                if w == 0 {
+                                    for li in levels {
+                                        for &j in lv.level_rows(li) {
+                                            scatter_col(j as usize, &all);
+                                        }
                                     }
                                 }
+                            } else {
+                                // x[j] is final for every column j of this
+                                // wave's level: all its updates were
+                                // scattered in earlier waves.
+                                for &j in lv.level_rows(levels.start) {
+                                    scatter_col(j as usize, &own);
+                                }
                             }
-                        } else {
-                            // x[j] is final for every column j of this
-                            // wave's level: all its updates were
-                            // scattered in earlier waves.
-                            for &j in lv.level_rows(levels.start) {
-                                scatter_col(j as usize, &own);
-                            }
+                        }));
+                        if let Err(p) = wave {
+                            barrier.poison();
+                            resume_unwind(p);
                         }
-                        barrier.wait();
+                        if !barrier.wait() {
+                            return;
+                        }
                     }
                 }
             })
@@ -560,6 +618,34 @@ mod tests {
             csr_trsv_level(&csr, &lv, &b, &mut x, t);
             assert_eq!(x, serial, "t={t}: per-row dot order must match serial exactly");
         }
+    }
+
+    #[test]
+    fn poisoned_barrier_releases_waiters() {
+        // The worker-panic safety contract: a waiter spinning on a
+        // barrier whose sibling died must observe the poison and bail
+        // out (wait() -> false) rather than deadlock.
+        let b = SpinBarrier::new(2);
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| b.wait());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            b.poison();
+            let released = waiter.join().unwrap();
+            assert!(!released, "poisoned wait must report failure, not release");
+        });
+        assert!(b.is_poisoned());
+        assert!(!b.wait(), "a poisoned barrier stays dead");
+    }
+
+    #[test]
+    fn barrier_releases_normally_without_poison() {
+        let b = SpinBarrier::new(3);
+        std::thread::scope(|s| {
+            let hs: Vec<_> = (0..3).map(|_| s.spawn(|| b.wait() && b.wait())).collect();
+            for h in hs {
+                assert!(h.join().unwrap(), "both generations must release cleanly");
+            }
+        });
     }
 
     #[test]

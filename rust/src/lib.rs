@@ -23,9 +23,11 @@
 //! a.push(1, 0, 1.0);
 //! a.push(1, 1, 3.0);
 //!
-//! // Compile: enumerate -> calibrated predict -> prepare.
+//! // Compile: enumerate -> calibrated predict -> prepare. Fallible —
+//! // the only error is an invalid reservoir; everything else degrades
+//! // down the `engine::Health` ladder instead.
 //! let engine = Engine::builder().profile(false).build();
-//! let exe = engine.compile(Kernel::Spmv, &a);
+//! let exe = engine.compile(Kernel::Spmv, &a).unwrap();
 //!
 //! // Execute the generated routine on its generated data structure.
 //! let mut y = [0.0; 2];
@@ -54,6 +56,8 @@
 //! (`coordinator::sweep`, `bench::tables`, the CLI) and for tests, but
 //! embedding users should not need anything below [`engine`].
 
+pub mod chaos;
+pub mod error;
 pub mod matrix;
 pub mod storage;
 pub mod kernels;
@@ -74,4 +78,5 @@ pub mod util;
 // needs, re-exported from one place.
 pub use baselines::Kernel;
 pub use coordinator::sweep::Arch;
-pub use engine::{Autotune, CostBreakdown, Engine, Executable};
+pub use engine::{Autotune, CostBreakdown, Engine, Executable, Health};
+pub use error::ForelemError;

@@ -12,6 +12,7 @@
 //! forelem bench-all [--quick] [--out FILE]        everything, appended to FILE
 //! forelem bench-json [--shortlist K]              BENCH_spmv.json + planner audit + samples
 //! forelem calibrate [FILES…] [--arch A] [--check] fit a tuning profile from BENCH_*.json
+//! forelem chaos                                   fault-injection drill (--features chaos)
 //! forelem suite                                   print the 20-matrix suite statistics
 //! ```
 
@@ -242,7 +243,13 @@ fn cmd_run(args: &Args) {
         .build();
 
     let t0 = std::time::Instant::now();
-    let exe = engine.compile(kernel, &m);
+    let exe = match engine.compile(kernel, &m) {
+        Ok(exe) => exe,
+        Err(e) => {
+            eprintln!("error [{}]: {e}", e.class());
+            std::process::exit(2);
+        }
+    };
     println!(
         "compiled {} for {} on {} in {:.1} ms ({} plans ranked{})",
         kernel.label(),
@@ -293,7 +300,7 @@ fn cmd_run(args: &Args) {
     // The serving path: a second compile of the same reservoir is a
     // cache hit sharing the same assembled storage.
     let t1 = std::time::Instant::now();
-    let again = engine.compile(kernel, &m);
+    let again = engine.compile(kernel, &m).expect("recompile of a validated matrix");
     let hit = std::sync::Arc::ptr_eq(&exe.storage(), &again.storage());
     println!(
         "recompile: {:.2} us — cache {}",
@@ -339,12 +346,53 @@ fn cmd_calibrate(args: &Args) {
         }
     }
     let mut samples = Vec::new();
+    let mut corrupt_total = 0usize;
     for f in &files {
         let text = std::fs::read_to_string(f)
             .unwrap_or_else(|e| panic!("reading bench record {f}: {e}"));
         let n0 = samples.len();
-        samples.extend(calibrate::samples_from_json(&text));
-        println!("{f}: {} samples", samples.len() - n0);
+        if f.ends_with(".jsonl") {
+            // Archive files get strict per-line accounting: corrupt
+            // lines are counted and quarantined next to the archive
+            // (same naming as `artifacts::quarantine_path_in`) instead
+            // of silently shrinking the refit material.
+            let mut corrupt: Vec<&str> = Vec::new();
+            for line in text.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match calibrate::sample_from_json_line(line) {
+                    Some(s) => samples.push(s),
+                    None => corrupt.push(line),
+                }
+            }
+            if corrupt.is_empty() {
+                println!("{f}: {} samples", samples.len() - n0);
+            } else {
+                corrupt_total += corrupt.len();
+                let qpath = format!("{}.quarantine.jsonl", f.strip_suffix(".jsonl").unwrap_or(f));
+                let mut body = corrupt.join("\n");
+                body.push('\n');
+                match std::fs::write(&qpath, body) {
+                    Ok(()) => println!(
+                        "{f}: {} samples, {} corrupt lines quarantined to {qpath}",
+                        samples.len() - n0,
+                        corrupt.len()
+                    ),
+                    Err(e) => println!(
+                        "{f}: {} samples, {} corrupt lines skipped (quarantine failed: {e})",
+                        samples.len() - n0,
+                        corrupt.len()
+                    ),
+                }
+            }
+        } else {
+            samples.extend(calibrate::samples_from_json(&text));
+            println!("{f}: {} samples", samples.len() - n0);
+        }
+    }
+    if corrupt_total > 0 {
+        eprintln!("warning: {corrupt_total} corrupt archive lines excluded from the fit");
     }
     if samples.is_empty() {
         eprintln!("no calibration samples found (re-run `forelem bench-json` first)");
@@ -393,11 +441,11 @@ fn cmd_calibrate(args: &Args) {
     let profile = Profile::from_params(arch.slug(), &fitted, samples.len());
     let path = match args.get("out") {
         Some(p) => {
-            if let Some(dir) = std::path::Path::new(p).parent() {
-                std::fs::create_dir_all(dir).expect("creating --out directory");
-            }
-            std::fs::write(p, profile.render()).expect("writing --out profile");
-            std::path::PathBuf::from(p)
+            // Through the artifact store, so --out profiles carry the
+            // same checksum trailer the loader verifies.
+            let path = std::path::PathBuf::from(p);
+            artifacts::save_profile_at(&path, &profile).expect("writing --out profile");
+            path
         }
         None => artifacts::save_profile(&profile).expect("writing tuning profile"),
     };
@@ -476,6 +524,21 @@ fn main() {
             );
         }
         "calibrate" => cmd_calibrate(&args),
+        "chaos" => {
+            #[cfg(feature = "chaos")]
+            {
+                let ok = forelem::chaos::drill::run_and_report();
+                std::process::exit(if ok { 0 } else { 1 });
+            }
+            #[cfg(not(feature = "chaos"))]
+            {
+                eprintln!(
+                    "the chaos drill needs the fault-injection points compiled in:\n\
+                     \x20   cargo run --release --features chaos -- chaos"
+                );
+                std::process::exit(2);
+            }
+        }
         "bench-all" => {
             let cfg = sweep_cfg(&args);
             let xla = tables::try_xla();
@@ -502,7 +565,7 @@ fn main() {
             println!(
                 "forelem — automatic compiler-based data structure generation\n\
                  subcommands: run enumerate derive codegen suite table1 table2 table3\n\
-                 \x20            table4 table5 fig11 bench-all bench-json calibrate\n\
+                 \x20            table4 table5 fig11 bench-all bench-json calibrate chaos\n\
                  flags: --quick --kernel K --variant ID --spmm-k N --matrices N --out FILE\n\
                  \x20      --schedules (add the parallel/tiled schedule axis on host-large)\n\
                  \x20      --shortlist K (measure only the top-K cost-ranked plans per\n\
@@ -515,7 +578,10 @@ fn main() {
                  calibrate: forelem calibrate [FILES… (BENCH_*.json and/or the engine's\n\
                  \x20          target/tuning/<arch>.samples.jsonl archive)] [--arch host-large]\n\
                  \x20          [--out PATH] [--check (fail if fitted agreement < the\n\
-                 \x20          record's own planner; regressed fits are never persisted)]"
+                 \x20          record's own planner; regressed fits are never persisted)]\n\
+                 chaos: forelem chaos — run the fault-injection drill at every fault\n\
+                 \x20      point (requires a --features chaos build); exits non-zero if\n\
+                 \x20      any fault deadlocks, aborts, or lands on the wrong health rung"
             );
         }
     }

@@ -3,6 +3,7 @@
 //! with the value `A(row, col)` attached (paper §2.2.2). Every generated
 //! data structure in `storage/` is (re)assembled from this type.
 
+use crate::error::ForelemError;
 use crate::util::rng::Rng;
 
 /// One nonzero entry: the token tuple `⟨row, col⟩` plus its data value.
@@ -41,18 +42,38 @@ impl TriMat {
         self.entries.push(Entry { row: row as u32, col: col as u32, val });
     }
 
-    /// Check the reservoir invariants. Returns an error description.
-    pub fn validate(&self) -> Result<(), String> {
+    /// Check the reservoir invariants: sane dimensions (nonzero, no
+    /// `u32`/`usize` overflow), in-bounds indices, no duplicate
+    /// `(row, col)` pairs, finite values. Every ingestion seam
+    /// (`mmio`, the generators, `Engine::compile`) runs this, so a bad
+    /// reservoir is rejected with a typed
+    /// [`ForelemError::InvalidMatrix`] before any storage is built.
+    pub fn validate(&self) -> Result<(), ForelemError> {
+        let bad = |reason: String| Err(ForelemError::InvalidMatrix(reason));
+        if self.nrows == 0 || self.ncols == 0 {
+            return bad(format!("zero dimension: {}x{}", self.nrows, self.ncols));
+        }
+        // Entries index with u32 tokens; dense workspaces take
+        // nrows*ncols products. Refuse shapes those cannot address.
+        if self.nrows > u32::MAX as usize || self.ncols > u32::MAX as usize {
+            return bad(format!("dimension exceeds u32 index space: {}x{}", self.nrows, self.ncols));
+        }
+        if self.nrows.checked_mul(self.ncols).is_none() {
+            return bad(format!("dimension product overflows: {}x{}", self.nrows, self.ncols));
+        }
         let mut seen = std::collections::HashSet::with_capacity(self.nnz() * 2);
         for e in &self.entries {
             if e.row as usize >= self.nrows || e.col as usize >= self.ncols {
-                return Err(format!("entry ({}, {}) out of bounds {}x{}", e.row, e.col, self.nrows, self.ncols));
+                return bad(format!(
+                    "entry ({}, {}) out of bounds {}x{}",
+                    e.row, e.col, self.nrows, self.ncols
+                ));
             }
             if !seen.insert(((e.row as u64) << 32) | e.col as u64) {
-                return Err(format!("duplicate entry ({}, {})", e.row, e.col));
+                return bad(format!("duplicate entry ({}, {})", e.row, e.col));
             }
             if !e.val.is_finite() {
-                return Err(format!("non-finite value at ({}, {})", e.row, e.col));
+                return bad(format!("non-finite value at ({}, {})", e.row, e.col));
             }
         }
         Ok(())
@@ -243,6 +264,16 @@ mod tests {
         assert_eq!(m.nnz(), 5);
         let d = m.to_dense();
         assert_eq!(d[0], 10.0); // 1 + 9
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_shapes() {
+        assert!(TriMat::new(0, 3).validate().is_err(), "zero rows");
+        assert!(TriMat::new(3, 0).validate().is_err(), "zero cols");
+        assert!(TriMat::new(u32::MAX as usize + 1, 1).validate().is_err(), "u32 overflow");
+        assert!(TriMat::new(usize::MAX / 2, 3).validate().is_err(), "unaddressable shape");
+        let e = TriMat::new(0, 0).validate().unwrap_err();
+        assert_eq!(e.class(), "invalid-matrix");
     }
 
     #[test]

@@ -15,6 +15,17 @@ fn val(rng: &mut Rng) -> f64 {
     if rng.gen_bool(0.5) { v } else { -v }
 }
 
+/// Every generator funnels its result through this check: the
+/// generators are correct by construction, so a validation failure
+/// here is a generator bug worth an immediate panic rather than a bad
+/// reservoir leaking into storage builds and measurements.
+fn finished(m: TriMat) -> TriMat {
+    if let Err(e) = m.validate() {
+        panic!("generator produced an invalid reservoir: {e}");
+    }
+    m
+}
+
 /// Uniform random matrix: each of `nnz` entries at a uniform (row, col).
 pub fn uniform_random(nrows: usize, ncols: usize, nnz: usize, seed: u64) -> TriMat {
     let mut rng = Rng::new(seed);
@@ -23,7 +34,7 @@ pub fn uniform_random(nrows: usize, ncols: usize, nnz: usize, seed: u64) -> TriM
         m.push(rng.gen_range(nrows), rng.gen_range(ncols), val(&mut rng));
     }
     m.sum_duplicates();
-    m
+    finished(m)
 }
 
 /// Erdős–Rényi directed graph adjacency (Erdos971-class: small, sparse,
@@ -47,7 +58,7 @@ pub fn powerlaw(n: usize, alpha: f64, max_degree: usize, seed: u64) -> TriMat {
         }
     }
     m.sum_duplicates();
-    m
+    finished(m)
 }
 
 /// Banded matrix: `band` diagonals on each side of the main diagonal,
@@ -65,7 +76,7 @@ pub fn banded(n: usize, band: usize, fill: f64, seed: u64) -> TriMat {
             }
         }
     }
-    m
+    finished(m)
 }
 
 /// 2-D 5-point Laplacian stencil on a `gx × gy` grid (classic PDE
@@ -92,7 +103,7 @@ pub fn laplacian_2d(gx: usize, gy: usize, seed: u64) -> TriMat {
             }
         }
     }
-    m
+    finished(m)
 }
 
 /// FEM-style matrix: nodes carry `block`-sized dense blocks and couple to
@@ -127,7 +138,7 @@ pub fn fem_blocks(nodes: usize, block: usize, neighbors: usize, seed: u64) -> Tr
         }
     }
     m.sum_duplicates();
-    m
+    finished(m)
 }
 
 /// LP / network-constraint matrix: rectangular-feeling structure inside a
@@ -149,7 +160,7 @@ pub fn constraint(n: usize, dense_rows: usize, dense_len: usize, seed: u64) -> T
         }
     }
     m.sum_duplicates();
-    m
+    finished(m)
 }
 
 /// Electrical-network matrix: sparse symmetric-ish stencil with a few
@@ -178,7 +189,7 @@ pub fn circuit(n: usize, hubs: usize, hub_degree: usize, seed: u64) -> TriMat {
         }
     }
     m.sum_duplicates();
-    m
+    finished(m)
 }
 
 /// Census/redistricting adjacency (or2010-class): planar-ish graph —
@@ -198,7 +209,7 @@ pub fn planar_adjacency(n: usize, seed: u64) -> TriMat {
         }
     }
     m.sum_duplicates();
-    m
+    finished(m)
 }
 
 #[cfg(test)]

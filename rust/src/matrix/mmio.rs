@@ -6,6 +6,7 @@
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
+use crate::error::ForelemError;
 use crate::matrix::coo::TriMat;
 
 #[derive(Debug)]
@@ -13,6 +14,10 @@ pub enum MmError {
     Io(std::io::Error),
     Parse { line: usize, msg: String },
     Unsupported(String),
+    /// The file parsed, but the resulting reservoir violates the
+    /// `TriMat` invariants (NaN/Inf values, degenerate dimensions) —
+    /// see [`TriMat::validate`].
+    Invalid(ForelemError),
 }
 
 impl std::fmt::Display for MmError {
@@ -21,6 +26,7 @@ impl std::fmt::Display for MmError {
             MmError::Io(e) => write!(f, "io: {e}"),
             MmError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
             MmError::Unsupported(v) => write!(f, "unsupported MatrixMarket variant: {v}"),
+            MmError::Invalid(e) => write!(f, "{e}"),
         }
     }
 }
@@ -29,6 +35,7 @@ impl std::error::Error for MmError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             MmError::Io(e) => Some(e),
+            MmError::Invalid(e) => Some(e),
             _ => None,
         }
     }
@@ -138,6 +145,10 @@ pub fn read_matrix_market<R: BufRead>(r: R) -> Result<TriMat, MmError> {
         return Err(MmError::Parse { line: 0, msg: format!("expected {nnz} entries, found {read}") });
     }
     m.sum_duplicates();
+    // Rust's f64 parser happily accepts "nan" and "inf" tokens, and a
+    // size line may declare degenerate dimensions — run the full
+    // reservoir validation before handing the matrix to any consumer.
+    m.validate().map_err(MmError::Invalid)?;
     Ok(m)
 }
 

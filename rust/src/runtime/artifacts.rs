@@ -115,12 +115,47 @@ pub fn profile_path_in(dir: &Path, arch_slug: &str) -> PathBuf {
     dir.join(format!("{arch_slug}.profile"))
 }
 
+/// FNV-1a over the rendered profile body — the integrity check behind
+/// the `checksum` trailer line.
+fn profile_checksum(body: &str) -> u64 {
+    let mut h = crate::util::fnv::Fnv1a::new();
+    h.eat_bytes(body.as_bytes());
+    h.finish()
+}
+
+/// Split a profile file into its body and the optional trailing
+/// `checksum <hex>` line. The trailer must be the final line; profiles
+/// written before the checksum era have none (and are accepted as-is,
+/// the legacy contract).
+fn split_checksum(text: &str) -> (&str, Option<&str>) {
+    let t = text.strip_suffix('\n').unwrap_or(text);
+    match t.rfind('\n') {
+        Some(i) if t[i + 1..].starts_with("checksum ") => {
+            (&text[..i + 1], Some(t[i + 1 + "checksum ".len()..].trim()))
+        }
+        None if t.starts_with("checksum ") => ("", Some(t["checksum ".len()..].trim())),
+        _ => (text, None),
+    }
+}
+
+/// Persist a fitted profile at an explicit `path` (parent created if
+/// needed), with the FNV-1a `checksum` trailer [`load_profile_in`]
+/// verifies.
+pub fn save_profile_at(path: &Path, profile: &Profile) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let body = profile.render();
+    std::fs::write(path, format!("{body}checksum {:016x}\n", profile_checksum(&body)))
+}
+
 /// Persist a fitted profile into `dir` (created if needed); returns
 /// the written path.
 pub fn save_profile_in(dir: &Path, profile: &Profile) -> std::io::Result<PathBuf> {
-    std::fs::create_dir_all(dir)?;
     let path = profile_path_in(dir, &profile.arch_slug);
-    std::fs::write(&path, profile.render())?;
+    save_profile_at(&path, profile)?;
     Ok(path)
 }
 
@@ -130,12 +165,30 @@ pub fn save_profile(profile: &Profile) -> std::io::Result<PathBuf> {
 }
 
 /// Load the profile for `arch_slug` from `dir`, if present and
-/// parseable. A corrupt file is reported on stderr and ignored (the
-/// sweep then runs on the seed parameters).
+/// parseable. A corrupt file — unparseable body *or* a `checksum`
+/// trailer that doesn't match it — is reported on stderr and ignored
+/// (the sweep then runs on the seed parameters; the engine records
+/// `Health::SeedWeights`).
 pub fn load_profile_in(dir: &Path, arch_slug: &str) -> Option<Profile> {
     let path = profile_path_in(dir, arch_slug);
+    if let Err(e) = crate::faultpoint_io!("artifacts.load_profile") {
+        eprintln!("ignoring tuning profile {}: {e}", path.display());
+        return None;
+    }
     let text = std::fs::read_to_string(&path).ok()?;
-    match Profile::parse(&text) {
+    let (body, trailer) = split_checksum(&text);
+    if let Some(stored) = trailer {
+        let computed = profile_checksum(body);
+        if u64::from_str_radix(stored, 16) != Ok(computed) {
+            eprintln!(
+                "ignoring corrupt tuning profile {}: checksum mismatch (stored '{stored}', \
+                 body hashes to {computed:016x})",
+                path.display()
+            );
+            return None;
+        }
+    }
+    match Profile::parse(body) {
         // A profile copied/renamed across architectures carries the
         // wrong structural shape (l2_bytes) — refuse it rather than
         // silently mis-ranking every gather-heavy plan.
@@ -162,7 +215,7 @@ pub fn load_profile(arch_slug: &str) -> Option<Profile> {
 
 // ------------------------------------------- autotune sample archive --
 
-use crate::search::calibrate::{sample_to_json, samples_from_json, Sample};
+use crate::search::calibrate::{sample_to_json, Sample};
 
 /// Path of the rolling autotune sample archive for `arch_slug` inside
 /// `dir` — one `calibrate::sample_to_json` line per measured cell, the
@@ -172,22 +225,38 @@ pub fn samples_path_in(dir: &Path, arch_slug: &str) -> PathBuf {
     dir.join(format!("{arch_slug}.samples.jsonl"))
 }
 
+/// Path the corrupt lines of an archive are quarantined at by
+/// [`load_samples_counted_in`] — kept next to the archive for
+/// post-mortem inspection rather than silently discarded.
+pub fn quarantine_path_in(dir: &Path, arch_slug: &str) -> PathBuf {
+    dir.join(format!("{arch_slug}.samples.quarantine.jsonl"))
+}
+
 /// Append autotune measurements to the archive in `dir` (created if
 /// needed); returns the archive path. The engine calls this after
 /// every measured compile so serving traffic keeps accumulating
 /// refit material.
+///
+/// The whole batch is rendered first and lands in one `O_APPEND`
+/// `write_all`, so concurrent writers interleave at batch — not line —
+/// granularity and a crash mid-call cannot leave a torn line for every
+/// later load to trip over.
 pub fn append_samples_in(
     dir: &Path,
     arch_slug: &str,
     samples: &[Sample],
 ) -> std::io::Result<PathBuf> {
     use std::io::Write;
+    crate::faultpoint_io!("artifacts.append_samples")?;
     std::fs::create_dir_all(dir)?;
     let path = samples_path_in(dir, arch_slug);
-    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+    let mut batch = String::with_capacity(samples.len() * 160);
     for s in samples {
-        writeln!(f, "{}", sample_to_json(s))?;
+        batch.push_str(&sample_to_json(s));
+        batch.push('\n');
     }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+    f.write_all(batch.as_bytes())?;
     Ok(path)
 }
 
@@ -196,12 +265,70 @@ pub fn append_samples(arch_slug: &str, samples: &[Sample]) -> std::io::Result<Pa
     append_samples_in(&tuning_dir(), arch_slug, samples)
 }
 
+/// A loaded sample archive plus its corruption tally.
+#[derive(Clone, Debug, Default)]
+pub struct SampleArchive {
+    pub samples: Vec<Sample>,
+    /// Non-empty archive lines that failed to parse as samples. They
+    /// are copied to [`quarantine_path_in`] and surfaced by
+    /// `forelem calibrate` — a nonzero count means refit material is
+    /// being lost to corruption, which used to disappear into
+    /// `unwrap_or_default()`.
+    pub corrupt_lines: usize,
+}
+
+/// Load the archive for `arch_slug` in `dir` with strict per-line
+/// accounting: every non-empty line must parse as a sample, failures
+/// are counted and quarantined. Absent archive → empty; an IO error or
+/// a parser panic is reported on stderr and treated as absent — this
+/// sits on the calibrate path and must never take the process down.
+pub fn load_samples_counted_in(dir: &Path, arch_slug: &str) -> SampleArchive {
+    use crate::search::calibrate::sample_from_json_line;
+    let path = samples_path_in(dir, arch_slug);
+    let loaded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> SampleArchive {
+        if let Err(e) = crate::faultpoint_io!("artifacts.load_samples") {
+            eprintln!("ignoring sample archive {}: {e}", path.display());
+            return SampleArchive::default();
+        }
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return SampleArchive::default(),
+            Err(e) => {
+                eprintln!("ignoring sample archive {}: {e}", path.display());
+                return SampleArchive::default();
+            }
+        };
+        let mut archive = SampleArchive::default();
+        let mut corrupt: Vec<&str> = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match sample_from_json_line(line) {
+                Some(s) => archive.samples.push(s),
+                None => corrupt.push(line),
+            }
+        }
+        archive.corrupt_lines = corrupt.len();
+        if !corrupt.is_empty() {
+            // Best effort — quarantine failing must not fail the load.
+            let mut body = corrupt.join("\n");
+            body.push('\n');
+            let _ = std::fs::write(quarantine_path_in(dir, arch_slug), body);
+        }
+        archive
+    }));
+    loaded.unwrap_or_else(|_| {
+        eprintln!("sample archive loader panicked; treating {} as absent", path.display());
+        SampleArchive::default()
+    })
+}
+
 /// Load every sample archived for `arch_slug` in `dir` (empty if the
-/// archive does not exist — the parser skips malformed lines).
+/// archive does not exist; corrupt lines are quarantined — use
+/// [`load_samples_counted_in`] to observe the count).
 pub fn load_samples_in(dir: &Path, arch_slug: &str) -> Vec<Sample> {
-    std::fs::read_to_string(samples_path_in(dir, arch_slug))
-        .map(|t| samples_from_json(&t))
-        .unwrap_or_default()
+    load_samples_counted_in(dir, arch_slug).samples
 }
 
 /// Load the default [`tuning_dir`] archive for `arch_slug`.
@@ -210,6 +337,7 @@ pub fn load_samples(arch_slug: &str) -> Vec<Sample> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -293,11 +421,77 @@ mod tests {
         let _ = std::fs::remove_dir_all(dir);
     }
 
+    /// The checksum trailer: tampering with a persisted profile is
+    /// detected and the load falls back to None (→ seed weights),
+    /// while trailer-less legacy profiles stay loadable.
+    #[test]
+    fn profile_checksum_rejects_tampering_accepts_legacy() {
+        use crate::search::cost::CostParams;
+        let dir = std::env::temp_dir().join("forelem_tuning_checksum");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = Profile::from_params("host-small", &CostParams::host_small(), 7);
+        let path = save_profile_in(&dir, &p).expect("save");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().last().unwrap().starts_with("checksum "), "trailer present");
+        assert_eq!(load_profile_in(&dir, "host-small"), Some(p.clone()));
+        // Flip one byte of the body: the trailer no longer matches.
+        let tampered = text.replacen("samples 7", "samples 8", 1);
+        assert_ne!(tampered, text, "tamper target must exist");
+        std::fs::write(&path, tampered).unwrap();
+        assert!(load_profile_in(&dir, "host-small").is_none(), "bad checksum refused");
+        // A legacy profile (no trailer) still loads.
+        std::fs::write(&path, p.render()).unwrap();
+        assert_eq!(load_profile_in(&dir, "host-small"), Some(p));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Strict archive accounting: corrupt lines are counted and
+    /// quarantined next to the archive instead of silently dropping
+    /// (or worse, dropping the whole archive).
+    #[test]
+    fn counted_load_quarantines_corrupt_lines() {
+        use crate::search::cost::N_FEATURES;
+        use std::io::Write;
+        // This test crosses live fault points; in a chaos build, keep
+        // it out of another test's armed window.
+        #[cfg(feature = "chaos")]
+        let _guard = crate::chaos::test_arming_guard();
+        let dir = std::env::temp_dir().join("forelem_sample_quarantine");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mk = |i: usize| Sample {
+            matrix: format!("m{i}"),
+            plan_id: "csr.row.serial".into(),
+            features: [2.0e6; N_FEATURES],
+            measured_secs: 1e-4,
+            predicted_secs: 2e-4,
+        };
+        let path = append_samples_in(&dir, "host-small", &[mk(0), mk(1)]).expect("append");
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "{{\"matrix\": \"torn").unwrap();
+        writeln!(f, "not json at all").unwrap();
+        drop(f);
+        let archive = load_samples_counted_in(&dir, "host-small");
+        assert_eq!(archive.samples.len(), 2, "good lines survive the corruption");
+        assert_eq!(archive.corrupt_lines, 2);
+        let q = std::fs::read_to_string(quarantine_path_in(&dir, "host-small")).unwrap();
+        assert_eq!(q.lines().count(), 2, "corrupt lines preserved for inspection");
+        // The plain loader agrees, and an absent archive is clean.
+        assert_eq!(load_samples_in(&dir, "host-small").len(), 2);
+        let absent = load_samples_counted_in(&dir, "no-such-arch");
+        assert!(absent.samples.is_empty());
+        assert_eq!(absent.corrupt_lines, 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
     /// The serving-path archive: appended autotune samples round-trip
     /// through the line format and accumulate across appends.
     #[test]
     fn sample_archive_appends_and_reloads() {
         use crate::search::cost::N_FEATURES;
+        // This test crosses live fault points; in a chaos build, keep
+        // it out of another test's armed window.
+        #[cfg(feature = "chaos")]
+        let _guard = crate::chaos::test_arming_guard();
         let dir = std::env::temp_dir().join("forelem_sample_archive_test");
         let _ = std::fs::remove_dir_all(&dir);
         assert!(load_samples_in(&dir, "host-large").is_empty());

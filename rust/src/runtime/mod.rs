@@ -7,6 +7,10 @@
 //! an API-compatible stub is compiled instead and the backend simply
 //! reports itself absent (sweeps degrade to native-only).
 
+// Runtime artifact IO sits on the serving path: every failure must be
+// a typed Result or a logged degradation, never a panic (ISSUE 6).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod artifacts;
 
 #[cfg(feature = "xla")]

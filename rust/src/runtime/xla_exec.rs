@@ -48,7 +48,7 @@ impl XlaBackend {
     }
 
     fn executable(&self, entry: &ManifestEntry) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = self.cache.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(e) = cache.get(&entry.file) {
             return Ok(e.clone());
         }
@@ -134,6 +134,7 @@ impl XlaBackend {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::matrix::gen;

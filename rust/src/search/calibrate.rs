@@ -380,26 +380,27 @@ fn arr_field(line: &str, key: &str) -> Option<Vec<f64>> {
 /// dropped, since their extractor resolved against features this build
 /// cannot interpret.
 pub fn samples_from_json(text: &str) -> Vec<Sample> {
-    let mut out = Vec::new();
-    for line in text.lines() {
-        let (Some(matrix), Some(plan_id)) = (str_field(line, "matrix"), str_field(line, "plan"))
-        else {
-            continue;
-        };
-        let Some(fv) = arr_field(line, "features") else { continue };
-        let (Some(measured), Some(predicted)) =
-            (num_field(line, "measured_secs"), num_field(line, "predicted_secs"))
-        else {
-            continue;
-        };
-        if fv.is_empty() || fv.len() > N_FEATURES || !measured.is_finite() || measured <= 0.0 {
-            continue;
-        }
-        let mut features = [0.0; N_FEATURES];
-        features[..fv.len()].copy_from_slice(&fv);
-        out.push(Sample { matrix, plan_id, features, measured_secs: measured, predicted_secs: predicted });
+    text.lines().filter_map(sample_from_json_line).collect()
+}
+
+/// Parse a single archival line into a [`Sample`], or `None` if the
+/// line does not carry a full, sane sample. The strict-archive loader
+/// (`runtime::artifacts::load_samples_counted_in`) uses this per-line
+/// seam to *count* failures on `.jsonl` archives, where every line is
+/// supposed to be a sample, while [`samples_from_json`] keeps skipping
+/// silently for mixed report files.
+pub fn sample_from_json_line(line: &str) -> Option<Sample> {
+    let matrix = str_field(line, "matrix")?;
+    let plan_id = str_field(line, "plan")?;
+    let fv = arr_field(line, "features")?;
+    let measured = num_field(line, "measured_secs")?;
+    let predicted = num_field(line, "predicted_secs")?;
+    if fv.is_empty() || fv.len() > N_FEATURES || !measured.is_finite() || measured <= 0.0 {
+        return None;
     }
-    out
+    let mut features = [0.0; N_FEATURES];
+    features[..fv.len()].copy_from_slice(&fv);
+    Some(Sample { matrix, plan_id, features, measured_secs: measured, predicted_secs: predicted })
 }
 
 /// Render one sample as the archival JSON object (single line — the

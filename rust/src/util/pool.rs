@@ -5,7 +5,8 @@
 //! tasks; paper-protocol *measurements* of `Serial` plans are always
 //! taken single-threaded on the calling thread.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Run `f(i)` for every `i in 0..n` across up to `workers` threads and
@@ -17,6 +18,13 @@ use std::sync::Mutex;
 /// per item, which at 100k items allocated 100k mutexes and serialized
 /// on allocator traffic. Chunks are still claimed dynamically, so
 /// uneven per-item cost load-balances.
+///
+/// A panic in `f` poisons the claim loop: sibling workers stop
+/// claiming chunks at their next iteration, the scope joins, and the
+/// original panic payload is re-raised on the calling thread — one
+/// panicking item unwinds the whole map instead of completing it with
+/// a hole (or, worse, hanging a caller that coordinates with the
+/// workers).
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -36,24 +44,43 @@ where
     let chunk = n.div_ceil(nchunks);
     let nchunks = n.div_ceil(chunk);
     let next = AtomicUsize::new(0);
+    let poisoned = AtomicBool::new(false);
+    let payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     let out: Vec<Mutex<Vec<T>>> = (0..nchunks).map(|_| Mutex::new(Vec::new())).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                if poisoned.load(Ordering::Acquire) {
+                    break;
+                }
                 let c = next.fetch_add(1, Ordering::Relaxed);
                 if c >= nchunks {
                     break;
                 }
                 let lo = c * chunk;
                 let hi = ((c + 1) * chunk).min(n);
-                let vals: Vec<T> = (lo..hi).map(&f).collect();
-                *out[c].lock().unwrap() = vals;
+                match catch_unwind(AssertUnwindSafe(|| (lo..hi).map(&f).collect::<Vec<T>>())) {
+                    Ok(vals) => {
+                        *out[c].lock().unwrap_or_else(|p| p.into_inner()) = vals;
+                    }
+                    Err(p) => {
+                        poisoned.store(true, Ordering::Release);
+                        let mut slot = payload.lock().unwrap_or_else(|p| p.into_inner());
+                        if slot.is_none() {
+                            *slot = Some(p);
+                        }
+                        break;
+                    }
+                }
             });
         }
     });
+    if let Some(p) = payload.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        resume_unwind(p);
+    }
     let mut flat = Vec::with_capacity(n);
     for m in out {
-        flat.extend(m.into_inner().unwrap());
+        flat.extend(m.into_inner().unwrap_or_else(|p| p.into_inner()));
     }
     assert_eq!(flat.len(), n, "worker failed to fill a chunk");
     flat
@@ -120,6 +147,24 @@ mod tests {
         // n not divisible by the chunk size: last chunk is short.
         let out = parallel_map(1001, 3, |i| i);
         assert_eq!(out, (0..1001).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_item_unwinds_the_whole_map() {
+        // One poisoned item: siblings stop claiming, the map unwinds
+        // with the original payload instead of hanging or returning a
+        // result with a hole.
+        let r = std::panic::catch_unwind(|| {
+            parallel_map(1000, 4, |i| {
+                if i == 500 {
+                    panic!("injected worker panic");
+                }
+                i
+            })
+        });
+        let p = r.expect_err("map must propagate the worker panic");
+        let msg = p.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "injected worker panic", "original payload must survive");
     }
 
     #[test]

@@ -1,0 +1,148 @@
+//! Adversarial-input contract of the ingestion seams: randomized
+//! reservoirs through `TriMat::validate`, hostile MatrixMarket files
+//! through `mmio::read_matrix_market`, and invalid matrices through
+//! `Engine::compile` / `concretize::try_prepare`. The property under
+//! test is totality — every bad input comes back as a typed error
+//! (`ForelemError` / `MmError`), never a panic, never a silently
+//! corrupt data structure.
+
+use std::io::Cursor;
+
+use forelem::concretize::{self, Layout, Traversal};
+use forelem::engine::{Arch, Engine, Kernel};
+use forelem::matrix::mmio::{self, MmError};
+use forelem::matrix::{gen, Entry, TriMat};
+use forelem::util::rng::Rng;
+
+fn hermetic() -> Engine {
+    Engine::builder().arch(Arch::HostSmall).profile(false).archive(false).build()
+}
+
+/// Property sweep: random valid reservoirs validate `Ok`, and each
+/// single-fault mutation (row/col out of bounds, NaN, Inf, duplicate
+/// coordinate) flips exactly to an `invalid-matrix` error.
+#[test]
+fn validate_accepts_random_valid_and_rejects_every_mutation() {
+    let mut rng = Rng::new(0xAD5E_2026);
+    for round in 0..32 {
+        let nrows = 2 + rng.gen_range(30);
+        let ncols = 2 + rng.gen_range(30);
+        let nnz = 1 + rng.gen_range(nrows * ncols / 2);
+        let mut m = gen::uniform_random(nrows, ncols, nnz, 0x5EED + round);
+        m.validate().unwrap_or_else(|e| panic!("generator emitted an invalid reservoir: {e}"));
+
+        let victim = rng.gen_range(m.nnz());
+        let mut oob_row = m.clone();
+        oob_row.entries[0].row = m.nrows as u32;
+        let mut oob_col = m.clone();
+        oob_col.entries[0].col = u32::MAX;
+        let mut nan = m.clone();
+        nan.entries[victim].val = f64::NAN;
+        let mut inf = m.clone();
+        inf.entries[victim].val = f64::INFINITY;
+        let mut dup = m.clone();
+        dup.entries.push(m.entries[victim]);
+        let mutated = [
+            ("row out of bounds", oob_row),
+            ("col out of bounds", oob_col),
+            ("NaN value", nan),
+            ("Inf value", inf),
+            ("duplicate coordinate", dup),
+        ];
+        for (what, bad) in &mutated {
+            let err = match bad.validate() {
+                Err(e) => e,
+                Ok(()) => panic!("{what} must not validate (round {round})"),
+            };
+            assert_eq!(err.class(), "invalid-matrix", "{what}: wrong error class");
+        }
+    }
+}
+
+/// Hostile MatrixMarket inputs: structural garbage surfaces as
+/// `Parse`/`Unsupported`, while files that *parse* into an invalid
+/// reservoir (non-finite values, degenerate dimensions) surface as
+/// `MmError::Invalid` carrying the typed reservoir error.
+#[test]
+fn matrix_market_rejects_hostile_files_with_typed_errors() {
+    let parse = |txt: &str| mmio::read_matrix_market(Cursor::new(txt.to_string()));
+
+    // Structurally broken files.
+    assert!(matches!(parse(""), Err(MmError::Parse { .. })), "empty file");
+    assert!(matches!(parse("junk header\n1 1 0\n"), Err(MmError::Parse { .. })), "bad header");
+    let arr = "%%MatrixMarket matrix array real general\n2 2\n1.0\n";
+    assert!(matches!(parse(arr), Err(MmError::Unsupported(_))), "array format");
+    let cx = "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1.0 0.0\n";
+    assert!(matches!(parse(cx), Err(MmError::Unsupported(_))), "complex field");
+    let trunc = "%%MatrixMarket matrix coordinate real general\n3 3 2\n1 1 1.0\n";
+    assert!(matches!(parse(trunc), Err(MmError::Parse { .. })), "truncated entries");
+    let zero_idx = "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n";
+    assert!(matches!(parse(zero_idx), Err(MmError::Parse { .. })), "1-based index 0");
+    let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 3 1.0\n";
+    assert!(matches!(parse(oob), Err(MmError::Parse { .. })), "column past size line");
+
+    // Parse fine, validate badly: the reservoir error rides inside.
+    for (what, txt) in [
+        ("nan value", "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 nan\n"),
+        ("inf value", "%%MatrixMarket matrix coordinate real general\n2 2 1\n2 2 inf\n"),
+        ("zero-dimension size line", "%%MatrixMarket matrix coordinate real general\n0 0 0\n"),
+    ] {
+        match parse(txt) {
+            Err(MmError::Invalid(e)) => assert_eq!(e.class(), "invalid-matrix", "{what}"),
+            other => panic!("{what}: expected MmError::Invalid, got {other:?}"),
+        }
+    }
+
+    // Duplicates are data, not hostility: MatrixMarket semantics sum
+    // them, so the parsed reservoir still validates.
+    let dup = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.5\n1 1 2.5\n";
+    let m = parse(dup).expect("duplicates are summed, not rejected");
+    assert_eq!(m.nnz(), 1);
+    assert_eq!(m.to_dense()[0], 4.0);
+    m.validate().expect("summed reservoir is valid");
+}
+
+/// The engine's one hard error: an invalid reservoir is refused up
+/// front with `InvalidMatrix` on both compile entry points — it never
+/// reaches plan selection or storage assembly.
+#[test]
+fn engine_refuses_invalid_reservoirs_before_building_anything() {
+    let engine = hermetic();
+    let hostile = [
+        ("zero-dimension", TriMat::new(0, 8)),
+        (
+            "NaN entry",
+            TriMat::with_entries(4, 4, vec![Entry { row: 1, col: 2, val: f64::NAN }]),
+        ),
+        (
+            "out-of-bounds entry",
+            TriMat::with_entries(4, 4, vec![Entry { row: 9, col: 0, val: 1.0 }]),
+        ),
+    ];
+    for (what, m) in &hostile {
+        for kernel in [Kernel::Spmv, Kernel::Spmm, Kernel::Trsv] {
+            let err = engine.compile(kernel, m).expect_err(what);
+            assert_eq!(err.class(), "invalid-matrix", "{what} via compile({kernel:?})");
+        }
+        let err = engine.compile_pinned(Kernel::Spmv, m, "csr.row.serial").expect_err(what);
+        assert_eq!(err.class(), "invalid-matrix", "{what} via compile_pinned");
+    }
+}
+
+/// `concretize::try_prepare` is the fallible seam below the engine:
+/// hostile reservoirs come back as typed errors, valid ones produce a
+/// working storage whose SpMV matches the triplet oracle.
+#[test]
+fn try_prepare_is_total_over_hostile_and_valid_reservoirs() {
+    let plan = concretize::Plan::serial(Layout::Csr, Traversal::RowWise);
+    let bad = TriMat::with_entries(3, 3, vec![Entry { row: 0, col: 0, val: f64::NEG_INFINITY }]);
+    let err = concretize::try_prepare(plan, &bad).expect_err("non-finite reservoir");
+    assert_eq!(err.class(), "invalid-matrix");
+
+    let m = gen::uniform_random(24, 24, 96, 0xFACE);
+    let prepared = concretize::try_prepare(plan, &m).expect("valid reservoir");
+    let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.031).cos()).collect();
+    let mut y = vec![0.0; m.nrows];
+    prepared.spmv(&x, &mut y);
+    forelem::util::prop::assert_close(&y, &m.spmv_ref(&x), 1e-10).unwrap();
+}

@@ -1,0 +1,32 @@
+//! The chaos suite: runs the full fault-injection drill —
+//! every registered fault point armed with an io-error, a panic, and a
+//! delay — and asserts the hardened serving path holds its contract at
+//! each one: no deadlock, no abort, the compile lands on the expected
+//! degradation-ladder rung, and the served SpMV stays bit-identical to
+//! a direct prepare of the winning plan (the serial CSR reference on
+//! the bottom rung). Only compiled under `--features chaos`; the
+//! default build carries no injection points to drill.
+//!
+//! The drill mutates process-global state (`FORELEM_TUNING_DIR`, the
+//! compile cache, the quarantine), so it lives alone in this
+//! integration binary rather than inside the lib tests.
+#![cfg(feature = "chaos")]
+
+use forelem::chaos::{drill, POINTS};
+
+#[test]
+fn every_fault_point_degrades_instead_of_failing() {
+    let outcomes = drill::run_all();
+    // Three fault classes per registered point, none skipped.
+    assert_eq!(
+        outcomes.len(),
+        POINTS.len() * 3,
+        "drill must cover every point x {{io-error, panic, delay}}"
+    );
+    let failures: Vec<String> = outcomes
+        .iter()
+        .filter(|o| !o.ok)
+        .map(|o| format!("{} x {}: {}", o.point, o.fault, o.detail))
+        .collect();
+    assert!(failures.is_empty(), "chaos drill failures:\n  {}", failures.join("\n  "));
+}

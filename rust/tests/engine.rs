@@ -30,7 +30,7 @@ fn executable_bit_identical_to_legacy_prepare_path() {
         let built = e.build_scaled(1.0);
         for kernel in [Kernel::Spmv, Kernel::Spmm, Kernel::Trsv] {
             let m = if kernel == Kernel::Trsv { built.strictly_lower() } else { built.clone() };
-            let exe = engine.compile(kernel, &m);
+            let exe = engine.compile(kernel, &m).expect("suite matrices are valid");
             let legacy = concretize::prepare(exe.plan().exec, &m);
             match kernel {
                 Kernel::Spmv => {
@@ -71,8 +71,8 @@ fn executable_bit_identical_to_legacy_prepare_path() {
 fn repeated_compiles_return_ptr_eq_storage() {
     let m = SUITE[2].build_scaled(1.0);
     let engine = hermetic(Arch::HostSmall);
-    let first = engine.compile(Kernel::Spmv, &m);
-    let second = engine.compile(Kernel::Spmv, &m);
+    let first = engine.compile(Kernel::Spmv, &m).expect("suite matrices are valid");
+    let second = engine.compile(Kernel::Spmv, &m).expect("suite matrices are valid");
     assert!(
         Arc::ptr_eq(&first.storage(), &second.storage()),
         "same engine must serve the cached storage"
@@ -82,7 +82,7 @@ fn repeated_compiles_return_ptr_eq_storage() {
     // The cache is process-wide: a second engine with an identical
     // configuration hits the same entry.
     let other = hermetic(Arch::HostSmall);
-    let third = other.compile(Kernel::Spmv, &m);
+    let third = other.compile(Kernel::Spmv, &m).expect("suite matrices are valid");
     assert!(
         Arc::ptr_eq(&first.storage(), &third.storage()),
         "identically-configured engines must share the process-wide cache"
@@ -90,7 +90,7 @@ fn repeated_compiles_return_ptr_eq_storage() {
     // A different kernel on the same matrix is its own entry (the
     // winning plan may coincide; the compile must still be cached
     // separately and stay correct).
-    let spmm = engine.compile(Kernel::Spmm, &m);
+    let spmm = engine.compile(Kernel::Spmm, &m).expect("suite matrices are valid");
     let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.05).cos()).collect();
     let mut y = vec![0.0; m.nrows];
     first.spmv(&x, &mut y);
@@ -119,7 +119,7 @@ fn predict_only_engine_matches_sweep_predicted_best() {
     for (mi, entry) in quick_entries().into_iter().enumerate() {
         assert_eq!(entry.name, r.gens.matrices[mi], "suite subset drifted");
         let m = entry.build_scaled(1.0);
-        let exe = engine.compile(Kernel::Spmv, &m);
+        let exe = engine.compile(Kernel::Spmv, &m).expect("suite matrices are valid");
         let best = r.predicted_best(mi);
         let pick = r
             .plans
@@ -151,7 +151,7 @@ fn predict_only_engine_matches_sweep_predicted_best() {
 fn scheduled_engine_compiles_and_serves_correctly() {
     let m = SUITE[0].build_scaled(1.0);
     let engine = hermetic(Arch::HostLarge);
-    let exe = engine.compile(Kernel::Spmv, &m);
+    let exe = engine.compile(Kernel::Spmv, &m).expect("suite matrices are valid");
     let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.11).sin()).collect();
     let mut y = vec![0.0; m.nrows];
     exe.spmv(&x, &mut y);
