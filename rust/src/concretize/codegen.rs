@@ -5,14 +5,17 @@
 //! code artifact, used by `examples/derive_formats.rs` and the docs.
 
 use crate::baselines::Kernel;
-use crate::concretize::layout::{schedule_legal, Layout, Plan, Schedule, Traversal};
+use crate::concretize::layout::{lane_legal, schedule_legal, Layout, Plan, Schedule, Traversal};
 use crate::storage::{CooOrder, EllOrder};
 
 /// Emit the generated C-like code for (kernel, plan). A schedule that
 /// is illegal for the (layout, kernel) pair — e.g. tiling anything but
 /// CSR SpMV — is not code-generated; the serial nest is emitted and
 /// the header says so, rather than mislabeling an SpMV band nest as
-/// another kernel.
+/// another kernel. A wide plan (`lanes > 1`) carries a vectorize note
+/// in the header: the inner loop runs `lanes` elements per step via
+/// gathered loads, scalar-tailed — the text nest below is the scalar
+/// semantics the lanes must reproduce.
 pub fn emit(kernel: Kernel, plan: &Plan) -> String {
     let legal = schedule_legal(plan.layout, plan.traversal, plan.schedule, kernel);
     let sched_note = if legal {
@@ -20,12 +23,20 @@ pub fn emit(kernel: Kernel, plan: &Plan) -> String {
     } else {
         format!("{} illegal here; serial", plan.schedule.label())
     };
+    let vectorized = plan.lanes > 1
+        && lane_legal(plan.layout, plan.traversal, plan.schedule, plan.lanes, kernel);
+    let lane_note = if vectorized {
+        format!(", vectorize v{} (gathered, scalar tail)", plan.lanes)
+    } else {
+        String::new()
+    };
     let header = format!(
-        "/* generated: {} over {} ({:?} traversal, {} schedule) */\n",
+        "/* generated: {} over {} ({:?} traversal, {} schedule{}) */\n",
         kernel.label(),
         plan.layout.literature_name(),
         plan.traversal,
         sched_note,
+        lane_note,
     );
     let body = match kernel {
         Kernel::Spmv => emit_spmv(plan),
@@ -311,6 +322,22 @@ mod tests {
         let csc = Plan::serial(Layout::Csc, Traversal::ColScatter)
             .with_schedule(Schedule::Parallel { threads: 2 });
         assert!(emit(Kernel::Trsv, &csc).contains("level-scheduled"));
+    }
+
+    #[test]
+    fn wide_plans_carry_a_vectorize_note() {
+        let p = Plan::serial(Layout::Csr, Traversal::RowWise).with_lanes(8);
+        let txt = emit(Kernel::Spmv, &p);
+        assert!(txt.contains("vectorize v8"), "{txt}");
+        assert!(txt.contains("scalar tail"), "{txt}");
+        // The nest itself is the scalar semantics the lanes reproduce.
+        assert!(txt.contains("PA_ptr[i+1]"), "{txt}");
+        // Scalar plans are annotation-free, and an illegal lane choice
+        // (TrSv never vectorizes) is not advertised as vectorized.
+        let s = Plan::serial(Layout::Csr, Traversal::RowWise);
+        assert!(!emit(Kernel::Spmv, &s).contains("vectorize"));
+        let t = Plan::serial(Layout::Csr, Traversal::RowWise).with_lanes(8);
+        assert!(!emit(Kernel::Trsv, &t).contains("vectorize"));
     }
 
     #[test]

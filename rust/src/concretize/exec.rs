@@ -24,7 +24,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 use crate::baselines::Kernel;
-use crate::concretize::layout::{schedule_legal, Layout, Plan, Schedule, Traversal};
+use crate::concretize::layout::{lane_legal, schedule_legal, Layout, Plan, Schedule, Traversal};
 use crate::kernels::levels::LevelSets;
 use crate::kernels::par;
 use crate::matrix::TriMat;
@@ -88,6 +88,9 @@ pub struct Prepared {
 /// schedules exist only for row-partitionable layouts.
 pub fn supports(plan: &Plan, kernel: Kernel) -> bool {
     if !schedule_legal(plan.layout, plan.traversal, plan.schedule, kernel) {
+        return false;
+    }
+    if !lane_legal(plan.layout, plan.traversal, plan.schedule, plan.lanes, kernel) {
         return false;
     }
     match kernel {
@@ -240,10 +243,18 @@ impl Prepared {
         }
     }
 
-    /// Run the generated SpMV under the plan's schedule.
+    /// Run the generated SpMV under the plan's schedule (and vector
+    /// width: `lanes > 1` plans — `lane_legal` admits them only under
+    /// `Serial`/`Parallel` — route through the `kernels::simd`
+    /// micro-kernels via the trait's lane hooks).
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         let t = self.plan.traversal;
+        let lanes = self.plan.lanes;
         match self.plan.schedule {
+            Schedule::Serial if lanes > 1 => self.ops.spmv_serial_lanes(t, x, y, lanes),
+            Schedule::Parallel { threads } if lanes > 1 => {
+                self.ops.spmv_parallel_lanes(t, x, y, threads, lanes)
+            }
             Schedule::Serial => self.ops.spmv_serial(t, x, y),
             Schedule::Parallel { threads } => self.ops.spmv_parallel(t, x, y, threads),
             Schedule::Tiled { .. } => match self.bands() {
@@ -262,7 +273,12 @@ impl Prepared {
     /// gathered B-row granule stays L1-resident.
     pub fn spmm(&self, b: &[f64], k: usize, c: &mut [f64]) {
         let t = self.plan.traversal;
+        let lanes = self.plan.lanes;
         match self.plan.schedule {
+            Schedule::Serial if lanes > 1 => self.ops.spmm_serial_lanes(t, b, k, c, lanes),
+            Schedule::Parallel { threads } if lanes > 1 => {
+                self.ops.spmm_parallel_lanes(t, b, k, c, threads, lanes)
+            }
             Schedule::Serial => self.ops.spmm_serial(t, b, k, c),
             Schedule::Parallel { threads } => self.ops.spmm_parallel(t, b, k, c, threads),
             Schedule::Tiled { x_block } => spmm_tiled(&*self.ops, t, b, k, c, x_block),
@@ -606,6 +622,57 @@ mod tests {
         }
         // CSR and BCSR × {Tiled, ParallelTiled}.
         assert_eq!(panel_ran, 4, "B-panel SpMM plans missing from the space");
+    }
+
+    #[test]
+    fn every_legal_lane_plan_executes_spmv_and_spmm() {
+        let m = gen::uniform_random(50, 50, 500, 71);
+        let x: Vec<f64> = (0..50).map(|i| (i as f64 * 0.23).sin() + 0.4).collect();
+        let want = m.spmv_ref(&x);
+        let k = 9; // odd, so the widened axpy exercises its remainder
+        let b: Vec<f64> = (0..50 * k).map(|i| i as f64 * 0.03 - 0.8).collect();
+        let want_c = m.spmm_ref(&b, k);
+        let schedules = [Schedule::Serial, Schedule::Parallel { threads: 3 }];
+        let mut ran = 0;
+        for base in all_spmv_plans() {
+            for sch in schedules {
+                for lanes in [4usize, 8] {
+                    let plan = base.with_schedule(sch).with_lanes(lanes);
+                    if !supports(&plan, Kernel::Spmv) {
+                        continue;
+                    }
+                    ran += 1;
+                    let p = prepare(plan, &m);
+                    let mut y = vec![0.0; 50];
+                    p.spmv(&x, &mut y);
+                    assert_close(&y, &want, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+                    if supports(&plan, Kernel::Spmm) {
+                        let mut c = vec![0.0; 50 * k];
+                        p.spmm(&b, k, &mut c);
+                        assert_close(&c, &want_c, 1e-10)
+                            .unwrap_or_else(|e| panic!("{plan:?} spmm: {e}"));
+                    }
+                }
+            }
+        }
+        // CSR + ELL row-wise + SELL-σ (s = 8: both widths divide it),
+        // each × {Serial, Parallel} × {4, 8}.
+        assert_eq!(ran, 12, "lane plan coverage drifted");
+    }
+
+    #[test]
+    fn lane_plans_gate_through_supports() {
+        let csr = Plan::serial(Layout::Csr, Traversal::RowWise);
+        assert!(supports(&csr.with_lanes(4), Kernel::Spmv));
+        assert!(supports(&csr.with_lanes(8), Kernel::Spmm));
+        assert!(!supports(&csr.with_lanes(4), Kernel::Trsv));
+        assert!(!supports(&csr.with_lanes(3), Kernel::Spmv));
+        assert!(!supports(
+            &csr.with_schedule(Schedule::Tiled { x_block: 64 }).with_lanes(4),
+            Kernel::Spmv
+        ));
+        let dia = Plan::serial(Layout::Dia, Traversal::DiagMajor);
+        assert!(!supports(&dia.with_lanes(4), Kernel::Spmv));
     }
 
     #[test]

@@ -187,24 +187,35 @@ impl Schedule {
     }
 }
 
-/// A concretization plan: what to allocate, how to walk it, and how the
-/// walk is scheduled onto the machine.
+/// A concretization plan: what to allocate, how to walk it, how the
+/// walk is scheduled onto the machine, and how wide each inner-loop
+/// step is (the vector-lane axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Plan {
     pub layout: Layout,
     pub traversal: Traversal,
     pub schedule: Schedule,
+    /// Vector lanes of the inner loop: 1 = scalar (the default build),
+    /// 4/8 = the monomorphized wide micro-kernels (`kernels::simd`).
+    /// A fourth plan axis, priced by the cost model's `gather_lanes`
+    /// feature and gated per format by [`lane_legal`].
+    pub lanes: usize,
 }
 
 impl Plan {
     /// A serial plan — the paper's original Layout × Traversal space.
     pub fn serial(layout: Layout, traversal: Traversal) -> Plan {
-        Plan { layout, traversal, schedule: Schedule::Serial }
+        Plan { layout, traversal, schedule: Schedule::Serial, lanes: 1 }
     }
 
     /// The same plan under a different schedule.
     pub fn with_schedule(self, schedule: Schedule) -> Plan {
         Plan { schedule, ..self }
+    }
+
+    /// The same plan at a different vector width.
+    pub fn with_lanes(self, lanes: usize) -> Plan {
+        Plan { lanes, ..self }
     }
 }
 
@@ -284,6 +295,53 @@ pub fn schedule_legal(
         Schedule::Parallel { threads } => threads > 0 && row_partitionable,
         Schedule::Tiled { x_block } => x_block > 0 && tileable,
         Schedule::ParallelTiled { threads, x_block } => threads > 0 && x_block > 0 && tileable,
+    }
+}
+
+/// Is a vector width of `lanes` legal for this plan shape? The lane
+/// axis composes only with the plans whose inner loop the wide
+/// micro-kernels (`kernels::simd`) actually cover:
+///
+/// - `lanes == 1` (scalar) is always legal — every plan has a scalar
+///   body; 4 and 8 are the monomorphized widths (half / full AVX2
+///   register of f64); anything else is rejected.
+/// - SpMV vectorizes the gather-heavy inner loops: CSR row-wise
+///   (within-row lane accumulators), ELL row-wise, and SELL-σ's
+///   slice-plane walk *across* rows — which needs the slice height to
+///   tile evenly (`s % lanes == 0`) so a lane group never straddles a
+///   slice boundary.
+/// - SpMM widens only the CSR register-blocked micro-kernel
+///   (`axpy_k8`); TrSv never vectorizes — its loop-carried dependence
+///   serializes the row sums the lanes would split.
+/// - Only the `Serial` and `Parallel` schedules compose: the band/panel
+///   sweeps (`Tiled`/`ParallelTiled`) restructure the same inner loop
+///   the lane axis would, and crossing the two would square the plan
+///   count for no measured payoff.
+pub fn lane_legal(
+    layout: Layout,
+    traversal: Traversal,
+    schedule: Schedule,
+    lanes: usize,
+    kernel: Kernel,
+) -> bool {
+    if lanes == 1 {
+        return true;
+    }
+    if lanes != 4 && lanes != 8 {
+        return false;
+    }
+    if !matches!(schedule, Schedule::Serial | Schedule::Parallel { .. }) {
+        return false;
+    }
+    match kernel {
+        Kernel::Spmv => match (layout, traversal) {
+            (Layout::Csr, Traversal::RowWise) => true,
+            (Layout::Ell(_), Traversal::RowWise) => true,
+            (Layout::SellSigma { s, .. }, Traversal::SlicePlane) => s % lanes == 0,
+            _ => false,
+        },
+        Kernel::Spmm => matches!((layout, traversal), (Layout::Csr, Traversal::RowWise)),
+        Kernel::Trsv => false,
     }
 }
 
@@ -654,5 +712,56 @@ mod tests {
         assert!(schedule_legal(Layout::Csr, RowWise, pt, Kernel::Spmv));
         assert!(schedule_legal(Layout::Csr, RowWise, pt, Kernel::Spmm));
         assert!(!schedule_legal(Layout::Sell { s: 8 }, Traversal::SlicePlane, pt, Kernel::Spmm));
+    }
+
+    #[test]
+    fn lane_legality_gates_by_format_and_schedule() {
+        use Traversal::RowWise;
+        let ser = Schedule::Serial;
+        let par = Schedule::Parallel { threads: 4 };
+        // Scalar is legal everywhere — every plan has a scalar body.
+        assert!(lane_legal(Layout::Dia, Traversal::DiagMajor, ser, 1, Kernel::Spmv));
+        assert!(lane_legal(Layout::Csr, RowWise, ser, 1, Kernel::Trsv));
+        // Only the monomorphized widths exist.
+        for bad in [0, 2, 3, 5, 16] {
+            assert!(!lane_legal(Layout::Csr, RowWise, ser, bad, Kernel::Spmv), "lanes={bad}");
+        }
+        // SpMV: CSR / ELL row-wise and slice-aligned SELL-σ vectorize.
+        assert!(lane_legal(Layout::Csr, RowWise, ser, 4, Kernel::Spmv));
+        assert!(lane_legal(Layout::Csr, RowWise, par, 8, Kernel::Spmv));
+        assert!(lane_legal(Layout::Ell(EllOrder::RowMajor), RowWise, ser, 8, Kernel::Spmv));
+        assert!(lane_legal(Layout::Ell(EllOrder::ColMajor), RowWise, par, 4, Kernel::Spmv));
+        assert!(lane_legal(
+            Layout::SellSigma { s: 32, sigma: 256 },
+            Traversal::SlicePlane,
+            ser,
+            8,
+            Kernel::Spmv
+        ));
+        // …but a slice height the lane group doesn't tile stays scalar.
+        assert!(!lane_legal(
+            Layout::SellSigma { s: 6, sigma: 48 },
+            Traversal::SlicePlane,
+            ser,
+            4,
+            Kernel::Spmv
+        ));
+        // Scatter/padded/other shapes don't vectorize.
+        assert!(!lane_legal(Layout::Csc, Traversal::ColScatter, ser, 4, Kernel::Spmv));
+        assert!(!lane_legal(Layout::Ell(EllOrder::RowMajor), Traversal::RowWisePadded, ser, 4, Kernel::Spmv));
+        assert!(!lane_legal(Layout::Sell { s: 32 }, Traversal::SlicePlane, ser, 4, Kernel::Spmv));
+        // SpMM widens only the CSR micro-kernel; TrSv never.
+        assert!(lane_legal(Layout::Csr, RowWise, ser, 8, Kernel::Spmm));
+        assert!(!lane_legal(Layout::Bcsr { br: 2, bc: 2 }, Traversal::Blocked, ser, 8, Kernel::Spmm));
+        assert!(!lane_legal(Layout::Csr, RowWise, par, 4, Kernel::Trsv));
+        // The band/panel sweeps don't compose with the lane axis.
+        assert!(!lane_legal(Layout::Csr, RowWise, Schedule::Tiled { x_block: 4096 }, 4, Kernel::Spmv));
+        assert!(!lane_legal(
+            Layout::Csr,
+            RowWise,
+            Schedule::ParallelTiled { threads: 4, x_block: 4096 },
+            8,
+            Kernel::Spmm
+        ));
     }
 }

@@ -621,13 +621,16 @@ fn json_num_array(items: &[f64]) -> String {
 /// Render the machine-trackable perf record (`BENCH_spmv.json`) from a
 /// schedule-extended sweep: median seconds per generated plan × matrix,
 /// a per-matrix serial-best vs best-overall summary, the predicted-vs-
-/// measured top-1 agreement of the cost model, and the coverage curves
-/// with and without the schedule axis — so both the repo's perf
-/// trajectory *and* its planner accuracy are comparable across PRs.
+/// measured top-1 agreement of the cost model, the coverage curves
+/// with and without the schedule axis, and a `simd` section pairing
+/// each matrix's best wide plan with its scalar sibling — so the
+/// repo's perf trajectory, its planner accuracy, *and* the value of
+/// the vector-width axis are comparable across PRs.
 ///
-/// The sweep's pool already contains every serial plan (schedule labels
-/// carry an `@` suffix only when non-serial), so the serial table is
-/// the `@`-free subset — no second sweep is run.
+/// The sweep's pool already contains every scalar serial plan (names
+/// carry an `@` marker only for non-serial schedules and wide lanes),
+/// so the serial table is the `@`-free subset — no second sweep is
+/// run.
 pub fn bench_json(scheduled: &SweepResult) -> String {
     let mats = &scheduled.gens.matrices;
     let serial_idx: Vec<usize> = (0..scheduled.gens.routines.len())
@@ -720,6 +723,61 @@ pub fn bench_json(scheduled: &SweepResult) -> String {
         "    \"with_schedules\": {}\n",
         json_num_array(&all_curve.iter().map(|&(_, c)| c).collect::<Vec<_>>())
     ));
+    out.push_str("  },\n");
+
+    // The vector-width axis audit: per matrix, the best measured wide
+    // plan against its scalar sibling (same stable id minus the
+    // `.v{n}` component) and the lane width the planner's first pick
+    // carries — so scalar-vs-vectorized medians stay comparable across
+    // PRs. Both arrays are empty when the pool has no wide plans
+    // (serial-only sweeps keep a well-formed record).
+    out.push_str("  \"simd\": {\n");
+    out.push_str(&format!(
+        "    \"runtime_wide_kernels\": {},\n",
+        crate::kernels::simd::avx2_active()
+    ));
+    let pairs: Vec<String> = mats
+        .iter()
+        .enumerate()
+        .filter_map(|(mi, name)| {
+            let wi = (0..scheduled.plans.len())
+                .filter(|&pi| scheduled.plans[pi].exec.lanes > 1 && scheduled.measured[pi][mi])
+                .min_by(|&a, &b| {
+                    scheduled.gens.times[a][mi]
+                        .partial_cmp(&scheduled.gens.times[b][mi])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })?;
+            let wide = &scheduled.plans[wi];
+            let sid = wide.id.strip_suffix(&format!(".v{}", wide.exec.lanes))?;
+            let si = scheduled.plans.iter().position(|p| p.id == sid)?;
+            let (ws, ss) = (scheduled.gens.times[wi][mi], scheduled.gens.times[si][mi]);
+            Some(format!(
+                "      {{\"matrix\": \"{}\", \"scalar\": \"{}\", \"scalar_secs\": {:e}, \
+                 \"wide\": \"{}\", \"wide_secs\": {:e}, \"speedup\": {:.3}}}",
+                json_escape(name),
+                json_escape(sid),
+                ss,
+                json_escape(&wide.id),
+                ws,
+                ss / ws
+            ))
+        })
+        .collect();
+    out.push_str(&format!("    \"scalar_vs_wide\": [\n{}\n    ],\n", pairs.join(",\n")));
+    let lane_choice: Vec<String> = mats
+        .iter()
+        .enumerate()
+        .map(|(mi, name)| {
+            let pb = &scheduled.plans[scheduled.predicted_best(mi)];
+            format!(
+                "      {{\"matrix\": \"{}\", \"plan\": \"{}\", \"lanes\": {}}}",
+                json_escape(name),
+                json_escape(&pb.id),
+                pb.exec.lanes
+            )
+        })
+        .collect();
+    out.push_str(&format!("    \"planner_lane_choice\": [\n{}\n    ]\n", lane_choice.join(",\n")));
     out.push_str("  },\n");
 
     let serial_best = scheduled.gens.best_per_matrix(Some(&serial_idx));
@@ -829,6 +887,10 @@ mod tests {
         );
         assert!(large.gens.routines.iter().any(|r| r.contains("@par(")));
         assert!(large.gens.routines.iter().any(|r| r.contains("@tile(")));
+        // …and the vector-width axis (wide plans are oracle-validated
+        // against the reference inside run() like every other cell).
+        assert!(large.gens.routines.iter().any(|r| r.contains("@v8")));
+        assert!(small.gens.routines.iter().all(|r| !r.contains("@v")));
     }
 
     #[test]
@@ -960,6 +1022,12 @@ mod tests {
         assert!(js.contains("\"coverage\""));
         assert!(js.contains("\"serial_only\""));
         assert!(js.contains("\"with_schedules\""));
+        // the vector-width audit
+        assert!(js.contains("\"simd\""));
+        assert!(js.contains("\"runtime_wide_kernels\""));
+        assert!(js.contains("\"scalar_vs_wide\""));
+        assert!(js.contains("\"planner_lane_choice\""));
+        assert!(js.contains("\"lanes\""));
         // crude structural balance check
         let opens = js.matches('{').count();
         let closes = js.matches('}').count();

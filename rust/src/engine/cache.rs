@@ -5,8 +5,9 @@
 //! digest folds in everything else that can change the winning plan or
 //! its storage — the ranked weight vector (so loading a new tuning
 //! profile cold-starts the cache instead of serving stale plans), the
-//! schedule axis, the SpMM dense width, the autotune depth, and a
-//! pinned plan id if any. Entries hold the `Arc`-shared `Compiled`
+//! vector register width (a wider unit can flip the winning lane
+//! count), the schedule axis, the SpMM dense width, the autotune
+//! depth, and a pinned plan id if any. Entries hold the `Arc`-shared `Compiled`
 //! (plan + storage), so a hit is a pointer clone: repeated compiles of
 //! the same matrix are free. This layers *above*
 //! `concretize::prepare_many`'s plan-keyed storage cache, which
@@ -47,6 +48,7 @@ pub(crate) fn config_digest(
     let mut h = crate::util::fnv::Fnv1a::new();
     h.eat_u64(params.l2_bytes.to_bits());
     h.eat_u64(params.threads as u64);
+    h.eat_u64(params.vector_bytes.to_bits());
     for w in &params.weights {
         h.eat_u64(w.to_bits());
     }
@@ -110,6 +112,11 @@ mod tests {
         let mut big = seed;
         big.l2_bytes *= 2.0;
         assert_ne!(base, config_digest(&big, true, 100, 0, None), "l2");
+        // So does the register width: widening the vector unit can
+        // flip which lane count wins, so it must cold-start the cache.
+        let mut wide = seed;
+        wide.vector_bytes = 64.0;
+        assert_ne!(base, config_digest(&wide, true, 100, 0, None), "vector width");
     }
 
     #[test]

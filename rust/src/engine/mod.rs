@@ -251,7 +251,10 @@ pub(crate) fn planned_pool(
 ) -> PlannedPool {
     let mut space = arch.plan_space();
     if !use_schedules {
+        // "Serial-only" means the paper's scalar serial tree: dropping
+        // the schedule axis drops the vector-width axis with it.
         space.schedules = vec![Schedule::Serial];
+        space.lanes = vec![1];
     }
     space.dense_k = dense_k;
     let mut profile_loaded = false;
@@ -719,6 +722,7 @@ impl Engine {
                 p.exec.layout == Layout::Csr
                     && p.exec.traversal == Traversal::RowWise
                     && p.exec.schedule == Schedule::Serial
+                    && p.exec.lanes == 1
             })
             .unwrap_or(0);
         let plan = pool.plans[pi].clone();

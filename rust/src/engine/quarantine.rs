@@ -59,7 +59,14 @@ mod tests {
         assert!(is_denied(1, "csr.row.serial"));
         assert!(!is_denied(2, "csr.row.serial"), "other matrices unaffected");
         assert!(!is_denied(1, "csc.col.serial"), "other plans unaffected");
-        assert_eq!(len(), 1);
+        // The vector-width component is part of the stable id, so a
+        // faulting wide variant never shadows its scalar sibling (or
+        // vice versa).
+        assert!(!is_denied(1, "csr.row.serial.v8"), "wide variant is its own key");
+        deny(1, "csr.row.serial.v8", "gather panicked");
+        assert!(is_denied(1, "csr.row.serial.v8"));
+        assert!(is_denied(1, "csr.row.serial"), "scalar entry untouched");
+        assert_eq!(len(), 2);
         clear();
         assert_eq!(len(), 0);
     }

@@ -5,6 +5,7 @@
 
 pub mod levels;
 pub mod par;
+pub mod simd;
 pub mod spmm;
 pub mod spmv;
 pub mod trsv;

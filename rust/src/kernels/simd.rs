@@ -1,0 +1,632 @@
+//! Vectorized micro-kernels — the execution side of the plan's fourth
+//! axis (`concretize::Plan::lanes`).
+//!
+//! Every kernel here exists at const-generic vector widths
+//! (`const LANES: usize`, instantiated at 4 and 8) so the hot loop is
+//! monomorphized and branch-free per width; the planner picks the width
+//! structurally (`lane_legal` gates it by format, `cost::features`
+//! prices it through the `gather_lanes` feature) and `Prepared` routes
+//! lanes > 1 plans through [`SparseOps::spmv_serial_lanes`]-family
+//! hooks into these dispatchers.
+//!
+//! Two implementations back each width:
+//!
+//! * **Scalar lane-structured fallback** (always compiled): the loop is
+//!   restructured into `LANES` independent accumulators (CSR/ELL) or
+//!   `LANES`-row plane groups (SELL-σ) with software prefetch of the
+//!   upcoming column-index/value cache lines — the shape the
+//!   auto-vectorizer wants, correct on every target. This is what the
+//!   default build runs, so the container's no-toolchain constraint
+//!   holds: `--no-default-features`-equivalent builds stay pure Rust.
+//! * **AVX2 gather + FMA fast path** (`--features simd`, x86-64 only):
+//!   `core::arch` intrinsics behind runtime
+//!   `is_x86_feature_detected!("avx2")`/`"fma"` dispatch. Machines
+//!   without AVX2 silently use the scalar lane path.
+//!
+//! Accuracy contract (asserted by `tests/simd.rs`): the SELL-σ lane
+//! kernels accumulate each output row in the exact serial plane order
+//! (the vector width runs *across* rows), so they are bit-identical to
+//! `sell_sigma::spmv` on both paths — the AVX2 path vectorizes only the
+//! exactly-rounded multiplies. CSR/ELL lane kernels reassociate the
+//! per-row reduction into `LANES` partial sums (and the AVX2 path fuses
+//! multiply-add), so they agree with the serial kernels to a few ULP on
+//! well-conditioned data and bit-exactly on integer-valued data.
+//!
+//! [`SparseOps::spmv_serial_lanes`]: crate::storage::SparseOps::spmv_serial_lanes
+
+use crate::kernels::{par, spmm};
+use crate::storage::{sell_sigma, Csr, Ell, SellSigma};
+
+/// Whether the AVX2 + FMA fast path is compiled in *and* available on
+/// the running machine. Always `false` without `--features simd` or
+/// off x86-64; the answer is detected once and cached.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn avx2_active() -> bool {
+    use std::sync::OnceLock;
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    })
+}
+
+/// Scalar-build stub: the fast path is not compiled in.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn avx2_active() -> bool {
+    false
+}
+
+/// Hint the prefetcher at `data[idx..]` (no-op off x86-64 or past the
+/// end). `_mm_prefetch` is SSE-baseline on x86-64, so this needs no
+/// feature gate — the scalar lane kernels use it too.
+#[inline(always)]
+fn prefetch_read<T>(data: &[T], idx: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if idx < data.len() {
+        // Safety: the pointer stays inside `data` (bounds-checked above)
+        // and prefetch never faults on a mapped address.
+        unsafe {
+            core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(
+                data.as_ptr().add(idx) as *const i8,
+            );
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (data, idx);
+}
+
+// ------------------------------------------------------------- CSR --
+
+/// CSR SpMV at vector width `lanes` (full matrix).
+pub fn csr_spmv(a: &Csr, x: &[f64], y: &mut [f64], lanes: usize) {
+    assert_eq!(x.len(), a.ncols);
+    assert_eq!(y.len(), a.nrows);
+    csr_spmv_rows(a, x, y, 0, lanes);
+}
+
+/// CSR SpMV at vector width `lanes` over the rows `row0..row0+y.len()`
+/// (the `spmv_range` chunk convention).
+pub fn csr_spmv_rows(a: &Csr, x: &[f64], y: &mut [f64], row0: usize, lanes: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx2_active() {
+        match lanes {
+            4 => return unsafe { avx2::csr_rows::<4>(a, x, y, row0) },
+            8 => return unsafe { avx2::csr_rows::<8>(a, x, y, row0) },
+            _ => {}
+        }
+    }
+    match lanes {
+        4 => csr_rows_lanes::<4>(a, x, y, row0),
+        8 => csr_rows_lanes::<8>(a, x, y, row0),
+        // `lane_legal` admits only 4/8 here; anything else degrades to
+        // the scalar range kernel rather than panicking mid-sweep.
+        _ => par::csr_rows(a, x, y, row0),
+    }
+}
+
+fn csr_rows_lanes<const LANES: usize>(a: &Csr, x: &[f64], y: &mut [f64], row0: usize) {
+    for (r, yi) in y.iter_mut().enumerate() {
+        let i = row0 + r;
+        let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+        *yi = row_dot_lanes::<LANES>(&a.cols[s..e], &a.vals[s..e], x);
+    }
+}
+
+/// One sparse dot product with `LANES` independent accumulators; the
+/// remainder runs scalar into the reduced sum.
+#[inline(always)]
+fn row_dot_lanes<const LANES: usize>(cols: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    let len = cols.len();
+    let mut acc = [0.0f64; LANES];
+    let mut p = 0usize;
+    while p + LANES <= len {
+        prefetch_read(cols, p + 16 * LANES);
+        prefetch_read(vals, p + 8 * LANES);
+        let it = cols[p..p + LANES].iter().zip(&vals[p..p + LANES]);
+        for (al, (&c, &v)) in acc.iter_mut().zip(it) {
+            *al += v * x[c as usize];
+        }
+        p += LANES;
+    }
+    let mut sum: f64 = acc.iter().sum();
+    while p < len {
+        sum += vals[p] * x[cols[p] as usize];
+        p += 1;
+    }
+    sum
+}
+
+// ------------------------------------------------------------- ELL --
+
+/// ELL row-wise SpMV at vector width `lanes` (full matrix).
+pub fn ell_spmv(a: &Ell, x: &[f64], y: &mut [f64], lanes: usize) {
+    assert_eq!(x.len(), a.ncols);
+    assert_eq!(y.len(), a.nrows);
+    ell_spmv_rows(a, x, y, 0, lanes);
+}
+
+/// ELL row-wise SpMV at vector width `lanes` over the rows
+/// `row0..row0+y.len()`.
+pub fn ell_spmv_rows(a: &Ell, x: &[f64], y: &mut [f64], row0: usize, lanes: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx2_active() && matches!(a.order, crate::storage::EllOrder::RowMajor) {
+        // Row-major slots are contiguous, so the CSR gather kernel
+        // applies; column-major (ITPACK) keeps the scalar lane shape.
+        match lanes {
+            4 => return unsafe { avx2::ell_rows::<4>(a, x, y, row0) },
+            8 => return unsafe { avx2::ell_rows::<8>(a, x, y, row0) },
+            _ => {}
+        }
+    }
+    match lanes {
+        4 => ell_rows_lanes::<4>(a, x, y, row0),
+        8 => ell_rows_lanes::<8>(a, x, y, row0),
+        _ => par::ell_rows(a, x, y, row0),
+    }
+}
+
+fn ell_rows_lanes<const LANES: usize>(a: &Ell, x: &[f64], y: &mut [f64], row0: usize) {
+    for (r, yi) in y.iter_mut().enumerate() {
+        let i = row0 + r;
+        let len = a.row_len[i] as usize;
+        let mut acc = [0.0f64; LANES];
+        let mut p = 0usize;
+        while p + LANES <= len {
+            for (l, al) in acc.iter_mut().enumerate() {
+                let ix = a.index(i, p + l);
+                *al += a.vals[ix] * x[a.cols[ix] as usize];
+            }
+            p += LANES;
+        }
+        let mut sum: f64 = acc.iter().sum();
+        while p < len {
+            let ix = a.index(i, p);
+            sum += a.vals[ix] * x[a.cols[ix] as usize];
+            p += 1;
+        }
+        *yi = sum;
+    }
+}
+
+// ---------------------------------------------------------- SELL-σ --
+
+/// SELL-σ slice-plane SpMV at vector width `lanes` (full matrix). The
+/// width runs *across* rows inside a plane, so each output row still
+/// accumulates in the serial plane order: bit-identical to
+/// [`sell_sigma::spmv`] on every path.
+pub fn sell_sigma_spmv(a: &SellSigma, x: &[f64], y: &mut [f64], lanes: usize) {
+    assert_eq!(x.len(), a.ncols);
+    assert_eq!(y.len(), a.nrows);
+    match lanes {
+        4 => {
+            for sb in 0..a.nslices {
+                sell_slice_dispatch::<4>(a, x, y, sb, 0);
+            }
+        }
+        8 => {
+            for sb in 0..a.nslices {
+                sell_slice_dispatch::<8>(a, x, y, sb, 0);
+            }
+        }
+        _ => sell_sigma::spmv(a, x, y),
+    }
+}
+
+/// SELL-σ SpMV at vector width `lanes` over the σ windows `[w0, w1)`
+/// (the `spmv_range` chunk convention: `y` starts at row `row0`).
+pub fn sell_sigma_spmv_range(
+    a: &SellSigma,
+    x: &[f64],
+    y: &mut [f64],
+    w0: usize,
+    w1: usize,
+    row0: usize,
+    lanes: usize,
+) {
+    if lanes != 4 && lanes != 8 {
+        return sell_sigma::spmv_range(a, x, y, w0, w1, row0);
+    }
+    let spw = a.slices_per_window().expect("window not slice-aligned");
+    let sb1 = (w1 * spw).min(a.nslices);
+    for sb in w0 * spw..sb1 {
+        if lanes == 4 {
+            sell_slice_dispatch::<4>(a, x, y, sb, row0);
+        } else {
+            sell_slice_dispatch::<8>(a, x, y, sb, row0);
+        }
+    }
+}
+
+#[inline(always)]
+fn sell_slice_dispatch<const LANES: usize>(
+    a: &SellSigma,
+    x: &[f64],
+    y: &mut [f64],
+    sb: usize,
+    row0: usize,
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx2_active() {
+        return unsafe { avx2::sell_slice::<LANES>(a, x, y, sb, row0) };
+    }
+    sell_slice_lanes::<LANES>(a, x, y, sb, row0);
+}
+
+/// One SELL-σ slice with the plane loop grouped into `LANES`-row
+/// blocks. Grouping across rows never reorders a single row's
+/// additions, so this is exactly the serial accumulation.
+fn sell_slice_lanes<const LANES: usize>(
+    a: &SellSigma,
+    x: &[f64],
+    y: &mut [f64],
+    sb: usize,
+    row0: usize,
+) {
+    let lo = sb * a.s;
+    let hi = ((sb + 1) * a.s).min(a.nrows);
+    let rows = hi - lo;
+    let base = a.slice_ptr[sb] as usize;
+    let w = a.widths[sb] as usize;
+    for q in lo..hi {
+        y[a.perm[q] as usize - row0] = 0.0;
+    }
+    for p in 0..w {
+        let plane = base + p * rows;
+        let mut ri = 0usize;
+        while ri + LANES <= rows {
+            prefetch_read(&a.vals, plane + ri + 4 * LANES);
+            prefetch_read(&a.cols, plane + ri + 4 * LANES);
+            for l in 0..LANES {
+                let r = ri + l;
+                if (p as u32) < a.row_len[lo + r] {
+                    let ix = plane + r;
+                    y[a.perm[lo + r] as usize - row0] += a.vals[ix] * x[a.cols[ix] as usize];
+                }
+            }
+            ri += LANES;
+        }
+        while ri < rows {
+            if (p as u32) < a.row_len[lo + ri] {
+                let ix = plane + ri;
+                y[a.perm[lo + ri] as usize - row0] += a.vals[ix] * x[a.cols[ix] as usize];
+            }
+            ri += 1;
+        }
+    }
+}
+
+// ------------------------------------------------------------ SpMM --
+
+/// CSR SpMM with the register-blocked micro-kernel widened to `lanes`
+/// (full matrix). The axpy is element-wise, so every width accumulates
+/// each `c[i][j]` in the identical nonzero order.
+pub fn csr_spmm(a: &Csr, b: &[f64], k: usize, c: &mut [f64], lanes: usize) {
+    csr_spmm_rows(a, b, k, c, 0, lanes);
+}
+
+/// CSR SpMM at vector width `lanes` over the rows
+/// `row0..row0 + c.len()/k` (the `spmm_range` chunk convention).
+pub fn csr_spmm_rows(a: &Csr, b: &[f64], k: usize, c: &mut [f64], row0: usize, lanes: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx2_active() {
+        match lanes {
+            4 => return unsafe { avx2::csr_rows_mm::<4>(a, b, k, c, row0) },
+            8 => return unsafe { avx2::csr_rows_mm::<8>(a, b, k, c, row0) },
+            _ => {}
+        }
+    }
+    match lanes {
+        8 => csr_rows_mm_lanes::<8>(a, b, k, c, row0),
+        4 => csr_rows_mm_lanes::<4>(a, b, k, c, row0),
+        _ => par::csr_rows_mm(a, b, k, c, row0),
+    }
+}
+
+fn csr_rows_mm_lanes<const LANES: usize>(
+    a: &Csr,
+    b: &[f64],
+    k: usize,
+    c: &mut [f64],
+    row0: usize,
+) {
+    for (r, crow) in c.chunks_mut(k).enumerate() {
+        let i = row0 + r;
+        crow.fill(0.0);
+        let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+        for (&col, &v) in a.cols[s..e].iter().zip(&a.vals[s..e]) {
+            let brow = &b[col as usize * k..col as usize * k + k];
+            if LANES >= 8 {
+                spmm::axpy_k8(crow, brow, v);
+            } else {
+                spmm::axpy_k4(crow, brow, v);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------- AVX2 + FMA fast path --
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    //! `core::arch` implementations, entered only after
+    //! [`avx2_active`](super::avx2_active) returns true. Callers hold
+    //! the usual kernel preconditions (in-bounds column indices,
+    //! matching slice lengths), which is all the gather/load intrinsics
+    //! need beyond the detected CPU features.
+
+    use core::arch::x86_64::*;
+
+    use crate::storage::{Csr, Ell, SellSigma};
+
+    /// Horizontal sum of a 4-lane double register.
+    #[inline(always)]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let s = _mm_add_pd(lo, hi);
+        _mm_cvtsd_f64(_mm_add_sd(s, _mm_unpackhi_pd(s, s)))
+    }
+
+    /// Sparse dot product: 32-bit index gather + FMA into `LANES`
+    /// accumulator lanes, scalar remainder.
+    #[inline(always)]
+    unsafe fn row_dot<const LANES: usize>(cols: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+        let len = cols.len();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut p = 0usize;
+        while p + LANES <= len {
+            super::prefetch_read(cols, p + 16 * LANES);
+            super::prefetch_read(vals, p + 8 * LANES);
+            let idx = _mm_loadu_si128(cols.as_ptr().add(p) as *const __m128i);
+            let xs = _mm256_i32gather_pd::<8>(x.as_ptr(), idx);
+            let vs = _mm256_loadu_pd(vals.as_ptr().add(p));
+            acc0 = _mm256_fmadd_pd(vs, xs, acc0);
+            if LANES == 8 {
+                let idx1 = _mm_loadu_si128(cols.as_ptr().add(p + 4) as *const __m128i);
+                let xs1 = _mm256_i32gather_pd::<8>(x.as_ptr(), idx1);
+                let vs1 = _mm256_loadu_pd(vals.as_ptr().add(p + 4));
+                acc1 = _mm256_fmadd_pd(vs1, xs1, acc1);
+            }
+            p += LANES;
+        }
+        let folded = if LANES == 8 { _mm256_add_pd(acc0, acc1) } else { acc0 };
+        let mut sum = hsum(folded);
+        while p < len {
+            sum += vals[p] * x[cols[p] as usize];
+            p += 1;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn csr_rows<const LANES: usize>(a: &Csr, x: &[f64], y: &mut [f64], row0: usize) {
+        for (r, yi) in y.iter_mut().enumerate() {
+            let i = row0 + r;
+            let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+            *yi = row_dot::<LANES>(&a.cols[s..e], &a.vals[s..e], x);
+        }
+    }
+
+    /// Row-major ELL only (slots contiguous per row); the dispatcher
+    /// keeps column-major on the scalar lane path.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn ell_rows<const LANES: usize>(a: &Ell, x: &[f64], y: &mut [f64], row0: usize) {
+        for (r, yi) in y.iter_mut().enumerate() {
+            let i = row0 + r;
+            let s = i * a.k;
+            let e = s + a.row_len[i] as usize;
+            *yi = row_dot::<LANES>(&a.cols[s..e], &a.vals[s..e], x);
+        }
+    }
+
+    /// One SELL-σ slice: vectorized gather + multiply across rows of a
+    /// plane, scalar scatter-adds through the window permutation. The
+    /// multiplies are exactly rounded per lane and each row's adds stay
+    /// in plane order, so the result is bit-identical to the serial
+    /// kernel (no FMA on this path by construction).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sell_slice<const LANES: usize>(
+        a: &SellSigma,
+        x: &[f64],
+        y: &mut [f64],
+        sb: usize,
+        row0: usize,
+    ) {
+        let lo = sb * a.s;
+        let hi = ((sb + 1) * a.s).min(a.nrows);
+        let rows = hi - lo;
+        let base = a.slice_ptr[sb] as usize;
+        let w = a.widths[sb] as usize;
+        for q in lo..hi {
+            y[a.perm[q] as usize - row0] = 0.0;
+        }
+        for p in 0..w {
+            let plane = base + p * rows;
+            let mut ri = 0usize;
+            while ri + LANES <= rows {
+                super::prefetch_read(&a.vals, plane + ri + 4 * LANES);
+                super::prefetch_read(&a.cols, plane + ri + 4 * LANES);
+                let mut g = 0usize;
+                while g < LANES {
+                    let at = ri + g;
+                    let active = (0..4).all(|l| (p as u32) < a.row_len[lo + at + l]);
+                    if active {
+                        let idx =
+                            _mm_loadu_si128(a.cols.as_ptr().add(plane + at) as *const __m128i);
+                        let xs = _mm256_i32gather_pd::<8>(x.as_ptr(), idx);
+                        let vs = _mm256_loadu_pd(a.vals.as_ptr().add(plane + at));
+                        let mut prod = [0.0f64; 4];
+                        _mm256_storeu_pd(prod.as_mut_ptr(), _mm256_mul_pd(vs, xs));
+                        for (l, &pv) in prod.iter().enumerate() {
+                            y[a.perm[lo + at + l] as usize - row0] += pv;
+                        }
+                    } else {
+                        for l in 0..4 {
+                            let r = at + l;
+                            if (p as u32) < a.row_len[lo + r] {
+                                let ix = plane + r;
+                                y[a.perm[lo + r] as usize - row0] +=
+                                    a.vals[ix] * x[a.cols[ix] as usize];
+                            }
+                        }
+                    }
+                    g += 4;
+                }
+                ri += LANES;
+            }
+            while ri < rows {
+                if (p as u32) < a.row_len[lo + ri] {
+                    let ix = plane + ri;
+                    y[a.perm[lo + ri] as usize - row0] += a.vals[ix] * x[a.cols[ix] as usize];
+                }
+                ri += 1;
+            }
+        }
+    }
+
+    /// `crow += v * brow`, FMA-fused, `LANES` doubles per step.
+    #[inline(always)]
+    unsafe fn axpy<const LANES: usize>(crow: &mut [f64], brow: &[f64], v: f64) {
+        let vv = _mm256_set1_pd(v);
+        let kl = crow.len() & !(LANES - 1);
+        let mut j = 0usize;
+        while j < kl {
+            let cj = _mm256_loadu_pd(crow.as_ptr().add(j));
+            let bj = _mm256_loadu_pd(brow.as_ptr().add(j));
+            _mm256_storeu_pd(crow.as_mut_ptr().add(j), _mm256_fmadd_pd(vv, bj, cj));
+            if LANES == 8 {
+                let cj1 = _mm256_loadu_pd(crow.as_ptr().add(j + 4));
+                let bj1 = _mm256_loadu_pd(brow.as_ptr().add(j + 4));
+                _mm256_storeu_pd(crow.as_mut_ptr().add(j + 4), _mm256_fmadd_pd(vv, bj1, cj1));
+            }
+            j += LANES;
+        }
+        while j < crow.len() {
+            crow[j] += v * brow[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn csr_rows_mm<const LANES: usize>(
+        a: &Csr,
+        b: &[f64],
+        k: usize,
+        c: &mut [f64],
+        row0: usize,
+    ) {
+        for (r, crow) in c.chunks_mut(k).enumerate() {
+            let i = row0 + r;
+            crow.fill(0.0);
+            let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+            for (&col, &v) in a.cols[s..e].iter().zip(&a.vals[s..e]) {
+                axpy::<LANES>(crow, &b[col as usize * k..col as usize * k + k], v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::spmv;
+    use crate::matrix::coo::TriMat;
+    use crate::matrix::gen;
+    use crate::storage::EllOrder;
+
+    fn sample(nrows: usize, ncols: usize, seed: u64) -> TriMat {
+        gen::uniform_random(nrows, ncols, nrows * ncols / 3, seed)
+    }
+
+    #[test]
+    fn csr_lane_kernels_match_serial() {
+        let m = sample(37, 29, 7);
+        let a = Csr::from_tuples(&m);
+        let x: Vec<f64> = (0..29).map(|i| 0.5 + (i as f64) * 0.01).collect();
+        let mut y0 = vec![0.0; 37];
+        spmv::csr(&a, &x, &mut y0);
+        for lanes in [4usize, 8] {
+            let mut y = vec![7.0; 37];
+            csr_spmv(&a, &x, &mut y, lanes);
+            for (a, b) in y.iter().zip(&y0) {
+                assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0), "lanes={lanes}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn ell_lane_kernels_match_serial_in_both_orders() {
+        let m = sample(23, 31, 11);
+        let x: Vec<f64> = (0..31).map(|i| 1.0 + (i as f64) * 0.02).collect();
+        for order in [EllOrder::RowMajor, EllOrder::ColMajor] {
+            let a = Ell::from_tuples(&m, order);
+            let mut y0 = vec![0.0; 23];
+            spmv::ell_rowwise(&a, &x, &mut y0);
+            for lanes in [4usize, 8] {
+                let mut y = vec![-3.0; 23];
+                ell_spmv(&a, &x, &mut y, lanes);
+                for (a, b) in y.iter().zip(&y0) {
+                    assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sell_sigma_lane_kernels_are_bit_identical_to_serial() {
+        let m = sample(61, 40, 13);
+        let a = SellSigma::from_tuples(&m, 8, 16);
+        let x: Vec<f64> = (0..40).map(|i| 0.25 + (i as f64) * 0.03).collect();
+        let mut y0 = vec![0.0; 61];
+        sell_sigma::spmv(&a, &x, &mut y0);
+        for lanes in [4usize, 8] {
+            let mut y = vec![9.0; 61];
+            sell_sigma_spmv(&a, &x, &mut y, lanes);
+            assert_eq!(y, y0, "across-row lanes must preserve serial accumulation");
+        }
+        // The window-range form composes to the same bits.
+        let mut y = vec![0.0; 61];
+        let nw = a.nwindows();
+        let mid = nw / 2;
+        let (head, tail) = y.split_at_mut(mid * a.sigma);
+        sell_sigma_spmv_range(&a, &x, head, 0, mid, 0, 4);
+        sell_sigma_spmv_range(&a, &x, tail, mid, nw, mid * a.sigma, 8);
+        assert_eq!(y, y0);
+    }
+
+    #[test]
+    fn spmm_lane_kernels_are_bit_identical_to_serial() {
+        let m = sample(19, 17, 5);
+        let a = Csr::from_tuples(&m);
+        let k = 6;
+        let b: Vec<f64> = (0..17 * k).map(|i| 0.1 + (i as f64) * 0.005).collect();
+        let mut c0 = vec![0.0; 19 * k];
+        spmm::csr(&a, &b, k, &mut c0);
+        for lanes in [4usize, 8] {
+            let mut c = vec![2.0; 19 * k];
+            csr_spmm(&a, &b, k, &mut c, lanes);
+            if avx2_active() {
+                // The AVX2 axpy fuses each mul+add (one rounding per
+                // nonzero instead of two): equal to tight tolerance,
+                // not to the bit.
+                for (g, w) in c.iter().zip(&c0) {
+                    assert!((g - w).abs() <= 1e-12 * w.abs().max(1.0), "{g} vs {w}");
+                }
+            } else {
+                assert_eq!(c, c0, "element-wise axpy keeps every width bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_widths_degrade_to_scalar() {
+        let m = sample(12, 12, 3);
+        let a = Csr::from_tuples(&m);
+        let x = vec![1.0; 12];
+        let mut y0 = vec![0.0; 12];
+        spmv::csr(&a, &x, &mut y0);
+        let mut y = vec![0.0; 12];
+        csr_spmv(&a, &x, &mut y, 3);
+        assert_eq!(y, y0);
+    }
+}

@@ -29,6 +29,31 @@ pub fn axpy_k4(crow: &mut [f64], brow: &[f64], v: f64) {
     }
 }
 
+/// [`axpy_k4`] widened to an 8-wide unroll — the register-blocked
+/// micro-kernel the `lanes = 8` SpMM plans select (`kernels::simd`).
+/// Element-wise like the 4-wide form, so every unroll width
+/// accumulates each output slot in the identical order.
+#[inline(always)]
+pub fn axpy_k8(crow: &mut [f64], brow: &[f64], v: f64) {
+    debug_assert_eq!(crow.len(), brow.len());
+    let k8 = crow.len() & !7;
+    let (cm, ct) = crow.split_at_mut(k8);
+    let (bm, bt) = brow.split_at(k8);
+    for (cc, bb) in cm.chunks_exact_mut(8).zip(bm.chunks_exact(8)) {
+        cc[0] += v * bb[0];
+        cc[1] += v * bb[1];
+        cc[2] += v * bb[2];
+        cc[3] += v * bb[3];
+        cc[4] += v * bb[4];
+        cc[5] += v * bb[5];
+        cc[6] += v * bb[6];
+        cc[7] += v * bb[7];
+    }
+    for (cj, &bj) in ct.iter_mut().zip(bt) {
+        *cj += v * bj;
+    }
+}
+
 /// COO AoS.
 pub fn coo_aos(a: &CooAos, b: &[f64], k: usize, c: &mut [f64]) {
     c.fill(0.0);

@@ -6,7 +6,8 @@
 //! Since the fittable refactor, `search::cost` predicts a plan's time
 //! as the dot product of a fixed-order [`FeatureVec`]
 //! (`cost::FEATURE_NAMES`: stream bytes, gather bytes, flops, loop
-//! headers, spawns, barrier waves, imbalance bytes) with
+//! headers, spawns, barrier waves, imbalance bytes, gather-lane ops)
+//! with
 //! `CostParams::weights`. Every array persisted by this module — the
 //! per-cell samples in `BENCH_*.json`, the `weight` lines of a
 //! `.profile` file — uses **exactly that order**; index `i` always
@@ -244,7 +245,15 @@ impl Profile {
     /// The profile as planner parameters, with the thread count pinned
     /// to the machine actually running (profiles may travel).
     pub fn params_for(&self, threads: usize) -> CostParams {
-        CostParams { l2_bytes: self.l2_bytes, threads: threads.max(1), weights: self.weights }
+        CostParams {
+            l2_bytes: self.l2_bytes,
+            threads: threads.max(1),
+            // Profiles predate the vector-width axis and don't persist
+            // it; the structural register width is a property of the
+            // ISA generation, not of the fit — AVX2's 32 bytes.
+            vector_bytes: 32.0,
+            weights: self.weights,
+        }
     }
 
     /// Plain-text serialization (`key value` lines; floats use Rust's
@@ -444,7 +453,7 @@ mod tests {
     fn synth_samples(w_true: &[f64; N_FEATURES], n: usize, seed: u64) -> Vec<Sample> {
         let mut rng = Rng::new(seed);
         // Feature magnitudes spanning the real extractor's scales.
-        let mag = [1e6, 1e5, 1e6, 1e3, 8.0, 40.0, 1e5];
+        let mag = [1e6, 1e5, 1e6, 1e3, 8.0, 40.0, 1e5, 1e4];
         (0..n)
             .map(|i| {
                 let mut f = [0.0; N_FEATURES];
@@ -468,7 +477,7 @@ mod tests {
     /// recover it (within tolerance) — including the zero entries.
     #[test]
     fn nnls_recovers_planted_parameters() {
-        let w_true = [1.25e-10, 6.7e-10, 2.5e-10, 1.5e-9, 2.5e-5, 4e-7, 0.0];
+        let w_true = [1.25e-10, 6.7e-10, 2.5e-10, 1.5e-9, 2.5e-5, 4e-7, 0.0, 3e-9];
         let samples = synth_samples(&w_true, 60, 42);
         let seed = CostParams::host_small();
         let fitted = fit(&samples, &seed);
@@ -495,12 +504,13 @@ mod tests {
     fn absent_features_keep_seed_weights() {
         // Samples that never exercise spawns/syncs/imbalance (a
         // serial-only sweep): those columns must keep the seed values.
-        let w_true = [1.25e-10, 6.7e-10, 2.5e-10, 1.5e-9, 0.0, 0.0, 0.0];
+        let w_true = [1.25e-10, 6.7e-10, 2.5e-10, 1.5e-9, 0.0, 0.0, 0.0, 0.0];
         let mut samples = synth_samples(&w_true, 40, 7);
         for s in &mut samples {
             s.features[4] = 0.0;
             s.features[5] = 0.0;
             s.features[6] = 0.0;
+            s.features[7] = 0.0;
             s.measured_secs =
                 s.features.iter().zip(&w_true).map(|(a, b)| a * b).sum();
         }
@@ -509,6 +519,7 @@ mod tests {
         assert_eq!(fitted.weights[4], seed.weights[4]);
         assert_eq!(fitted.weights[5], seed.weights[5]);
         assert_eq!(fitted.weights[6], seed.weights[6]);
+        assert_eq!(fitted.weights[7], seed.weights[7], "scalar sweeps keep gather_lanes at seed");
         assert!((fitted.weights[0] - w_true[0]).abs() / w_true[0] < 1e-4);
     }
 
@@ -523,9 +534,9 @@ mod tests {
         // Unconstrained LS on this system is exactly (a, b) = (−1, 4);
         // NNLS must land on the boundary optimum (0, 2) instead.
         let xs = vec![
-            [1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0],
-            [2.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0],
-            [3.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            [1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            [2.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            [3.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
         ];
         let y = vec![3.0, 2.0, 1.0];
         let w = nnls(&xs, &y, &[0.0; N_FEATURES]);
@@ -539,11 +550,11 @@ mod tests {
         let mk = |matrix: &str, plan: &str, f0: f64, measured: f64| Sample {
             matrix: matrix.into(),
             plan_id: plan.into(),
-            features: [f0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            features: [f0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
             measured_secs: measured,
             predicted_secs: f0,
         };
-        let w = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let w = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
         // m1: prediction order (a, b) matches measurement; m2 inverted.
         let samples = vec![
             mk("m1", "a", 1.0, 1.0),
@@ -553,7 +564,7 @@ mod tests {
         ];
         assert_eq!(top1_agreement(&samples, &w), (1, 2));
         // A weight vector that ranks b first everywhere: only m2 agrees.
-        let w2 = [-1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let w2 = [-1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
         assert_eq!(top1_agreement(&samples, &w2), (1, 2));
         // Merged archives: duplicate (matrix, plan) samples from two
         // bench records. Predicted picks the first copy of plan a,
@@ -587,6 +598,7 @@ mod tests {
                 2.5e-5,
                 3.0000000000000004e-7,
                 5.5e-13,
+                7.250000000000001e-12,
             ],
             samples: 123,
         };
@@ -646,7 +658,7 @@ mod tests {
         let s = Sample {
             matrix: "Raj1 \"scaled\"".into(),
             plan_id: "csr.row.par4".into(),
-            features: [1.5e6, 2.5e4, 0.0, 1e3, 4.0, 0.0, 3.3e5],
+            features: [1.5e6, 2.5e4, 0.0, 1e3, 4.0, 0.0, 3.3e5, 1.2e4],
             measured_secs: 1.25e-4,
             predicted_secs: 1.5e-4,
         };

@@ -26,8 +26,9 @@
 //! Since the calibration refactor the model is *linear in its
 //! parameters*: [`features`] maps a plan + statistics to a fixed-order
 //! [`FeatureVec`] (streamed bytes, gathered bytes, flops, loop headers,
-//! spawn count, barrier-wave count, imbalance bytes) and the predicted
-//! time is the dot product with [`CostParams::weights`]. All
+//! spawn count, barrier-wave count, imbalance bytes, gather-lane ops)
+//! and the predicted time is the dot product with
+//! [`CostParams::weights`]. All
 //! nonlinearity — the L2 miss split, the memory/flop roofline, the
 //! effective parallel speedup — is resolved *inside the extractor*
 //! against the structural machine shape (`l2_bytes`, `threads`) and the
@@ -46,7 +47,7 @@ use crate::matrix::MatrixStats;
 use crate::storage::CooOrder;
 
 /// Number of entries in a [`FeatureVec`] / weight vector.
-pub const N_FEATURES: usize = 7;
+pub const N_FEATURES: usize = 8;
 
 /// Fixed feature order — the contract between this extractor, the
 /// sample archive in `BENCH_*.json`, and `search::calibrate`'s fit.
@@ -61,6 +62,7 @@ pub const FEATURE_NAMES: [&str; N_FEATURES] = [
     "spawns",         // scoped threads spawned per invocation
     "syncs",          // barrier waves × threads (level-scheduled TrSv)
     "imbalance_bytes", // row-cv-weighted parallel byte volume (seed weight 0)
+    "gather_lanes",   // hardware gather ops of a wide plan (seed weight 0)
 ];
 
 pub const F_STREAM: usize = 0;
@@ -70,6 +72,7 @@ pub const F_HEADERS: usize = 3;
 pub const F_SPAWNS: usize = 4;
 pub const F_SYNCS: usize = 5;
 pub const F_IMBALANCE: usize = 6;
+pub const F_GATHER_LANES: usize = 7;
 
 /// A plan's footprint on one matrix in the fixed [`FEATURE_NAMES`]
 /// order. Predicted seconds = `dot(features, CostParams::weights)`.
@@ -106,6 +109,10 @@ pub struct CostParams {
     /// Worker threads the architecture exposes to parallel schedules
     /// (structural — not fitted).
     pub threads: usize,
+    /// Vector register width in bytes (structural — not fitted): caps
+    /// the effective lane count of a wide plan (`lanes ≤ vector_bytes /
+    /// 8` f64 lanes actually retire per step). 32 = AVX2.
+    pub vector_bytes: f64,
     /// The fitted coefficients, `FEATURE_NAMES` order.
     pub weights: [f64; N_FEATURES],
 }
@@ -128,6 +135,7 @@ impl CostParams {
         CostParams {
             l2_bytes,
             threads: threads.max(1),
+            vector_bytes: 32.0,
             weights: [
                 1.0 / stream_bw,
                 1.0 / gather_bw,
@@ -135,6 +143,7 @@ impl CostParams {
                 loop_overhead,
                 spawn_overhead,
                 sync_overhead,
+                0.0,
                 0.0,
             ],
         }
@@ -405,17 +414,29 @@ pub fn features(
     let stream_units = r.streamed_bytes + r.gathered_bytes * (1.0 - miss) + ws;
     let gather_units = r.gathered_bytes * miss;
 
+    // Lane axis: a wide plan retires `eff_lanes` elements per flop /
+    // header step (capped by the register width — an 8-lane plan on a
+    // 4-lane machine double-pumps), and issues one hardware gather per
+    // lane group. The gather count lands in the appended `gather_lanes`
+    // entry with a zero seed weight, so seed rankings see only the
+    // flop/header saving and a refit learns the per-machine gather
+    // cost. Scalar plans (`lanes == 1`) divide by exactly 1.0 and carry
+    // a zero lane entry — bit-identical to the pre-lane extractor.
+    let lanes = exec.lanes.max(1) as f64;
+    let eff_lanes = lanes.min((p.vector_bytes / 8.0).max(1.0));
+    let lane_units = if exec.lanes > 1 { r.gathered_bytes / 8.0 / lanes } else { 0.0 };
+
     // Roofline: memory-bound keeps the byte entries, compute-bound the
     // flop entry — resolved against the reference weights so the dot
     // product reproduces `max(mem_time, flop_time)`.
     let mem_time = stream_units * p.weights[F_STREAM] + gather_units * p.weights[F_GATHER];
-    let flop_time = r.flops * p.weights[F_FLOPS];
+    let flop_time = r.flops / eff_lanes * p.weights[F_FLOPS];
     let (su, gu, fu) = if flop_time > mem_time {
-        (0.0, 0.0, r.flops)
+        (0.0, 0.0, r.flops / eff_lanes)
     } else {
         (stream_units, gather_units, 0.0)
     };
-    let hu = r.loop_headers;
+    let hu = r.loop_headers / eff_lanes;
 
     let mut f = [0.0; N_FEATURES];
     match exec.schedule {
@@ -425,6 +446,7 @@ pub fn features(
             f[F_GATHER] = gu * dep;
             f[F_FLOPS] = fu * dep;
             f[F_HEADERS] = hu * dep;
+            f[F_GATHER_LANES] = lane_units * dep;
         }
         Schedule::Parallel { threads } if kernel == Kernel::Trsv => {
             // Level-scheduled solve: the speedup is capped by the mean
@@ -444,6 +466,7 @@ pub fn features(
             f[F_SPAWNS] = t as f64;
             f[F_SYNCS] = stats.sync_waves as f64 * t as f64;
             f[F_IMBALANCE] = stats.row_cv() * (su + gu) * inv;
+            f[F_GATHER_LANES] = lane_units * inv;
         }
         Schedule::Parallel { threads } | Schedule::ParallelTiled { threads, .. } => {
             let t = threads.max(1);
@@ -458,6 +481,7 @@ pub fn features(
             f[F_HEADERS] = hu * inv;
             f[F_SPAWNS] = t as f64;
             f[F_IMBALANCE] = stats.row_cv() * (su + gu) * inv;
+            f[F_GATHER_LANES] = lane_units * inv;
         }
     }
     FeatureVec(f)
@@ -729,19 +753,63 @@ mod tests {
         assert_eq!(p.weights[F_SPAWNS], 2.5e-5);
         assert_eq!(p.weights[F_SYNCS], 4e-7);
         assert_eq!(p.weights[F_IMBALANCE], 0.0);
+        assert_eq!(p.weights[F_GATHER_LANES], 0.0);
         assert_eq!(p.threads, 1);
+        assert_eq!(p.vector_bytes, 32.0);
         assert_eq!(FEATURE_NAMES.len(), N_FEATURES);
         let f = features(Kernel::Spmv, 1, &csr(), &MatrixStats::nominal(), &p);
         assert_eq!(f.0[F_SPAWNS], 0.0);
         assert_eq!(f.0[F_SYNCS], 0.0);
         assert_eq!(f.0[F_IMBALANCE], 0.0);
+        assert_eq!(f.0[F_GATHER_LANES], 0.0, "scalar plans carry no lane term");
         assert!(f.0[F_STREAM] > 0.0);
         // with_weights swaps the fitted half only.
-        let w2 = [1e-10, 1e-9, 1e-10, 1e-9, 1e-5, 1e-7, 1e-12];
+        let w2 = [1e-10, 1e-9, 1e-10, 1e-9, 1e-5, 1e-7, 1e-12, 1e-9];
         let q = p.with_weights(w2);
         assert_eq!(q.weights, w2);
         assert_eq!(q.l2_bytes, p.l2_bytes);
         assert_eq!(q.threads, p.threads);
+    }
+
+    /// The lane axis is priced: a wide plan keeps its byte features,
+    /// shrinks its flop/header units by the register-capped lane count,
+    /// and carries the hardware-gather count in the appended
+    /// `gather_lanes` entry (zero seed weight — a refit prices it).
+    #[test]
+    fn lane_axis_prices_vector_width() {
+        let p = CostParams::host_small();
+        let stats = MatrixStats::synthetic(3000, 3000, 10.0, 9.0, 20, 1500);
+        let scalar = csr();
+        let wide = csr().with_lanes(4);
+        let fs = features(Kernel::Spmv, 1, &scalar, &stats, &p);
+        let fw = features(Kernel::Spmv, 1, &wide, &stats, &p);
+        // Byte traffic is lane-independent.
+        assert_eq!(fs.0[F_STREAM], fw.0[F_STREAM]);
+        assert_eq!(fs.0[F_GATHER], fw.0[F_GATHER]);
+        // Headers shrink by the lane count; the lane entry appears.
+        assert_eq!(fw.0[F_HEADERS], fs.0[F_HEADERS] / 4.0);
+        assert!(fw.0[F_GATHER_LANES] > 0.0);
+        assert_eq!(fs.0[F_GATHER_LANES], 0.0);
+        // Under seed weights (lane weight 0) the wide plan never ranks
+        // worse than scalar; a fitted gather-lane penalty can flip it.
+        let t_scalar = predict(Kernel::Spmv, 1, &scalar, &stats, &p);
+        let t_wide = predict(Kernel::Spmv, 1, &wide, &stats, &p);
+        assert!(t_wide <= t_scalar);
+        let mut w = p.weights;
+        w[F_GATHER_LANES] = 1e-6;
+        let fitted = p.with_weights(w);
+        assert!(
+            predict(Kernel::Spmv, 1, &wide, &stats, &fitted)
+                > predict(Kernel::Spmv, 1, &scalar, &stats, &fitted),
+            "a fitted gather-lane penalty must be able to demote wide plans"
+        );
+        // An 8-lane plan on a 4-lane (32-byte) machine double-pumps:
+        // flop/header units divide by the register cap, not the plan.
+        let v8 = csr().with_lanes(8);
+        let f8 = features(Kernel::Spmv, 1, &v8, &stats, &p);
+        assert_eq!(f8.0[F_HEADERS], fs.0[F_HEADERS] / 4.0);
+        // …but the gather count still amortizes over all 8 lanes.
+        assert!(f8.0[F_GATHER_LANES] < fw.0[F_GATHER_LANES]);
     }
 
     #[test]

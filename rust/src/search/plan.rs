@@ -46,7 +46,7 @@ pub struct Plan {
     pub derivation: String,
     /// The IR chain state the plan concretized from.
     pub state: ChainState,
-    /// The execution triple: (Layout, Traversal, Schedule).
+    /// The execution tuple: (Layout, Traversal, Schedule, lanes).
     pub exec: ExecPlan,
 }
 
@@ -56,15 +56,28 @@ impl Plan {
         Plan { id: Self::stable_id(&exec), derivation, state, exec }
     }
 
-    /// The stable id of an execution triple.
+    /// The stable id of an execution tuple. Scalar plans keep the
+    /// pre-lane three-component id (`csr.row.par4`); wide plans append
+    /// the vector-width component (`csr.row.par4.v8`), so archives and
+    /// quarantine entries from pre-SIMD runs can never alias a wide
+    /// plan.
     pub fn stable_id(exec: &ExecPlan) -> String {
-        format!("{}.{}.{}", exec.layout.slug(), exec.traversal.slug(), exec.schedule.slug())
+        let base =
+            format!("{}.{}.{}", exec.layout.slug(), exec.traversal.slug(), exec.schedule.slug());
+        if exec.lanes > 1 {
+            format!("{base}.v{}", exec.lanes)
+        } else {
+            base
+        }
     }
 
     /// Short display name: layout + traversal (+ schedule when not
-    /// serial).
+    /// serial, + vector width when wide). A wide plan always carries an
+    /// `@` marker — even under `Serial` — so the sweep's
+    /// paper-protocol serial subset (`!name.contains('@')`) stays
+    /// exactly the scalar serial tree.
     pub fn name(&self) -> String {
-        if self.exec.schedule.is_serial() {
+        let mut name = if self.exec.schedule.is_serial() {
             format!("{:?}/{:?}", self.exec.layout, self.exec.traversal)
         } else {
             format!(
@@ -73,7 +86,11 @@ impl Plan {
                 self.exec.traversal,
                 self.exec.schedule.label()
             )
+        };
+        if self.exec.lanes > 1 {
+            name.push_str(&format!("@v{}", self.exec.lanes));
         }
+        name
     }
 
     /// Legality predicate: can this plan's generated loop nest execute
@@ -122,6 +139,9 @@ impl Plan {
 pub struct PlanSpace {
     /// Schedules crossed with every serial (layout, traversal) pair.
     pub schedules: Vec<Schedule>,
+    /// Vector widths crossed with every scheduled plan (`1` = scalar;
+    /// `concretize::lane_legal` prunes illegal format/width pairs).
+    pub lanes: Vec<usize>,
     /// Architecture parameters of the cost model.
     pub params: CostParams,
     /// Dense-operand column count assumed when ranking SpMM plans.
@@ -137,6 +157,7 @@ impl PlanSpace {
     pub fn serial_only() -> Self {
         PlanSpace {
             schedules: vec![Schedule::Serial],
+            lanes: vec![1],
             params: CostParams::host_small(),
             dense_k: 100,
             rank_stats: None,
@@ -153,6 +174,7 @@ impl PlanSpace {
                 Schedule::Tiled { x_block },
                 Schedule::ParallelTiled { threads, x_block },
             ],
+            lanes: vec![1, 4, 8],
             params: CostParams::host_large(threads),
             dense_k: 100,
             rank_stats: None,
@@ -186,6 +208,35 @@ mod tests {
         assert_eq!(Plan::stable_id(&c), "csr.row.par2-tile4096");
         let d = ExecPlan::serial(Layout::Sell { s: 32 }, Traversal::SlicePlane);
         assert_eq!(Plan::stable_id(&d), "sell32.slice.serial");
+    }
+
+    #[test]
+    fn wide_plans_append_the_vector_width_component() {
+        let a = ExecPlan::serial(Layout::Csr, Traversal::RowWise);
+        assert_eq!(Plan::stable_id(&a.with_lanes(8)), "csr.row.serial.v8");
+        let b = a.with_schedule(Schedule::Parallel { threads: 4 }).with_lanes(4);
+        assert_eq!(Plan::stable_id(&b), "csr.row.par4.v4");
+        // lanes = 1 is the scalar id — bit-for-bit the pre-SIMD form.
+        assert_eq!(Plan::stable_id(&a.with_lanes(1)), "csr.row.serial");
+    }
+
+    #[test]
+    fn wide_plan_names_carry_the_marker_even_when_serial() {
+        let state = ChainState::initial(Kernel::Spmv);
+        let wide = Plan::new(
+            state.clone(),
+            "x".into(),
+            ExecPlan::serial(Layout::Csr, Traversal::RowWise).with_lanes(8),
+        );
+        assert!(wide.name().contains("@v8"), "{}", wide.name());
+        let wide_par = Plan::new(
+            state,
+            "x".into(),
+            ExecPlan::serial(Layout::Csr, Traversal::RowWise)
+                .with_schedule(Schedule::Parallel { threads: 2 })
+                .with_lanes(4),
+        );
+        assert!(wide_par.name().contains("@par(2)") && wide_par.name().contains("@v4"));
     }
 
     #[test]
@@ -244,9 +295,11 @@ mod tests {
     fn plan_space_defaults() {
         let s = PlanSpace::serial_only();
         assert_eq!(s.schedules, vec![Schedule::Serial]);
+        assert_eq!(s.lanes, vec![1], "the paper protocol stays scalar");
         assert!(s.rank_stats.is_none());
         let h = PlanSpace::host(4, 4096);
         assert_eq!(h.schedules.len(), 4);
+        assert_eq!(h.lanes, vec![1, 4, 8]);
         assert_eq!(h.params.threads, 4);
         let ranked = h.with_rank_stats(MatrixStats::synthetic(10, 10, 2.0, 0.0, 2, 5));
         assert_eq!(ranked.ranking_stats().nrows, 10);

@@ -111,9 +111,10 @@ pub fn enumerate(kernel: Kernel, space: &PlanSpace) -> Tree {
         }
     }
 
-    // Cross the serial tree with the space's schedules, pruning illegal
-    // triples (TrSv stays Serial; only row-partitionable layouts
-    // parallelize; only CSR SpMV tiles).
+    // Cross the serial tree with the space's schedules and vector
+    // widths, pruning illegal combinations (TrSv stays Serial and
+    // scalar; only row-partitionable layouts parallelize; only CSR
+    // SpMV tiles; `lane_legal` gates widths by format).
     let mut plans: Vec<Plan> = Vec::new();
     for (state, derivation, exec) in &serial {
         for &schedule in &space.schedules {
@@ -121,12 +122,21 @@ pub fn enumerate(kernel: Kernel, space: &PlanSpace) -> Tree {
             if !concretize::supports(&scheduled, kernel) {
                 continue;
             }
-            let derivation = if schedule.is_serial() {
-                derivation.clone()
-            } else {
-                format!("{derivation} \u{2192} schedule({})", schedule.label())
-            };
-            plans.push(Plan::new(state.clone(), derivation, scheduled));
+            for &lanes in &space.lanes {
+                let widened = scheduled.with_lanes(lanes);
+                if !concretize::supports(&widened, kernel) {
+                    continue;
+                }
+                let mut derivation = if schedule.is_serial() {
+                    derivation.clone()
+                } else {
+                    format!("{derivation} \u{2192} schedule({})", schedule.label())
+                };
+                if lanes > 1 {
+                    derivation = format!("{derivation} \u{2192} vectorize(v{lanes})");
+                }
+                plans.push(Plan::new(state.clone(), derivation, widened));
+            }
         }
     }
 
@@ -222,8 +232,12 @@ mod tests {
     fn scheduled_space_extends_serial_tree() {
         let serial = enumerate(Kernel::Spmv, &PlanSpace::serial_only());
         let t = enumerate(Kernel::Spmv, &PlanSpace::host(4, 4096));
-        // Every serial plan survives, plus the scheduled ones.
-        let serial_in_t = t.plans.iter().filter(|p| p.exec.schedule.is_serial()).count();
+        // Every serial plan survives, plus the scheduled/widened ones.
+        let serial_in_t = t
+            .plans
+            .iter()
+            .filter(|p| p.exec.schedule.is_serial() && p.exec.lanes == 1)
+            .count();
         assert_eq!(serial_in_t, serial.plans.len());
         assert!(t.plans.len() > serial.plans.len());
         // CSR gets all four schedules (RowWise CSR SpMV tiles).
@@ -262,14 +276,42 @@ mod tests {
     }
 
     #[test]
+    fn host_space_crosses_the_lane_axis() {
+        let t = enumerate(Kernel::Spmv, &PlanSpace::host(4, 4096));
+        // CSR row-wise widens under serial and parallel schedules.
+        assert!(t.plans.iter().any(|p| p.id == "csr.row.serial.v8"));
+        assert!(t.plans.iter().any(|p| p.id == "csr.row.par4.v4"));
+        // SELL-σ widens when the slice height divides (32 % 8 == 0).
+        assert!(t.plans.iter().any(|p| p.id == "sell32s256.slice.serial.v8"));
+        // Tiled schedules never widen; wide plans record the step.
+        for p in &t.plans {
+            if p.exec.lanes > 1 {
+                assert!(p.exec.schedule.is_serial()
+                    || matches!(p.exec.schedule, crate::concretize::Schedule::Parallel { .. }));
+                assert!(p.derivation.contains("vectorize(v"), "{}", p.derivation);
+            }
+        }
+        // Ids stay unique across the widened space.
+        let ids: HashSet<&String> = t.plans.iter().map(|p| &p.id).collect();
+        assert_eq!(ids.len(), t.plans.len());
+        // The lane axis never reaches TrSv.
+        let trsv = enumerate(Kernel::Trsv, &PlanSpace::host(4, 4096));
+        assert!(trsv.plans.iter().all(|p| p.exec.lanes == 1));
+    }
+
+    #[test]
     fn serial_only_space_reproduces_paper_tree() {
         let a = enumerate(Kernel::Spmv, &PlanSpace::serial_only());
         let b = enumerate(Kernel::Spmv, &PlanSpace::host(4, 4096));
-        // The serial subset of the scheduled space is exactly the
-        // serial-only tree (same execution triples).
+        // The scalar serial subset of the scheduled space is exactly
+        // the serial-only tree (same execution tuples).
         let mut pa: Vec<ExecPlan> = a.plans.iter().map(|p| p.exec).collect();
-        let mut pb: Vec<ExecPlan> =
-            b.plans.iter().filter(|p| p.exec.schedule.is_serial()).map(|p| p.exec).collect();
+        let mut pb: Vec<ExecPlan> = b
+            .plans
+            .iter()
+            .filter(|p| p.exec.schedule.is_serial() && p.exec.lanes == 1)
+            .map(|p| p.exec)
+            .collect();
         let key = |e: &ExecPlan| format!("{e:?}");
         pa.sort_by_key(key);
         pb.sort_by_key(key);

@@ -54,7 +54,7 @@ use std::ops::Range;
 
 use crate::concretize::layout::{coo_order_slug, Traversal};
 use crate::kernels::levels::LevelSets;
-use crate::kernels::{levels, par, spmm, spmv, trsv};
+use crate::kernels::{levels, par, simd, spmm, spmv, trsv};
 use crate::storage::{
     sell, sell_sigma, Bcsr, CooAos, CooOrder, CooSoa, Csc, CscAos, Csr, CsrAos, CsrBands, Dia,
     Ell, EllOrder, HybridEllCoo, Jds, JdsRows, Sell, SellSigma,
@@ -146,6 +146,97 @@ pub trait SparseOps: Send + Sync {
         let mut tasks = Vec::with_capacity(ranges.len());
         for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
             tasks.push(move || self.spmm_range(t, b, k, chunk, lo, hi));
+        }
+        scoped_run(tasks);
+    }
+
+    // ---- vector-lane executors (the plan's fourth axis) ------------
+
+    /// SpMV at vector width `lanes` (4 or 8; `concretize::lane_legal`
+    /// gates the callers). Defaults to the scalar serial nest so a
+    /// format without wide micro-kernels stays correct; CSR / ELL /
+    /// SELL-σ override with `kernels::simd`.
+    fn spmv_serial_lanes(&self, t: Traversal, x: &[f64], y: &mut [f64], _lanes: usize) {
+        self.spmv_serial(t, x, y);
+    }
+
+    /// Lane-width SpMV over units `[u0, u1)` (chunk convention of
+    /// [`spmv_range`](SparseOps::spmv_range)).
+    fn spmv_range_lanes(
+        &self,
+        t: Traversal,
+        x: &[f64],
+        y: &mut [f64],
+        u0: usize,
+        u1: usize,
+        _lanes: usize,
+    ) {
+        self.spmv_range(t, x, y, u0, u1);
+    }
+
+    /// `Schedule::Parallel` SpMV at vector width `lanes`: the scalar
+    /// driver's nnz-balanced split with the lane range kernel in each
+    /// worker.
+    fn spmv_parallel_lanes(
+        &self,
+        t: Traversal,
+        x: &[f64],
+        y: &mut [f64],
+        threads: usize,
+        lanes: usize,
+    ) {
+        let ranges =
+            par::balanced_ranges(self.par_units(), threads, |u| self.unit_weight_prefix(u));
+        if ranges.len() <= 1 {
+            return self.spmv_serial_lanes(t, x, y, lanes);
+        }
+        let chunks = par::chunks_for(y, &ranges, self.rows_per_unit());
+        let mut tasks = Vec::with_capacity(ranges.len());
+        for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+            tasks.push(move || self.spmv_range_lanes(t, x, chunk, lo, hi, lanes));
+        }
+        scoped_run(tasks);
+    }
+
+    /// SpMM at vector width `lanes` (widened register-blocked
+    /// micro-kernel; CSR overrides, everything else runs scalar).
+    fn spmm_serial_lanes(&self, t: Traversal, b: &[f64], k: usize, c: &mut [f64], _lanes: usize) {
+        self.spmm_serial(t, b, k, c);
+    }
+
+    /// Lane-width SpMM over units `[u0, u1)`.
+    fn spmm_range_lanes(
+        &self,
+        t: Traversal,
+        b: &[f64],
+        k: usize,
+        c: &mut [f64],
+        u0: usize,
+        u1: usize,
+        _lanes: usize,
+    ) {
+        self.spmm_range(t, b, k, c, u0, u1);
+    }
+
+    /// `Schedule::Parallel` SpMM at vector width `lanes`.
+    fn spmm_parallel_lanes(
+        &self,
+        t: Traversal,
+        b: &[f64],
+        k: usize,
+        c: &mut [f64],
+        threads: usize,
+        lanes: usize,
+    ) {
+        let ranges =
+            par::balanced_ranges(self.par_units(), threads, |u| self.unit_weight_prefix(u));
+        if ranges.len() <= 1 {
+            return self.spmm_serial_lanes(t, b, k, c, lanes);
+        }
+        let chunks = par::chunks_for(c, &ranges, self.rows_per_unit() * k);
+        let mut tasks = Vec::with_capacity(ranges.len());
+        for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+            tasks.push(move || self.spmm_range_lanes(t, b, k, chunk, lo, hi, lanes));
         }
         scoped_run(tasks);
     }
@@ -284,6 +375,35 @@ impl SparseOps for Csr {
     }
     fn spmm_range(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64], u0: usize, _u1: usize) {
         par::csr_rows_mm(self, b, k, c, u0);
+    }
+    fn spmv_serial_lanes(&self, _t: Traversal, x: &[f64], y: &mut [f64], lanes: usize) {
+        simd::csr_spmv(self, x, y, lanes);
+    }
+    fn spmv_range_lanes(
+        &self,
+        _t: Traversal,
+        x: &[f64],
+        y: &mut [f64],
+        u0: usize,
+        _u1: usize,
+        lanes: usize,
+    ) {
+        simd::csr_spmv_rows(self, x, y, u0, lanes);
+    }
+    fn spmm_serial_lanes(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64], lanes: usize) {
+        simd::csr_spmm(self, b, k, c, lanes);
+    }
+    fn spmm_range_lanes(
+        &self,
+        _t: Traversal,
+        b: &[f64],
+        k: usize,
+        c: &mut [f64],
+        u0: usize,
+        _u1: usize,
+        lanes: usize,
+    ) {
+        simd::csr_spmm_rows(self, b, k, c, u0, lanes);
     }
     fn supports_spmm_panel(&self) -> bool {
         true
@@ -447,6 +567,22 @@ impl SparseOps for Ell {
         }
         par::ell_spmm(self, b, k, c, threads);
     }
+    // `lane_legal` admits ELL lanes only row-wise; the lane driver uses
+    // the generic row split (uniform weights) with the wide row kernel.
+    fn spmv_serial_lanes(&self, _t: Traversal, x: &[f64], y: &mut [f64], lanes: usize) {
+        simd::ell_spmv(self, x, y, lanes);
+    }
+    fn spmv_range_lanes(
+        &self,
+        _t: Traversal,
+        x: &[f64],
+        y: &mut [f64],
+        u0: usize,
+        _u1: usize,
+        lanes: usize,
+    ) {
+        simd::ell_spmv_rows(self, x, y, u0, lanes);
+    }
 }
 
 // ------------------------------------------------------------- JDS --
@@ -506,6 +642,29 @@ impl SparseOps for JdsOps {
             return self.spmm_serial(t, b, k, c);
         }
         par::jds_spmm(&self.jds, b, k, c, threads);
+    }
+    // JDS exposes units but no range kernels (the scatter drivers own
+    // the split); keep hypothetical lane calls on the scalar drivers.
+    fn spmv_parallel_lanes(
+        &self,
+        t: Traversal,
+        x: &[f64],
+        y: &mut [f64],
+        threads: usize,
+        _lanes: usize,
+    ) {
+        self.spmv_parallel(t, x, y, threads);
+    }
+    fn spmm_parallel_lanes(
+        &self,
+        t: Traversal,
+        b: &[f64],
+        k: usize,
+        c: &mut [f64],
+        threads: usize,
+        _lanes: usize,
+    ) {
+        self.spmm_parallel(t, b, k, c, threads);
     }
 }
 
@@ -671,6 +830,20 @@ impl SparseOps for SellSigma {
     }
     fn spmm_range(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64], u0: usize, u1: usize) {
         sell_sigma::spmm_range(self, b, k, c, u0, u1, u0 * self.sigma);
+    }
+    fn spmv_serial_lanes(&self, _t: Traversal, x: &[f64], y: &mut [f64], lanes: usize) {
+        simd::sell_sigma_spmv(self, x, y, lanes);
+    }
+    fn spmv_range_lanes(
+        &self,
+        _t: Traversal,
+        x: &[f64],
+        y: &mut [f64],
+        u0: usize,
+        u1: usize,
+        lanes: usize,
+    ) {
+        simd::sell_sigma_spmv_range(self, x, y, u0, u1, u0 * self.sigma, lanes);
     }
 }
 
