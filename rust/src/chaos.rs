@@ -37,6 +37,7 @@ pub const POINTS: &[&str] = &[
     "artifacts.load_samples",
     "engine.prepare",
     "engine.measure",
+    "pool.worker",
 ];
 
 /// Fire the named fault point. With the `chaos` feature and an armed
@@ -256,6 +257,8 @@ pub mod drill {
                 arm(point, fault);
                 let o = if point == "artifacts.load_samples" {
                     drill_archive_load(&dir, point, fault)
+                } else if point == "pool.worker" {
+                    drill_crew(point, fault)
                 } else {
                     drill_compile(point, fault, pi as u64)
                 };
@@ -356,6 +359,153 @@ pub mod drill {
                     detail: format!("bottom rung served plan {}, not serial CSR", exe.plan().id),
                 };
             }
+        }
+        Outcome { point, fault: fl, health: Some(health), ok: true, detail: "ok".into() }
+    }
+
+    /// Drill the crew's worker-death seam (`pool.worker` sits between
+    /// dequeue and run in `util::pool::worker_loop`). Three contracts:
+    ///
+    /// 1. **No deadlock, no strand.** A lethal armed fault kills every
+    ///    worker that dequeues, so a submitted batch must unwind on the
+    ///    submitter with the drop-guard's poison payload — `scoped_run`
+    ///    returns (via panic), it never parks forever on the condvar. A
+    ///    benign delay rides through to the correct answer.
+    /// 2. **Clean respawn.** After disarming, the next batch lazily
+    ///    respawns the dead workers (`crew_respawns` grows) and
+    ///    computes the exact expected result.
+    /// 3. **Engine isolation.** An `Engine::compile` on the parallel
+    ///    plan space under the still-armed fault must come back `Ok`
+    ///    on *some* ladder rung — crew deaths on the measure path
+    ///    quarantine candidates, they never crash or hang the compile
+    ///    — and once disarmed the served kernel must match a direct
+    ///    prepare of the winning plan bit-for-bit.
+    fn drill_crew(point: &'static str, fault: Fault) -> Outcome {
+        use crate::util::pool;
+        let fl = fault_label(fault);
+        let n = pool::crew_size();
+        if n <= 1 {
+            return Outcome {
+                point,
+                fault: fl,
+                health: None,
+                ok: true,
+                detail: "skipped: a one-worker crew runs inline, the seam cannot fire".into(),
+            };
+        }
+        let run_batch = || {
+            let mut acc = vec![0.0f64; n];
+            let mut tasks = Vec::with_capacity(n);
+            for (i, slot) in acc.iter_mut().enumerate() {
+                tasks.push(move || *slot = (i + 1) as f64);
+            }
+            pool::scoped_run(tasks);
+            acc.iter().sum::<f64>()
+        };
+        let want = (n * (n + 1)) as f64 / 2.0;
+        let lethal = !matches!(fault, Fault::Delay(_));
+        let armed_result = catch_unwind(AssertUnwindSafe(|| run_batch()));
+        match (&armed_result, lethal) {
+            (Ok(_), true) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: "armed worker death did not poison the batch".into(),
+                }
+            }
+            (Err(_), false) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: "a benign delay unwound the batch".into(),
+                }
+            }
+            (Ok(&sum), false) if sum != want => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: format!("delayed batch computed {sum}, expected {want}"),
+                }
+            }
+            _ => {}
+        }
+        let respawns_before = pool::crew_respawns();
+        disarm_all();
+        let healed = run_batch();
+        if healed != want {
+            return Outcome {
+                point,
+                fault: fl,
+                health: None,
+                ok: false,
+                detail: format!("post-disarm batch computed {healed}, expected {want}"),
+            };
+        }
+        if lethal && pool::crew_respawns() <= respawns_before {
+            return Outcome {
+                point,
+                fault: fl,
+                health: None,
+                ok: false,
+                detail: "dead workers were never respawned".into(),
+            };
+        }
+        // Contract 3: a compile whose candidate pool includes parallel
+        // plans (HostLarge) under the still-armed fault.
+        arm(point, fault);
+        let m = gen::uniform_random(48, 48, 360, 0xCE44);
+        let engine = Engine::builder()
+            .arch(Arch::HostLarge)
+            .autotune(Autotune::TopK(3))
+            .bench(BenchConfig::quick())
+            .measure_timeout(MEASURE_TIMEOUT)
+            .build();
+        let compiled = catch_unwind(AssertUnwindSafe(|| engine.compile(Kernel::Spmv, &m)));
+        disarm_all();
+        let exe = match compiled {
+            Err(_) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: "compile panicked through the crew isolation".into(),
+                }
+            }
+            Ok(Err(e)) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: format!("compile errored instead of degrading: {e}"),
+                }
+            }
+            Ok(Ok(exe)) => exe,
+        };
+        let health = exe.health();
+        let x: Vec<f64> = (0..m.ncols).map(|i| (i as f64 * 0.023).cos() + 0.5).collect();
+        let mut served = vec![0.0; m.nrows];
+        let mut reference = vec![0.0; m.nrows];
+        exe.spmv(&x, &mut served);
+        concretize::prepare(exe.plan().exec, &m).spmv(&x, &mut reference);
+        if served != reference {
+            return Outcome {
+                point,
+                fault: fl,
+                health: Some(health),
+                ok: false,
+                detail: format!(
+                    "served SpMV drifted from plan {}'s direct prepare after crew faults",
+                    exe.plan().id
+                ),
+            };
         }
         Outcome { point, fault: fl, health: Some(health), ok: true, detail: "ok".into() }
     }

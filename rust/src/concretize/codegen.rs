@@ -119,7 +119,7 @@ fn apply_schedule(kernel: Kernel, plan: &Plan, body: String) -> String {
             ),
         },
         Schedule::Parallel { threads } => format!(
-            "/* {threads} workers; rows[t] = nnz-balanced disjoint ranges; y chunks owned per worker */\n\
+            "/* {threads} workers from the persistent crew (range t always runs on worker\n   t % crew — the same worker that first-touched its pages when NUMA\n   placement is active); rows[t] = nnz-balanced disjoint ranges; y chunks\n   owned per worker */\n\
              parallel forelem (t; t \u{2208} 0..{threads}) {{\n{}}}\n",
             indent(&body)
         ),
@@ -137,14 +137,14 @@ fn apply_schedule(kernel: Kernel, plan: &Plan, body: String) -> String {
              for (b = 0; b < nbands; b++)\n  for (i = 0; i < nrows; i++)\n    for (k = band_ptr[b][i]; k < band_ptr[b+1][i]; k++)\n      y[i] += PA_val[k] * x[PA_col[k]];\n"
         ),
         Schedule::ParallelTiled { threads, x_block } if kernel == Kernel::Spmm => format!(
-            "/* {threads} workers \u{00d7} {panel}-column B panels (rows[t] nnz-balanced) */\n\
+            "/* {threads} crew workers \u{00d7} {panel}-column B panels (rows[t] nnz-balanced) */\n\
              parallel forelem (t; t \u{2208} 0..{threads}) {{\n\
              \x20 for (p0 = 0; p0 < k; p0 += {panel}) {{  /* panel of min({panel}, k) B/C columns */\n{}  }}\n}}\n",
             indent(&indent(&body)),
             panel = crate::concretize::exec::spmm_panel_cols(x_block, usize::MAX),
         ),
         Schedule::ParallelTiled { threads, x_block } => format!(
-            "/* {threads} workers \u{00d7} {x_block}-column L2-resident bands */\n\
+            "/* {threads} crew workers \u{00d7} {x_block}-column L2-resident bands */\n\
              parallel forelem (t; t \u{2208} 0..{threads}) {{  /* rows[t] nnz-balanced */\n\
              \x20 for (i \u{2208} rows[t]) y[i] = 0;\n\
              \x20 for (b = 0; b < nbands; b++)\n    for (i \u{2208} rows[t])\n      for (k = band_ptr[b][i]; k < band_ptr[b+1][i]; k++)\n        y[i] += PA_val[k] * x[PA_col[k]];\n}}\n"
@@ -267,6 +267,10 @@ mod tests {
         let txt = emit(Kernel::Spmv, &p);
         assert!(txt.contains("parallel forelem"), "{txt}");
         assert!(txt.contains("par(4) schedule"), "{txt}");
+        // the artifact records where its workers come from and the
+        // range->worker mapping the first-touch pass depends on
+        assert!(txt.contains("persistent crew"), "{txt}");
+        assert!(txt.contains("t % crew"), "{txt}");
         // the serial nest is indented inside the worker loop
         assert!(txt.contains("  for (i = 0; i < nrows; i++)"), "{txt}");
     }

@@ -243,6 +243,50 @@ impl Prepared {
         }
     }
 
+    /// NUMA first-touch pass: re-walk each of this plan's parallel
+    /// partition ranges on the crew worker that will later execute it
+    /// (`util::pool` dispatches task `i` to worker `i % crew` — the
+    /// same deterministic mapping every serve uses), so the
+    /// kernel-visible pages of the generated structure are
+    /// first-touch-placed on that worker's NUMA node. The walk is a
+    /// zero-operand `spmv_range` into scratch output, split by exactly
+    /// the nnz-balanced ranges of the serving drivers.
+    ///
+    /// A no-op for serial/tiled plans, for formats whose parallel
+    /// drivers own a scatter split instead of the contiguous range
+    /// kernels ([`SparseOps::has_range_kernels`]), and whenever the
+    /// balance collapses to one range. Callers gate on
+    /// `runtime::topology::numa_active()` — on a single-node machine
+    /// the pass is placement-neutral (the engine skips it to keep
+    /// prepare latency flat). Idempotent and side-effect-free on the
+    /// structure itself: results stay bit-identical (pinned by tests).
+    pub fn first_touch(&self) {
+        let threads = match self.plan.schedule {
+            Schedule::Parallel { threads } => threads,
+            Schedule::ParallelTiled { threads, .. } => threads,
+            _ => return,
+        };
+        if !self.ops.has_range_kernels() {
+            return;
+        }
+        let ops = &*self.ops;
+        let ranges =
+            par::balanced_ranges(ops.par_units(), threads, |u| ops.unit_weight_prefix(u));
+        if ranges.len() <= 1 {
+            return;
+        }
+        let t = self.plan.traversal;
+        let x = vec![0.0; self.ncols.max(1)];
+        let mut y = vec![0.0; self.nrows];
+        let chunks = par::chunks_for(&mut y, &ranges, ops.rows_per_unit());
+        let mut tasks = Vec::with_capacity(ranges.len());
+        let xr: &[f64] = &x;
+        for (&(lo, hi), chunk) in ranges.iter().zip(chunks) {
+            tasks.push(move || ops.spmv_range(t, xr, chunk, lo, hi));
+        }
+        crate::util::pool::scoped_run(tasks);
+    }
+
     /// Run the generated SpMV under the plan's schedule (and vector
     /// width: `lanes > 1` plans — `lane_legal` admits them only under
     /// `Serial`/`Parallel` — route through the `kernels::simd`
@@ -550,6 +594,42 @@ mod tests {
             fresh.spmv(&x, &mut y_fresh);
             assert_eq!(y_shared, y_fresh, "{plan:?}: shared storage changed the result bits");
         }
+    }
+
+    /// The first-touch contract: the pass only *reads* the structure
+    /// and writes scratch, so results stay bit-identical to an
+    /// untouched prepare — on every legal plan, including the formats
+    /// that skip it (no range kernels) and serial plans (no-op).
+    #[test]
+    fn first_touch_is_result_neutral() {
+        let m = gen::powerlaw(48, 2.0, 24, 72);
+        let x: Vec<f64> = (0..48).map(|i| (i as f64 * 0.13).cos() + 0.2).collect();
+        let schedules = [
+            Schedule::Serial,
+            Schedule::Parallel { threads: 3 },
+            Schedule::ParallelTiled { threads: 3, x_block: 16 },
+        ];
+        let mut parallel_touched = 0;
+        for base in all_spmv_plans() {
+            for sch in schedules {
+                let plan = base.with_schedule(sch);
+                if !supports(&plan, Kernel::Spmv) {
+                    continue;
+                }
+                let touched = prepare(plan, &m);
+                touched.first_touch();
+                touched.first_touch(); // idempotent
+                if !matches!(sch, Schedule::Serial) && touched.ops.has_range_kernels() {
+                    parallel_touched += 1;
+                }
+                let fresh = prepare(plan, &m);
+                let (mut y_t, mut y_f) = (vec![0.0; 48], vec![0.0; 48]);
+                touched.spmv(&x, &mut y_t);
+                fresh.spmv(&x, &mut y_f);
+                assert_eq!(y_t, y_f, "{plan:?}: first_touch changed the result bits");
+            }
+        }
+        assert!(parallel_touched >= 4, "too few range-backed parallel plans: {parallel_touched}");
     }
 
     #[test]

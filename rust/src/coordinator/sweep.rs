@@ -72,12 +72,18 @@ impl Arch {
         matches!(self, Arch::HostLarge)
     }
 
-    /// Cost-model parameters of this architecture.
+    /// Cost-model parameters of this architecture. The socket count is
+    /// a structural knob taken from the machine actually running the
+    /// sweep (`runtime::topology`), not from the stand-in: it shapes
+    /// the `remote_bytes` feature, and charging phantom cross-socket
+    /// traffic on a single-node box would skew every parallel ranking.
     pub fn cost_params(&self) -> CostParams {
+        let sockets = crate::runtime::topology::sockets();
         match self {
-            Arch::HostSmall => CostParams::host_small(),
+            Arch::HostSmall => CostParams::host_small().with_sockets(sockets),
             Arch::HostLarge => {
                 CostParams::host_large(crate::util::pool::default_workers().clamp(2, 8))
+                    .with_sockets(sockets)
             }
         }
     }
@@ -618,6 +624,71 @@ fn json_num_array(items: &[f64]) -> String {
     format!("[{}]", nums.join(", "))
 }
 
+/// Measure and render the body of `bench_json`'s `pool` section: crew
+/// counters, a warm-spawn probe, crew-vs-spawning dispatch medians on
+/// a small chunked reduction, and the detected topology. The probe
+/// warms every worker first (one task per worker, so each lazy spawn
+/// happens before counting starts); `warm_spawns` is then the spawn
+/// delta across a 15-batch warm loop — 0 unless a worker died, which
+/// outside an armed `pool.worker` chaos drill never happens.
+fn pool_report() -> String {
+    use crate::util::pool;
+    let n = pool::workers();
+    let data: Vec<f64> = (0..4096).map(|i| (i % 97) as f64).collect();
+    let step = data.len() / n.max(1) + 1;
+    let expect: f64 = data.iter().sum();
+    let batch = |crew: bool| {
+        let mut acc = vec![0.0; n];
+        let mut tasks = Vec::with_capacity(n);
+        for (i, slot) in acc.iter_mut().enumerate() {
+            let chunk = &data[(i * step).min(data.len())..((i + 1) * step).min(data.len())];
+            tasks.push(move || *slot = chunk.iter().sum());
+        }
+        if crew {
+            pool::scoped_run(tasks);
+        } else {
+            pool::scoped_run_spawning(tasks);
+        }
+        let total: f64 = acc.iter().sum();
+        assert_eq!(total, expect, "pool probe lost a chunk");
+    };
+    let median = |crew: bool| {
+        let mut ts: Vec<f64> = (0..15)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                batch(crew);
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        ts[ts.len() / 2]
+    };
+    batch(true); // warm: every worker spawns before the counter is read
+    let spawns_before = pool::crew_spawns();
+    let crew_median = median(true);
+    let warm_spawns = pool::crew_spawns() - spawns_before;
+    let spawning_median = median(false);
+    let topo = crate::runtime::topology::detect();
+    let mut s = String::new();
+    s.push_str(&format!("    \"crew_size\": {},\n", pool::crew_size()));
+    s.push_str(&format!("    \"crew_spawns\": {},\n", pool::crew_spawns()));
+    s.push_str(&format!("    \"crew_respawns\": {},\n", pool::crew_respawns()));
+    s.push_str(&format!("    \"warm_spawns\": {},\n", warm_spawns));
+    s.push_str(&format!("    \"crew_median_secs\": {:e},\n", crew_median));
+    s.push_str(&format!("    \"spawning_median_secs\": {:e},\n", spawning_median));
+    s.push_str(&format!("    \"sockets\": {},\n", topo.sockets));
+    s.push_str(&format!("    \"cpus\": {},\n", topo.cpus.len()));
+    s.push_str(&format!(
+        "    \"pinning_active\": {},\n",
+        crate::runtime::topology::pinning_active()
+    ));
+    s.push_str(&format!(
+        "    \"cache_evictions\": {}\n",
+        crate::engine::Engine::cache_evictions()
+    ));
+    s
+}
+
 /// Render the machine-trackable perf record (`BENCH_spmv.json`) from a
 /// schedule-extended sweep: median seconds per generated plan × matrix,
 /// a per-matrix serial-best vs best-overall summary, the predicted-vs-
@@ -778,6 +849,18 @@ pub fn bench_json(scheduled: &SweepResult) -> String {
         })
         .collect();
     out.push_str(&format!("    \"planner_lane_choice\": [\n{}\n    ]\n", lane_choice.join(",\n")));
+    out.push_str("  },\n");
+
+    // The worker-crew audit: the serving-path invariant is that a
+    // warmed crew runs repeated parallel batches with zero new threads
+    // (`warm_spawns` — the CI planner guard pins it at 0), and that
+    // parked-crew dispatch is no slower than the spawn-per-call path
+    // it replaced (`crew_median_secs` vs `spawning_median_secs`, same
+    // reduction, same task count). Topology and eviction counters ride
+    // along so one record answers "what machine, what placement, did
+    // the compile cache churn".
+    out.push_str("  \"pool\": {\n");
+    out.push_str(&pool_report());
     out.push_str("  },\n");
 
     let serial_best = scheduled.gens.best_per_matrix(Some(&serial_idx));
@@ -1028,6 +1111,17 @@ mod tests {
         assert!(js.contains("\"scalar_vs_wide\""));
         assert!(js.contains("\"planner_lane_choice\""));
         assert!(js.contains("\"lanes\""));
+        // the worker-crew audit: a warmed crew serves with zero spawns
+        // (workers only die at the chaos drill's armed pool.worker
+        // point, which runs in its own process — never here)
+        assert!(js.contains("\"pool\""));
+        assert!(js.contains("\"crew_size\""));
+        assert!(js.contains("\"warm_spawns\": 0,"));
+        assert!(js.contains("\"crew_median_secs\""));
+        assert!(js.contains("\"spawning_median_secs\""));
+        assert!(js.contains("\"sockets\""));
+        assert!(js.contains("\"pinning_active\""));
+        assert!(js.contains("\"cache_evictions\""));
         // crude structural balance check
         let opens = js.matches('{').count();
         let closes = js.matches('}').count();

@@ -6,12 +6,29 @@
 //! its storage — the ranked weight vector (so loading a new tuning
 //! profile cold-starts the cache instead of serving stale plans), the
 //! vector register width (a wider unit can flip the winning lane
-//! count), the schedule axis, the SpMM dense width, the autotune
-//! depth, and a pinned plan id if any. Entries hold the `Arc`-shared `Compiled`
-//! (plan + storage), so a hit is a pointer clone: repeated compiles of
-//! the same matrix are free. This layers *above*
+//! count), the structural socket count (a NUMA box prices plans
+//! differently), the schedule axis, the SpMM dense width, the autotune
+//! depth, and a pinned plan id if any. Entries hold the `Arc`-shared
+//! `Compiled` (plan + storage), so a hit is a pointer clone: repeated
+//! compiles of the same matrix are free. This layers *above*
 //! `concretize::prepare_many`'s plan-keyed storage cache, which
 //! de-duplicates storage *within* one compile's shortlist.
+//!
+//! # Eviction
+//!
+//! The cache is bounded by a byte budget (`EngineBuilder::cache_budget`,
+//! default [`DEFAULT_BUDGET`]): each entry is charged its generated
+//! data structure's footprint (`Prepared::bytes`), and inserting past
+//! the budget evicts least-recently-used entries until the total fits
+//! again. The newest entry is never evicted — a single matrix larger
+//! than the budget still serves from cache rather than recompiling on
+//! every call. Recency is a logical clock bumped on every hit, so the
+//! hot working set survives a sweep over many cold matrices. Evictions
+//! are counted process-wide ([`evictions`]) and surfaced through
+//! `Executable::explain()` and the bench-json `pool` section. The
+//! budget is a liveness knob, not a plan input, so it stays *out* of
+//! the config digest (the `measure_timeout` precedent): two engines
+//! differing only in budget share entries.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -20,6 +37,12 @@ use crate::baselines::Kernel;
 use crate::search::cost::CostParams;
 
 use super::executable::Compiled;
+
+/// Default cache budget: generous enough that eviction never triggers
+/// in ordinary serving (the sweeps' largest prepared structures are
+/// tens of MB), small enough to bound a long-lived host that compiles
+/// an unbounded stream of distinct matrices.
+pub const DEFAULT_BUDGET: usize = 1 << 30; // 1 GiB
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub(crate) struct Key {
@@ -49,6 +72,7 @@ pub(crate) fn config_digest(
     h.eat_u64(params.l2_bytes.to_bits());
     h.eat_u64(params.threads as u64);
     h.eat_u64(params.vector_bytes.to_bits());
+    h.eat_u64(params.sockets as u64);
     for w in &params.weights {
         h.eat_u64(w.to_bits());
     }
@@ -61,32 +85,118 @@ pub(crate) fn config_digest(
     h.finish()
 }
 
-fn cache() -> &'static Mutex<HashMap<Key, Arc<Compiled>>> {
-    static CACHE: OnceLock<Mutex<HashMap<Key, Arc<Compiled>>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+struct Entry {
+    compiled: Arc<Compiled>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Store {
+    map: HashMap<Key, Entry>,
+    /// Logical recency clock — bumped on every lookup hit and insert.
+    clock: u64,
+    /// Sum of `Entry::bytes` currently held.
+    bytes: usize,
+    /// Byte budget applied by the most recent insert (engines configure
+    /// it per-build; last writer wins, which is fine — the budget is a
+    /// liveness bound, not a correctness input).
+    budget: usize,
+    /// Monotonic eviction count (survives `clear`).
+    evictions: u64,
+}
+
+impl Store {
+    fn new() -> Self {
+        Store {
+            map: HashMap::new(),
+            clock: 0,
+            bytes: 0,
+            budget: DEFAULT_BUDGET,
+            evictions: 0,
+        }
+    }
+
+    fn lookup(&mut self, key: &Key) -> Option<Arc<Compiled>> {
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.map.get_mut(key)?;
+        e.last_used = clock;
+        Some(Arc::clone(&e.compiled))
+    }
+
+    /// Insert `bytes`-sized entry under `budget`, evicting LRU entries
+    /// (never the one just inserted) until the total footprint fits.
+    fn insert(&mut self, key: Key, compiled: Arc<Compiled>, bytes: usize, budget: usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        self.budget = budget.max(1);
+        let bytes = bytes.max(1);
+        if let Some(old) = self.map.insert(key, Entry { compiled, bytes, last_used: clock }) {
+            self.bytes -= old.bytes;
+        }
+        self.bytes += bytes;
+        while self.bytes > self.budget {
+            let victim = self
+                .map
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    if let Some(e) = self.map.remove(&k) {
+                        self.bytes -= e.bytes;
+                        self.evictions += 1;
+                    }
+                }
+                None => break, // only the new entry remains — keep it
+            }
+        }
+    }
+}
+
+fn store() -> &'static Mutex<Store> {
+    static CACHE: OnceLock<Mutex<Store>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(Store::new()))
 }
 
 /// Lock the cache, recovering from poison: single-call map updates
 /// leave it consistent even if a holder panicked, and the serving path
 /// must not turn one past panic into a permanent compile failure.
-fn locked() -> std::sync::MutexGuard<'static, HashMap<Key, Arc<Compiled>>> {
-    cache().lock().unwrap_or_else(|p| p.into_inner())
+fn locked() -> std::sync::MutexGuard<'static, Store> {
+    store().lock().unwrap_or_else(|p| p.into_inner())
 }
 
 pub(crate) fn lookup(key: &Key) -> Option<Arc<Compiled>> {
-    locked().get(key).cloned()
+    locked().lookup(key)
 }
 
-pub(crate) fn insert(key: Key, compiled: Arc<Compiled>) {
-    locked().insert(key, compiled);
+/// Insert under `budget` bytes (the entry is charged its generated
+/// data structure's footprint), evicting LRU entries until it fits.
+pub(crate) fn insert(key: Key, compiled: Arc<Compiled>, budget: usize) {
+    let bytes = compiled.prepared.bytes();
+    locked().insert(key, compiled, bytes, budget);
 }
 
 pub(crate) fn clear() {
-    locked().clear();
+    let mut s = locked();
+    s.map.clear();
+    s.bytes = 0;
 }
 
 pub(crate) fn len() -> usize {
-    locked().len()
+    locked().map.len()
+}
+
+/// Total bytes of generated data structures currently cached.
+pub(crate) fn bytes() -> usize {
+    locked().bytes
+}
+
+/// Process-wide monotonic count of budget evictions (monotonic across
+/// `clear`, like the crew spawn counters — report deltas).
+pub(crate) fn evictions() -> u64 {
+    locked().evictions
 }
 
 #[cfg(test)]
@@ -117,6 +227,10 @@ mod tests {
         let mut wide = seed;
         wide.vector_bytes = 64.0;
         assert_ne!(base, config_digest(&wide, true, 100, 0, None), "vector width");
+        // And the socket count: a NUMA machine prices parallel plans
+        // differently, so plans compiled single-node must not serve it.
+        let numa = seed.with_sockets(2);
+        assert_ne!(base, config_digest(&numa, true, 100, 0, None), "sockets");
     }
 
     #[test]
@@ -127,5 +241,63 @@ mod tests {
         assert_ne!(a, Key::new(Kernel::Spmm, "host-small", 1, d));
         assert_ne!(a, Key::new(Kernel::Spmv, "host-large", 1, d));
         assert_ne!(a, Key::new(Kernel::Spmv, "host-small", 2, d));
+    }
+
+    fn dummy_compiled() -> Arc<Compiled> {
+        let mut m = crate::matrix::TriMat::new(2, 2);
+        m.push(0, 0, 1.0);
+        m.push(1, 1, 2.0);
+        let space = crate::search::plan::PlanSpace::serial_only();
+        let plan = crate::search::tree::enumerate(Kernel::Spmv, &space).plans[0].clone();
+        let prepared = Arc::new(crate::concretize::prepare(plan.exec, &m));
+        Arc::new(Compiled {
+            plan,
+            prepared,
+            stats: crate::matrix::MatrixStats::of(&m),
+            params: CostParams::host_small(),
+            features: crate::search::cost::FeatureVec::zero(),
+            predicted_secs: 1e-6,
+            measured_secs: None,
+            profile_loaded: false,
+            health: crate::engine::Health::Calibrated,
+        })
+    }
+
+    /// LRU semantics on a *local* store (the global one is shared by
+    /// every concurrently running test — exercising tiny budgets there
+    /// would evict entries other tests assert Arc-sharing on).
+    #[test]
+    fn lru_eviction_respects_budget_and_recency() {
+        let mut s = Store::new();
+        let c = dummy_compiled();
+        let key = |f: u64| Key::new(Kernel::Spmv, "test-arch", f, 0);
+        s.insert(key(1), Arc::clone(&c), 100, 250);
+        s.insert(key(2), Arc::clone(&c), 100, 250);
+        assert_eq!(s.map.len(), 2);
+        assert_eq!(s.bytes, 200);
+        assert_eq!(s.evictions, 0);
+        // Touch 1 so 2 becomes least-recently-used, then overflow.
+        assert!(s.lookup(&key(1)).is_some());
+        s.insert(key(3), Arc::clone(&c), 100, 250);
+        assert_eq!(s.map.len(), 2);
+        assert_eq!(s.evictions, 1);
+        assert!(s.lookup(&key(2)).is_none(), "the LRU entry is the one evicted");
+        assert!(s.lookup(&key(1)).is_some());
+        assert!(s.lookup(&key(3)).is_some());
+        // An entry larger than the whole budget still lands (the
+        // newest entry is never evicted) but displaces everything else.
+        s.insert(key(4), Arc::clone(&c), 10_000, 250);
+        assert_eq!(s.map.len(), 1);
+        assert_eq!(s.evictions, 3);
+        assert!(s.lookup(&key(4)).is_some());
+        // Replacing a key does not double-charge its bytes.
+        s.insert(key(4), Arc::clone(&c), 10_000, 250);
+        assert_eq!(s.bytes, 10_000);
+        assert_eq!(s.map.len(), 1);
+        assert_eq!(s.evictions, 3);
+        // A zero-byte entry is still charged one byte (bookkeeping
+        // stays consistent for empty prepared storage).
+        s.insert(key(5), Arc::clone(&c), 0, usize::MAX);
+        assert_eq!(s.bytes, 10_001);
     }
 }

@@ -207,6 +207,7 @@ impl Executable {
             bytes: self.bytes(),
             profile_loaded: c.profile_loaded,
             health: c.health,
+            cache_evictions: super::cache::evictions(),
             terms,
         }
     }
@@ -260,6 +261,10 @@ pub struct CostBreakdown {
     pub profile_loaded: bool,
     /// The degradation-ladder rung the compile landed on.
     pub health: Health,
+    /// Process-wide compile-cache budget evictions at explain time
+    /// (monotonic since process start — hosts watch the delta to spot
+    /// a cache churning under its `EngineBuilder::cache_budget`).
+    pub cache_evictions: u64,
     pub terms: Vec<CostTerm>,
 }
 
@@ -292,6 +297,9 @@ impl fmt::Display for CostBreakdown {
         write!(f, "  predicted {:.3} us", self.predicted_secs * 1e6)?;
         if let Some(m) = self.measured_secs {
             write!(f, ", measured {:.3} us (autotuned)", m * 1e6)?;
+        }
+        if self.cache_evictions > 0 {
+            write!(f, " [cache evictions: {}]", self.cache_evictions)?;
         }
         writeln!(f)
     }

@@ -23,9 +23,16 @@
 //! `(kernel, arch, matrix fingerprint, config digest)`: the second
 //! `compile` of the same reservoir returns the same `Arc`-shared
 //! storage without touching the planner — the repeated-traffic serving
-//! path. Within a single compile, the autotune shortlist is prepared
+//! path. The cache is bounded by a byte budget
+//! ([`EngineBuilder::cache_budget`], default 1 GiB) with LRU eviction,
+//! so a host compiling an unbounded stream of matrices stays bounded.
+//! Within a single compile, the autotune shortlist is prepared
 //! through `concretize::prepare_many`'s plan-keyed storage cache, so
 //! schedule/traversal variants of one layout share one assembly.
+//! Parallel execution — both the prepare fan-out and every parallel
+//! kernel — runs on the process-wide persistent worker crew
+//! (`util::pool`): workers are spawned once and parked between calls,
+//! so the warm serving path performs zero thread spawns.
 //!
 //! # Degradation ladder
 //!
@@ -134,6 +141,7 @@ pub struct EngineBuilder {
     archive: bool,
     bench: BenchConfig,
     measure_timeout: Duration,
+    cache_budget: usize,
 }
 
 impl Default for EngineBuilder {
@@ -147,6 +155,7 @@ impl Default for EngineBuilder {
             archive: true,
             bench: BenchConfig::quick(),
             measure_timeout: Duration::from_secs(5),
+            cache_budget: cache::DEFAULT_BUDGET,
         }
     }
 }
@@ -213,6 +222,19 @@ impl EngineBuilder {
     /// the plan space.
     pub fn measure_timeout(mut self, timeout: Duration) -> Self {
         self.measure_timeout = timeout;
+        self
+    }
+
+    /// Byte budget of the process-wide compile cache (default 1 GiB):
+    /// each cached compile is charged its generated data structure's
+    /// footprint, and inserting past the budget evicts
+    /// least-recently-used entries (counted — see
+    /// [`Engine::cache_evictions`]). Like the measurement watchdog this
+    /// is a liveness bound, not a plan input, so it is *not* part of
+    /// the cache digest: two engines differing only in budget share
+    /// entries.
+    pub fn cache_budget(mut self, bytes: usize) -> Self {
+        self.cache_budget = bytes.max(1);
         self
     }
 
@@ -389,6 +411,19 @@ impl Engine {
         cache::len()
     }
 
+    /// Total bytes of generated data structures currently cached
+    /// process-wide (the quantity [`EngineBuilder::cache_budget`]
+    /// bounds).
+    pub fn cache_bytes() -> usize {
+        cache::bytes()
+    }
+
+    /// Process-wide count of compile-cache budget evictions since
+    /// process start (monotonic — long-running hosts watch the delta).
+    pub fn cache_evictions() -> u64 {
+        cache::evictions()
+    }
+
     /// Number of `(matrix fingerprint, plan id)` pairs quarantined
     /// process-wide after a panicking or hung preparation/measurement.
     pub fn quarantine_len() -> usize {
@@ -539,7 +574,7 @@ impl Engine {
         // cached: with the faulty candidates quarantined, the next
         // compile of this matrix can climb back up the ladder.
         if health <= Health::SeedWeights {
-            cache::insert(key, Arc::clone(&compiled));
+            cache::insert(key, Arc::clone(&compiled), self.cfg.cache_budget);
         }
         Executable::new(kernel, self.cfg.spmm_k, compiled)
     }
@@ -560,10 +595,19 @@ impl Engine {
         // Schedule auxiliaries (band splits, TrSv level sets) are part
         // of the generated data structure — built at compile time, not
         // on the first serve (and never inside a timed region).
-        let ensure = |p: &concretize::Prepared| match kernel {
-            Kernel::Spmv => p.ensure_bands(),
-            Kernel::Trsv => p.ensure_levels(),
-            Kernel::Spmm => {}
+        let ensure = |p: &concretize::Prepared| {
+            match kernel {
+                Kernel::Spmv => p.ensure_bands(),
+                Kernel::Trsv => p.ensure_levels(),
+                Kernel::Spmm => {}
+            }
+            // On a NUMA machine with pinning live, walk each parallel
+            // partition range on the crew worker that will serve it, so
+            // the kernel-visible pages are first-touch-placed on that
+            // worker's node. A no-op everywhere else.
+            if crate::runtime::topology::numa_active() {
+                p.first_touch();
+            }
         };
         let batch = catch_unwind(AssertUnwindSafe(|| {
             crate::faultpoint!("engine.prepare");

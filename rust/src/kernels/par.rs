@@ -14,15 +14,21 @@
 //! row splits built at `prepare()` time (`storage::CsrBands`), so the
 //! randomly-gathered part of the working set stays L2-resident.
 //!
-//! Workers are scoped `std::thread`s spawned per invocation (no
-//! persistent pool — tokio/rayon are unavailable offline), so every
-//! call pays spawn+join latency (~tens of µs). That cost is *part of
-//! the schedule's measured time on purpose*: on small matrices the
+//! Workers come from the process-wide **persistent crew**
+//! (`util::pool::scoped_run`): std-only threads spawned once and
+//! parked on condvars between calls (tokio/rayon are unavailable
+//! offline), so a warm invocation pays a wake+dispatch handshake
+//! (~single-digit µs) instead of per-call spawn+join (~tens of µs).
+//! Task `i` always lands on worker `i % crew` — the deterministic
+//! mapping the NUMA first-touch pass relies on: the worker that
+//! touched a partition's pages at prepare time is the worker that
+//! serves it. The remaining dispatch cost is still *part of the
+//! schedule's measured time on purpose*: on small matrices the
 //! parallel variants genuinely lose to `Serial`, and the search sees
 //! exactly that and selects per-matrix — the same
 //! let-the-measurements-decide philosophy the paper applies to
 //! layouts. The ≥2× CSR speedup target applies to the large suite
-//! matrices, where spawn cost is noise.
+//! matrices, where dispatch cost is noise.
 
 use crate::storage::{Bcsr, Csr, CsrBands, Ell, Jds, Sell};
 use crate::util::pool::scoped_run;

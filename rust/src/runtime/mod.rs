@@ -12,6 +12,7 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod artifacts;
+pub mod topology;
 
 #[cfg(feature = "xla")]
 pub mod xla_exec;

@@ -1,0 +1,231 @@
+//! Machine topology for the worker crew: NUMA node discovery and
+//! worker→CPU pinning.
+//!
+//! Discovery parses `/sys/devices/system/node/node*/cpulist` (Linux);
+//! on any other platform — or when sysfs is unreadable — it degrades
+//! to a single node spanning the machine's available parallelism, so
+//! every consumer sees a well-formed topology. Detection runs once per
+//! process and is *always* compiled: the planner's structural
+//! `sockets` knob (`search::cost::CostParams`) reads the detected node
+//! count regardless of build flavor, because cross-socket traffic is a
+//! property of the machine, not of whether pinning is enabled.
+//!
+//! Pinning is the `numa` cargo feature (same zero-dependency precedent
+//! as `simd`): on Linux it issues a raw `sched_setaffinity` syscall
+//! binding crew worker `i` to CPU `cpus[i % cpus.len()]` of the
+//! node-major CPU list. Without the feature (or off Linux)
+//! [`pin_worker`] is a no-op returning `false`. The worker→CPU map is
+//! deterministic, which is what lets the first-touch pass
+//! (`concretize::exec::Prepared::first_touch`) guarantee the worker
+//! that touches a partition range is the worker that serves it.
+
+use std::sync::OnceLock;
+
+/// The detected machine topology (one instance per process).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// NUMA nodes with at least one CPU; 1 on single-node machines and
+    /// wherever sysfs is unavailable.
+    pub sockets: usize,
+    /// Online CPU ids in node-major order: node 0's CPUs first, then
+    /// node 1's, … — crew worker `i` maps to `cpus[i % cpus.len()]`.
+    pub cpus: Vec<usize>,
+}
+
+/// Detect (once) and return the machine topology.
+pub fn detect() -> &'static Topology {
+    static TOPO: OnceLock<Topology> = OnceLock::new();
+    TOPO.get_or_init(|| from_nodes(read_sysfs_nodes()))
+}
+
+/// Detected NUMA node count (≥ 1).
+pub fn sockets() -> usize {
+    detect().sockets
+}
+
+/// Whether this build pins crew workers (`numa` feature on Linux).
+pub fn pinning_active() -> bool {
+    cfg!(all(feature = "numa", target_os = "linux"))
+}
+
+/// Whether the NUMA placement layer is live: pinning compiled in *and*
+/// more than one node detected. Gates the engine's first-touch pass —
+/// on a single-node box the pass would only add prepare latency.
+pub fn numa_active() -> bool {
+    pinning_active() && sockets() > 1
+}
+
+/// CPU assigned to crew worker `idx` (deterministic round-robin over
+/// the node-major CPU list).
+pub fn cpu_for_worker(idx: usize) -> Option<usize> {
+    let t = detect();
+    if t.cpus.is_empty() {
+        None
+    } else {
+        Some(t.cpus[idx % t.cpus.len()])
+    }
+}
+
+/// Pin the calling thread to crew worker `idx`'s CPU. Returns whether
+/// a pin was applied — always `false` without the `numa` feature or
+/// off Linux, and best-effort on it (a failed syscall leaves the
+/// thread unpinned rather than failing the caller).
+pub fn pin_worker(idx: usize) -> bool {
+    #[cfg(all(feature = "numa", target_os = "linux"))]
+    {
+        match cpu_for_worker(idx) {
+            Some(cpu) => affinity::pin(cpu),
+            None => false,
+        }
+    }
+    #[cfg(not(all(feature = "numa", target_os = "linux")))]
+    {
+        let _ = idx;
+        false
+    }
+}
+
+/// Raw `sched_setaffinity` binding — declared directly (libc is always
+/// linked; the crate stays dependency-free).
+#[cfg(all(feature = "numa", target_os = "linux"))]
+mod affinity {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+
+    /// Bind the calling thread (pid 0) to a single CPU. The fixed
+    /// 1024-bit mask matches glibc's `cpu_set_t`.
+    pub fn pin(cpu: usize) -> bool {
+        const WORDS: usize = 16;
+        if cpu >= WORDS * 64 {
+            return false;
+        }
+        let mut mask = [0u64; WORDS];
+        mask[cpu / 64] |= 1u64 << (cpu % 64);
+        unsafe { sched_setaffinity(0, std::mem::size_of::<[u64; WORDS]>(), mask.as_ptr()) == 0 }
+    }
+}
+
+/// Build a topology from parsed sysfs nodes, falling back to a single
+/// node over the machine's available parallelism.
+fn from_nodes(nodes: Option<Vec<Vec<usize>>>) -> Topology {
+    match nodes {
+        Some(nodes) if !nodes.is_empty() => Topology {
+            sockets: nodes.len(),
+            cpus: nodes.into_iter().flatten().collect(),
+        },
+        _ => {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            Topology { sockets: 1, cpus: (0..n).collect() }
+        }
+    }
+}
+
+/// Per-node CPU lists from `/sys/devices/system/node`, `None` when the
+/// directory or any node's `cpulist` is unreadable (non-Linux, sysfs
+/// masked in a container, …).
+fn read_sysfs_nodes() -> Option<Vec<Vec<usize>>> {
+    let dir = std::fs::read_dir("/sys/devices/system/node").ok()?;
+    let mut ids: Vec<usize> = dir
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name().into_string().ok()?;
+            name.strip_prefix("node")?.parse::<usize>().ok()
+        })
+        .collect();
+    ids.sort_unstable();
+    let mut nodes = Vec::new();
+    for id in ids {
+        let path = format!("/sys/devices/system/node/node{id}/cpulist");
+        let list = std::fs::read_to_string(path).ok()?;
+        let cpus = parse_cpulist(list.trim());
+        if !cpus.is_empty() {
+            nodes.push(cpus);
+        }
+    }
+    Some(nodes)
+}
+
+/// Parse a kernel cpulist (`"0-3,8,10-11"`) into CPU ids. Malformed
+/// fragments are skipped; ranges are bounded so a corrupt file cannot
+/// allocate unboundedly.
+fn parse_cpulist(s: &str) -> Vec<usize> {
+    const MAX_RANGE: usize = 4096;
+    let mut cpus = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                if a <= b && b - a < MAX_RANGE {
+                    cpus.extend(a..=b);
+                }
+            }
+        } else if let Ok(v) = part.parse::<usize>() {
+            cpus.push(v);
+        }
+    }
+    cpus
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kernel_cpulists() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,4,6-7"), vec![0, 1, 4, 6, 7]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist(" 2 , 9 - 10 "), vec![2, 9, 10]);
+        // Malformed fragments are skipped, not fatal.
+        assert_eq!(parse_cpulist("x,3,4-z"), vec![3]);
+        // Inverted and absurd ranges are rejected.
+        assert_eq!(parse_cpulist("7-3"), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("0-99999999"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn multi_node_topology_is_node_major() {
+        let t = from_nodes(Some(vec![vec![0, 1, 2, 3], vec![8, 9, 10, 11]]));
+        assert_eq!(t.sockets, 2);
+        assert_eq!(t.cpus, vec![0, 1, 2, 3, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn fallback_is_single_node() {
+        for nodes in [None, Some(Vec::new())] {
+            let t = from_nodes(nodes);
+            assert_eq!(t.sockets, 1);
+            assert!(!t.cpus.is_empty());
+            assert_eq!(t.cpus[0], 0);
+        }
+    }
+
+    #[test]
+    fn detected_topology_is_well_formed() {
+        // Whatever the host looks like: at least one node, at least one
+        // CPU, and a total worker mapping.
+        let t = detect();
+        assert!(t.sockets >= 1);
+        assert!(!t.cpus.is_empty());
+        assert!(sockets() >= 1);
+        for idx in [0usize, 1, 7, 63] {
+            assert!(cpu_for_worker(idx).is_some());
+        }
+    }
+
+    #[test]
+    fn numa_active_implies_pinning_and_nodes() {
+        if numa_active() {
+            assert!(pinning_active());
+            assert!(sockets() > 1);
+        }
+        // pin_worker never panics, whatever the build flavor.
+        let _ = pin_worker(0);
+    }
+}

@@ -252,6 +252,10 @@ impl Profile {
             // it; the structural register width is a property of the
             // ISA generation, not of the fit — AVX2's 32 bytes.
             vector_bytes: 32.0,
+            // Likewise structural: the socket count belongs to the
+            // machine serving the profile, not to the fit — the caller
+            // (engine/sweep) applies `runtime::topology::sockets()`.
+            sockets: crate::runtime::topology::sockets(),
             weights: self.weights,
         }
     }
@@ -453,7 +457,7 @@ mod tests {
     fn synth_samples(w_true: &[f64; N_FEATURES], n: usize, seed: u64) -> Vec<Sample> {
         let mut rng = Rng::new(seed);
         // Feature magnitudes spanning the real extractor's scales.
-        let mag = [1e6, 1e5, 1e6, 1e3, 8.0, 40.0, 1e5, 1e4];
+        let mag = [1e6, 1e5, 1e6, 1e3, 8.0, 40.0, 1e5, 1e4, 1e5];
         (0..n)
             .map(|i| {
                 let mut f = [0.0; N_FEATURES];
@@ -477,7 +481,7 @@ mod tests {
     /// recover it (within tolerance) — including the zero entries.
     #[test]
     fn nnls_recovers_planted_parameters() {
-        let w_true = [1.25e-10, 6.7e-10, 2.5e-10, 1.5e-9, 2.5e-5, 4e-7, 0.0, 3e-9];
+        let w_true = [1.25e-10, 6.7e-10, 2.5e-10, 1.5e-9, 2.5e-5, 4e-7, 0.0, 3e-9, 4.5e-11];
         let samples = synth_samples(&w_true, 60, 42);
         let seed = CostParams::host_small();
         let fitted = fit(&samples, &seed);
@@ -504,13 +508,14 @@ mod tests {
     fn absent_features_keep_seed_weights() {
         // Samples that never exercise spawns/syncs/imbalance (a
         // serial-only sweep): those columns must keep the seed values.
-        let w_true = [1.25e-10, 6.7e-10, 2.5e-10, 1.5e-9, 0.0, 0.0, 0.0, 0.0];
+        let w_true = [1.25e-10, 6.7e-10, 2.5e-10, 1.5e-9, 0.0, 0.0, 0.0, 0.0, 0.0];
         let mut samples = synth_samples(&w_true, 40, 7);
         for s in &mut samples {
             s.features[4] = 0.0;
             s.features[5] = 0.0;
             s.features[6] = 0.0;
             s.features[7] = 0.0;
+            s.features[8] = 0.0;
             s.measured_secs =
                 s.features.iter().zip(&w_true).map(|(a, b)| a * b).sum();
         }
@@ -520,6 +525,7 @@ mod tests {
         assert_eq!(fitted.weights[5], seed.weights[5]);
         assert_eq!(fitted.weights[6], seed.weights[6]);
         assert_eq!(fitted.weights[7], seed.weights[7], "scalar sweeps keep gather_lanes at seed");
+        assert_eq!(fitted.weights[8], seed.weights[8], "single-node sweeps keep remote_bytes at seed");
         assert!((fitted.weights[0] - w_true[0]).abs() / w_true[0] < 1e-4);
     }
 
@@ -534,9 +540,9 @@ mod tests {
         // Unconstrained LS on this system is exactly (a, b) = (−1, 4);
         // NNLS must land on the boundary optimum (0, 2) instead.
         let xs = vec![
-            [1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
-            [2.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
-            [3.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            [1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            [2.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            [3.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
         ];
         let y = vec![3.0, 2.0, 1.0];
         let w = nnls(&xs, &y, &[0.0; N_FEATURES]);
@@ -550,11 +556,11 @@ mod tests {
         let mk = |matrix: &str, plan: &str, f0: f64, measured: f64| Sample {
             matrix: matrix.into(),
             plan_id: plan.into(),
-            features: [f0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            features: [f0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
             measured_secs: measured,
             predicted_secs: f0,
         };
-        let w = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let w = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
         // m1: prediction order (a, b) matches measurement; m2 inverted.
         let samples = vec![
             mk("m1", "a", 1.0, 1.0),
@@ -564,7 +570,7 @@ mod tests {
         ];
         assert_eq!(top1_agreement(&samples, &w), (1, 2));
         // A weight vector that ranks b first everywhere: only m2 agrees.
-        let w2 = [-1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let w2 = [-1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
         assert_eq!(top1_agreement(&samples, &w2), (1, 2));
         // Merged archives: duplicate (matrix, plan) samples from two
         // bench records. Predicted picks the first copy of plan a,
@@ -599,6 +605,7 @@ mod tests {
                 3.0000000000000004e-7,
                 5.5e-13,
                 7.250000000000001e-12,
+                4.0999999999999997e-11,
             ],
             samples: 123,
         };
@@ -658,7 +665,7 @@ mod tests {
         let s = Sample {
             matrix: "Raj1 \"scaled\"".into(),
             plan_id: "csr.row.par4".into(),
-            features: [1.5e6, 2.5e4, 0.0, 1e3, 4.0, 0.0, 3.3e5, 1.2e4],
+            features: [1.5e6, 2.5e4, 0.0, 1e3, 4.0, 0.0, 3.3e5, 1.2e4, 2.1e5],
             measured_secs: 1.25e-4,
             predicted_secs: 1.5e-4,
         };

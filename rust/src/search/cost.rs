@@ -26,8 +26,9 @@
 //! Since the calibration refactor the model is *linear in its
 //! parameters*: [`features`] maps a plan + statistics to a fixed-order
 //! [`FeatureVec`] (streamed bytes, gathered bytes, flops, loop headers,
-//! spawn count, barrier-wave count, imbalance bytes, gather-lane ops)
-//! and the predicted time is the dot product with
+//! spawn count, barrier-wave count, imbalance bytes, gather-lane ops,
+//! cross-socket remote bytes) and the predicted time is the dot product
+//! with
 //! [`CostParams::weights`]. All
 //! nonlinearity — the L2 miss split, the memory/flop roofline, the
 //! effective parallel speedup — is resolved *inside the extractor*
@@ -47,7 +48,7 @@ use crate::matrix::MatrixStats;
 use crate::storage::CooOrder;
 
 /// Number of entries in a [`FeatureVec`] / weight vector.
-pub const N_FEATURES: usize = 8;
+pub const N_FEATURES: usize = 9;
 
 /// Fixed feature order — the contract between this extractor, the
 /// sample archive in `BENCH_*.json`, and `search::calibrate`'s fit.
@@ -63,6 +64,7 @@ pub const FEATURE_NAMES: [&str; N_FEATURES] = [
     "syncs",          // barrier waves × threads (level-scheduled TrSv)
     "imbalance_bytes", // row-cv-weighted parallel byte volume (seed weight 0)
     "gather_lanes",   // hardware gather ops of a wide plan (seed weight 0)
+    "remote_bytes",   // cross-socket share of parallel bytes (seed weight 0)
 ];
 
 pub const F_STREAM: usize = 0;
@@ -73,6 +75,7 @@ pub const F_SPAWNS: usize = 4;
 pub const F_SYNCS: usize = 5;
 pub const F_IMBALANCE: usize = 6;
 pub const F_GATHER_LANES: usize = 7;
+pub const F_REMOTE: usize = 8;
 
 /// A plan's footprint on one matrix in the fixed [`FEATURE_NAMES`]
 /// order. Predicted seconds = `dot(features, CostParams::weights)`.
@@ -113,6 +116,14 @@ pub struct CostParams {
     /// the effective lane count of a wide plan (`lanes ≤ vector_bytes /
     /// 8` f64 lanes actually retire per step). 32 = AVX2.
     pub vector_bytes: f64,
+    /// NUMA nodes the parallel bytes of a schedule are spread over
+    /// (structural — not fitted, like `vector_bytes`): with `S` sockets
+    /// a fraction `(S-1)/S` of a parallel schedule's byte traffic is
+    /// charged to the `remote_bytes` feature. 1 (the seed value and
+    /// every single-node machine) zeroes the feature exactly, so the
+    /// dimension is free until `runtime::topology` detects real nodes
+    /// *and* calibration fits it a nonzero price.
+    pub sockets: usize,
     /// The fitted coefficients, `FEATURE_NAMES` order.
     pub weights: [f64; N_FEATURES],
 }
@@ -136,6 +147,7 @@ impl CostParams {
             l2_bytes,
             threads: threads.max(1),
             vector_bytes: 32.0,
+            sockets: 1,
             weights: [
                 1.0 / stream_bw,
                 1.0 / gather_bw,
@@ -143,6 +155,7 @@ impl CostParams {
                 loop_overhead,
                 spawn_overhead,
                 sync_overhead,
+                0.0,
                 0.0,
                 0.0,
             ],
@@ -163,6 +176,14 @@ impl CostParams {
     /// returns — the structural shape is kept).
     pub fn with_weights(mut self, weights: [f64; N_FEATURES]) -> Self {
         self.weights = weights;
+        self
+    }
+
+    /// `self` with the structural socket count replaced (what the sweep
+    /// applies from `runtime::topology::sockets()` — never persisted,
+    /// never fitted).
+    pub fn with_sockets(mut self, sockets: usize) -> Self {
+        self.sockets = sockets.max(1);
         self
     }
 }
@@ -467,6 +488,7 @@ pub fn features(
             f[F_SYNCS] = stats.sync_waves as f64 * t as f64;
             f[F_IMBALANCE] = stats.row_cv() * (su + gu) * inv;
             f[F_GATHER_LANES] = lane_units * inv;
+            f[F_REMOTE] = remote_share(p) * (su + gu) * inv;
         }
         Schedule::Parallel { threads } | Schedule::ParallelTiled { threads, .. } => {
             let t = threads.max(1);
@@ -482,9 +504,22 @@ pub fn features(
             f[F_SPAWNS] = t as f64;
             f[F_IMBALANCE] = stats.row_cv() * (su + gu) * inv;
             f[F_GATHER_LANES] = lane_units * inv;
+            f[F_REMOTE] = remote_share(p) * (su + gu) * inv;
         }
     }
     FeatureVec(f)
+}
+
+/// Cross-socket fraction of a parallel schedule's byte traffic: with
+/// `S` NUMA nodes and node-major worker pinning, a uniformly spread
+/// partition reads `(S-1)/S` of its bytes from a remote node unless the
+/// first-touch pass placed the pages (the fitted weight decides how
+/// much that costs — and whether placement recovered it). Exactly zero
+/// on every single-node machine, so serial plans and single-socket CI
+/// carry a zero entry bit-identical to the pre-NUMA extractor.
+fn remote_share(p: &CostParams) -> f64 {
+    let s = p.sockets.max(1) as f64;
+    (s - 1.0) / s
 }
 
 /// Predict the execution time (seconds) of one invocation of `exec` on
@@ -754,21 +789,80 @@ mod tests {
         assert_eq!(p.weights[F_SYNCS], 4e-7);
         assert_eq!(p.weights[F_IMBALANCE], 0.0);
         assert_eq!(p.weights[F_GATHER_LANES], 0.0);
+        assert_eq!(p.weights[F_REMOTE], 0.0);
         assert_eq!(p.threads, 1);
         assert_eq!(p.vector_bytes, 32.0);
+        assert_eq!(p.sockets, 1, "seed machines are single-node");
         assert_eq!(FEATURE_NAMES.len(), N_FEATURES);
         let f = features(Kernel::Spmv, 1, &csr(), &MatrixStats::nominal(), &p);
         assert_eq!(f.0[F_SPAWNS], 0.0);
         assert_eq!(f.0[F_SYNCS], 0.0);
         assert_eq!(f.0[F_IMBALANCE], 0.0);
         assert_eq!(f.0[F_GATHER_LANES], 0.0, "scalar plans carry no lane term");
+        assert_eq!(f.0[F_REMOTE], 0.0, "serial plans carry no remote term");
         assert!(f.0[F_STREAM] > 0.0);
         // with_weights swaps the fitted half only.
-        let w2 = [1e-10, 1e-9, 1e-10, 1e-9, 1e-5, 1e-7, 1e-12, 1e-9];
+        let w2 = [1e-10, 1e-9, 1e-10, 1e-9, 1e-5, 1e-7, 1e-12, 1e-9, 1e-11];
         let q = p.with_weights(w2);
         assert_eq!(q.weights, w2);
         assert_eq!(q.l2_bytes, p.l2_bytes);
         assert_eq!(q.threads, p.threads);
+        assert_eq!(q.sockets, p.sockets);
+    }
+
+    /// The NUMA axis is priced the same way as the lane axis: a
+    /// structural `sockets` knob exposes the cross-socket byte share in
+    /// the appended `remote_bytes` entry with a zero seed weight, so
+    /// single-socket machines and serial plans are bit-identical to the
+    /// pre-NUMA extractor and only a calibration refit on a multi-node
+    /// box prices the traffic.
+    #[test]
+    fn remote_bytes_prices_cross_socket_traffic() {
+        let stats = MatrixStats::synthetic(400_000, 400_000, 40.0, 100.0, 80, 200_000);
+        let par = csr().with_schedule(Schedule::Parallel { threads: 8 });
+        let one = CostParams::host_large(8);
+        let two = CostParams::host_large(8).with_sockets(2);
+        // Single socket (and every serial plan): the entry stays zero.
+        assert_eq!(features(Kernel::Spmv, 1, &par, &stats, &one).0[F_REMOTE], 0.0);
+        assert_eq!(features(Kernel::Spmv, 1, &csr(), &stats, &two).0[F_REMOTE], 0.0);
+        // Two sockets: half the parallel byte volume is charged remote.
+        let f1 = features(Kernel::Spmv, 1, &par, &stats, &one);
+        let f2 = features(Kernel::Spmv, 1, &par, &stats, &two);
+        assert!(f2.0[F_REMOTE] > 0.0);
+        // Half the parallel byte volume, up to f64 re-association.
+        let expect = 0.5 * (f2.0[F_STREAM] + f2.0[F_GATHER]);
+        assert!((f2.0[F_REMOTE] - expect).abs() <= 1e-12 * expect);
+        // All other entries are untouched by the socket count…
+        for i in 0..N_FEATURES {
+            if i != F_REMOTE {
+                assert_eq!(f1.0[i], f2.0[i], "feature {i} must not depend on sockets");
+            }
+        }
+        // …so under the zero seed weight predictions are bit-identical,
+        assert_eq!(
+            predict(Kernel::Spmv, 1, &par, &stats, &one),
+            predict(Kernel::Spmv, 1, &par, &stats, &two),
+        );
+        // and a fitted remote price can demote a parallel plan.
+        let mut w = two.weights;
+        w[F_REMOTE] = 1e-8;
+        let fitted = two.with_weights(w);
+        assert!(
+            predict(Kernel::Spmv, 1, &par, &stats, &fitted)
+                > predict(Kernel::Spmv, 1, &par, &stats, &two),
+            "a fitted remote-byte penalty must be able to demote parallel plans"
+        );
+        // The level-scheduled TrSv arm carries the term too.
+        let tri = MatrixStats::synthetic(50_000, 50_000, 6.0, 2.0, 10, 25_000)
+            .with_dep_levels(100);
+        let ft = features(Kernel::Trsv, 1, &par, &tri, &two);
+        let expect = 0.5 * (ft.0[F_STREAM] + ft.0[F_GATHER]);
+        assert!((ft.0[F_REMOTE] - expect).abs() <= 1e-12 * expect);
+        assert!(with_sockets_is_clamped());
+    }
+
+    fn with_sockets_is_clamped() -> bool {
+        CostParams::host_small().with_sockets(0).sockets == 1
     }
 
     /// The lane axis is priced: a wide plan keeps its byte features,

@@ -99,6 +99,17 @@ pub trait SparseOps: Send + Sync {
         u
     }
 
+    /// Whether the contiguous range kernels
+    /// ([`spmv_range`](SparseOps::spmv_range) /
+    /// [`spmm_range`](SparseOps::spmm_range)) back this format's
+    /// `par_units` split. Formats that expose units but own
+    /// scatter-style parallel drivers (JDS, ELL) return `false`, so
+    /// generic range-walking passes — the NUMA first-touch re-walk —
+    /// skip them instead of hitting the panicking defaults.
+    fn has_range_kernels(&self) -> bool {
+        true
+    }
+
     /// SpMV over units `[u0, u1)`, writing into the chunk of `y` that
     /// starts at row `u0 * rows_per_unit()`.
     fn spmv_range(&self, _t: Traversal, _x: &[f64], _y: &mut [f64], _u0: usize, _u1: usize) {
@@ -553,6 +564,9 @@ impl SparseOps for Ell {
     fn par_units(&self) -> usize {
         self.nrows
     }
+    fn has_range_kernels(&self) -> bool {
+        false // the dedicated prefix-building drivers own the split
+    }
     // The row-length prefix is O(nrows) to recompute; the dedicated
     // driver builds it once per call instead of per balance probe.
     fn spmv_parallel(&self, t: Traversal, x: &[f64], y: &mut [f64], threads: usize) {
@@ -627,6 +641,9 @@ impl SparseOps for JdsOps {
         } else {
             0
         }
+    }
+    fn has_range_kernels(&self) -> bool {
+        false // the scatter drivers below own the split
     }
     // Permuted JDS accumulates into the permuted output and scatters
     // through `perm` once at the end — not a plain output split, so the

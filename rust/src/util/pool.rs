@@ -1,16 +1,364 @@
-//! A minimal scoped worker pool built on `std::thread` (tokio is not
-//! available offline). The coordinator uses it to build per-(variant ×
-//! matrix) data structures in parallel, and the `Schedule::Parallel`
-//! generated kernels use [`scoped_run`] to execute disjoint row-range
-//! tasks; paper-protocol *measurements* of `Serial` plans are always
-//! taken single-threaded on the calling thread.
+//! The persistent worker crew built on `std::thread` (tokio/rayon are
+//! not available offline). Workers are spawned **once per process**,
+//! parked on per-worker queues between calls, optionally pinned to
+//! cores (`runtime::topology`, `numa` feature), and reused by
+//! [`parallel_map`] and [`scoped_run`] — the executors behind the
+//! coordinator's build parallelism and every `Schedule::Parallel`
+//! generated kernel — so the warm serving path performs **zero**
+//! thread spawns. Paper-protocol *measurements* of `Serial` plans are
+//! still taken single-threaded on the calling thread.
+//!
+//! # Dispatch contract
+//!
+//! [`scoped_run`] hands task `i` to crew worker `i % crew_size()`,
+//! deterministically. The `Schedule::Parallel` drivers and the
+//! first-touch pass (`concretize::exec::Prepared::first_touch`) build
+//! their task lists from the same nnz-balanced partition ranges, so
+//! the worker that first touches a range is the worker that later
+//! executes it — the property the NUMA placement layer rests on.
+//!
+//! # Lifetimes, panics, worker death
+//!
+//! Submitted tasks may borrow the caller's stack (the kernels pass
+//! disjoint `&mut` output chunks): the submitter blocks until every
+//! task in its batch has run *or been dropped*, which is what makes
+//! the internal lifetime erasure sound. A panic inside a task is
+//! caught on the worker, carried back through the batch, and re-raised
+//! on the submitting thread — the same semantics `std::thread::scope`
+//! gave the previous per-call implementation. Workers themselves only
+//! die at the `pool.worker` chaos fault point (or an internal bug):
+//! batch accounting is tied to `Job::drop`, so a dying worker poisons
+//! and completes the batches it was holding instead of stranding their
+//! submitters, and the next submission to the dead slot respawns the
+//! worker ([`crew_respawns`] counts these).
 
+use std::any::Any;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Run `f(i)` for every `i in 0..n` across up to `workers` threads and
-/// collect results in index order.
+// ------------------------------------------------------------ sizing
+
+/// Crew size, decided once per process: the `FORELEM_THREADS` env
+/// override (CI and the chaos harness pin it for determinism) or the
+/// machine's available parallelism.
+pub fn workers() -> usize {
+    static WORKERS: OnceLock<usize> = OnceLock::new();
+    *WORKERS.get_or_init(|| thread_count(std::env::var("FORELEM_THREADS").ok().as_deref()))
+}
+
+/// The pure sizing rule behind [`workers`], separated so the override
+/// parse is testable without touching process-global state: a positive
+/// integer wins, anything else falls back to available parallelism.
+fn thread_count(env: Option<&str>) -> usize {
+    env.and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Number of workers to use for *build* parallelism (measurement of
+/// `Serial` plans stays on one core). Same value as [`workers`]; the
+/// name is kept for the coordinator/engine call sites.
+pub fn default_workers() -> usize {
+    workers()
+}
+
+// ---------------------------------------------------------- counters
+
+static CREW_SPAWNS: AtomicUsize = AtomicUsize::new(0);
+static CREW_RESPAWNS: AtomicUsize = AtomicUsize::new(0);
+
+/// OS threads the crew has ever spawned (initial crew + respawns).
+/// Flat after warm-up: the bench-json `pool` section asserts the delta
+/// across a warm serving loop is zero.
+pub fn crew_spawns() -> usize {
+    CREW_SPAWNS.load(Ordering::Relaxed)
+}
+
+/// Workers respawned after a death (the `pool.worker` chaos drill
+/// proves this is the recovery path, not a steady-state cost).
+pub fn crew_respawns() -> usize {
+    CREW_RESPAWNS.load(Ordering::Relaxed)
+}
+
+/// Number of crew slots (== [`workers`]). Does not spawn threads:
+/// workers attach to their slot lazily on first submission.
+pub fn crew_size() -> usize {
+    crew().slots.len()
+}
+
+// ------------------------------------------------------------- batch
+
+type Payload = Box<dyn Any + Send>;
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Join state shared by one `scoped_run` call and its queued jobs.
+struct Batch {
+    inner: Mutex<BatchInner>,
+    done: Condvar,
+}
+
+struct BatchInner {
+    remaining: usize,
+    payload: Option<Payload>,
+}
+
+impl Batch {
+    fn new(n: usize) -> Arc<Self> {
+        Arc::new(Batch {
+            inner: Mutex::new(BatchInner { remaining: n, payload: None }),
+            done: Condvar::new(),
+        })
+    }
+
+    /// Record the first panic payload of the batch.
+    fn poison(&self, p: Payload) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.payload.is_none() {
+            g.payload = Some(p);
+        }
+    }
+
+    fn complete_one(&self) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.remaining -= 1;
+        if g.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every slot has completed; yields the first panic
+    /// payload, if any.
+    fn wait(&self) -> Option<Payload> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        while g.remaining > 0 {
+            g = self.done.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        g.payload.take()
+    }
+}
+
+/// One queued task plus its batch slot. Slot completion is tied to
+/// `Drop`, not to a successful run: a worker that dies between dequeue
+/// and run (fault injection, internal bug) drops the job during unwind
+/// and the batch completes — poisoned — instead of stranding its
+/// submitter on the condvar. Draining a dead worker's queue likewise
+/// completes every held batch.
+struct Job {
+    task: Option<Task>,
+    batch: Arc<Batch>,
+}
+
+impl Job {
+    fn run(mut self) {
+        if let Some(task) = self.task.take() {
+            if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
+                self.batch.poison(p);
+            }
+        }
+        // Dropping `self` completes the slot.
+    }
+}
+
+impl Drop for Job {
+    fn drop(&mut self) {
+        if self.task.take().is_some() {
+            self.batch.poison(Box::new("crew worker died before running its task"));
+        }
+        self.batch.complete_one();
+    }
+}
+
+// -------------------------------------------------------------- crew
+
+/// One worker's mailbox. `alive` lives under the same mutex as the
+/// queue, closing the race between a dying worker draining its jobs
+/// and a submitter enqueueing new ones.
+struct Slot {
+    state: Mutex<SlotState>,
+    ready: Condvar,
+}
+
+struct SlotState {
+    jobs: VecDeque<Job>,
+    alive: bool,
+    /// Distinguishes the first (lazy) spawn from a post-death respawn
+    /// for the [`crew_respawns`] counter.
+    ever_spawned: bool,
+}
+
+struct Crew {
+    slots: Vec<Arc<Slot>>,
+}
+
+fn crew() -> &'static Crew {
+    static CREW: OnceLock<Crew> = OnceLock::new();
+    CREW.get_or_init(|| {
+        let n = workers();
+        let slots = (0..n)
+            .map(|_| {
+                Arc::new(Slot {
+                    state: Mutex::new(SlotState {
+                        jobs: VecDeque::new(),
+                        alive: false,
+                        ever_spawned: false,
+                    }),
+                    ready: Condvar::new(),
+                })
+            })
+            .collect();
+        Crew { slots }
+    })
+}
+
+thread_local! {
+    static IS_CREW_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+impl Crew {
+    /// Enqueue `job` on worker `idx`, (re)spawning the worker if its
+    /// slot is dead. If the OS refuses a thread, the job runs inline on
+    /// the submitter — degraded but never lost.
+    fn submit_to(&self, idx: usize, job: Job) {
+        let slot = &self.slots[idx];
+        let mut g = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        if !g.alive {
+            let respawn = g.ever_spawned;
+            if spawn_worker(Arc::clone(slot), idx).is_ok() {
+                g.alive = true;
+                g.ever_spawned = true;
+                CREW_SPAWNS.fetch_add(1, Ordering::Relaxed);
+                if respawn {
+                    CREW_RESPAWNS.fetch_add(1, Ordering::Relaxed);
+                }
+            } else {
+                drop(g);
+                job.run();
+                return;
+            }
+        }
+        g.jobs.push_back(job);
+        drop(g);
+        slot.ready.notify_one();
+    }
+}
+
+fn spawn_worker(slot: Arc<Slot>, idx: usize) -> std::io::Result<()> {
+    std::thread::Builder::new()
+        .name(format!("forelem-crew-{idx}"))
+        .spawn(move || worker_loop(slot, idx))
+        .map(|_| ())
+}
+
+/// Marks the slot dead and drains its queue when the worker thread
+/// unwinds (the `pool.worker` fault point is the only intended killer:
+/// task panics are caught in `Job::run` and never reach the loop).
+struct DeathSentinel {
+    slot: Arc<Slot>,
+}
+
+impl Drop for DeathSentinel {
+    fn drop(&mut self) {
+        let drained: Vec<Job> = {
+            let mut g = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
+            g.alive = false;
+            g.jobs.drain(..).collect()
+        };
+        // Dropping outside the lock poisons + completes their batches.
+        drop(drained);
+    }
+}
+
+fn worker_loop(slot: Arc<Slot>, idx: usize) {
+    IS_CREW_WORKER.with(|f| f.set(true));
+    crate::runtime::topology::pin_worker(idx);
+    let _sentinel = DeathSentinel { slot: Arc::clone(&slot) };
+    loop {
+        let job = {
+            let mut g = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(j) = g.jobs.pop_front() {
+                    break j;
+                }
+                g = slot.ready.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // The drill's worker-death seam: an armed panic here unwinds
+        // the loop while `job` is held, exercising the drop-guard
+        // accounting and the respawn path.
+        crate::faultpoint!("pool.worker");
+        job.run();
+    }
+}
+
+// --------------------------------------------------------- execution
+
+/// Run every task on the persistent crew and block until all complete.
+/// Task `i` goes to worker `i % crew_size()` (see the module docs for
+/// why that mapping is load-bearing). Tasks own their captures
+/// (typically a disjoint `&mut` chunk of an output slice plus shared
+/// `&` storage), so the hot path takes no locks beyond the mailbox
+/// push/pop. A panicking task unwinds the whole call on the submitting
+/// thread with the original payload, like `std::thread::scope` did.
+///
+/// Runs inline (serially) for a single task, a one-worker crew, or
+/// when called from inside a crew worker — a nested submission would
+/// park a worker waiting on its own queue.
+pub fn scoped_run<F>(tasks: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    let n = tasks.len();
+    if n == 0 {
+        return;
+    }
+    if n == 1 || IS_CREW_WORKER.with(|f| f.get()) {
+        for t in tasks {
+            t();
+        }
+        return;
+    }
+    let crew = crew();
+    let nworkers = crew.slots.len();
+    if nworkers <= 1 {
+        for t in tasks {
+            t();
+        }
+        return;
+    }
+    let batch = Batch::new(n);
+    for (i, t) in tasks.into_iter().enumerate() {
+        let task: Box<dyn FnOnce() + Send + '_> = Box::new(t);
+        // SAFETY: the fat pointer is only given a longer lifetime
+        // bound; `batch.wait()` below blocks until every `Job` has run
+        // or been dropped (slot completion is tied to `Job::drop`), so
+        // no task — and no borrow it captures — outlives this frame.
+        let task: Task = unsafe { std::mem::transmute(task) };
+        crew.submit_to(i % nworkers, Job { task: Some(task), batch: Arc::clone(&batch) });
+    }
+    if let Some(p) = batch.wait() {
+        resume_unwind(p);
+    }
+}
+
+/// The pre-crew executor: one scoped OS thread per task, spawned per
+/// invocation. Retained as the measurement baseline the bench-json
+/// `pool` section (and the crew bit-identity tests) compare crew
+/// dispatch against; the serving path never calls it.
+pub fn scoped_run_spawning<F>(tasks: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    std::thread::scope(|scope| {
+        for t in tasks {
+            scope.spawn(t);
+        }
+    });
+}
+
+/// Run `f(i)` for every `i in 0..n` across up to `workers` crew
+/// workers and collect results in index order.
 ///
 /// Work distribution claims *contiguous index chunks* (a handful per
 /// worker), not single items: the result buffer is one `Mutex<Vec<T>>`
@@ -20,7 +368,7 @@ use std::sync::Mutex;
 /// uneven per-item cost load-balances.
 ///
 /// A panic in `f` poisons the claim loop: sibling workers stop
-/// claiming chunks at their next iteration, the scope joins, and the
+/// claiming chunks at their next iteration, the batch joins, and the
 /// original panic payload is re-raised on the calling thread — one
 /// panicking item unwinds the whole map instead of completing it with
 /// a hole (or, worse, hanging a caller that coordinates with the
@@ -45,36 +393,33 @@ where
     let nchunks = n.div_ceil(chunk);
     let next = AtomicUsize::new(0);
     let poisoned = AtomicBool::new(false);
-    let payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    let payload: Mutex<Option<Payload>> = Mutex::new(None);
     let out: Vec<Mutex<Vec<T>>> = (0..nchunks).map(|_| Mutex::new(Vec::new())).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                if poisoned.load(Ordering::Acquire) {
-                    break;
-                }
-                let c = next.fetch_add(1, Ordering::Relaxed);
-                if c >= nchunks {
-                    break;
-                }
-                let lo = c * chunk;
-                let hi = ((c + 1) * chunk).min(n);
-                match catch_unwind(AssertUnwindSafe(|| (lo..hi).map(&f).collect::<Vec<T>>())) {
-                    Ok(vals) => {
-                        *out[c].lock().unwrap_or_else(|p| p.into_inner()) = vals;
-                    }
-                    Err(p) => {
-                        poisoned.store(true, Ordering::Release);
-                        let mut slot = payload.lock().unwrap_or_else(|p| p.into_inner());
-                        if slot.is_none() {
-                            *slot = Some(p);
-                        }
-                        break;
-                    }
-                }
-            });
+    let claim_loop = || loop {
+        if poisoned.load(Ordering::Acquire) {
+            break;
         }
-    });
+        let c = next.fetch_add(1, Ordering::Relaxed);
+        if c >= nchunks {
+            break;
+        }
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(n);
+        match catch_unwind(AssertUnwindSafe(|| (lo..hi).map(&f).collect::<Vec<T>>())) {
+            Ok(vals) => {
+                *out[c].lock().unwrap_or_else(|p| p.into_inner()) = vals;
+            }
+            Err(p) => {
+                poisoned.store(true, Ordering::Release);
+                let mut slot = payload.lock().unwrap_or_else(|p| p.into_inner());
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+                break;
+            }
+        }
+    };
+    scoped_run((0..workers).map(|_| &claim_loop).collect());
     if let Some(p) = payload.into_inner().unwrap_or_else(|p| p.into_inner()) {
         resume_unwind(p);
     }
@@ -84,26 +429,6 @@ where
     }
     assert_eq!(flat.len(), n, "worker failed to fill a chunk");
     flat
-}
-
-/// Run every task on its own scoped thread and join them all. Tasks own
-/// their captures (typically a disjoint `&mut` chunk of an output slice
-/// plus shared `&` storage), so the hot path takes no locks.
-pub fn scoped_run<F>(tasks: Vec<F>)
-where
-    F: FnOnce() + Send,
-{
-    std::thread::scope(|scope| {
-        for t in tasks {
-            scope.spawn(t);
-        }
-    });
-}
-
-/// Number of workers to use for *build* parallelism (measurement of
-/// `Serial` plans stays on one core).
-pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 #[cfg(test)]
@@ -182,5 +507,113 @@ mod tests {
         scoped_run(tasks);
         assert_eq!(&y[..4], &[1; 4]);
         assert_eq!(&y[4..], &[2; 6]);
+    }
+
+    #[test]
+    fn scoped_run_panic_unwinds_with_payload() {
+        // A task panic must come back to the submitter with the
+        // original payload — the std::thread::scope contract the crew
+        // preserves.
+        let r = std::panic::catch_unwind(|| {
+            scoped_run(vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send>,
+                Box::new(|| panic!("crew task panic")),
+                Box::new(|| {}),
+            ]);
+        });
+        let p = r.expect_err("scoped_run must propagate the task panic");
+        let msg = p.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "crew task panic");
+    }
+
+    #[test]
+    fn scoped_run_matches_spawning_baseline() {
+        // Same disjoint-chunk job through both executors: identical
+        // result (the crew changes dispatch, never the work).
+        let run = |spawning: bool| {
+            let mut y = vec![0u64; 24];
+            let mut tasks: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+            let mut rest = &mut y[..];
+            for t in 0..4u64 {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(6);
+                rest = tail;
+                tasks.push(Box::new(move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = t * 100 + i as u64;
+                    }
+                }));
+            }
+            if spawning {
+                scoped_run_spawning(tasks);
+            } else {
+                scoped_run(tasks);
+            }
+            y
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn warm_crew_spawns_no_new_threads() {
+        // Warm the crew, snapshot the spawn counter, then run many
+        // batches: the warm path must not create a single OS thread.
+        // (Respawns only happen at the chaos fault point, which lib
+        // tests never arm.)
+        scoped_run((0..3).map(|_| || {}).collect());
+        let before = crew_spawns();
+        for _ in 0..16 {
+            let mut y = vec![0.0f64; 64];
+            let (a, b) = y.split_at_mut(32);
+            scoped_run(vec![
+                Box::new(move || a.fill(1.0)) as Box<dyn FnOnce() + Send>,
+                Box::new(move || b.fill(2.0)),
+            ]);
+        }
+        let _ = parallel_map(512, 4, |i| i * 3);
+        assert_eq!(crew_spawns(), before, "warm serving path spawned threads");
+    }
+
+    #[test]
+    fn nested_scoped_run_completes_inline() {
+        // A task that itself calls scoped_run must not deadlock the
+        // crew: nested submissions run inline on the worker.
+        let flags: Vec<_> = (0..4).map(|_| AtomicBool::new(false)).collect();
+        {
+            let fr = &flags;
+            let tasks: Vec<Box<dyn FnOnce() + Send>> = vec![
+                Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send>> = vec![
+                        Box::new(|| fr[0].store(true, Ordering::Relaxed)),
+                        Box::new(|| fr[1].store(true, Ordering::Relaxed)),
+                    ];
+                    scoped_run(inner);
+                }),
+                Box::new(move || {
+                    fr[2].store(true, Ordering::Relaxed);
+                    fr[3].store(true, Ordering::Relaxed);
+                }),
+            ];
+            scoped_run(tasks);
+        }
+        assert!(flags.iter().all(|f| f.load(Ordering::Relaxed)));
+    }
+
+    #[test]
+    fn thread_count_env_override() {
+        // Positive integer wins; junk, zero and absence fall back to
+        // the machine's parallelism (always >= 1).
+        assert_eq!(thread_count(Some("3")), 3);
+        assert_eq!(thread_count(Some(" 12 ")), 12);
+        assert!(thread_count(Some("0")) >= 1);
+        assert!(thread_count(Some("-2")) >= 1);
+        assert!(thread_count(Some("lots")) >= 1);
+        assert!(thread_count(None) >= 1);
+        assert_ne!(thread_count(Some("0")), 0);
+    }
+
+    #[test]
+    fn crew_size_matches_workers() {
+        assert_eq!(crew_size(), workers());
+        assert!(crew_size() >= 1);
     }
 }

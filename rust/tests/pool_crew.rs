@@ -1,0 +1,222 @@
+//! Crew serving-path integration suite: the persistent worker crew
+//! must serve the parallel kernels bit-identically across repeated
+//! reuse, spawn zero threads once warm, and match the spawn-per-call
+//! executor it replaced. The tiny-budget eviction test lives here —
+//! in its own process — because the compile cache (and its
+//! last-writer-wins budget) is process-global: churning it under a
+//! 1-byte budget inside the lib tests would race their Arc-sharing
+//! assertions.
+
+use forelem::concretize::{self, prepare, Layout, Plan, Schedule, Traversal};
+use forelem::engine::{Autotune, Engine};
+use forelem::matrix::gen;
+use forelem::storage::{CooOrder, EllOrder};
+use forelem::util::pool;
+use forelem::util::prop::assert_close;
+use forelem::{Arch, Kernel};
+use std::sync::Arc;
+
+fn base_plans() -> Vec<Plan> {
+    vec![
+        Plan::serial(Layout::CooAos(CooOrder::Unsorted), Traversal::Flat),
+        Plan::serial(Layout::CooSoa(CooOrder::RowMajor), Traversal::Flat),
+        Plan::serial(Layout::Csr, Traversal::RowWise),
+        Plan::serial(Layout::CsrAos, Traversal::RowWise),
+        Plan::serial(Layout::Csc, Traversal::ColScatter),
+        Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWise),
+        Plan::serial(Layout::Ell(EllOrder::ColMajor), Traversal::PlaneWise),
+        Plan::serial(Layout::Jds { permuted: true }, Traversal::DiagMajor),
+        Plan::serial(Layout::Bcsr { br: 2, bc: 3 }, Traversal::Blocked),
+        Plan::serial(Layout::SellSigma { s: 8, sigma: 64 }, Traversal::SlicePlane),
+    ]
+}
+
+/// Every parallel SpMV plan, executed on the crew: repeated calls on
+/// one `Prepared` and calls on a fresh `Prepared` of the same plan
+/// must agree bit-for-bit (crew dispatch is deterministic — task `i`
+/// always lands on worker `i % crew`), and the numbers must match the
+/// serial reference.
+#[test]
+fn crew_parallel_spmv_is_bit_stable_across_reuse() {
+    let m = gen::powerlaw(64, 2.0, 24, 81);
+    let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.17).sin() + 0.4).collect();
+    let want = m.spmv_ref(&x);
+    let mut ran = 0;
+    for base in base_plans() {
+        let plan = base.with_schedule(Schedule::Parallel { threads: 3 });
+        if !concretize::supports(&plan, Kernel::Spmv) {
+            continue;
+        }
+        ran += 1;
+        let p = prepare(plan, &m);
+        let mut first = vec![0.0; 64];
+        p.spmv(&x, &mut first);
+        for rep in 0..4 {
+            let mut y = vec![0.0; 64];
+            p.spmv(&x, &mut y);
+            assert_eq!(y, first, "{plan:?}: reuse #{rep} drifted on the crew");
+        }
+        let fresh = prepare(plan, &m);
+        let mut y2 = vec![0.0; 64];
+        fresh.spmv(&x, &mut y2);
+        assert_eq!(y2, first, "{plan:?}: fresh prepare disagrees with reused one");
+        assert_close(&first, &want, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+    }
+    assert!(ran >= 4, "too few parallel SpMV plans exercised: {ran}");
+}
+
+/// Parallel SpMM and the level-scheduled parallel TrSv under the same
+/// reuse contract.
+#[test]
+fn crew_parallel_spmm_and_trsv_are_bit_stable() {
+    let m = gen::uniform_random(48, 52, 420, 83);
+    let k = 5;
+    let b: Vec<f64> = (0..52 * k).map(|i| i as f64 * 0.04 - 1.1).collect();
+    let want_c = m.spmm_ref(&b, k);
+    let mut spmm_ran = 0;
+    for base in base_plans() {
+        let plan = base.with_schedule(Schedule::Parallel { threads: 3 });
+        if !concretize::supports(&plan, Kernel::Spmm) {
+            continue;
+        }
+        spmm_ran += 1;
+        let p = prepare(plan, &m);
+        let mut first = vec![0.0; 48 * k];
+        p.spmm(&b, k, &mut first);
+        let mut again = vec![0.0; 48 * k];
+        p.spmm(&b, k, &mut again);
+        assert_eq!(again, first, "{plan:?}: SpMM reuse drifted on the crew");
+        assert_close(&first, &want_c, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+    }
+    assert!(spmm_ran >= 2, "too few parallel SpMM plans exercised: {spmm_ran}");
+
+    let l = gen::uniform_random(40, 40, 300, 84).strictly_lower();
+    let rhs: Vec<f64> = (0..40).map(|i| 1.0 - i as f64 * 0.02).collect();
+    let want_x = l.trsv_unit_lower_ref(&rhs);
+    let mut trsv_ran = 0;
+    for base in base_plans() {
+        let plan = base.with_schedule(Schedule::Parallel { threads: 4 });
+        if !concretize::supports(&plan, Kernel::Trsv) {
+            continue;
+        }
+        trsv_ran += 1;
+        let p = prepare(plan, &l);
+        let mut first = vec![0.0; 40];
+        p.trsv(&rhs, &mut first);
+        let mut again = vec![0.0; 40];
+        p.trsv(&rhs, &mut again);
+        assert_eq!(again, first, "{plan:?}: TrSv reuse drifted on the crew");
+        assert_close(&first, &want_x, 1e-10).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+    }
+    assert_eq!(trsv_ran, 2, "expected the CSR and CSC level-scheduled TrSv plans");
+}
+
+/// The crew executor and the spawn-per-call executor it replaced must
+/// produce bit-identical results for the same chunked computation —
+/// the kernels only changed *who* runs a range, never what the range
+/// computes.
+#[test]
+fn crew_matches_spawning_executor_bit_for_bit() {
+    let n = 7 * 61;
+    let data: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.37).sin() * 1e3 + 0.123).collect();
+    let run = |crew: bool| {
+        let mut acc = vec![0.0f64; 7];
+        let chunk = n / 7;
+        let mut tasks = Vec::with_capacity(7);
+        for (c, slot) in acc.iter_mut().enumerate() {
+            let piece = &data[c * chunk..(c + 1) * chunk];
+            tasks.push(move || *slot = piece.iter().fold(0.0, |a, v| a * 1.0000001 + v));
+        }
+        if crew {
+            pool::scoped_run(tasks);
+        } else {
+            pool::scoped_run_spawning(tasks);
+        }
+        acc
+    };
+    for _ in 0..3 {
+        assert_eq!(run(true), run(false), "crew drifted from the spawning baseline");
+    }
+}
+
+/// Once every worker has lazily spawned, repeated parallel kernel
+/// invocations must spawn nothing — the serving-path invariant the
+/// bench-json `pool` section and the CI planner guard also pin.
+#[test]
+fn warm_crew_serves_kernels_with_zero_spawns() {
+    let nworkers = pool::crew_size();
+    // Warm the whole crew (one task per worker), so concurrent tests
+    // in this binary cannot spawn anyone mid-measurement either.
+    let warm = {
+        let mut hit = vec![false; nworkers.max(1)];
+        let mut tasks = Vec::with_capacity(hit.len());
+        for slot in hit.iter_mut() {
+            tasks.push(move || *slot = true);
+        }
+        pool::scoped_run(tasks);
+        hit
+    };
+    assert!(warm.iter().all(|&h| h), "warm batch lost a task");
+    let m = gen::powerlaw(64, 2.0, 24, 85);
+    let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.09).cos()).collect();
+    let par3 = Schedule::Parallel { threads: 3 };
+    let p = prepare(Plan::serial(Layout::Csr, Traversal::RowWise).with_schedule(par3), &m);
+    let before = pool::crew_spawns();
+    for _ in 0..20 {
+        let mut y = vec![0.0; 64];
+        p.spmv(&x, &mut y);
+    }
+    assert_eq!(pool::crew_spawns(), before, "a warm crew spawned threads on the serving path");
+    assert_eq!(pool::crew_respawns(), 0, "no worker should ever die outside a chaos drill");
+}
+
+/// Engine-level cache behavior under a starvation budget: evictions
+/// are counted and the resident set stays bounded, while a generous
+/// budget keeps serving the same `Arc`-shared storage. Runs here, in
+/// its own process, because the budget is process-global
+/// (last-writer-wins).
+#[test]
+fn tiny_cache_budget_evicts_and_bounds_the_cache() {
+    Engine::clear_cache();
+    let engine = Engine::builder()
+        .arch(Arch::HostLarge)
+        .autotune(Autotune::Off)
+        .profile(false)
+        .archive(false)
+        .build();
+    let m = gen::uniform_random(40, 40, 300, 90);
+    let a = engine.compile(Kernel::Spmv, &m).expect("compile");
+    let b = engine.compile(Kernel::Spmv, &m).expect("recompile");
+    assert!(
+        Arc::ptr_eq(&a.storage(), &b.storage()),
+        "generous budget must keep serving the cached storage"
+    );
+    // Served numerics match a direct prepare of the winning plan.
+    let x: Vec<f64> = (0..40).map(|i| (i as f64 * 0.05).sin() + 0.2).collect();
+    let mut served = vec![0.0; 40];
+    let mut direct = vec![0.0; 40];
+    a.spmv(&x, &mut served);
+    concretize::prepare(a.plan().exec, &m).spmv(&x, &mut direct);
+    assert_eq!(served, direct, "engine serving drifted from a direct prepare");
+
+    let ev0 = Engine::cache_evictions();
+    let starved = Engine::builder()
+        .arch(Arch::HostLarge)
+        .autotune(Autotune::Off)
+        .profile(false)
+        .archive(false)
+        .cache_budget(1)
+        .build();
+    for seed in 0..4u64 {
+        let mi = gen::uniform_random(32, 32, 200, 100 + seed);
+        starved.compile(Kernel::Spmv, &mi).expect("starved compile");
+        assert!(
+            Engine::cache_len() <= 1,
+            "a 1-byte budget must keep at most the newest entry resident"
+        );
+    }
+    assert!(
+        Engine::cache_evictions() >= ev0 + 3,
+        "evicting inserts must advance the monotonic eviction counter"
+    );
+}
