@@ -38,6 +38,7 @@ pub const POINTS: &[&str] = &[
     "engine.prepare",
     "engine.measure",
     "pool.worker",
+    "batch.flush",
 ];
 
 /// Fire the named fault point. With the `chaos` feature and an armed
@@ -259,6 +260,8 @@ pub mod drill {
                     drill_archive_load(&dir, point, fault)
                 } else if point == "pool.worker" {
                     drill_crew(point, fault)
+                } else if point == "batch.flush" {
+                    drill_batch(point, fault)
                 } else {
                     drill_compile(point, fault, pi as u64)
                 };
@@ -508,6 +511,156 @@ pub mod drill {
             };
         }
         Outcome { point, fault: fl, health: Some(health), ok: true, detail: "ok".into() }
+    }
+
+    /// Drill the batching queue's flush seam (`batch.flush` sits at
+    /// the head of the group execution body). Three contracts:
+    ///
+    /// 1. **The solo fast path never crosses the seam** — an
+    ///    uncontended submit succeeds with the fault armed.
+    /// 2. **Poisoning is per-batch.** Under a lethal fault, grouped
+    ///    waiters unwind (the batch is poisoned) while any submit that
+    ///    raced to the fast path still answers correctly; a benign
+    ///    delay rides through to bit-correct answers for everyone.
+    /// 3. **The queue survives its poisoned batches.** After
+    ///    disarming, the same queue serves bit-identical to a direct
+    ///    prepare of its solo plan.
+    fn drill_batch(point: &'static str, fault: Fault) -> Outcome {
+        let fl = fault_label(fault);
+        let m = gen::uniform_random(48, 48, 360, 0xBA7C);
+        let engine = Engine::builder()
+            .arch(Arch::HostSmall)
+            .profile(false)
+            .archive(false)
+            .max_batch(4)
+            .flush_deadline(Duration::from_millis(25))
+            .build();
+        let q = match engine.batch_queue(&m) {
+            Ok(q) => q,
+            Err(e) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: format!("batch queue construction failed: {e}"),
+                }
+            }
+        };
+        let x: Vec<f64> = (0..48).map(|i| (i as f64 * 0.017).sin() + 0.4).collect();
+        let mut want = vec![0.0; 48];
+        match engine.compile_pinned(Kernel::Spmv, &m, q.solo_plan_id()) {
+            Ok(solo) => solo.spmv(&x, &mut want),
+            Err(e) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: format!("solo reference compile failed: {e}"),
+                }
+            }
+        }
+        // Contract 1: uncontended submit = fast path, no flush, no
+        // fault crossing.
+        let solo_armed = catch_unwind(AssertUnwindSafe(|| q.submit(&x)));
+        match solo_armed {
+            Err(_) => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: "armed flush fault leaked into the solo fast path".into(),
+                }
+            }
+            Ok(y) if y != want => {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: "solo fast path drifted under an armed flush fault".into(),
+                }
+            }
+            Ok(_) => {}
+        }
+        // Contract 2: aligned concurrent submitters force real
+        // batches through the armed seam.
+        let lethal = !matches!(fault, Fault::Delay(_));
+        let n_threads = 8;
+        let rounds = 5;
+        let barrier = std::sync::Barrier::new(n_threads);
+        let mut outcomes: Vec<Result<Vec<f64>, ()>> = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..n_threads {
+                let q = &q;
+                let x = &x;
+                let barrier = &barrier;
+                handles.push(s.spawn(move || {
+                    barrier.wait();
+                    // Several submits per thread so at least one pair
+                    // overlaps into a real batch even under a fully
+                    // serializing scheduler; each submit is isolated
+                    // so one poisoned batch doesn't hide the rest.
+                    (0..rounds)
+                        .map(|_| catch_unwind(AssertUnwindSafe(|| q.submit(x))).map_err(|_| ()))
+                        .collect::<Vec<Result<Vec<f64>, ()>>>()
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(v) => outcomes.extend(v),
+                    Err(_) => outcomes.push(Err(())),
+                }
+            }
+        });
+        let poisoned = outcomes.iter().filter(|o| o.is_err()).count();
+        if lethal && poisoned == 0 {
+            return Outcome {
+                point,
+                fault: fl,
+                health: None,
+                ok: false,
+                detail: "a lethal flush fault poisoned no batched waiter".into(),
+            };
+        }
+        if !lethal && poisoned > 0 {
+            return Outcome {
+                point,
+                fault: fl,
+                health: None,
+                ok: false,
+                detail: format!("a benign delay poisoned {poisoned} waiters"),
+            };
+        }
+        for o in outcomes.iter().flatten() {
+            if o != &want {
+                return Outcome {
+                    point,
+                    fault: fl,
+                    health: None,
+                    ok: false,
+                    detail: "a surviving submit drifted from the solo plan's bits".into(),
+                };
+            }
+        }
+        // Contract 3: the queue outlives its poisoned batches.
+        disarm_all();
+        let healed = catch_unwind(AssertUnwindSafe(|| q.submit(&x)));
+        let ok = matches!(&healed, Ok(y) if y == &want);
+        Outcome {
+            point,
+            fault: fl,
+            health: None,
+            ok,
+            detail: if ok {
+                "ok".into()
+            } else {
+                "queue did not recover after its poisoned batch".into()
+            },
+        }
     }
 
     /// Drill the calibrate-path archive loader: a fault while loading

@@ -1,0 +1,487 @@
+//! `forelem serve-bench` — closed-loop serving benchmark for the
+//! request-batching path (`engine::batch`).
+//!
+//! N client threads serve SpMV requests against M suite matrices with
+//! Poisson-distributed think time between requests. The same workload
+//! schedule runs twice:
+//!
+//!   * **unbatched** — every client executes the queue's own solo SpMV
+//!     plan directly (`Engine::compile_pinned` on the same plan id the
+//!     queue selected, so the two phases run identical kernels);
+//!   * **batched**  — every client goes through
+//!     [`BatchQueue::submit`], letting concurrent same-matrix requests
+//!     coalesce into one SpMM panel.
+//!
+//! The report carries throughput, latency percentiles (batched latency
+//! *includes* queueing/deadline wait — that is the price of the
+//! throughput win), the observed batch-size histogram, and the
+//! batched-vs-unbatched speedup. A bitwise identity pre-check runs
+//! before either phase: for every matrix, `submit` must reproduce the
+//! solo plan's output exactly, bit for bit, or the report is flagged
+//! and the CLI exits non-zero. `BENCH_serve.json` is the machine
+//! artifact CI archives and guards.
+
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::sweep::{json_escape, json_str_array, Arch};
+use crate::engine::batch::BatchStats;
+use crate::engine::Engine;
+use crate::error::ForelemError;
+use crate::matrix::suite::SUITE;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+use crate::Kernel;
+
+/// Distinct request vectors pre-generated per matrix; requests cycle
+/// through them so the workload is deterministic per seed.
+const XS_PER_MATRIX: usize = 4;
+
+/// Configuration of one serve-bench run.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub arch: Arch,
+    /// Concurrent closed-loop client threads (the offered concurrency).
+    pub clients: usize,
+    /// Suite indices the clients cycle through.
+    pub matrices: Vec<usize>,
+    /// Requests each client issues per phase.
+    pub requests_per_client: usize,
+    /// Poisson arrival rate per client in Hz; `0` disables think time
+    /// (back-to-back closed loop).
+    pub lambda_hz: f64,
+    /// Queue capacity — a flush seals at this group size.
+    pub max_batch: usize,
+    pub flush_deadline: Duration,
+    /// Load the fitted tuning profile when one exists (the batch
+    /// decision is cost-model-driven, so calibration shifts it).
+    pub use_profile: bool,
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    /// The CI-sized run: the quick-suite matrices, 8 clients, enough
+    /// requests for the histogram to be meaningful in well under a
+    /// second of serving. `host-large` so the canonical pools carry
+    /// parallel schedules — both phases then draw on the same worker
+    /// crew and the comparison is CPU work vs CPU work, not
+    /// request-parallelism vs a serialized flusher. `max_batch` equals
+    /// the client count: a full closed-loop wave seals the group
+    /// immediately instead of idling out the flush deadline.
+    pub fn quick() -> ServeConfig {
+        ServeConfig {
+            arch: Arch::HostLarge,
+            clients: 8,
+            // Same indices as `SweepConfig::quick()` — one graph, one
+            // banded, one constraint matrix.
+            matrices: vec![0, 2, 7],
+            requests_per_client: 300,
+            lambda_hz: 50_000.0,
+            max_batch: 8,
+            flush_deadline: Duration::from_micros(150),
+            use_profile: true,
+            seed: 2022,
+        }
+    }
+}
+
+/// Per-matrix outcome: which solo plan served the unbatched phase,
+/// where the cost model put the batching threshold, and the queue's
+/// counter deltas over the batched phase.
+#[derive(Clone, Debug)]
+pub struct MatrixServe {
+    pub name: String,
+    pub solo_plan_id: String,
+    /// `None` when the cost model says batching never pays here.
+    pub min_k_pays: Option<usize>,
+    pub stats: BatchStats,
+}
+
+/// One latency distribution, seconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Latency {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Latency {
+    fn of(latencies: &mut [f64]) -> Latency {
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        Latency {
+            p50: percentile_sorted(latencies, 50.0),
+            p95: percentile_sorted(latencies, 95.0),
+            p99: percentile_sorted(latencies, 99.0),
+        }
+    }
+}
+
+/// The serve-bench result — rendered by [`report_text`] and
+/// [`to_json`].
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub arch: Arch,
+    pub clients: usize,
+    pub requests_per_phase: u64,
+    /// Every matrix reproduced the solo plan's bits through `submit`.
+    pub bit_identical: bool,
+    pub unbatched_elapsed: f64,
+    pub batched_elapsed: f64,
+    /// Requests per second over the whole phase.
+    pub unbatched_throughput: f64,
+    pub batched_throughput: f64,
+    /// `batched_throughput / unbatched_throughput`.
+    pub speedup: f64,
+    /// Requests served from coalesced panels over the batched phase,
+    /// summed across matrices. `0` means the cost model declined to
+    /// batch everywhere (pass-through queues) — the speedup is then
+    /// noise around 1.0, not a batching measurement.
+    pub batched_requests: u64,
+    pub unbatched_latency: Latency,
+    pub batched_latency: Latency,
+    /// `hist[k]` = groups executed at size k over the batched phase,
+    /// summed across matrices; index 0 unused.
+    pub hist: Vec<u64>,
+    pub per_matrix: Vec<MatrixServe>,
+}
+
+fn stats_delta(after: &BatchStats, before: &BatchStats) -> BatchStats {
+    BatchStats {
+        submitted: after.submitted - before.submitted,
+        batched: after.batched - before.batched,
+        solo: after.solo - before.solo,
+        flushes: after.flushes - before.flushes,
+        deadline_flushes: after.deadline_flushes - before.deadline_flushes,
+        full_flushes: after.full_flushes - before.full_flushes,
+        poisoned_batches: after.poisoned_batches - before.poisoned_batches,
+        hist: after
+            .hist
+            .iter()
+            .zip(before.hist.iter().chain(std::iter::repeat(&0)))
+            .map(|(a, b)| a - b)
+            .collect(),
+    }
+}
+
+/// Run the benchmark. Phases share one deterministic workload
+/// schedule (client c, request r → matrix `matrices[r % M]`, vector
+/// `r % XS_PER_MATRIX`), so the two phases serve identical requests.
+///
+/// # Errors
+///
+/// Propagates [`ForelemError`] from queue construction or from
+/// pinning the solo plan (invalid matrix, unknown plan id).
+pub fn run(cfg: &ServeConfig) -> Result<ServeReport, ForelemError> {
+    assert!(cfg.clients >= 1, "serve-bench needs at least one client");
+    assert!(cfg.requests_per_client >= 1, "serve-bench needs at least one request per client");
+    assert!(!cfg.matrices.is_empty(), "serve-bench needs at least one matrix");
+    let engine = Engine::builder()
+        .arch(cfg.arch)
+        .profile(cfg.use_profile)
+        .archive(false)
+        .max_batch(cfg.max_batch)
+        .flush_deadline(cfg.flush_deadline)
+        .build();
+
+    // Build matrices, queues, pinned solo executables and request
+    // vectors up front — construction cost stays out of both phases.
+    let mut names = Vec::new();
+    let mut mats = Vec::new();
+    let mut queues = Vec::new();
+    let mut solos = Vec::new();
+    let mut xs: Vec<Vec<Vec<f64>>> = Vec::new();
+    for (slot, &si) in cfg.matrices.iter().enumerate() {
+        let entry = &SUITE[si % SUITE.len()];
+        let m = entry.build_scaled(cfg.arch.scale());
+        let q = engine.batch_queue(&m)?;
+        let solo = engine.compile_pinned(Kernel::Spmv, &m, q.solo_plan_id())?;
+        let mut rng = Rng::new(cfg.seed ^ (0x5e7e * (slot as u64 + 1)));
+        let mut vs = Vec::with_capacity(XS_PER_MATRIX);
+        for _ in 0..XS_PER_MATRIX {
+            vs.push((0..m.ncols).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect());
+        }
+        names.push(entry.name.to_string());
+        mats.push(m);
+        queues.push(q);
+        solos.push(solo);
+        xs.push(vs);
+    }
+
+    // Bitwise identity pre-check: submit (solo fast path, no
+    // concurrency) must reproduce the pinned solo plan exactly.
+    let mut bit_identical = true;
+    for (mi, q) in queues.iter().enumerate() {
+        let mut y = vec![0.0; mats[mi].nrows];
+        for x in &xs[mi] {
+            solos[mi].spmv(x, &mut y);
+            let got = q.submit(x);
+            if got.iter().map(|v| v.to_bits()).ne(y.iter().map(|v| v.to_bits())) {
+                eprintln!("serve-bench: BIT MISMATCH on {} via the queue", names[mi]);
+                bit_identical = false;
+            }
+        }
+    }
+
+    let nmat = mats.len();
+    let total = (cfg.clients * cfg.requests_per_client) as u64;
+
+    // Phase runner: every client walks the same schedule; `batched`
+    // switches the serving path, nothing else.
+    let run_phase = |batched: bool, phase_salt: u64| -> (f64, Vec<f64>) {
+        let barrier = Barrier::new(cfg.clients + 1);
+        let mut lats: Vec<f64> = Vec::with_capacity(total as usize);
+        let mut elapsed = 0.0;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(cfg.clients);
+            for c in 0..cfg.clients {
+                let barrier = &barrier;
+                let queues = &queues;
+                let solos = &solos;
+                let mats = &mats;
+                let xs = &xs;
+                let mut rng = Rng::new(
+                    cfg.seed ^ phase_salt ^ 0x9e3779b97f4a7c15u64.wrapping_mul(c as u64 + 1),
+                );
+                handles.push(s.spawn(move || {
+                    let mut ys: Vec<Vec<f64>> =
+                        mats.iter().map(|m| vec![0.0; m.nrows]).collect();
+                    let mut local = Vec::with_capacity(cfg.requests_per_client);
+                    barrier.wait();
+                    for r in 0..cfg.requests_per_client {
+                        if cfg.lambda_hz > 0.0 {
+                            // Poisson arrivals: exponential think time,
+                            // mean 1/λ. gen_f64 ∈ [0,1) so 1-u ∈ (0,1].
+                            let dt = -(1.0 - rng.gen_f64()).ln() / cfg.lambda_hz;
+                            std::thread::sleep(Duration::from_secs_f64(dt));
+                        }
+                        let mi = r % nmat;
+                        let x = &xs[mi][r % XS_PER_MATRIX];
+                        let t0 = Instant::now();
+                        if batched {
+                            let y = queues[mi].submit(x);
+                            local.push(t0.elapsed().as_secs_f64());
+                            std::hint::black_box(&y);
+                        } else {
+                            solos[mi].spmv(x, &mut ys[mi]);
+                            local.push(t0.elapsed().as_secs_f64());
+                            std::hint::black_box(&ys[mi]);
+                        }
+                    }
+                    local
+                }));
+            }
+            barrier.wait();
+            let t0 = Instant::now();
+            for h in handles {
+                match h.join() {
+                    Ok(local) => lats.extend(local),
+                    Err(p) => std::panic::resume_unwind(p),
+                }
+            }
+            elapsed = t0.elapsed().as_secs_f64();
+        });
+        (elapsed, lats)
+    };
+
+    let (unbatched_elapsed, mut unbatched_lats) = run_phase(false, 0x0101);
+    let before: Vec<BatchStats> = queues.iter().map(|q| q.stats()).collect();
+    let (batched_elapsed, mut batched_lats) = run_phase(true, 0x0202);
+    let after: Vec<BatchStats> = queues.iter().map(|q| q.stats()).collect();
+
+    let mut hist = vec![0u64; cfg.max_batch + 1];
+    let mut per_matrix = Vec::with_capacity(nmat);
+    for mi in 0..nmat {
+        let d = stats_delta(&after[mi], &before[mi]);
+        for (k, &n) in d.hist.iter().enumerate() {
+            if k < hist.len() {
+                hist[k] += n;
+            }
+        }
+        per_matrix.push(MatrixServe {
+            name: names[mi].clone(),
+            solo_plan_id: queues[mi].solo_plan_id().to_string(),
+            min_k_pays: queues[mi].min_k_pays(),
+            stats: d,
+        });
+    }
+
+    let unbatched_throughput = total as f64 / unbatched_elapsed.max(1e-12);
+    let batched_throughput = total as f64 / batched_elapsed.max(1e-12);
+    let batched_requests = per_matrix.iter().map(|p| p.stats.batched).sum();
+    Ok(ServeReport {
+        arch: cfg.arch,
+        clients: cfg.clients,
+        requests_per_phase: total,
+        bit_identical,
+        unbatched_elapsed,
+        batched_elapsed,
+        unbatched_throughput,
+        batched_throughput,
+        speedup: batched_throughput / unbatched_throughput.max(1e-12),
+        batched_requests,
+        unbatched_latency: Latency::of(&mut unbatched_lats),
+        batched_latency: Latency::of(&mut batched_lats),
+        hist,
+        per_matrix,
+    })
+}
+
+/// Human-readable report for stdout.
+pub fn report_text(r: &ServeReport) -> String {
+    let us = 1e6;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "serve-bench [{}] — {} clients, {} requests/phase, bit-identical: {}\n",
+        r.arch.slug(),
+        r.clients,
+        r.requests_per_phase,
+        if r.bit_identical { "yes" } else { "NO (MISMATCH)" },
+    ));
+    out.push_str(&format!(
+        "  unbatched: {:>10.0} req/s   p50 {:>8.1}us  p95 {:>8.1}us  p99 {:>8.1}us\n",
+        r.unbatched_throughput,
+        r.unbatched_latency.p50 * us,
+        r.unbatched_latency.p95 * us,
+        r.unbatched_latency.p99 * us,
+    ));
+    out.push_str(&format!(
+        "  batched:   {:>10.0} req/s   p50 {:>8.1}us  p95 {:>8.1}us  p99 {:>8.1}us\n",
+        r.batched_throughput,
+        r.batched_latency.p50 * us,
+        r.batched_latency.p95 * us,
+        r.batched_latency.p99 * us,
+    ));
+    out.push_str(&format!(
+        "  speedup:   {:.3}x ({} of {} requests served from panels)\n",
+        r.speedup, r.batched_requests, r.requests_per_phase
+    ));
+    let groups: Vec<String> = r
+        .hist
+        .iter()
+        .enumerate()
+        .filter(|&(k, &n)| k > 0 && n > 0)
+        .map(|(k, &n)| format!("{k}:{n}"))
+        .collect();
+    out.push_str(&format!("  batch-size histogram (k:groups): {}\n", groups.join(" ")));
+    for pm in &r.per_matrix {
+        out.push_str(&format!(
+            "  {:<12} solo {:<24} min-k-pays {:<4} submitted {:>5}  batched {:>5}  \
+             flushes {:>4} (deadline {}, full {})\n",
+            pm.name,
+            pm.solo_plan_id,
+            pm.min_k_pays.map(|k| k.to_string()).unwrap_or_else(|| "-".into()),
+            pm.stats.submitted,
+            pm.stats.batched,
+            pm.stats.flushes,
+            pm.stats.deadline_flushes,
+            pm.stats.full_flushes,
+        ));
+    }
+    out
+}
+
+/// Render the report as the `BENCH_serve.json` document (same
+/// hand-rolled style as `BENCH_spmv.json` — no serde in the tree).
+pub fn to_json(r: &ServeReport) -> String {
+    let hist: Vec<String> = r.hist.iter().map(u64::to_string).collect();
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"forelem-serve-bench-v1\",\n");
+    s.push_str(&format!("  \"arch\": \"{}\",\n", json_escape(r.arch.slug())));
+    s.push_str(&format!("  \"clients\": {},\n", r.clients));
+    s.push_str(&format!("  \"requests_per_phase\": {},\n", r.requests_per_phase));
+    s.push_str(&format!("  \"bit_identical\": {},\n", r.bit_identical));
+    s.push_str(&format!("  \"unbatched_elapsed_s\": {:e},\n", r.unbatched_elapsed));
+    s.push_str(&format!("  \"batched_elapsed_s\": {:e},\n", r.batched_elapsed));
+    s.push_str(&format!("  \"unbatched_rps\": {:e},\n", r.unbatched_throughput));
+    s.push_str(&format!("  \"batched_rps\": {:e},\n", r.batched_throughput));
+    s.push_str(&format!("  \"speedup\": {:e},\n", r.speedup));
+    s.push_str(&format!("  \"batched_requests\": {},\n", r.batched_requests));
+    s.push_str(&format!(
+        "  \"unbatched_latency_s\": {{\"p50\": {:e}, \"p95\": {:e}, \"p99\": {:e}}},\n",
+        r.unbatched_latency.p50, r.unbatched_latency.p95, r.unbatched_latency.p99
+    ));
+    s.push_str(&format!(
+        "  \"batched_latency_s\": {{\"p50\": {:e}, \"p95\": {:e}, \"p99\": {:e}}},\n",
+        r.batched_latency.p50, r.batched_latency.p95, r.batched_latency.p99
+    ));
+    s.push_str(&format!("  \"batch_hist\": [{}],\n", hist.join(", ")));
+    let names: Vec<String> = r.per_matrix.iter().map(|p| p.name.clone()).collect();
+    s.push_str(&format!("  \"matrices\": {},\n", json_str_array(&names)));
+    s.push_str("  \"per_matrix\": [\n");
+    for (i, pm) in r.per_matrix.iter().enumerate() {
+        let h: Vec<String> = pm.stats.hist.iter().map(u64::to_string).collect();
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"solo_plan\": \"{}\", \"min_k_pays\": {}, \
+             \"submitted\": {}, \"batched\": {}, \"solo\": {}, \"flushes\": {}, \
+             \"deadline_flushes\": {}, \"full_flushes\": {}, \"poisoned\": {}, \
+             \"hist\": [{}]}}{}\n",
+            json_escape(&pm.name),
+            json_escape(&pm.solo_plan_id),
+            pm.min_k_pays.map(|k| k.to_string()).unwrap_or_else(|| "null".into()),
+            pm.stats.submitted,
+            pm.stats.batched,
+            pm.stats.solo,
+            pm.stats.flushes,
+            pm.stats.deadline_flushes,
+            pm.stats.full_flushes,
+            pm.stats.poisoned_batches,
+            h.join(", "),
+            if i + 1 == r.per_matrix.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ServeConfig {
+        ServeConfig {
+            arch: Arch::HostSmall,
+            clients: 4,
+            matrices: vec![0, 2],
+            requests_per_client: 24,
+            lambda_hz: 0.0,
+            max_batch: 4,
+            flush_deadline: Duration::from_micros(150),
+            use_profile: false,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn serve_bench_runs_bit_identical_and_accounts_every_request() {
+        let cfg = tiny();
+        let r = run(&cfg).expect("serve run");
+        assert!(r.bit_identical, "queue output must match the pinned solo plan bitwise");
+        assert_eq!(r.requests_per_phase, 4 * 24);
+        let served: u64 = r.per_matrix.iter().map(|p| p.stats.submitted).sum();
+        assert_eq!(served, r.requests_per_phase, "batched phase accounts every request");
+        for pm in &r.per_matrix {
+            assert_eq!(pm.stats.poisoned_batches, 0);
+            let by_hist: u64 =
+                pm.stats.hist.iter().enumerate().map(|(k, &n)| k as u64 * n).sum();
+            assert_eq!(by_hist, pm.stats.submitted, "histogram accounts every request");
+        }
+        assert!(r.speedup > 0.0 && r.unbatched_throughput > 0.0);
+    }
+
+    #[test]
+    fn serve_json_has_the_guarded_fields() {
+        let cfg = tiny();
+        let r = run(&cfg).expect("serve run");
+        let j = to_json(&r);
+        assert!(j.contains("\"speedup\": "));
+        assert!(j.contains("\"batched_requests\": "));
+        assert!(j.contains("\"bit_identical\": true"));
+        assert!(j.contains("\"batch_hist\": ["));
+        assert!(j.contains("forelem-serve-bench-v1"));
+        let txt = report_text(&r);
+        assert!(txt.contains("speedup"));
+    }
+}

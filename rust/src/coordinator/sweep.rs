@@ -599,7 +599,7 @@ pub fn run(kernel: Kernel, arch: Arch, cfg: &SweepConfig, xla: Option<&XlaBacken
     }
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for ch in s.chars() {
         match ch {
@@ -614,12 +614,12 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-fn json_str_array(items: &[String]) -> String {
+pub(crate) fn json_str_array(items: &[String]) -> String {
     let quoted: Vec<String> = items.iter().map(|s| format!("\"{}\"", json_escape(s))).collect();
     format!("[{}]", quoted.join(", "))
 }
 
-fn json_num_array(items: &[f64]) -> String {
+pub(crate) fn json_num_array(items: &[f64]) -> String {
     let nums: Vec<String> = items.iter().map(|v| format!("{v:e}")).collect();
     format!("[{}]", nums.join(", "))
 }

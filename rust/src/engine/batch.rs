@@ -1,0 +1,674 @@
+//! Request batching — coalesce concurrent same-matrix SpMV calls into
+//! one planned SpMM panel (the serving half of the paper's thesis: the
+//! *workload* picks the routine, and a workload of k concurrent SpMVs
+//! on one fingerprint IS an SpMM(k)).
+//!
+//! # Queue lifecycle
+//!
+//! A [`BatchQueue`] is built per `(matrix fingerprint, arch)` via
+//! [`Engine::batch_queue`]. [`BatchQueue::submit`] is the only entry
+//! point; it is leader/follower group commit:
+//!
+//! * **fast path** — if batching can never pay on this matrix
+//!   (`pass_through`) or no other submission is in flight, the request
+//!   runs the planned solo SpMV immediately: one branch and two relaxed
+//!   counter bumps on top of the bare `Executable::spmv`, no lock, no
+//!   deadline wait. k = 1 never queues.
+//! * **join** — with the queue's `state` lock held, a submitter either
+//!   joins the currently open batch (pushing its `x` under the slot
+//!   lock, so its result index is race-free) or opens a new one and
+//!   becomes that batch's *leader*. A join that fills the batch to
+//!   `max_batch` seals it on the spot and wakes the leader.
+//! * **flush** — the leader waits on the slot condvar until the batch
+//!   seals or `flush_deadline` expires (partial batches flush on the
+//!   deadline: the leader clears `state` first, then seals, so late
+//!   submitters open a fresh batch instead of joining a sealed one),
+//!   then executes the whole group and distributes per-waiter results.
+//!
+//! Lock order is strictly `state → slot.m`, on every path including the
+//! deadline re-seal; the condvar waits hold only `slot.m`.
+//!
+//! # Cost-model batch decision
+//!
+//! Whether a sealed group of k requests runs as one SpMM(k) panel or as
+//! k planned SpMVs is decided by [`cost::batch_decision`] under the
+//! same (possibly fitted) parameters that rank every compile: at
+//! construction the queue finds `min_k_pays`, the smallest k whose
+//! predicted panel time (including pack/scatter traffic) beats k solo
+//! serves. Groups below the threshold loop the solo executable; groups
+//! at or above it run `Executable::spmm_k(k)` on the plan the model
+//! ranks best *for that k* (compiled once per distinct k, memoized —
+//! the process-wide compile cache dedups the storage underneath).
+//!
+//! # Bit-identity contract
+//!
+//! Batched answers must be bit-identical to the solo SpMV the caller
+//! would have gotten, so batching is a pure throughput knob — never a
+//! numerics change. Both sides of the decision are therefore restricted
+//! to the *canonical* plan sets: row-wise CSR/CSR-AoS at `lanes == 1`,
+//! whose per-slot reduction folds from 0.0 in `p`-ascending order for
+//! SpMV (serial and row-partitioned parallel alike) and per panel
+//! column for SpMM (`kernels::spmm::csr_rowdot_k` is the structural
+//! witness; `axpy_k4` accumulates each slot in the same order). Tiled
+//! SpMV (band-split accumulation reassociates) and wide lanes (the
+//! AVX2 path is machine-dependent) are excluded from both sides.
+//!
+//! # Fault isolation
+//!
+//! The flush body runs under `catch_unwind` with the `batch.flush`
+//! chaos point at its head: a panicking flush marks that batch
+//! *poisoned*, wakes its waiters — followers panic with a clear
+//! message, the leader re-raises the original payload — and leaves the
+//! queue itself healthy for the next batch. One bad group never takes
+//! the queue down.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::baselines::Kernel;
+use crate::concretize::{Layout, Plan as ExecPlan, Schedule, Traversal};
+use crate::error::ForelemError;
+use crate::matrix::{MatrixStats, TriMat};
+use crate::search::cost::{self, CostParams};
+
+use super::{Engine, EngineBuilder, Executable};
+
+/// Is this execution triple in the canonical SpMV set — serial or
+/// row-partitioned row-wise CSR/CSR-AoS, scalar lanes — whose
+/// reduction order defines the bit-identity contract?
+fn canonical_spmv(e: &ExecPlan) -> bool {
+    matches!(e.layout, Layout::Csr | Layout::CsrAos)
+        && e.traversal == Traversal::RowWise
+        && matches!(e.schedule, Schedule::Serial | Schedule::Parallel { .. })
+        && e.lanes == 1
+}
+
+/// Canonical SpMM set: same layouts/traversal/lanes; any schedule is
+/// admissible because parallel splits rows and tiled splits the dense
+/// `k` axis into panels — neither reassociates a per-column reduction.
+fn canonical_spmm(e: &ExecPlan) -> bool {
+    matches!(e.layout, Layout::Csr | Layout::CsrAos)
+        && e.traversal == Traversal::RowWise
+        && e.lanes == 1
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One in-flight batch: requests pack into `xs` until sealed, the
+/// leader's flush fills `results` (indexed like `xs`) and flips `done`
+/// — or `poisoned` when the flush panicked.
+struct Flight {
+    xs: Vec<Vec<f64>>,
+    results: Vec<Vec<f64>>,
+    sealed: bool,
+    /// Sealed by filling to `max_batch` (vs the leader's deadline).
+    sealed_full: bool,
+    done: bool,
+    poisoned: bool,
+}
+
+struct BatchSlot {
+    m: Mutex<Flight>,
+    cv: Condvar,
+}
+
+impl BatchSlot {
+    fn new(x: &[f64]) -> Self {
+        BatchSlot {
+            m: Mutex::new(Flight {
+                xs: vec![x.to_vec()],
+                results: vec![Vec::new()],
+                sealed: false,
+                sealed_full: false,
+                done: false,
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Decrement-on-drop guard so a poisoned waiter's panic still releases
+/// its in-flight slot (otherwise the fast-path invariant would rot).
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Monotonic counters of one queue — read with [`BatchQueue::stats`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Total `submit` calls.
+    pub submitted: u64,
+    /// Requests answered from a coalesced SpMM panel.
+    pub batched: u64,
+    /// Requests answered by the solo SpMV plan (fast path, k = 1
+    /// flushes, and sub-threshold groups).
+    pub solo: u64,
+    /// Queue flushes executed (one per sealed batch).
+    pub flushes: u64,
+    /// Flushes sealed by the deadline with a partial batch.
+    pub deadline_flushes: u64,
+    /// Flushes sealed by reaching `max_batch`.
+    pub full_flushes: u64,
+    /// Batches whose flush panicked (their waiters were poisoned).
+    pub poisoned_batches: u64,
+    /// `hist[k]` = groups served at size k (`hist[1]` counts the solo
+    /// fast path too); length `max_batch + 1`.
+    pub hist: Vec<u64>,
+}
+
+struct Counters {
+    submitted: AtomicU64,
+    batched: AtomicU64,
+    solo: AtomicU64,
+    flushes: AtomicU64,
+    deadline_flushes: AtomicU64,
+    full_flushes: AtomicU64,
+    poisoned_batches: AtomicU64,
+    hist: Vec<AtomicU64>,
+}
+
+impl Counters {
+    fn new(max_batch: usize) -> Self {
+        Counters {
+            submitted: AtomicU64::new(0),
+            batched: AtomicU64::new(0),
+            solo: AtomicU64::new(0),
+            flushes: AtomicU64::new(0),
+            deadline_flushes: AtomicU64::new(0),
+            full_flushes: AtomicU64::new(0),
+            poisoned_batches: AtomicU64::new(0),
+            hist: (0..=max_batch).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn bump_hist(&self, k: usize) {
+        if let Some(slot) = self.hist.get(k) {
+            slot.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The per-`(fingerprint, arch)` coalescing queue. See the module docs
+/// for lifecycle, decision and contract; construct via
+/// [`Engine::batch_queue`].
+pub struct BatchQueue {
+    engine: Engine,
+    m: TriMat,
+    nrows: usize,
+    ncols: usize,
+    max_batch: usize,
+    flush_deadline: Duration,
+    /// The best-ranked canonical solo SpMV executable.
+    solo: Executable,
+    solo_id: String,
+    /// Canonical SpMM candidates `(plan id, triple)` the per-k ranking
+    /// chooses from.
+    spmm_plans: Vec<(String, ExecPlan)>,
+    /// Canonical SpMV triples — the solo side of `batch_decision`.
+    spmv_execs: Vec<ExecPlan>,
+    stats_m: MatrixStats,
+    params: CostParams,
+    /// Smallest group size whose predicted panel beats k solo serves;
+    /// `usize::MAX` when batching never pays on this matrix.
+    min_k_pays: usize,
+    per_k: Mutex<HashMap<usize, Executable>>,
+    state: Mutex<Option<Arc<BatchSlot>>>,
+    inflight: AtomicUsize,
+    counters: Counters,
+}
+
+impl BatchQueue {
+    pub(super) fn new(cfg: &EngineBuilder, m: &TriMat) -> Result<BatchQueue, ForelemError> {
+        m.validate()?;
+        let engine = cfg.clone().build();
+        let stats_m = MatrixStats::of(m);
+        let spmv_pool = engine.pool(Kernel::Spmv);
+        let spmm_pool = engine.pool(Kernel::Spmm);
+        let params = spmv_pool.space.params;
+        let spmv_canon: Vec<(String, ExecPlan)> = spmv_pool
+            .plans
+            .iter()
+            .filter(|p| canonical_spmv(&p.exec))
+            .map(|p| (p.id.clone(), p.exec))
+            .collect();
+        let spmm_plans: Vec<(String, ExecPlan)> = spmm_pool
+            .plans
+            .iter()
+            .filter(|p| canonical_spmm(&p.exec))
+            .map(|p| (p.id.clone(), p.exec))
+            .collect();
+        let spmv_execs: Vec<ExecPlan> = spmv_canon.iter().map(|(_, e)| *e).collect();
+        let Some(&best) =
+            cost::rank_execs(Kernel::Spmv, 1, &spmv_execs, &stats_m, &params).first()
+        else {
+            return Err(ForelemError::UnsupportedPlan {
+                plan_id: "<canonical spmv>".into(),
+                reason: "plan pool has no bit-identity-canonical SpMV plan".into(),
+            });
+        };
+        let solo_id = spmv_canon[best].0.clone();
+        let solo = engine.compile_pinned(Kernel::Spmv, m, &solo_id)?;
+        let max_batch = cfg.max_batch.max(1);
+        let spmm_execs: Vec<ExecPlan> = spmm_plans.iter().map(|(_, e)| *e).collect();
+        let mut min_k_pays = usize::MAX;
+        for k in 2..=max_batch {
+            match cost::batch_decision(k, &spmv_execs, &spmm_execs, &stats_m, &params) {
+                Some(d) if d.batch_pays() => {
+                    min_k_pays = k;
+                    break;
+                }
+                Some(_) => {}
+                None => break,
+            }
+        }
+        Ok(BatchQueue {
+            engine,
+            m: m.clone(),
+            nrows: m.nrows,
+            ncols: m.ncols,
+            max_batch,
+            flush_deadline: cfg.flush_deadline,
+            solo,
+            solo_id,
+            spmm_plans,
+            spmv_execs,
+            stats_m,
+            params,
+            min_k_pays,
+            per_k: Mutex::new(HashMap::new()),
+            state: Mutex::new(None),
+            inflight: AtomicUsize::new(0),
+            counters: Counters::new(max_batch),
+        })
+    }
+
+    /// Serve one SpMV request, possibly coalesced with concurrent
+    /// submitters on other threads. Returns `y = A x`, bit-identical
+    /// to [`Executable::spmv`] on the queue's solo plan regardless of
+    /// how the request was grouped.
+    ///
+    /// # Panics
+    ///
+    /// If `x.len() != ncols`, or if this request's batch flush
+    /// panicked (every waiter of a poisoned batch panics; the queue
+    /// stays healthy for subsequent batches).
+    pub fn submit(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols, "submit: x length vs matrix ncols");
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let prior = self.inflight.fetch_add(1, Ordering::AcqRel);
+        let _guard = InflightGuard(&self.inflight);
+        // Fast path: an open batch implies its leader is inside
+        // `submit` and still counted in `inflight`, so `prior == 0`
+        // proves there is nothing to coalesce with — serve solo, no
+        // lock, no deadline. Also the standing mode when the cost
+        // model says batching never pays here.
+        if self.min_k_pays == usize::MAX || prior == 0 {
+            let mut y = vec![0.0; self.nrows];
+            self.solo.spmv(x, &mut y);
+            self.counters.solo.fetch_add(1, Ordering::Relaxed);
+            self.counters.bump_hist(1);
+            return y;
+        }
+        enum Role {
+            Leader(Arc<BatchSlot>),
+            Follower(Arc<BatchSlot>, usize),
+        }
+        let role = {
+            let mut st = lock(&self.state);
+            match st.as_ref() {
+                Some(open) => {
+                    let slot = Arc::clone(open);
+                    let mut g = lock(&slot.m);
+                    let idx = g.xs.len();
+                    g.xs.push(x.to_vec());
+                    g.results.push(Vec::new());
+                    if g.xs.len() >= self.max_batch {
+                        g.sealed = true;
+                        g.sealed_full = true;
+                        slot.cv.notify_all();
+                        *st = None;
+                    }
+                    drop(g);
+                    Role::Follower(slot, idx)
+                }
+                None => {
+                    let slot = Arc::new(BatchSlot::new(x));
+                    *st = Some(Arc::clone(&slot));
+                    Role::Leader(slot)
+                }
+            }
+        };
+        match role {
+            Role::Leader(slot) => {
+                let start = Instant::now();
+                let mut g = lock(&slot.m);
+                while !g.sealed {
+                    let elapsed = start.elapsed();
+                    if elapsed >= self.flush_deadline {
+                        // Deadline: close the batch to new joiners
+                        // *first* (state lock), then seal — strict
+                        // state → slot.m order, so we must let go of
+                        // the slot in between.
+                        drop(g);
+                        let mut st = lock(&self.state);
+                        if st.as_ref().is_some_and(|cur| Arc::ptr_eq(cur, &slot)) {
+                            *st = None;
+                        }
+                        drop(st);
+                        g = lock(&slot.m);
+                        g.sealed = true;
+                        break;
+                    }
+                    g = slot
+                        .cv
+                        .wait_timeout(g, self.flush_deadline - elapsed)
+                        .map(|(g, _)| g)
+                        .unwrap_or_else(|p| p.into_inner().0);
+                }
+                let full = g.sealed_full;
+                drop(g);
+                self.counters.flushes.fetch_add(1, Ordering::Relaxed);
+                if full {
+                    self.counters.full_flushes.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.counters.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+                }
+                self.flush(&slot);
+                let mut g = lock(&slot.m);
+                std::mem::take(&mut g.results[0])
+            }
+            Role::Follower(slot, idx) => {
+                let mut g = lock(&slot.m);
+                while !g.done && !g.poisoned {
+                    g = slot.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+                }
+                assert!(
+                    !g.poisoned,
+                    "batch flush panicked; this batch's waiters are poisoned \
+                     (the queue itself stays serviceable)"
+                );
+                std::mem::take(&mut g.results[idx])
+            }
+        }
+    }
+
+    /// Execute one sealed batch and distribute results. Panics inside
+    /// the execution body poison exactly this batch: waiters are woken
+    /// with `poisoned` set and the leader re-raises the payload.
+    fn flush(&self, slot: &Arc<BatchSlot>) {
+        let xs = {
+            let mut g = lock(&slot.m);
+            std::mem::take(&mut g.xs)
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.run_group(&xs)));
+        let mut g = lock(&slot.m);
+        match outcome {
+            Ok(results) => {
+                g.results = results;
+                g.done = true;
+                slot.cv.notify_all();
+            }
+            Err(payload) => {
+                self.counters.poisoned_batches.fetch_add(1, Ordering::Relaxed);
+                g.poisoned = true;
+                slot.cv.notify_all();
+                drop(g);
+                resume_unwind(payload);
+            }
+        }
+    }
+
+    /// The batch execution body (the unit `catch_unwind` isolates):
+    /// panel when the model says k pays, k planned solo serves
+    /// otherwise.
+    fn run_group(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        crate::faultpoint!("batch.flush");
+        let k = xs.len();
+        self.counters.bump_hist(k);
+        if k >= self.min_k_pays {
+            if let Some(exec) = self.exec_for_k(k) {
+                let mut b = vec![0.0; self.ncols * k];
+                for (j, x) in xs.iter().enumerate() {
+                    for (col, &v) in x.iter().enumerate() {
+                        b[col * k + j] = v;
+                    }
+                }
+                let mut c = vec![0.0; self.nrows * k];
+                exec.spmm_k(&b, k, &mut c);
+                self.counters.batched.fetch_add(k as u64, Ordering::Relaxed);
+                return (0..k)
+                    .map(|j| (0..self.nrows).map(|i| c[i * k + j]).collect())
+                    .collect();
+            }
+        }
+        // Below the crossover (or the per-k compile degraded away):
+        // exactly the k × SpMV the model predicted for this side.
+        self.counters.solo.fetch_add(k as u64, Ordering::Relaxed);
+        xs.iter()
+            .map(|x| {
+                let mut y = vec![0.0; self.nrows];
+                self.solo.spmv(x, &mut y);
+                y
+            })
+            .collect()
+    }
+
+    /// The canonical SpMM executable ranked best *at this k*, compiled
+    /// once and memoized (the process-wide compile cache shares the
+    /// assembled storage with every other compile of this matrix).
+    /// `None` if the pinned compile failed — the caller falls back to
+    /// solo serves rather than erroring the batch.
+    fn exec_for_k(&self, k: usize) -> Option<Executable> {
+        if let Some(e) = lock(&self.per_k).get(&k) {
+            return Some(e.clone());
+        }
+        let execs: Vec<ExecPlan> = self.spmm_plans.iter().map(|(_, e)| *e).collect();
+        let best =
+            *cost::rank_execs(Kernel::Spmm, k, &execs, &self.stats_m, &self.params).first()?;
+        let id = &self.spmm_plans[best].0;
+        let exe = self.engine.compile_pinned(Kernel::Spmm, &self.m, id).ok()?;
+        lock(&self.per_k).insert(k, exe.clone());
+        Some(exe)
+    }
+
+    /// Stable id of the solo SpMV plan every answer is bit-identical to.
+    pub fn solo_plan_id(&self) -> &str {
+        &self.solo_id
+    }
+
+    /// Smallest group size the cost model batches at (`None`: batching
+    /// never pays on this matrix and every submit passes through).
+    pub fn min_k_pays(&self) -> Option<usize> {
+        (self.min_k_pays != usize::MAX).then_some(self.min_k_pays)
+    }
+
+    /// The predicted batch-vs-loop verdict at one k, under this
+    /// queue's canonical plan sets and (possibly fitted) parameters.
+    pub fn decision_at(&self, k: usize) -> Option<cost::BatchDecision> {
+        let spmm_execs: Vec<ExecPlan> = self.spmm_plans.iter().map(|(_, e)| *e).collect();
+        cost::batch_decision(k, &self.spmv_execs, &spmm_execs, &self.stats_m, &self.params)
+    }
+
+    /// Snapshot of the queue counters.
+    pub fn stats(&self) -> BatchStats {
+        BatchStats {
+            submitted: self.counters.submitted.load(Ordering::Relaxed),
+            batched: self.counters.batched.load(Ordering::Relaxed),
+            solo: self.counters.solo.load(Ordering::Relaxed),
+            flushes: self.counters.flushes.load(Ordering::Relaxed),
+            deadline_flushes: self.counters.deadline_flushes.load(Ordering::Relaxed),
+            full_flushes: self.counters.full_flushes.load(Ordering::Relaxed),
+            poisoned_batches: self.counters.poisoned_batches.load(Ordering::Relaxed),
+            hist: self.counters.hist.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+impl Engine {
+    /// The batching queue for one tuple reservoir on this engine's
+    /// arch — created on first request per fingerprint, shared (and
+    /// counter-accumulating) afterwards. The queue compiles through
+    /// the same builder configuration as this engine, so plan ranking,
+    /// profile use and autotune policy follow the engine's knobs.
+    ///
+    /// # Errors
+    ///
+    /// [`ForelemError::InvalidMatrix`] for a bad reservoir;
+    /// [`ForelemError::UnsupportedPlan`] if the plan pool somehow has
+    /// no bit-identity-canonical plan (not reachable with the shipped
+    /// enumeration).
+    pub fn batch_queue(&self, m: &TriMat) -> Result<Arc<BatchQueue>, ForelemError> {
+        m.validate()?;
+        let fp = m.fingerprint();
+        if let Some(q) = lock(&self.batches).get(&fp) {
+            return Ok(Arc::clone(q));
+        }
+        let q = Arc::new(BatchQueue::new(&self.cfg, m)?);
+        let mut reg = lock(&self.batches);
+        Ok(Arc::clone(reg.entry(fp).or_insert(q)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::Arch;
+
+    fn test_engine() -> Engine {
+        Engine::builder()
+            .arch(Arch::HostSmall)
+            .profile(false)
+            .archive(false)
+            .max_batch(4)
+            .flush_deadline(Duration::from_micros(200))
+            .build()
+    }
+
+    #[test]
+    fn k1_submit_matches_solo_spmv_bitwise() {
+        let m = gen::uniform_random(40, 40, 300, 91);
+        let engine = test_engine();
+        let q = engine.batch_queue(&m).unwrap_or_else(|e| panic!("{e}"));
+        let x: Vec<f64> = (0..40).map(|i| (i as f64 * 0.7).sin()).collect();
+        let y = q.submit(&x);
+        let solo = engine
+            .compile_pinned(Kernel::Spmv, &m, q.solo_plan_id())
+            .unwrap_or_else(|e| panic!("{e}"));
+        let mut want = vec![0.0; 40];
+        solo.spmv(&x, &mut want);
+        assert_eq!(y, want, "uncontended submit must be the solo plan's bits");
+        let s = q.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.solo, 1);
+        assert_eq!(s.flushes, 0, "k=1 must never reach the queue");
+    }
+
+    #[test]
+    fn queue_is_shared_per_fingerprint() {
+        let m = gen::banded(30, 2, 0.8, 92);
+        let engine = test_engine();
+        let a = engine.batch_queue(&m).unwrap_or_else(|e| panic!("{e}"));
+        let b = engine.batch_queue(&m).unwrap_or_else(|e| panic!("{e}"));
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn decision_threshold_is_consistent_with_decision_at() {
+        let m = gen::uniform_random(60, 60, 600, 93);
+        let engine = test_engine();
+        let q = engine.batch_queue(&m).unwrap_or_else(|e| panic!("{e}"));
+        if let Some(kmin) = q.min_k_pays() {
+            let d = q.decision_at(kmin).unwrap_or_else(|| panic!("no decision at {kmin}"));
+            assert!(d.batch_pays(), "threshold k={kmin} must itself pay");
+            for k in 2..kmin {
+                let d = q.decision_at(k).unwrap_or_else(|| panic!("no decision at {k}"));
+                assert!(!d.batch_pays(), "k={k} below threshold must not pay");
+            }
+        }
+    }
+
+    /// Concurrent submitters against a deliberately long deadline:
+    /// every result bit-identical to the solo plan, and the counters
+    /// account for every request exactly once.
+    #[test]
+    fn concurrent_submits_are_bitwise_solo_and_fully_accounted() {
+        let m = gen::uniform_random(50, 50, 500, 94);
+        let engine = Engine::builder()
+            .arch(Arch::HostSmall)
+            .profile(false)
+            .archive(false)
+            .max_batch(4)
+            .flush_deadline(Duration::from_millis(20))
+            .build();
+        let q = engine.batch_queue(&m).unwrap_or_else(|e| panic!("{e}"));
+        let solo = engine
+            .compile_pinned(Kernel::Spmv, &m, q.solo_plan_id())
+            .unwrap_or_else(|e| panic!("{e}"));
+        let n_threads = 8;
+        let rounds = 10;
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let q = &q;
+                let solo = &solo;
+                s.spawn(move || {
+                    for r in 0..rounds {
+                        let x: Vec<f64> =
+                            (0..50).map(|i| ((i + t * 7 + r * 13) as f64 * 0.31).cos()).collect();
+                        let y = q.submit(&x);
+                        let mut want = vec![0.0; 50];
+                        solo.spmv(&x, &mut want);
+                        assert_eq!(y, want, "thread {t} round {r}");
+                    }
+                });
+            }
+        });
+        let s = q.stats();
+        assert_eq!(s.submitted, (n_threads * rounds) as u64);
+        assert_eq!(
+            s.batched + s.solo,
+            s.submitted,
+            "every request is served exactly once: {s:?}"
+        );
+        let hist_total: u64 =
+            s.hist.iter().enumerate().map(|(k, &c)| k as u64 * c).sum();
+        assert_eq!(hist_total, s.submitted, "histogram covers every request: {s:?}");
+    }
+
+    /// A leader with no joiners must flush its partial batch at the
+    /// deadline rather than hang — and a partial group of 1 serves
+    /// solo even above a paying threshold.
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let m = gen::uniform_random(30, 30, 200, 95);
+        let engine = test_engine();
+        let q = engine.batch_queue(&m).unwrap_or_else(|e| panic!("{e}"));
+        // Force the queue path by simulating one in-flight peer.
+        q.inflight.fetch_add(1, Ordering::AcqRel);
+        let x: Vec<f64> = (0..30).map(|i| i as f64 * 0.05 - 0.7).collect();
+        let t0 = Instant::now();
+        let y = q.submit(&x);
+        q.inflight.fetch_sub(1, Ordering::AcqRel);
+        assert!(
+            t0.elapsed() >= Duration::from_micros(200),
+            "partial batch must wait out the deadline"
+        );
+        let mut want = vec![0.0; 30];
+        q.solo.spmv(&x, &mut want);
+        assert_eq!(y, want);
+        let s = q.stats();
+        assert_eq!(s.flushes, 1);
+        assert_eq!(s.deadline_flushes, 1);
+        assert_eq!(s.hist[1], 1);
+    }
+}

@@ -83,6 +83,7 @@
 // reached for by habit.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
+pub mod batch;
 mod cache;
 mod executable;
 mod quarantine;
@@ -142,6 +143,8 @@ pub struct EngineBuilder {
     bench: BenchConfig,
     measure_timeout: Duration,
     cache_budget: usize,
+    max_batch: usize,
+    flush_deadline: Duration,
 }
 
 impl Default for EngineBuilder {
@@ -156,6 +159,8 @@ impl Default for EngineBuilder {
             bench: BenchConfig::quick(),
             measure_timeout: Duration::from_secs(5),
             cache_budget: cache::DEFAULT_BUDGET,
+            max_batch: 16,
+            flush_deadline: Duration::from_micros(150),
         }
     }
 }
@@ -238,8 +243,24 @@ impl EngineBuilder {
         self
     }
 
+    /// Most requests a [`batch::BatchQueue`] coalesces into one SpMM
+    /// panel (default 16). Also bounds the batch-size histogram.
+    pub fn max_batch(mut self, k: usize) -> Self {
+        self.max_batch = k.max(1);
+        self
+    }
+
+    /// How long a batch leader holds an open batch for joiners before
+    /// flushing it partial (default 150 µs — about one small-matrix
+    /// SpMV, so a second concurrent request usually lands in time
+    /// without adding visible latency under load).
+    pub fn flush_deadline(mut self, d: Duration) -> Self {
+        self.flush_deadline = d;
+        self
+    }
+
     pub fn build(self) -> Engine {
-        Engine { cfg: self, pools: Mutex::new(HashMap::new()) }
+        Engine { cfg: self, pools: Mutex::new(HashMap::new()), batches: Mutex::new(HashMap::new()) }
     }
 }
 
@@ -321,6 +342,8 @@ struct Candidate {
 pub struct Engine {
     cfg: EngineBuilder,
     pools: Mutex<HashMap<Kernel, Arc<PlannedPool>>>,
+    /// Per-fingerprint request-batching queues ([`Engine::batch_queue`]).
+    batches: Mutex<HashMap<u64, Arc<batch::BatchQueue>>>,
 }
 
 impl Engine {

@@ -3,46 +3,83 @@
 //! later compile of the same matrix re-runs a measurement already
 //! known to take the process down (or stall it against the watchdog).
 //! Process-wide, like the compile cache it complements.
+//!
+//! Entries are **bounded** ([`MAX_ENTRIES`], insertion-order FIFO
+//! eviction) and **clearable** (`Engine::clear_quarantine`, which
+//! `forelem calibrate` invokes after persisting a fresh profile): a
+//! quarantine records *evidence of a fault*, not a verdict, so one
+//! transient measurement glitch must never exclude a plan from a
+//! long-running host forever. Re-denying an existing key refreshes
+//! its reason without re-queueing it for eviction.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Mutex, OnceLock};
 
-type DenyMap = HashMap<(u64, String), String>;
+/// Process-wide cap on quarantined `(matrix, plan)` pairs. Far above
+/// what a healthy host accumulates (entries appear only when a
+/// measurement panics or hangs); when a pathological environment
+/// floods the list, the *oldest* evidence is dropped first — precisely
+/// the entries most likely to have been transient.
+pub(crate) const MAX_ENTRIES: usize = 256;
 
-fn deny_map() -> &'static Mutex<DenyMap> {
-    static DENY: OnceLock<Mutex<DenyMap>> = OnceLock::new();
-    DENY.get_or_init(|| Mutex::new(HashMap::new()))
+type Key = (u64, String);
+
+#[derive(Default)]
+struct DenyList {
+    map: HashMap<Key, String>,
+    /// Insertion order of `map`'s keys — the FIFO eviction queue.
+    order: VecDeque<Key>,
 }
 
-fn locked() -> std::sync::MutexGuard<'static, DenyMap> {
-    // A panic while holding this lock poisons it; the map itself is
+fn deny_list() -> &'static Mutex<DenyList> {
+    static DENY: OnceLock<Mutex<DenyList>> = OnceLock::new();
+    DENY.get_or_init(|| Mutex::new(DenyList::default()))
+}
+
+fn locked() -> std::sync::MutexGuard<'static, DenyList> {
+    // A panic while holding this lock poisons it; the list itself is
     // always in a consistent state (single-call updates), so recover
     // the inner value instead of propagating the poison forever.
-    deny_map().lock().unwrap_or_else(|p| p.into_inner())
+    deny_list().lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// Quarantine `plan_id` for the matrix with `fingerprint`, recording
-/// why. Logs on first insertion only.
+/// why. Logs on first insertion only; evicts the oldest entry past
+/// [`MAX_ENTRIES`].
 pub(crate) fn deny(fingerprint: u64, plan_id: &str, reason: &str) {
-    let prev = locked().insert((fingerprint, plan_id.to_string()), reason.to_string());
+    let key: Key = (fingerprint, plan_id.to_string());
+    let mut list = locked();
+    let prev = list.map.insert(key.clone(), reason.to_string());
     if prev.is_none() {
+        list.order.push_back(key);
+        while list.map.len() > MAX_ENTRIES {
+            match list.order.pop_front() {
+                Some(oldest) => {
+                    list.map.remove(&oldest);
+                }
+                None => break, // unreachable: order tracks map 1:1
+            }
+        }
         eprintln!("quarantined plan {plan_id} on matrix fp{fingerprint:016x}: {reason}");
     }
 }
 
 /// Is `plan_id` quarantined for this matrix?
 pub(crate) fn is_denied(fingerprint: u64, plan_id: &str) -> bool {
-    locked().contains_key(&(fingerprint, plan_id.to_string()))
+    locked().map.contains_key(&(fingerprint, plan_id.to_string()))
 }
 
 /// Number of quarantined `(matrix, plan)` pairs process-wide.
 pub(crate) fn len() -> usize {
-    locked().len()
+    locked().map.len()
 }
 
-/// Drop every quarantine entry (tests and the chaos drill).
+/// Drop every quarantine entry (tests, the chaos drill, and the
+/// recalibrate path — a fresh profile resets the evidence).
 pub(crate) fn clear() {
-    locked().clear();
+    let mut list = locked();
+    list.map.clear();
+    list.order.clear();
 }
 
 #[cfg(test)]
@@ -67,6 +104,27 @@ mod tests {
         assert!(is_denied(1, "csr.row.serial.v8"));
         assert!(is_denied(1, "csr.row.serial"), "scalar entry untouched");
         assert_eq!(len(), 2);
+        clear();
+        assert_eq!(len(), 0);
+    }
+
+    #[test]
+    fn cap_evicts_oldest_first_and_re_deny_does_not_requeue() {
+        clear();
+        // Re-denying key 0 later must NOT refresh its eviction slot:
+        // it stays the oldest and is the first to go at the cap.
+        deny(0, "p", "first");
+        for fp in 1..MAX_ENTRIES as u64 {
+            deny(fp, "p", "fill");
+        }
+        assert_eq!(len(), MAX_ENTRIES);
+        deny(0, "p", "transient fault seen again"); // existing key: reason refresh only
+        assert_eq!(len(), MAX_ENTRIES);
+        deny(MAX_ENTRIES as u64, "p", "one past the cap");
+        assert_eq!(len(), MAX_ENTRIES, "cap holds");
+        assert!(!is_denied(0, "p"), "oldest entry evicted despite the later re-deny");
+        assert!(is_denied(1, "p"), "second-oldest survives");
+        assert!(is_denied(MAX_ENTRIES as u64, "p"), "newest present");
         clear();
         assert_eq!(len(), 0);
     }

@@ -89,6 +89,30 @@ pub fn csr(a: &Csr, b: &[f64], k: usize, c: &mut [f64]) {
     }
 }
 
+/// CSR row-dot panel variant — the batching queue's correctness
+/// anchor. Each output slot `C[i][j]` is computed as a *scalar* dot
+/// product folding from 0.0 over the row's entries in `p`-ascending
+/// order: the exact operation sequence `kernels::spmv::csr` performs
+/// for `x = B[:, j]`, so every column of the panel result is
+/// bit-identical to the per-request SpMV it replaced. (`csr` above
+/// produces the same bits for the canonical set — `axpy_k4`
+/// accumulates each slot element-wise in the same order — but this
+/// form *is* the per-column SpMV loop, so the contract is structural
+/// rather than an argument about unroll shapes.)
+pub fn csr_rowdot_k(a: &Csr, b: &[f64], k: usize, c: &mut [f64]) {
+    for i in 0..a.nrows {
+        let (s, e) = (a.row_ptr[i] as usize, a.row_ptr[i + 1] as usize);
+        let crow = &mut c[i * k..i * k + k];
+        for (j, cj) in crow.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for p in s..e {
+                acc += a.vals[p] * b[a.cols[p] as usize * k + j];
+            }
+            *cj = acc;
+        }
+    }
+}
+
 /// CSR AoS.
 pub fn csr_aos(a: &CsrAos, b: &[f64], k: usize, c: &mut [f64]) {
     for i in 0..a.nrows {
@@ -368,6 +392,35 @@ mod tests {
                 k0 = k1;
             }
             assert_close(&c, &want, 1e-10).unwrap_or_else(|e| panic!("bcsr panel={panel}: {e}"));
+        }
+    }
+
+    /// The batching bit-identity contract, at the kernel layer: the
+    /// row-dot panel produces (a) exactly the bits of `spmm::csr`, and
+    /// (b) per column `j`, exactly the bits of `spmv::csr` on
+    /// `x = B[:, j]`. `==` on the raw f64s, not a tolerance.
+    #[test]
+    fn csr_rowdot_bitwise_matches_spmm_and_per_column_spmv() {
+        for (m, k) in [
+            (gen::uniform_random(23, 29, 150, 34), 3),
+            (gen::powerlaw(30, 2.0, 16, 35), 8),
+            (gen::banded(25, 3, 0.7, 36), 1),
+        ] {
+            let a = Csr::from_tuples(&m);
+            let b: Vec<f64> =
+                (0..m.ncols * k).map(|i| ((i * 7 % 23) as f64 - 11.0) * 0.1).collect();
+            let mut c_dot = vec![f64::NAN; m.nrows * k];
+            csr_rowdot_k(&a, &b, k, &mut c_dot);
+            let mut c_axpy = vec![f64::NAN; m.nrows * k];
+            csr(&a, &b, k, &mut c_axpy);
+            assert_eq!(c_dot, c_axpy, "rowdot vs axpy spmm bits, k={k}");
+            for j in 0..k {
+                let x: Vec<f64> = (0..m.ncols).map(|col| b[col * k + j]).collect();
+                let mut y = vec![f64::NAN; m.nrows];
+                crate::kernels::spmv::csr(&a, &x, &mut y);
+                let col: Vec<f64> = (0..m.nrows).map(|i| c_dot[i * k + j]).collect();
+                assert_eq!(col, y, "panel column {j} vs solo SpMV bits");
+            }
         }
     }
 

@@ -555,6 +555,63 @@ pub fn rank_execs(
     idx
 }
 
+/// The k-aware batch-vs-loop verdict for `engine::batch`: predicted
+/// seconds for serving `k` concurrent SpMV requests as `k` independent
+/// SpMV calls versus one coalesced SpMM(k) panel.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchDecision {
+    /// `k ×` the cheapest predicted SpMV among `spmv_execs`.
+    pub solo_secs: f64,
+    /// Cheapest predicted SpMM at `dense_k = k` among `spmm_execs`,
+    /// plus the pack/scatter panel traffic the loop path never pays.
+    pub panel_secs: f64,
+    /// Index into `spmm_execs` of the plan behind `panel_secs`.
+    pub panel_exec: usize,
+}
+
+impl BatchDecision {
+    /// Does coalescing the batch beat the per-request loop?
+    pub fn batch_pays(&self) -> bool {
+        self.panel_secs < self.solo_secs
+    }
+}
+
+/// Predict `k × spmv` vs `spmm(k)` over caller-filtered candidate
+/// plans (the batching queue restricts both sides to its bit-identity
+/// canonical set before asking). The panel side is charged for packing
+/// the k right-hand sides into a row-major panel and scattering the
+/// result columns back out — `2 × 8` bytes per element each way at
+/// stream bandwidth — which is exactly the overhead that makes small-k
+/// batching lose and must therefore live inside the prediction, not in
+/// a heuristic around it. Returns `None` when either side has no
+/// candidates.
+pub fn batch_decision(
+    k: usize,
+    spmv_execs: &[ExecPlan],
+    spmm_execs: &[ExecPlan],
+    stats: &MatrixStats,
+    p: &CostParams,
+) -> Option<BatchDecision> {
+    let solo_one = spmv_execs
+        .iter()
+        .map(|e| predict(Kernel::Spmv, 1, e, stats, p))
+        .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))?;
+    let pack_scatter =
+        16.0 * k as f64 * (stats.ncols + stats.nrows) as f64 * p.weights[F_STREAM];
+    let (panel_exec, panel_kernel) = spmm_execs
+        .iter()
+        .map(|e| predict(Kernel::Spmm, k, e, stats, p))
+        .enumerate()
+        .min_by(|(ai, a), (bi, b)| {
+            a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal).then(ai.cmp(bi))
+        })?;
+    Some(BatchDecision {
+        solo_secs: k as f64 * solo_one,
+        panel_secs: panel_kernel + pack_scatter,
+        panel_exec,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -602,6 +659,37 @@ mod tests {
         let padded = Plan::serial(Layout::Ell(EllOrder::RowMajor), Traversal::RowWisePadded);
         let t_ell = predict(Kernel::Spmv, 1, &padded, &uniform, &p);
         assert!(t_ell < t_csr, "padded ELL {t_ell:e} not below CSR {t_csr:e} on uniform rows");
+    }
+
+    /// The batch predictor must charge the panel for pack/scatter (so
+    /// k=1 never batches) and still find the crossover where one
+    /// SpMM(k) pass beats k structure re-streams.
+    #[test]
+    fn batch_decision_crosses_over_with_k() {
+        let p = CostParams::host_small();
+        // Banded, so the gathers stay cache-resident on both sides and
+        // the verdict reduces to (k-1) structure re-streams vs the
+        // panel pack/scatter — deterministic under the seed weights.
+        let stats = MatrixStats::synthetic(200_000, 200_000, 30.0, 100.0, 80, 8);
+        let spmv = [csr()];
+        let spmm = [csr()];
+        let d1 = batch_decision(1, &spmv, &spmm, &stats, &p).unwrap();
+        assert!(
+            !d1.batch_pays(),
+            "k=1 must never batch: panel {:e} vs solo {:e}",
+            d1.panel_secs,
+            d1.solo_secs
+        );
+        let d8 = batch_decision(8, &spmv, &spmm, &stats, &p).unwrap();
+        assert!(
+            d8.batch_pays(),
+            "k=8 panel {:e} should beat {:e} (8 structure re-streams)",
+            d8.panel_secs,
+            d8.solo_secs
+        );
+        assert_eq!(d8.panel_exec, 0);
+        assert!(batch_decision(4, &[], &spmm, &stats, &p).is_none());
+        assert!(batch_decision(4, &spmv, &[], &stats, &p).is_none());
     }
 
     #[test]

@@ -80,6 +80,30 @@ pub trait SparseOps: Send + Sync {
         panic!("TrSv not generated for {} (checked by supports())", self.slug());
     }
 
+    /// Batched-SpMV panel entry point for `engine::batch`: `k`
+    /// right-hand sides packed row-major (`b[col * k + j]` = request
+    /// `j`'s `x[col]`), each output column required to be
+    /// **bit-identical** to a solo `spmv_serial` on that column. The
+    /// default delivers the contract by construction — it gathers each
+    /// column and runs the format's own serial SpMV — so every format
+    /// is batchable; formats with a panel kernel whose per-column
+    /// reduction order provably matches SpMV override it to skip the
+    /// k gather/scatter passes (CSR → `spmm::csr_rowdot_k`).
+    fn spmv_batch(&self, t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        let (nr, nc) = (self.nrows(), self.ncols());
+        let mut x = vec![0.0; nc];
+        let mut y = vec![0.0; nr];
+        for j in 0..k {
+            for (col, xc) in x.iter_mut().enumerate() {
+                *xc = b[col * k + j];
+            }
+            self.spmv_serial(t, &x, &mut y);
+            for (i, &yi) in y.iter().enumerate() {
+                c[i * k + j] = yi;
+            }
+        }
+    }
+
     // ---- parallel partition interface ------------------------------
 
     /// Number of disjoint contiguous output partitions (rows, slices,
@@ -371,6 +395,11 @@ impl SparseOps for Csr {
     }
     fn spmm_serial(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
         spmm::csr(self, b, k, c);
+    }
+    fn spmv_batch(&self, _t: Traversal, b: &[f64], k: usize, c: &mut [f64]) {
+        // Row-dot panel: per column the literal SpMV reduction order,
+        // without the default's k gather/scatter passes.
+        spmm::csr_rowdot_k(self, b, k, c);
     }
     fn trsv_serial(&self, b: &[f64], x: &mut [f64]) {
         trsv::csr(self, b, x);
@@ -1003,6 +1032,34 @@ mod tests {
         ];
         for (ops, layout) in &pairs {
             assert_eq!(ops.slug(), layout.slug());
+        }
+    }
+
+    /// `spmv_batch` bit-identity across formats: every output column
+    /// must carry exactly the bits of a solo `spmv_serial` on that
+    /// column — for the gather/scatter default AND the CSR row-dot
+    /// override. `==` on raw f64s, no tolerance.
+    #[test]
+    fn spmv_batch_columns_bitwise_equal_solo_spmv() {
+        let m = fixed8();
+        let k = 5;
+        let b: Vec<f64> = (0..8 * k).map(|i| ((i * 11 % 17) as f64 - 8.0) * 0.3).collect();
+        let formats: Vec<(Box<dyn SparseOps>, Traversal)> = vec![
+            (Box::new(Csr::from_tuples(&m)), Traversal::RowWise),
+            (Box::new(CsrAos::from_tuples(&m)), Traversal::RowWise),
+            (Box::new(Ell::from_tuples(&m, EllOrder::RowMajor)), Traversal::RowWise),
+            (Box::new(Csc::from_tuples(&m)), Traversal::ColScatter),
+        ];
+        for (ops, t) in &formats {
+            let mut c = vec![f64::NAN; 8 * k];
+            ops.spmv_batch(*t, &b, k, &mut c);
+            for j in 0..k {
+                let x: Vec<f64> = (0..8).map(|col| b[col * k + j]).collect();
+                let mut y = vec![f64::NAN; 8];
+                ops.spmv_serial(*t, &x, &mut y);
+                let col: Vec<f64> = (0..8).map(|i| c[i * k + j]).collect();
+                assert_eq!(col, y, "{} column {j} bits", ops.slug());
+            }
         }
     }
 

@@ -1,0 +1,147 @@
+//! Integration suite for the request-batching path (`engine::batch`)
+//! through the public API only: `Engine::batch_queue` +
+//! `BatchQueue::submit`.
+//!
+//! The contract under test is the one DESIGN.md §"Request batching"
+//! states: a submit answered through the queue — solo fast path,
+//! deadline-sealed partial group, or full panel — is **bit-identical**
+//! to running the queue's own solo SpMV plan on the same vector, and
+//! the monotonic counters account for every request exactly once.
+//! (The deterministic deadline-flush timing proof and the poisoning
+//! drill live next to the implementation: the engine unit tests reach
+//! the private queue state, and `forelem chaos` arms `batch.flush`.)
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use forelem::engine::batch::BatchQueue;
+use forelem::engine::Engine;
+use forelem::matrix::{gen, TriMat};
+use forelem::{Arch, Kernel};
+
+fn engine(arch: Arch, max_batch: usize, deadline_us: u64) -> Engine {
+    Engine::builder()
+        .arch(arch)
+        .profile(false)
+        .archive(false)
+        .max_batch(max_batch)
+        .flush_deadline(Duration::from_micros(deadline_us))
+        .build()
+}
+
+/// Per-matrix reference outputs computed with the exact solo plan the
+/// queue selected, then bit-compared against concurrent submits.
+fn expected(e: &Engine, q: &BatchQueue, m: &TriMat, xs: &[Vec<f64>]) -> Vec<Vec<u64>> {
+    let solo = e.compile_pinned(Kernel::Spmv, m, q.solo_plan_id()).expect("pin solo plan");
+    let mut y = vec![0.0; m.nrows];
+    xs.iter()
+        .map(|x| {
+            solo.spmv(x, &mut y);
+            y.iter().map(|v| v.to_bits()).collect()
+        })
+        .collect()
+}
+
+fn vectors(ncols: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = forelem::util::rng::Rng::new(seed);
+    (0..n).map(|_| (0..ncols).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect()).collect()
+}
+
+/// `threads` clients hammer one queue in barrier-aligned rounds;
+/// every answer must carry the solo plan's exact bits.
+fn hammer(q: &Arc<BatchQueue>, xs: &[Vec<f64>], want: &[Vec<u64>], threads: usize, rounds: usize) {
+    let barrier = Barrier::new(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let q = Arc::clone(q);
+            s.spawn(move || {
+                for r in 0..rounds {
+                    barrier.wait();
+                    let i = (t + r) % xs.len();
+                    let y = q.submit(&xs[i]);
+                    let got: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got, want[i], "thread {t} round {r}: bits diverged");
+                }
+            });
+        }
+    });
+}
+
+fn check_accounting(q: &BatchQueue, submitted: u64) {
+    let st = q.stats();
+    assert_eq!(st.submitted, submitted, "every submit counted");
+    assert_eq!(st.batched + st.solo, st.submitted, "each request is batched xor solo");
+    let by_hist: u64 = st.hist.iter().enumerate().map(|(k, &n)| k as u64 * n).sum();
+    assert_eq!(by_hist, st.submitted, "histogram accounts every request");
+    assert_eq!(st.deadline_flushes + st.full_flushes, st.flushes, "every flush has a seal cause");
+    assert_eq!(st.poisoned_batches, 0, "no faults armed in this suite");
+}
+
+#[test]
+fn concurrent_batched_serving_is_bit_identical_on_both_archs() {
+    let mats = [
+        gen::uniform_random(800, 700, 6_000, 41),
+        gen::banded(600, 6, 0.9, 42),
+        gen::powerlaw(500, 2.0, 32, 43),
+    ];
+    for arch in [Arch::HostSmall, Arch::HostLarge] {
+        let e = engine(arch, 8, 150);
+        for m in &mats {
+            let q = e.batch_queue(m).expect("valid matrix");
+            let xs = vectors(m.ncols, 4, 7 ^ m.fingerprint());
+            let want = expected(&e, &q, m, &xs);
+            let (threads, rounds) = (8, 20);
+            hammer(&q, &xs, &want, threads, rounds);
+            check_accounting(&q, (threads * rounds) as u64);
+        }
+    }
+}
+
+#[test]
+fn max_batch_one_queue_always_falls_through_to_solo() {
+    let e = engine(Arch::HostSmall, 1, 150);
+    let m = gen::uniform_random(400, 350, 3_000, 44);
+    let q = e.batch_queue(&m).expect("valid matrix");
+    assert_eq!(q.min_k_pays(), None, "k=1 capacity can never pay for a panel");
+    let xs = vectors(m.ncols, 3, 11);
+    let want = expected(&e, &q, &m, &xs);
+    let (threads, rounds) = (4, 25);
+    hammer(&q, &xs, &want, threads, rounds);
+    let st = q.stats();
+    assert_eq!(st.solo, st.submitted, "every request served by the solo fast path");
+    assert_eq!(st.batched, 0);
+    assert_eq!(st.flushes, 0, "no groups ever form at capacity 1");
+    assert_eq!(st.hist[1], st.submitted);
+    check_accounting(&q, (threads * rounds) as u64);
+}
+
+#[test]
+fn oversized_capacity_seals_partial_groups_by_deadline_only() {
+    // 6 clients can never fill a 64-slot batch, so *every* flush that
+    // occurs must have been sealed by the deadline — and its partial
+    // panel must still return exact solo bits.
+    let e = engine(Arch::HostSmall, 64, 300);
+    let m = gen::banded(2_000, 14, 1.0, 45);
+    let q = e.batch_queue(&m).expect("valid matrix");
+    let xs = vectors(m.ncols, 4, 13);
+    let want = expected(&e, &q, &m, &xs);
+    let (threads, rounds) = (6, 30);
+    hammer(&q, &xs, &want, threads, rounds);
+    let st = q.stats();
+    assert_eq!(st.full_flushes, 0, "a 6-client load cannot fill 64 slots");
+    assert_eq!(st.deadline_flushes, st.flushes, "partial groups seal by deadline");
+    check_accounting(&q, (threads * rounds) as u64);
+}
+
+#[test]
+fn queue_registry_is_shared_per_fingerprint() {
+    let e = engine(Arch::HostSmall, 8, 150);
+    let a = gen::uniform_random(300, 300, 2_000, 46);
+    let b = gen::uniform_random(300, 300, 2_000, 47);
+    let qa1 = e.batch_queue(&a).expect("valid matrix");
+    let qa2 = e.batch_queue(&a.clone()).expect("same fingerprint");
+    let qb = e.batch_queue(&b).expect("valid matrix");
+    assert!(Arc::ptr_eq(&qa1, &qa2), "one queue per (fingerprint, engine)");
+    assert!(!Arc::ptr_eq(&qa1, &qb), "distinct matrices get distinct queues");
+}
