@@ -39,6 +39,8 @@ pub const POINTS: &[&str] = &[
     "engine.measure",
     "pool.worker",
     "batch.flush",
+    "delta.repair",
+    "delta.swap",
 ];
 
 /// Fire the named fault point. With the `chaos` feature and an armed
@@ -262,6 +264,8 @@ pub mod drill {
                     drill_crew(point, fault)
                 } else if point == "batch.flush" {
                     drill_batch(point, fault)
+                } else if point.starts_with("delta.") {
+                    drill_delta(point, fault)
                 } else {
                     drill_compile(point, fault, pi as u64)
                 };
@@ -661,6 +665,134 @@ pub mod drill {
                 "queue did not recover after its poisoned batch".into()
             },
         }
+    }
+
+    /// Drill the versioned-matrix delta seams (`engine::version`).
+    /// `delta.repair` sits inside the per-kernel in-place repair
+    /// attempt: a lethal fault there must degrade that kernel's
+    /// transition to a full rebuild — the apply still succeeds, the
+    /// new generation's bits are exactly a from-scratch prepare's, and
+    /// no torn structure ever serves. `delta.swap` sits just before
+    /// the generation store: a lethal fault there must surface as a
+    /// typed `MeasurementFailure { plan_id: "delta.swap" }` with the
+    /// serving generation untouched. In both cases a benign delay
+    /// rides through, and after disarming the next apply succeeds
+    /// (healed re-check).
+    fn drill_delta(point: &'static str, fault: Fault) -> Outcome {
+        use crate::engine::{DeltaOutcome, VersionedMatrix};
+        use crate::error::ForelemError;
+        use crate::matrix::delta::DeltaBatch;
+        let fl = fault_label(fault);
+        let lethal = !matches!(fault, Fault::Delay(_));
+        let fail = |detail: String| Outcome { point, fault: fl, health: None, ok: false, detail };
+        let m = gen::uniform_random(48, 48, 360, 0xDE17);
+        let engine =
+            Engine::builder().arch(Arch::HostSmall).profile(false).archive(false).build();
+        let vm = match engine.versioned(&m, &[Kernel::Spmv]) {
+            Ok(v) => v,
+            Err(e) => return fail(format!("versioned construction failed: {e}")),
+        };
+        let fp0 = vm.fingerprint();
+        let probe = m.entries[0];
+        let mut batch = DeltaBatch::new(48, 48);
+        batch.update(probe.row as usize, probe.col as usize, probe.val + 2.5);
+        let applied = catch_unwind(AssertUnwindSafe(|| vm.apply_delta(&batch)));
+
+        // The contract both points share: whatever generation is live
+        // right now serves bit-identical to a direct prepare of its
+        // own reservoir, and names itself as the answerer.
+        let x: Vec<f64> = (0..48).map(|i| (i as f64 * 0.021).sin() + 0.3).collect();
+        let serve_matches = |vm: &VersionedMatrix| -> Result<(), String> {
+            let exe = vm
+                .executable(Kernel::Spmv)
+                .ok_or_else(|| "spmv executable missing".to_string())?;
+            let live = vm.snapshot();
+            let mut served = vec![0.0; 48];
+            let mut reference = vec![0.0; 48];
+            let by = vm.spmv(&x, &mut served).map_err(|e| e.to_string())?;
+            if by != vm.fingerprint() {
+                return Err("serve named a generation other than the live one".into());
+            }
+            concretize::prepare(exe.plan().exec, &live).spmv(&x, &mut reference);
+            if served != reference {
+                return Err(format!(
+                    "served SpMV drifted from plan {}'s direct prepare",
+                    exe.plan().id
+                ));
+            }
+            Ok(())
+        };
+
+        match (point, applied) {
+            (_, Err(_)) => {
+                return fail("a delta fault escaped the isolation layer as a panic".into())
+            }
+            ("delta.repair", Ok(Err(e))) => {
+                return fail(format!("a repair fault must degrade to rebuild, not error: {e}"))
+            }
+            ("delta.repair", Ok(Ok(report))) => {
+                if report.generation != 1 || vm.fingerprint() == fp0 {
+                    return fail("the repair drill did not advance the generation".into());
+                }
+                let repaired =
+                    report.outcomes.iter().any(|(_, o)| *o == DeltaOutcome::Repaired);
+                if lethal && repaired {
+                    return fail("a faulted repair still claimed the Repaired route".into());
+                }
+                if !lethal && !repaired {
+                    return fail(
+                        "a benign delay should ride through to an in-place repair".into(),
+                    );
+                }
+            }
+            ("delta.swap", Ok(res)) => {
+                if lethal {
+                    match res {
+                        Err(ForelemError::MeasurementFailure { plan_id, .. })
+                            if plan_id == "delta.swap" => {}
+                        other => {
+                            return fail(format!(
+                                "a swap fault must be a typed delta.swap MeasurementFailure, \
+                                 got {other:?}"
+                            ))
+                        }
+                    }
+                    if vm.fingerprint() != fp0 || vm.generation() != 0 {
+                        return fail("an aborted swap moved the serving generation".into());
+                    }
+                } else {
+                    match res {
+                        Ok(r) if r.generation == 1 => {}
+                        other => {
+                            return fail(format!(
+                                "a benign swap delay should ride through, got {other:?}"
+                            ))
+                        }
+                    }
+                }
+            }
+            _ => return fail("unregistered delta drill point".into()),
+        }
+        if let Err(d) = serve_matches(&vm) {
+            return fail(d);
+        }
+        // Healed re-check: after disarming, the subsystem must be fully
+        // live — the next delta applies and the new generation serves
+        // its own bits.
+        disarm_all();
+        let live = vm.snapshot();
+        let probe2 = live.entries[0];
+        let mut heal = DeltaBatch::new(48, 48);
+        heal.update(probe2.row as usize, probe2.col as usize, probe2.val - 1.25);
+        match catch_unwind(AssertUnwindSafe(|| vm.apply_delta(&heal))) {
+            Ok(Ok(_)) => {}
+            Ok(Err(e)) => return fail(format!("post-disarm apply_delta errored: {e}")),
+            Err(_) => return fail("post-disarm apply_delta panicked".into()),
+        }
+        if let Err(d) = serve_matches(&vm) {
+            return fail(d);
+        }
+        Outcome { point, fault: fl, health: None, ok: true, detail: "ok".into() }
     }
 
     /// Drill the calibrate-path archive loader: a fault while loading

@@ -131,6 +131,22 @@ fn with_ops(plan: Plan, m: &TriMat, ops: Arc<dyn SparseOps>) -> Prepared {
     }
 }
 
+/// Bind an already-built storage (a delta-repaired one, from
+/// `SparseOps::repair`) to a plan — the `engine::version` seam. The
+/// auxiliary `OnceLock`s start empty on purpose: band splits and TrSv
+/// level sets derived from the *pre-delta* storage are stale by
+/// construction, so the repaired generation re-derives them lazily
+/// from its own structure (this is what makes "level-set patching"
+/// honest — the patched CSR rebuilds its levels on first solve).
+pub(crate) fn prepared_from_ops(
+    plan: Plan,
+    nrows: usize,
+    ncols: usize,
+    ops: Arc<dyn SparseOps>,
+) -> Prepared {
+    Prepared { plan, ops, bands: OnceLock::new(), levels: OnceLock::new(), nrows, ncols }
+}
+
 /// Build the storage for a plan from the tuple reservoir.
 ///
 /// Internal seam: this is the post-selection half of the pipeline.

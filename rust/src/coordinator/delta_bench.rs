@@ -1,0 +1,464 @@
+//! `forelem delta-bench` — the dynamic-matrix benchmark
+//! (`engine::version`).
+//!
+//! For each suite matrix, a [`VersionedMatrix`] absorbs a deterministic
+//! stream of update batches while serve threads hammer SpMV through the
+//! hot swaps. Three costs come out:
+//!
+//!   * **repair latency** — the in-place splice (`SparseOps::repair`)
+//!     on the live storage, timed directly;
+//!   * **rebuild latency** — assembling the same plan's storage from
+//!     the post-delta tuples from scratch (the route repair avoids);
+//!   * **swap stall** — serve-side latency percentiles observed *while*
+//!     generations swap under the serves; the p99 is the stall a
+//!     request sees when it lands across a swap.
+//!
+//! A bitwise identity check runs per matrix after the stream: the live
+//! generation must serve exactly the bits a from-scratch prepare of its
+//! reservoir serves, or the report is flagged and the CLI exits
+//! non-zero. `BENCH_delta.json` is the machine artifact CI archives
+//! next to `BENCH_serve.json` as a planner-guard input.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::concretize;
+use crate::coordinator::sweep::{json_escape, json_str_array, Arch};
+use crate::engine::{DeltaOutcome, Engine, VersionedMatrix};
+use crate::error::ForelemError;
+use crate::matrix::delta::DeltaBatch;
+use crate::matrix::suite::SUITE;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+use crate::Kernel;
+
+/// Configuration of one delta-bench run.
+#[derive(Clone, Debug)]
+pub struct DeltaBenchConfig {
+    pub arch: Arch,
+    /// Suite indices the stream runs over.
+    pub matrices: Vec<usize>,
+    /// Delta batches applied per matrix.
+    pub rounds: usize,
+    /// Update ops per batch (clamped to the matrix's nnz).
+    pub ops_per_batch: usize,
+    /// Serve threads hammering SpMV through the swaps.
+    pub serve_clients: usize,
+    /// Load the fitted tuning profile when one exists (the
+    /// repair-vs-rebuild decision is cost-model-driven).
+    pub use_profile: bool,
+    pub seed: u64,
+}
+
+impl DeltaBenchConfig {
+    /// The CI-sized run: two quick-suite matrices, enough rounds for
+    /// stable percentiles in well under a second.
+    pub fn quick() -> DeltaBenchConfig {
+        DeltaBenchConfig {
+            arch: Arch::HostSmall,
+            matrices: vec![0, 2],
+            rounds: 24,
+            ops_per_batch: 8,
+            serve_clients: 4,
+            use_profile: true,
+            seed: 2033,
+        }
+    }
+}
+
+/// One latency distribution, seconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Latency {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Latency {
+    fn of(latencies: &mut [f64]) -> Latency {
+        if latencies.is_empty() {
+            // A plan whose layout has no repair path records no repair
+            // samples; an all-zero row reads as "not exercised".
+            return Latency::default();
+        }
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        Latency {
+            p50: percentile_sorted(latencies, 50.0),
+            p95: percentile_sorted(latencies, 95.0),
+            p99: percentile_sorted(latencies, 99.0),
+        }
+    }
+}
+
+/// Per-matrix outcome of the delta stream.
+#[derive(Clone, Debug)]
+pub struct MatrixDelta {
+    pub name: String,
+    /// Routes the per-round transitions took.
+    pub repaired: u64,
+    pub rebuilt: u64,
+    pub replanned: u64,
+    /// Direct in-place repair latency over the stream.
+    pub repair: Latency,
+    /// From-scratch storage assembly latency on the same post-delta
+    /// reservoirs.
+    pub rebuild: Latency,
+    /// Whether the final generation served bit-identical to a fresh
+    /// prepare of its own reservoir.
+    pub bit_identical: bool,
+}
+
+/// The delta-bench result — rendered by [`report_text`] and
+/// [`to_json`].
+#[derive(Clone, Debug)]
+pub struct DeltaBenchReport {
+    pub arch: Arch,
+    pub rounds: usize,
+    pub ops_per_batch: usize,
+    pub serve_clients: usize,
+    /// Every matrix's final generation reproduced a fresh prepare's
+    /// bits exactly.
+    pub bit_identical: bool,
+    /// Full `apply_delta` latency (resolve → decide → build → swap →
+    /// retire), all matrices pooled.
+    pub apply: Latency,
+    /// In-place repair latency, all matrices pooled.
+    pub repair: Latency,
+    /// From-scratch rebuild latency, all matrices pooled.
+    pub rebuild: Latency,
+    /// `repair.p50 / rebuild.p50` — below 1.0 means the splice beats
+    /// reassembly at the median (the subsystem's reason to exist).
+    pub repair_over_rebuild_p50: f64,
+    /// Serve latency observed concurrently with the delta stream; the
+    /// p99 is the headline swap-stall number.
+    pub swap_stall: Latency,
+    /// Serves completed while the stream ran.
+    pub serves: u64,
+    pub per_matrix: Vec<MatrixDelta>,
+}
+
+/// Run the benchmark.
+///
+/// # Errors
+///
+/// Propagates [`ForelemError`] from versioned-matrix construction or a
+/// delta application (both indicate a harness bug — the generated
+/// batches are valid by construction).
+pub fn run(cfg: &DeltaBenchConfig) -> Result<DeltaBenchReport, ForelemError> {
+    assert!(cfg.rounds >= 1, "delta-bench needs at least one round");
+    assert!(cfg.ops_per_batch >= 1, "delta-bench needs at least one op per batch");
+    assert!(!cfg.matrices.is_empty(), "delta-bench needs at least one matrix");
+    let engine = Engine::builder().arch(cfg.arch).profile(cfg.use_profile).archive(false).build();
+
+    let mut per_matrix = Vec::with_capacity(cfg.matrices.len());
+    let mut apply_lats: Vec<f64> = Vec::new();
+    let mut repair_lats: Vec<f64> = Vec::new();
+    let mut rebuild_lats: Vec<f64> = Vec::new();
+    let mut stall_lats: Vec<f64> = Vec::new();
+    let mut serves: u64 = 0;
+    let mut bit_identical = true;
+
+    for (slot, &si) in cfg.matrices.iter().enumerate() {
+        let entry = &SUITE[si % SUITE.len()];
+        let m = entry.build_scaled(cfg.arch.scale());
+        let vm = engine.versioned(&m, &[Kernel::Spmv])?;
+        let mut rng = Rng::new(cfg.seed ^ (0xDE17A * (slot as u64 + 1)));
+        let x: Vec<f64> = (0..m.ncols).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect();
+
+        let mut m_repair: Vec<f64> = Vec::with_capacity(cfg.rounds);
+        let mut m_rebuild: Vec<f64> = Vec::with_capacity(cfg.rounds);
+        let (mut repaired, mut rebuilt, mut replanned) = (0u64, 0u64, 0u64);
+
+        let stop = AtomicBool::new(false);
+        let shared_stalls: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let shared_serves = Mutex::new(0u64);
+        std::thread::scope(|s| -> Result<(), ForelemError> {
+            for _ in 0..cfg.serve_clients {
+                let vm = &vm;
+                let stop = &stop;
+                let shared_stalls = &shared_stalls;
+                let shared_serves = &shared_serves;
+                let x = &x;
+                let nrows = m.nrows;
+                s.spawn(move || {
+                    let mut y = vec![0.0; nrows];
+                    let mut local = Vec::new();
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let t0 = Instant::now();
+                        // The serve names its generation; a failure
+                        // here would be a torn swap — surfaced by the
+                        // bit-identity flag below going false.
+                        if vm.spmv(x, &mut y).is_ok() {
+                            local.push(t0.elapsed().as_secs_f64());
+                            n += 1;
+                        }
+                    }
+                    shared_stalls
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .extend(local);
+                    *shared_serves.lock().unwrap_or_else(|p| p.into_inner()) += n;
+                });
+            }
+
+            let result = (|| -> Result<(), ForelemError> {
+                for _ in 0..cfg.rounds {
+                    // Update a deterministic sample of live coordinates
+                    // — update-only batches keep every format on the
+                    // repair path, so repair and rebuild are timed on
+                    // identical work.
+                    let live = vm.snapshot();
+                    let nnz = live.entries.len();
+                    let k = cfg.ops_per_batch.min(nnz);
+                    let mut batch = DeltaBatch::new(live.nrows, live.ncols);
+                    let mut taken = std::collections::HashSet::new();
+                    while taken.len() < k {
+                        let i = (rng.gen_f64() * nnz as f64) as usize % nnz;
+                        if taken.insert(i) {
+                            let e = live.entries[i];
+                            batch.update(
+                                e.row as usize,
+                                e.col as usize,
+                                e.val + rng.gen_f64_range(0.25, 0.75),
+                            );
+                        }
+                    }
+                    let resolved = batch.resolved()?;
+                    let post = batch.apply(&live)?;
+                    // Direct repair and rebuild timings, outside the
+                    // serving path (the live generation is untouched —
+                    // repair is copy-on-write).
+                    if let Some(exe) = vm.executable(Kernel::Spmv) {
+                        let t0 = Instant::now();
+                        let r = exe.storage().repair(&resolved);
+                        if r.is_some() {
+                            m_repair.push(t0.elapsed().as_secs_f64());
+                        }
+                        let t0 = Instant::now();
+                        std::hint::black_box(concretize::prepare(exe.plan().exec, &post));
+                        m_rebuild.push(t0.elapsed().as_secs_f64());
+                    }
+                    let t0 = Instant::now();
+                    let report = vm.apply_delta(&batch)?;
+                    apply_lats.push(t0.elapsed().as_secs_f64());
+                    for (_, o) in &report.outcomes {
+                        match o {
+                            DeltaOutcome::Repaired => repaired += 1,
+                            DeltaOutcome::Rebuilt => rebuilt += 1,
+                            DeltaOutcome::Replanned => replanned += 1,
+                        }
+                    }
+                }
+                Ok(())
+            })();
+            stop.store(true, Ordering::Relaxed);
+            result
+        })?;
+        stall_lats.extend(shared_stalls.lock().unwrap_or_else(|p| p.into_inner()).iter());
+        serves += *shared_serves.lock().unwrap_or_else(|p| p.into_inner());
+
+        let ok = final_generation_bit_identical(&vm, &x);
+        bit_identical &= ok;
+        repair_lats.extend(m_repair.iter());
+        rebuild_lats.extend(m_rebuild.iter());
+        per_matrix.push(MatrixDelta {
+            name: entry.name.to_string(),
+            repaired,
+            rebuilt,
+            replanned,
+            repair: Latency::of(&mut m_repair),
+            rebuild: Latency::of(&mut m_rebuild),
+            bit_identical: ok,
+        });
+    }
+
+    let repair = Latency::of(&mut repair_lats);
+    let rebuild = Latency::of(&mut rebuild_lats);
+    Ok(DeltaBenchReport {
+        arch: cfg.arch,
+        rounds: cfg.rounds,
+        ops_per_batch: cfg.ops_per_batch,
+        serve_clients: cfg.serve_clients,
+        bit_identical,
+        apply: Latency::of(&mut apply_lats),
+        repair,
+        rebuild,
+        repair_over_rebuild_p50: repair.p50 / rebuild.p50.max(1e-12),
+        swap_stall: Latency::of(&mut stall_lats),
+        serves,
+        per_matrix,
+    })
+}
+
+/// The bit-identity post-check: the live generation must serve exactly
+/// what a from-scratch prepare of its own reservoir serves.
+fn final_generation_bit_identical(vm: &VersionedMatrix, x: &[f64]) -> bool {
+    let exe = match vm.executable(Kernel::Spmv) {
+        Some(e) => e,
+        None => return false,
+    };
+    let live = vm.snapshot();
+    let mut served = vec![0.0; live.nrows];
+    let mut reference = vec![0.0; live.nrows];
+    if vm.spmv(x, &mut served).is_err() {
+        return false;
+    }
+    concretize::prepare(exe.plan().exec, &live).spmv(x, &mut reference);
+    let same =
+        served.iter().map(|v| v.to_bits()).eq(reference.iter().map(|v| v.to_bits()));
+    if !same {
+        eprintln!("delta-bench: BIT MISMATCH between the live generation and a fresh prepare");
+    }
+    same
+}
+
+/// Human-readable report for stdout.
+pub fn report_text(r: &DeltaBenchReport) -> String {
+    let us = 1e6;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "delta-bench [{}] — {} rounds x {} ops, {} serve clients, bit-identical: {}\n",
+        r.arch.slug(),
+        r.rounds,
+        r.ops_per_batch,
+        r.serve_clients,
+        if r.bit_identical { "yes" } else { "NO (MISMATCH)" },
+    ));
+    out.push_str(&format!(
+        "  repair:    p50 {:>8.1}us  p95 {:>8.1}us  p99 {:>8.1}us\n",
+        r.repair.p50 * us,
+        r.repair.p95 * us,
+        r.repair.p99 * us,
+    ));
+    out.push_str(&format!(
+        "  rebuild:   p50 {:>8.1}us  p95 {:>8.1}us  p99 {:>8.1}us   (repair/rebuild p50: {:.3})\n",
+        r.rebuild.p50 * us,
+        r.rebuild.p95 * us,
+        r.rebuild.p99 * us,
+        r.repair_over_rebuild_p50,
+    ));
+    out.push_str(&format!(
+        "  apply:     p50 {:>8.1}us  p95 {:>8.1}us  p99 {:>8.1}us\n",
+        r.apply.p50 * us,
+        r.apply.p95 * us,
+        r.apply.p99 * us,
+    ));
+    out.push_str(&format!(
+        "  swap stall (serve-side, {} serves): p50 {:>8.1}us  p95 {:>8.1}us  p99 {:>8.1}us\n",
+        r.serves,
+        r.swap_stall.p50 * us,
+        r.swap_stall.p95 * us,
+        r.swap_stall.p99 * us,
+    ));
+    for pm in &r.per_matrix {
+        out.push_str(&format!(
+            "  {:<12} repaired {:>4}  rebuilt {:>4}  replanned {:>4}  repair-p50 {:>8.1}us  \
+             rebuild-p50 {:>8.1}us  bit-identical: {}\n",
+            pm.name,
+            pm.repaired,
+            pm.rebuilt,
+            pm.replanned,
+            pm.repair.p50 * us,
+            pm.rebuild.p50 * us,
+            if pm.bit_identical { "yes" } else { "NO" },
+        ));
+    }
+    out
+}
+
+/// Render the report as the `BENCH_delta.json` document (same
+/// hand-rolled style as the other bench artifacts — no serde in the
+/// tree).
+pub fn to_json(r: &DeltaBenchReport) -> String {
+    let lat = |l: &Latency| {
+        format!("{{\"p50\": {:e}, \"p95\": {:e}, \"p99\": {:e}}}", l.p50, l.p95, l.p99)
+    };
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"forelem-delta-bench-v1\",\n");
+    s.push_str(&format!("  \"arch\": \"{}\",\n", json_escape(r.arch.slug())));
+    s.push_str(&format!("  \"rounds\": {},\n", r.rounds));
+    s.push_str(&format!("  \"ops_per_batch\": {},\n", r.ops_per_batch));
+    s.push_str(&format!("  \"serve_clients\": {},\n", r.serve_clients));
+    s.push_str(&format!("  \"bit_identical\": {},\n", r.bit_identical));
+    s.push_str(&format!("  \"apply_latency_s\": {},\n", lat(&r.apply)));
+    s.push_str(&format!("  \"repair_latency_s\": {},\n", lat(&r.repair)));
+    s.push_str(&format!("  \"rebuild_latency_s\": {},\n", lat(&r.rebuild)));
+    s.push_str(&format!("  \"repair_over_rebuild_p50\": {:e},\n", r.repair_over_rebuild_p50));
+    s.push_str(&format!("  \"swap_stall_s\": {},\n", lat(&r.swap_stall)));
+    s.push_str(&format!("  \"serves\": {},\n", r.serves));
+    let names: Vec<String> = r.per_matrix.iter().map(|p| p.name.clone()).collect();
+    s.push_str(&format!("  \"matrices\": {},\n", json_str_array(&names)));
+    s.push_str("  \"per_matrix\": [\n");
+    for (i, pm) in r.per_matrix.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"repaired\": {}, \"rebuilt\": {}, \"replanned\": {}, \
+             \"repair_s\": {}, \"rebuild_s\": {}, \"bit_identical\": {}}}{}\n",
+            json_escape(&pm.name),
+            pm.repaired,
+            pm.rebuilt,
+            pm.replanned,
+            lat(&pm.repair),
+            lat(&pm.rebuild),
+            pm.bit_identical,
+            if i + 1 == r.per_matrix.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> DeltaBenchConfig {
+        DeltaBenchConfig {
+            arch: Arch::HostSmall,
+            matrices: vec![0, 2],
+            rounds: 6,
+            ops_per_batch: 4,
+            serve_clients: 2,
+            use_profile: false,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn delta_bench_runs_bit_identical_and_counts_every_round() {
+        let cfg = tiny();
+        let r = run(&cfg).expect("delta-bench run");
+        assert!(r.bit_identical, "final generations must serve a fresh prepare's exact bits");
+        for pm in &r.per_matrix {
+            assert_eq!(
+                pm.repaired + pm.rebuilt + pm.replanned,
+                cfg.rounds as u64,
+                "{}: every round takes exactly one route",
+                pm.name
+            );
+            assert!(pm.bit_identical);
+        }
+        assert!(r.serves > 0, "serve threads must have gotten through the swaps");
+        assert!(r.rebuild.p50 >= 0.0 && r.apply.p50 >= 0.0);
+    }
+
+    #[test]
+    fn delta_json_has_the_guarded_fields() {
+        let cfg = tiny();
+        let r = run(&cfg).expect("delta-bench run");
+        let j = to_json(&r);
+        assert!(j.contains("forelem-delta-bench-v1"));
+        assert!(j.contains("\"bit_identical\": true"));
+        assert!(j.contains("\"repair_latency_s\": "));
+        assert!(j.contains("\"rebuild_latency_s\": "));
+        assert!(j.contains("\"swap_stall_s\": "));
+        assert!(j.contains("\"repair_over_rebuild_p50\": "));
+        let txt = report_text(&r);
+        assert!(txt.contains("swap stall"));
+        assert!(txt.contains("repair"));
+    }
+}

@@ -12,6 +12,7 @@
 //! * Every routine is validated against the dense oracle before it is
 //!   timed — a mis-generated structure fails loudly, never silently.
 
+pub mod delta_bench;
 pub mod serve;
 pub mod sweep;
 

@@ -537,6 +537,18 @@ impl Engine {
         let mut reg = lock(&self.batches);
         Ok(Arc::clone(reg.entry(fp).or_insert(q)))
     }
+
+    /// Drop this engine's batching queue for matrix `fingerprint` —
+    /// generation retirement (`engine::version`): the queue's solo and
+    /// per-k executables were compiled against the superseded bits, so
+    /// the registry entry must age out with the generation. In-flight
+    /// `submit` calls hold their own `Arc` and drain safely on the old
+    /// queue; the *next* `batch_queue` call builds a fresh queue
+    /// against the post-delta reservoir. Returns whether an entry was
+    /// actually registered.
+    pub(crate) fn retire_batch_queue(&self, fingerprint: u64) -> bool {
+        lock(&self.batches).remove(&fingerprint).is_some()
+    }
 }
 
 #[cfg(test)]

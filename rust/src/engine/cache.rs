@@ -184,6 +184,27 @@ pub(crate) fn clear() {
     s.bytes = 0;
 }
 
+/// Drop every entry compiled against matrix `fingerprint` — generation
+/// retirement (`engine::version`): once a delta supersedes a
+/// generation, plans compiled for the old bits must never serve again,
+/// and their bytes should not sit in the budget until LRU pressure
+/// finds them. Each removal counts as an eviction (surfaced through
+/// `Engine::cache_evictions`). Returns the number of entries dropped.
+pub(crate) fn evict_fingerprint(fingerprint: u64) -> u64 {
+    let mut s = locked();
+    let victims: Vec<Key> =
+        s.map.keys().filter(|k| k.fingerprint == fingerprint).copied().collect();
+    let mut dropped = 0u64;
+    for k in victims {
+        if let Some(e) = s.map.remove(&k) {
+            s.bytes -= e.bytes;
+            s.evictions += 1;
+            dropped += 1;
+        }
+    }
+    dropped
+}
+
 pub(crate) fn len() -> usize {
     locked().map.len()
 }
@@ -260,6 +281,7 @@ mod tests {
             measured_secs: None,
             profile_loaded: false,
             health: crate::engine::Health::Calibrated,
+            fingerprint: m.fingerprint(),
         })
     }
 
@@ -299,5 +321,28 @@ mod tests {
         // stays consistent for empty prepared storage).
         s.insert(key(5), Arc::clone(&c), 0, usize::MAX);
         assert_eq!(s.bytes, 10_001);
+    }
+
+    /// Generation retirement: every entry of a superseded fingerprint
+    /// goes at once (all kernels / digests), other fingerprints stay,
+    /// and each removal counts as an eviction. Runs against the global
+    /// store with fingerprints unique to this test (other tests only
+    /// assert `>=` deltas on the counter).
+    #[test]
+    fn evict_fingerprint_drops_all_generations_entries() {
+        let c = dummy_compiled();
+        let fp_old = 0xDE17A_01Du64;
+        let fp_new = 0xDE17A_07Eu64;
+        insert(Key::new(Kernel::Spmv, "evict-test", fp_old, 1), Arc::clone(&c), usize::MAX);
+        insert(Key::new(Kernel::Spmm, "evict-test", fp_old, 2), Arc::clone(&c), usize::MAX);
+        insert(Key::new(Kernel::Spmv, "evict-test", fp_new, 1), Arc::clone(&c), usize::MAX);
+        let ev0 = evictions();
+        assert_eq!(evict_fingerprint(fp_old), 2);
+        assert!(evictions() >= ev0 + 2, "each retirement drop counts as an eviction");
+        assert!(lookup(&Key::new(Kernel::Spmv, "evict-test", fp_old, 1)).is_none());
+        assert!(lookup(&Key::new(Kernel::Spmm, "evict-test", fp_old, 2)).is_none());
+        assert!(lookup(&Key::new(Kernel::Spmv, "evict-test", fp_new, 1)).is_some());
+        assert_eq!(evict_fingerprint(fp_old), 0, "idempotent");
+        evict_fingerprint(fp_new); // leave the global store clean
     }
 }

@@ -77,6 +77,10 @@ pub(crate) struct Compiled {
     pub measured_secs: Option<f64>,
     pub profile_loaded: bool,
     pub health: Health,
+    /// `TriMat::fingerprint` of the matrix this compile answers for —
+    /// the storage-generation identity `engine::version` chains
+    /// `Transition`s over and retirement evicts by.
+    pub fingerprint: u64,
 }
 
 /// A compiled routine + data structure, bound to one matrix — what
@@ -136,6 +140,13 @@ impl Executable {
     /// [`Health::Calibrated`] when nothing went wrong. See [`Health`].
     pub fn health(&self) -> Health {
         self.inner.health
+    }
+
+    /// `TriMat::fingerprint` of the matrix this executable answers for
+    /// — the storage-generation identity. A serve through
+    /// `engine::version` asserts its answer against exactly this value.
+    pub fn fingerprint(&self) -> u64 {
+        self.inner.fingerprint
     }
 
     /// The `Arc`-shared storage behind the executable — exposed so

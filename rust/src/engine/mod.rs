@@ -87,8 +87,10 @@ pub mod batch;
 mod cache;
 mod executable;
 mod quarantine;
+pub mod version;
 
 pub use executable::{CostBreakdown, CostTerm, Executable, Health};
+pub use version::{DeltaOutcome, DeltaReport, Fingerprint, Transition, VersionedMatrix};
 
 pub use crate::baselines::Kernel;
 pub use crate::coordinator::sweep::Arch;
@@ -592,6 +594,7 @@ impl Engine {
             measured_secs: measured,
             profile_loaded: pool.profile_loaded,
             health,
+            fingerprint,
         });
         // Degraded compiles (PredictedOnly / ReferenceSerial) are NOT
         // cached: with the faulty candidates quarantined, the next
@@ -812,6 +815,7 @@ impl Engine {
             measured_secs: None,
             profile_loaded: pool.profile_loaded,
             health: Health::ReferenceSerial,
+            fingerprint: m.fingerprint(),
         });
         Executable::new(kernel, self.cfg.spmm_k, compiled)
     }

@@ -82,6 +82,18 @@ pub(crate) fn clear() {
     list.order.clear();
 }
 
+/// Drop every entry recorded against matrix `fingerprint` — generation
+/// retirement (`engine::version`): evidence gathered on superseded bits
+/// says nothing about the post-delta matrix, so it must not veto
+/// candidates for the new generation. Returns the number dropped.
+pub(crate) fn evict_fingerprint(fingerprint: u64) -> usize {
+    let mut list = locked();
+    let before = list.map.len();
+    list.map.retain(|k, _| k.0 != fingerprint);
+    list.order.retain(|k| k.0 != fingerprint);
+    before - list.map.len()
+}
+
 #[cfg(test)]
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
@@ -127,5 +139,30 @@ mod tests {
         assert!(is_denied(MAX_ENTRIES as u64, "p"), "newest present");
         clear();
         assert_eq!(len(), 0);
+    }
+
+    /// Generation retirement: evidence recorded on superseded bits is
+    /// dropped wholesale (every plan of the fingerprint), other
+    /// matrices keep theirs, and the FIFO queue stays in sync with the
+    /// map so the cap keeps working afterwards.
+    #[test]
+    fn evict_fingerprint_drops_stale_evidence() {
+        clear();
+        deny(41, "csr.row.serial", "panicked");
+        deny(41, "ell-rm.row.serial", "hung");
+        deny(42, "csr.row.serial", "panicked");
+        assert_eq!(evict_fingerprint(41), 2);
+        assert!(!is_denied(41, "csr.row.serial"));
+        assert!(!is_denied(41, "ell-rm.row.serial"));
+        assert!(is_denied(42, "csr.row.serial"), "other matrices keep their evidence");
+        assert_eq!(evict_fingerprint(41), 0, "idempotent");
+        assert_eq!(len(), 1);
+        // The FIFO queue shrank in lockstep with the map, so the cap
+        // bookkeeping stays 1:1 after a retirement.
+        {
+            let list = locked();
+            assert_eq!(list.order.len(), list.map.len());
+        }
+        clear();
     }
 }

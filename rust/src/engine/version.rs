@@ -1,0 +1,680 @@
+//! Versioned matrices: storage generations, delta application, and
+//! hot-swap re-planning — the dynamic-matrix half of the engine.
+//!
+//! The planner compiles a *snapshot* of a tuple reservoir into a tuned
+//! data structure; real workloads mutate the reservoir. This module
+//! models each mutation as a **storage-generation transition**: a
+//! [`VersionedMatrix`] owns the current generation (matrix + one
+//! [`Executable`] per requested kernel) behind an atomic swap, and
+//! [`VersionedMatrix::apply_delta`] moves it to the next generation by
+//! the cheapest safe route:
+//!
+//! ```text
+//! apply_delta(batch)
+//!   = resolve + validate   (matrix::delta — the one hard error)
+//!   → attempt repair       (SparseOps::repair: CSR row splicing, ELL
+//!                           slot rewrites, SELL value patches; None
+//!                           when the format would lay out differently)
+//!   → decide               (search::cost::delta_decision: repair vs
+//!                           rebuild vs re-plan, per kernel)
+//!   → build the next generation off to the side
+//!   → swap                 (one Mutex store; serves in flight keep
+//!                           their Arc'd generation and drain on it)
+//!   → retire               (evict compile-cache / quarantine / batch-
+//!                           queue entries keyed by the old fingerprint)
+//! ```
+//!
+//! # Consistency contract
+//!
+//! Every serve (`spmv`/`spmm`/`trsv`) snapshots the generation `Arc`
+//! once, runs entirely on that snapshot, and returns the
+//! [`Fingerprint`] of the generation that answered — so a caller racing
+//! `apply_delta` can assert its answer came from exactly one
+//! generation, never a torn mix. The generation lineage is carried as a
+//! chained [`Transition<Fingerprint>`] (genesis → current), extended on
+//! every swap; `chain().to()` always equals the current fingerprint.
+//!
+//! # Bit-identity contract
+//!
+//! A repaired generation is **bit-identical** to compiling the
+//! post-delta reservoir from scratch with the same plan: the per-format
+//! `repair` implementations splice the exact value bits a fresh
+//! `from_tuples` build would produce, and stale schedule auxiliaries
+//! (band splits, TrSv level sets) are re-derived lazily from the
+//! repaired structure rather than patched approximately
+//! (`concretize::exec::prepared_from_ops`). `tests/delta.rs` pins this
+//! across formats × kernels.
+//!
+//! # Fault containment
+//!
+//! A panicking repair (`delta.repair` chaos point) degrades to a
+//! rebuild — never a torn structure. A fault at the swap itself
+//! (`delta.swap`) surfaces as a typed
+//! [`ForelemError::MeasurementFailure`] with the serving generation
+//! unchanged.
+
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::baselines::Kernel;
+use crate::concretize;
+use crate::error::ForelemError;
+use crate::matrix::delta::{DeltaBatch, DeltaEntry};
+use crate::matrix::{MatrixStats, TriMat};
+use crate::search::cost::{self, DeltaAction};
+
+use super::executable::Compiled;
+use super::{cache, quarantine, Engine, Executable};
+
+/// A storage-generation identity: the 64-bit content fingerprint of the
+/// tuple reservoir a generation was compiled from
+/// (`TriMat::fingerprint` — structure and value bits both). Formats as
+/// the same `fp{:016x}` label the cache, quarantine, and calibration
+/// archive key by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u64);
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "fp{:016x}", self.0)
+    }
+}
+
+/// A directed state change `from → to`. The states are private: a
+/// `Transition` is constructed whole and read whole, so an
+/// inconsistent pair can never be assembled field by field.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Transition<T> {
+    from_state: T,
+    to_state: T,
+}
+
+impl<T> Transition<T> {
+    pub fn new(from_state: T, to_state: T) -> Self {
+        Transition { from_state, to_state }
+    }
+
+    /// The state this transition leaves.
+    pub fn from(&self) -> &T {
+        &self.from_state
+    }
+
+    /// The state this transition enters.
+    pub fn to(&self) -> &T {
+        &self.to_state
+    }
+
+    /// Decompose into `(from, to)`.
+    pub fn into_states(self) -> (T, T) {
+        (self.from_state, self.to_state)
+    }
+}
+
+impl<T: PartialEq> Transition<T> {
+    /// A transition that goes nowhere (genesis chains start as one).
+    pub fn is_no_op(&self) -> bool {
+        self.from_state == self.to_state
+    }
+
+    /// Compose `self` then `next` into one transition spanning both.
+    ///
+    /// # Errors
+    ///
+    /// [`TransitionChainError`] when `next` does not depart from the
+    /// state `self` arrived at — the seam where a torn generation
+    /// lineage would otherwise hide.
+    pub fn chain(self, next: Self) -> Result<Self, TransitionChainError<T>> {
+        if self.to_state == next.from_state {
+            Ok(Transition::new(self.from_state, next.to_state))
+        } else {
+            Err(TransitionChainError { arrived: self.to_state, departed: next.from_state })
+        }
+    }
+}
+
+/// Two transitions that do not meet: the first arrived at `arrived`,
+/// the second departed from `departed`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransitionChainError<T> {
+    pub arrived: T,
+    pub departed: T,
+}
+
+impl<T: fmt::Debug> fmt::Display for TransitionChainError<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "transition chain gap: arrived at {:?} but next departs from {:?}",
+            self.arrived, self.departed
+        )
+    }
+}
+
+/// How `apply_delta` carried one kernel's executable to the next
+/// generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaOutcome {
+    /// The delta was spliced into the existing storage in place
+    /// (`SparseOps::repair`) — no planner, no full rebuild.
+    Repaired,
+    /// The same plan's storage was rebuilt from the post-delta tuples
+    /// (format could not absorb this batch, or a rebuild predicted
+    /// cheaper, or a faulted repair degraded here).
+    Rebuilt,
+    /// The accumulated drift justified a full predict→measure compile;
+    /// the new generation may serve a different plan.
+    Replanned,
+}
+
+/// What one [`VersionedMatrix::apply_delta`] did, for callers and the
+/// `forelem delta-bench` harness.
+#[derive(Clone, Debug)]
+pub struct DeltaReport {
+    /// This application's step: old fingerprint → new fingerprint.
+    pub transition: Transition<Fingerprint>,
+    /// The full lineage after the swap (genesis → current).
+    pub chain: Transition<Fingerprint>,
+    /// Generation sequence number after the swap (genesis is 0).
+    pub generation: u64,
+    /// Resolved delta ops applied (post last-write-wins coalescing).
+    pub ops: usize,
+    /// Per-kernel route taken to the new generation.
+    pub outcomes: Vec<(Kernel, DeltaOutcome)>,
+    /// Compile-cache entries evicted at old-generation retirement.
+    pub cache_evicted: u64,
+    /// Quarantine entries evicted at old-generation retirement.
+    pub quarantine_evicted: usize,
+    /// Whether a request-batching queue was registered on the old
+    /// fingerprint and retired with it.
+    pub batch_queue_retired: bool,
+}
+
+/// One immutable storage generation. Serves hold an `Arc` to it for
+/// their whole execution, so a swap never tears a serve.
+struct GenState {
+    matrix: TriMat,
+    fingerprint: Fingerprint,
+    seq: u64,
+    chain: Transition<Fingerprint>,
+    execs: Vec<(Kernel, Executable)>,
+    /// Delta ops absorbed since the last full re-plan — decays the
+    /// re-plan margin in `cost::delta_decision`.
+    deltas_applied: u64,
+}
+
+/// A dynamic matrix served through the engine: the current generation
+/// behind an atomic swap, mutated by [`apply_delta`]
+/// (`VersionedMatrix::apply_delta`) and queried by serve methods that
+/// name the generation that answered.
+///
+/// Shareable across threads (`&self` everywhere); serves are
+/// wait-free with respect to delta application — they snapshot the
+/// generation `Arc` under a short lock and run outside it.
+pub struct VersionedMatrix {
+    engine: Engine,
+    state: Mutex<Arc<GenState>>,
+    /// Serializes `apply_delta` end to end. Serves never take it.
+    apply_lock: Mutex<()>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // Generation state is swapped whole (single Arc store), so a
+    // poisoned lock still guards a consistent value — recover it.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl VersionedMatrix {
+    /// The current generation's fingerprint.
+    pub fn fingerprint(&self) -> Fingerprint {
+        self.current().fingerprint
+    }
+
+    /// The current generation's sequence number (genesis is 0).
+    pub fn generation(&self) -> u64 {
+        self.current().seq
+    }
+
+    /// The full lineage: genesis fingerprint → current fingerprint.
+    /// `chain().to()` always names the generation serves answer from.
+    pub fn chain(&self) -> Transition<Fingerprint> {
+        self.current().chain.clone()
+    }
+
+    /// Delta ops absorbed since the last full re-plan.
+    pub fn deltas_applied(&self) -> u64 {
+        self.current().deltas_applied
+    }
+
+    /// A copy of the current generation's tuple reservoir (tests use it
+    /// as the rebuild-from-scratch reference).
+    pub fn snapshot(&self) -> TriMat {
+        self.current().matrix.clone()
+    }
+
+    /// The current generation's executable for `kernel`, if that kernel
+    /// was requested at construction. Cheap (`Arc`-backed clone).
+    pub fn executable(&self, kernel: Kernel) -> Option<Executable> {
+        let g = self.current();
+        g.execs.iter().find(|(k, _)| *k == kernel).map(|(_, e)| e.clone())
+    }
+
+    /// Serve `y = A x` on the current generation; returns the
+    /// fingerprint of the generation that answered.
+    ///
+    /// # Errors
+    ///
+    /// [`ForelemError::UnsupportedPlan`] when `Kernel::Spmv` was not
+    /// requested at construction.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) -> Result<Fingerprint, ForelemError> {
+        let g = self.current();
+        Self::exec_for(&g, Kernel::Spmv)?.spmv(x, y);
+        Ok(g.fingerprint)
+    }
+
+    /// Serve `C = A B` (engine-configured dense column count) on the
+    /// current generation; returns the answering generation's
+    /// fingerprint. Same error contract as [`spmv`](Self::spmv).
+    pub fn spmm(&self, b: &[f64], c: &mut [f64]) -> Result<Fingerprint, ForelemError> {
+        let g = self.current();
+        Self::exec_for(&g, Kernel::Spmm)?.spmm(b, c);
+        Ok(g.fingerprint)
+    }
+
+    /// Serve the unit-lower solve `L x = b` on the current generation;
+    /// returns the answering generation's fingerprint. Same error
+    /// contract as [`spmv`](Self::spmv).
+    pub fn trsv(&self, b: &[f64], x: &mut [f64]) -> Result<Fingerprint, ForelemError> {
+        let g = self.current();
+        Self::exec_for(&g, Kernel::Trsv)?.trsv(b, x);
+        Ok(g.fingerprint)
+    }
+
+    /// Apply a typed delta batch, moving this matrix to its next
+    /// storage generation. Per kernel, takes the route
+    /// [`cost::delta_decision`] picks: in-place **repair** when the
+    /// format supports this batch and it predicts cheaper, a
+    /// same-plan **rebuild** otherwise, or a full **re-plan** when the
+    /// post-delta statistics have drifted far enough that a different
+    /// plan should win. The next generation is built entirely off to
+    /// the side and installed with one atomic swap; serves in flight
+    /// drain on the old generation.
+    ///
+    /// # Errors
+    ///
+    /// [`ForelemError::InvalidMatrix`] when the batch fails resolution
+    /// or validation against the current generation (conflicting
+    /// insert+delete pair, insert of a present coordinate, …) — the
+    /// generation is untouched. [`ForelemError::MeasurementFailure`]
+    /// (`plan_id: "delta.swap"`) when the swap itself faults under the
+    /// chaos harness — the generation is untouched then too.
+    pub fn apply_delta(&self, batch: &DeltaBatch) -> Result<DeltaReport, ForelemError> {
+        let _serialized = lock(&self.apply_lock);
+        let old = self.current();
+        let resolved = batch.resolved()?;
+        let new_matrix = batch.apply(&old.matrix)?;
+        let new_fp = Fingerprint(new_matrix.fingerprint());
+        let step = Transition::new(old.fingerprint, new_fp);
+        if resolved.is_empty() {
+            return Ok(DeltaReport {
+                transition: step,
+                chain: old.chain.clone(),
+                generation: old.seq,
+                ops: 0,
+                outcomes: Vec::new(),
+                cache_evicted: 0,
+                quarantine_evicted: 0,
+                batch_queue_retired: false,
+            });
+        }
+
+        let new_stats = MatrixStats::of(&new_matrix);
+        let mut execs = Vec::with_capacity(old.execs.len());
+        let mut outcomes = Vec::with_capacity(old.execs.len());
+        let mut all_replanned = true;
+        for (kernel, cur) in &old.execs {
+            let (exe, outcome) = self.transition_exec(
+                *kernel,
+                cur,
+                &resolved,
+                &new_matrix,
+                &new_stats,
+                old.deltas_applied,
+            )?;
+            all_replanned &= outcome == DeltaOutcome::Replanned;
+            execs.push((*kernel, exe));
+            outcomes.push((*kernel, outcome));
+        }
+
+        // The swap seam: a fault here must leave the serving generation
+        // untouched (the chaos drill pins this), so it fires before the
+        // single store below and surfaces as a typed error.
+        if catch_unwind(|| crate::faultpoint!("delta.swap")).is_err() {
+            return Err(ForelemError::MeasurementFailure {
+                plan_id: "delta.swap".to_string(),
+                reason: "storage-generation swap faulted; the serving generation is unchanged"
+                    .to_string(),
+            });
+        }
+
+        let chain = match old.chain.clone().chain(step.clone()) {
+            Ok(c) => c,
+            // Unreachable by construction (step departs from chain.to),
+            // but a lineage is better re-rooted than panicked over.
+            Err(_) => Transition::new(*old.chain.from(), new_fp),
+        };
+        let deltas_applied =
+            if all_replanned { 0 } else { old.deltas_applied + resolved.len() as u64 };
+        let next = Arc::new(GenState {
+            matrix: new_matrix,
+            fingerprint: new_fp,
+            seq: old.seq + 1,
+            chain: chain.clone(),
+            execs,
+            deltas_applied,
+        });
+        *lock(&self.state) = next;
+
+        // Old-generation retirement: evidence and artifacts keyed by
+        // the superseded fingerprint age out now, not at some later
+        // cache-budget squeeze. Skipped when the delta round-tripped to
+        // the same bits (the entries still describe the live matrix).
+        let (mut cache_evicted, mut quarantine_evicted, mut batch_queue_retired) = (0, 0, false);
+        if !step.is_no_op() {
+            cache_evicted = cache::evict_fingerprint(old.fingerprint.0);
+            quarantine_evicted = quarantine::evict_fingerprint(old.fingerprint.0);
+            batch_queue_retired = self.engine.retire_batch_queue(old.fingerprint.0);
+        }
+        Ok(DeltaReport {
+            transition: step,
+            chain,
+            generation: old.seq + 1,
+            ops: resolved.len(),
+            outcomes,
+            cache_evicted,
+            quarantine_evicted,
+            batch_queue_retired,
+        })
+    }
+
+    fn current(&self) -> Arc<GenState> {
+        Arc::clone(&lock(&self.state))
+    }
+
+    fn exec_for(g: &GenState, kernel: Kernel) -> Result<&Executable, ForelemError> {
+        match g.execs.iter().find(|(k, _)| *k == kernel) {
+            Some((_, e)) => Ok(e),
+            None => Err(ForelemError::UnsupportedPlan {
+                plan_id: format!("{kernel:?}"),
+                reason: "kernel was not requested when this VersionedMatrix was built".to_string(),
+            }),
+        }
+    }
+
+    /// Carry one kernel's executable to the post-delta generation along
+    /// the route `cost::delta_decision` picks. The repair attempt runs
+    /// behind `catch_unwind`: a panicking format repair (the
+    /// `delta.repair` chaos point stands in for one) degrades to a
+    /// rebuild instead of tearing anything — the old generation keeps
+    /// serving throughout either way, since repair is copy-on-write.
+    fn transition_exec(
+        &self,
+        kernel: Kernel,
+        cur: &Executable,
+        resolved: &[DeltaEntry],
+        new_matrix: &TriMat,
+        new_stats: &MatrixStats,
+        deltas_applied: u64,
+    ) -> Result<(Executable, DeltaOutcome), ForelemError> {
+        let pool = self.engine.pool(kernel);
+        let params = pool.space.params;
+        let dense_k = self.engine.cfg.spmm_k;
+
+        let repaired = match catch_unwind(AssertUnwindSafe(|| {
+            crate::faultpoint!("delta.repair");
+            cur.storage().repair(resolved)
+        })) {
+            Ok(r) => r,
+            Err(_) => {
+                eprintln!("warning: {kernel:?} delta repair panicked; degrading to rebuild");
+                None
+            }
+        };
+
+        // Incumbent vs shortlist winner, both predicted on the
+        // *post-delta* statistics — the drift signal the re-plan arm
+        // of the decision consumes.
+        let cur_fv = cur.plan().features(kernel, dense_k, new_stats, &params);
+        let cur_pred = cur_fv.dot(&params.weights).max(1e-12);
+        let pool_execs: Vec<concretize::Plan> = pool.plans.iter().map(|p| p.exec).collect();
+        let order = cost::rank_execs(kernel, dense_k, &pool_execs, new_stats, &params);
+        let best_pred = match order.first() {
+            Some(&pi) => pool.plans[pi]
+                .features(kernel, dense_k, new_stats, &params)
+                .dot(&params.weights)
+                .max(1e-12),
+            None => cur_pred,
+        };
+        let decision = cost::delta_decision(
+            new_stats,
+            resolved.len(),
+            repaired.is_some(),
+            cur_pred,
+            best_pred,
+            deltas_applied,
+            &params,
+        );
+
+        match (decision.action, repaired) {
+            (DeltaAction::Replan, _) => {
+                Ok((self.engine.compile(kernel, new_matrix)?, DeltaOutcome::Replanned))
+            }
+            (DeltaAction::Repair, Some(ops)) => {
+                let prepared = concretize::exec::prepared_from_ops(
+                    cur.plan().exec,
+                    new_matrix.nrows,
+                    new_matrix.ncols,
+                    ops,
+                );
+                // Schedule auxiliaries are compile-time work here as in
+                // `Engine::compile` — re-derived from the repaired
+                // structure, never served stale from the old one.
+                match kernel {
+                    Kernel::Spmv => prepared.ensure_bands(),
+                    Kernel::Trsv => prepared.ensure_levels(),
+                    Kernel::Spmm => {}
+                }
+                if crate::runtime::topology::numa_active() {
+                    prepared.first_touch();
+                }
+                let compiled = Arc::new(Compiled {
+                    plan: cur.plan().clone(),
+                    prepared: Arc::new(prepared),
+                    stats: *new_stats,
+                    params,
+                    features: cur_fv,
+                    predicted_secs: cur_pred,
+                    measured_secs: None,
+                    profile_loaded: pool.profile_loaded,
+                    health: cur.health(),
+                    fingerprint: new_matrix.fingerprint(),
+                });
+                Ok((Executable::new(kernel, dense_k, compiled), DeltaOutcome::Repaired))
+            }
+            // A repair verdict without a repaired structure only
+            // happens when the attempt faulted above; rebuild.
+            (DeltaAction::Repair, None) | (DeltaAction::Rebuild, _) => Ok((
+                self.engine.compile_pinned(kernel, new_matrix, &cur.plan().id)?,
+                DeltaOutcome::Rebuilt,
+            )),
+        }
+    }
+}
+
+impl Engine {
+    /// Promote a tuple reservoir to a [`VersionedMatrix`]: compile each
+    /// requested kernel once (generation 0) and return the handle that
+    /// serves and mutates it. The versioned matrix compiles through an
+    /// engine built from this engine's configuration, so its compiles
+    /// share the process-wide cache/quarantine with everyone else's.
+    ///
+    /// # Errors
+    ///
+    /// [`ForelemError::InvalidMatrix`] per [`Engine::compile`].
+    pub fn versioned(
+        &self,
+        m: &TriMat,
+        kernels: &[Kernel],
+    ) -> Result<VersionedMatrix, ForelemError> {
+        m.validate()?;
+        let engine = self.cfg.clone().build();
+        let mut execs = Vec::with_capacity(kernels.len());
+        for &k in kernels {
+            execs.push((k, engine.compile(k, m)?));
+        }
+        let fp = Fingerprint(m.fingerprint());
+        let genesis = GenState {
+            matrix: m.clone(),
+            fingerprint: fp,
+            seq: 0,
+            chain: Transition::new(fp, fp),
+            execs,
+            deltas_applied: 0,
+        };
+        Ok(VersionedMatrix {
+            engine,
+            state: Mutex::new(Arc::new(genesis)),
+            apply_lock: Mutex::new(()),
+        })
+    }
+
+    /// One-shot delta application without a [`VersionedMatrix`]: apply
+    /// `batch` to `m`, retire everything keyed by `m`'s fingerprint
+    /// (compile-cache entries, quarantine evidence, the request-batching
+    /// queue), and return the canonical post-delta reservoir — ready
+    /// for the next [`Engine::compile`]. Callers that serve
+    /// continuously should hold a `VersionedMatrix` instead; this is
+    /// the batch-job shape (mutate, recompile, move on).
+    ///
+    /// # Errors
+    ///
+    /// [`ForelemError::InvalidMatrix`] on a bad reservoir or a batch
+    /// that fails resolution/validation against it.
+    pub fn apply_delta(&self, m: &TriMat, batch: &DeltaBatch) -> Result<TriMat, ForelemError> {
+        m.validate()?;
+        let out = batch.apply(m)?;
+        let old_fp = m.fingerprint();
+        if out.fingerprint() != old_fp {
+            cache::evict_fingerprint(old_fp);
+            quarantine::evict_fingerprint(old_fp);
+            self.retire_batch_queue(old_fp);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::Arch;
+    use crate::matrix::gen;
+
+    fn engine_small() -> Engine {
+        Engine::builder().arch(Arch::HostSmall).profile(false).archive(false).build()
+    }
+
+    #[test]
+    fn transition_chains_like_moho() {
+        let a = Transition::new(1u64, 2u64);
+        assert_eq!(*a.from(), 1);
+        assert_eq!(*a.to(), 2);
+        assert!(!a.is_no_op());
+        assert!(Transition::new(7u64, 7u64).is_no_op());
+        let ab = a.clone().chain(Transition::new(2u64, 3u64)).expect("contiguous");
+        assert_eq!(ab.clone().into_states(), (1, 3));
+        let gap = ab.chain(Transition::new(9u64, 10u64)).unwrap_err();
+        assert_eq!(gap, TransitionChainError { arrived: 3, departed: 9 });
+        assert!(gap.to_string().contains("chain gap"));
+    }
+
+    #[test]
+    fn fingerprint_displays_like_the_archive_label() {
+        assert_eq!(Fingerprint(0xABC).to_string(), "fp0000000000000abc");
+    }
+
+    #[test]
+    fn apply_delta_swaps_generations_and_extends_the_chain() {
+        let m = gen::uniform_random(40, 40, 300, 1100);
+        let e = engine_small();
+        let vm = e.versioned(&m, &[Kernel::Spmv]).expect("valid matrix");
+        let g0 = vm.fingerprint();
+        assert_eq!(vm.generation(), 0);
+        assert!(vm.chain().is_no_op(), "genesis chain goes nowhere yet");
+
+        // A pure value update keeps every format repairable.
+        let probe = m.entries[0];
+        let mut b = DeltaBatch::new(40, 40);
+        b.update(probe.row as usize, probe.col as usize, probe.val + 1.5);
+        let report = vm.apply_delta(&b).expect("clean batch");
+        assert_eq!(report.ops, 1);
+        assert_eq!(report.generation, 1);
+        assert_eq!(*report.transition.from(), g0);
+        assert_eq!(*report.transition.to(), vm.fingerprint());
+        assert_ne!(g0, vm.fingerprint(), "value change must move the fingerprint");
+        assert_eq!(*vm.chain().from(), g0, "chain stays rooted at genesis");
+        assert_eq!(*vm.chain().to(), vm.fingerprint());
+
+        // The served answer names the new generation and matches the
+        // rebuilt-from-scratch reference exactly.
+        let x: Vec<f64> = (0..40).map(|i| (i as f64 * 0.13).sin()).collect();
+        let mut y = vec![0.0; 40];
+        let served_by = vm.spmv(&x, &mut y).expect("spmv was requested");
+        assert_eq!(served_by, vm.fingerprint());
+        let reference = vm.snapshot();
+        crate::util::prop::assert_close(&y, &reference.spmv_ref(&x), 1e-10).unwrap();
+    }
+
+    #[test]
+    fn unrequested_kernels_are_a_typed_error() {
+        let m = gen::uniform_random(20, 20, 80, 1101);
+        let vm = engine_small().versioned(&m, &[Kernel::Spmv]).expect("valid matrix");
+        let b_in = vec![0.0; 20 * 100];
+        let mut c = vec![0.0; 20 * 100];
+        let err = vm.spmm(&b_in, &mut c).unwrap_err();
+        assert_eq!(err.class(), "unsupported-plan");
+    }
+
+    #[test]
+    fn conflicting_batches_leave_the_generation_untouched() {
+        let m = gen::uniform_random(20, 20, 80, 1102);
+        let vm = engine_small().versioned(&m, &[Kernel::Spmv]).expect("valid matrix");
+        let fp = vm.fingerprint();
+        let mut b = DeltaBatch::new(20, 20);
+        b.insert(0, 1, 1.0);
+        b.delete(0, 1);
+        let err = vm.apply_delta(&b).unwrap_err();
+        assert_eq!(err.class(), "invalid-matrix");
+        assert_eq!(vm.fingerprint(), fp, "failed delta must not move the generation");
+        assert_eq!(vm.generation(), 0);
+    }
+
+    #[test]
+    fn one_shot_apply_delta_retires_the_old_fingerprint() {
+        let m = gen::uniform_random(24, 24, 120, 1103);
+        let e = engine_small();
+        let _warm = e.compile(Kernel::Spmv, &m).expect("valid matrix");
+        let probe = m.entries[0];
+        let mut b = DeltaBatch::new(24, 24);
+        b.update(probe.row as usize, probe.col as usize, probe.val * 2.0);
+        let m2 = e.apply_delta(&m, &b).expect("clean batch");
+        assert_ne!(m2.fingerprint(), m.fingerprint());
+        // The superseded generation's compile is no longer cached: a
+        // fresh compile of the *old* bits is a different storage Arc.
+        let again = e.compile(Kernel::Spmv, &m).expect("valid matrix");
+        assert!(
+            !Arc::ptr_eq(&_warm.storage(), &again.storage()),
+            "old generation's cache entry must have been evicted"
+        );
+    }
+}

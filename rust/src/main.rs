@@ -12,6 +12,8 @@
 //! forelem bench-all [--quick] [--out FILE]        everything, appended to FILE
 //! forelem bench-json [--shortlist K]              BENCH_spmv.json + planner audit + samples
 //! forelem serve-bench [--quick] [--clients N]      closed-loop batched-serving benchmark
+//! forelem delta-bench [--quick] [--rounds N]       dynamic-matrix delta stream: repair vs
+//!                                                  rebuild latency + swap stall, BENCH_delta.json
 //! forelem calibrate [FILES…] [--arch A] [--check] fit a tuning profile from BENCH_*.json
 //! forelem chaos                                   fault-injection drill (--features chaos)
 //! forelem suite                                   print the 20-matrix suite statistics
@@ -534,6 +536,54 @@ fn cmd_serve_bench(args: &Args) {
     }
 }
 
+/// `forelem delta-bench` — the dynamic-matrix benchmark: versioned
+/// matrices absorbing update streams under concurrent serves, timing
+/// in-place repair vs from-scratch rebuild and the serve-side swap
+/// stall. Writes `BENCH_delta.json`; exits non-zero when any final
+/// generation fails the bitwise-identity check against a fresh prepare.
+fn cmd_delta_bench(args: &Args) {
+    use forelem::coordinator::delta_bench;
+    let (quick, no_profile) = match args.strict_bool_flags(&["quick", "no-profile"]) {
+        Ok(v) => (v[0], v[1]),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let mut cfg = delta_bench::DeltaBenchConfig::quick();
+    cfg.arch = arch_of(args, "host-small");
+    if !quick {
+        // The full run streams deltas over more of the suite with a
+        // longer window; --quick keeps the CI-sized two-matrix stream.
+        cfg.matrices = (0..6).collect();
+        cfg.rounds = 64;
+    }
+    cfg.use_profile = !no_profile;
+    if let Some(n) = args.get("matrices") {
+        let n: usize = n.parse().expect("--matrices expects an integer");
+        cfg.matrices = (0..n.clamp(1, 20)).collect();
+    }
+    cfg.rounds = args.get_usize("rounds", cfg.rounds).max(1);
+    cfg.ops_per_batch = args.get_usize("ops", cfg.ops_per_batch).max(1);
+    cfg.serve_clients = args.get_usize("clients", cfg.serve_clients).max(1);
+    cfg.seed = args.get_usize("seed", cfg.seed as usize) as u64;
+    let report = match delta_bench::run(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("delta-bench failed [{}]: {e}", e.class());
+            std::process::exit(1);
+        }
+    };
+    print!("{}", delta_bench::report_text(&report));
+    let path = args.get_or("out", "BENCH_delta.json");
+    std::fs::write(path, delta_bench::to_json(&report)).expect("writing delta json");
+    println!("wrote {path} (repair vs rebuild latency, swap-stall percentiles, route counts)");
+    if !report.bit_identical {
+        eprintln!("delta-bench: a live generation did NOT serve a fresh prepare's exact bits");
+        std::process::exit(1);
+    }
+}
+
 fn main() {
     let args = Args::parse();
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
@@ -582,6 +632,7 @@ fn main() {
             );
         }
         "serve-bench" => cmd_serve_bench(&args),
+        "delta-bench" => cmd_delta_bench(&args),
         "calibrate" => cmd_calibrate(&args),
         "chaos" => {
             #[cfg(feature = "chaos")]
@@ -625,7 +676,7 @@ fn main() {
                 "forelem — automatic compiler-based data structure generation\n\
                  subcommands: run enumerate derive codegen suite table1 table2 table3\n\
                  \x20            table4 table5 fig11 bench-all bench-json serve-bench\n\
-                 \x20            calibrate chaos\n\
+                 \x20            delta-bench calibrate chaos\n\
                  flags: --quick --kernel K --variant ID --spmm-k N --matrices N --out FILE\n\
                  \x20      --schedules (add the parallel/tiled schedule axis on host-large)\n\
                  \x20      --shortlist K (measure only the top-K cost-ranked plans per\n\
@@ -647,6 +698,13 @@ fn main() {
                  \x20            of the request-batching path: batched vs unbatched\n\
                  \x20            throughput, p50/p95/p99 latency, batch-size histogram;\n\
                  \x20            exits non-zero on any bitwise mismatch\n\
+                 delta-bench: forelem delta-bench [--quick] [--rounds N] [--ops N]\n\
+                 \x20            [--clients N] [--matrices N] [--arch host-small]\n\
+                 \x20            [--out BENCH_delta.json] — stream update batches through\n\
+                 \x20            versioned matrices under concurrent serves: in-place repair\n\
+                 \x20            vs from-scratch rebuild latency, serve-side swap-stall\n\
+                 \x20            percentiles, repair/rebuild/replan route counts; exits\n\
+                 \x20            non-zero if a live generation drifts from a fresh prepare\n\
                  chaos: forelem chaos — run the fault-injection drill at every fault\n\
                  \x20      point (requires a --features chaos build); exits non-zero if\n\
                  \x20      any fault deadlocks, aborts, or lands on the wrong health rung"

@@ -33,6 +33,36 @@ impl TriMat {
         TriMat { nrows, ncols, entries }
     }
 
+    /// Construct a validated reservoir from raw COO entries that may
+    /// contain duplicate coordinates, **summing** duplicates into one
+    /// entry (the MatrixMarket convention). This is the documented
+    /// constructor path for material [`validate`](TriMat::validate)
+    /// would reject wholesale — feeds that legitimately repeat
+    /// coordinates, like accumulation streams or concatenated COO
+    /// shards. (Delta batches are different: within one
+    /// [`crate::matrix::delta::DeltaBatch`] repeated coordinates
+    /// resolve **last-write-wins**, and a conflicting insert+delete
+    /// pair is a typed error — see `matrix::delta`.)
+    ///
+    /// The result is canonical: duplicates merged, entries sorted
+    /// row-major, invariants checked.
+    ///
+    /// # Errors
+    ///
+    /// [`ForelemError::InvalidMatrix`] on a degenerate shape, an
+    /// out-of-bounds entry, or a non-finite value (including a sum of
+    /// duplicates that overflows to ±∞).
+    pub fn from_coo_summing(
+        nrows: usize,
+        ncols: usize,
+        entries: Vec<Entry>,
+    ) -> Result<Self, ForelemError> {
+        let mut m = TriMat { nrows, ncols, entries };
+        m.sum_duplicates();
+        m.validate()?;
+        Ok(m)
+    }
+
     pub fn nnz(&self) -> usize {
         self.entries.len()
     }
@@ -264,6 +294,27 @@ mod tests {
         assert_eq!(m.nnz(), 5);
         let d = m.to_dense();
         assert_eq!(d[0], 10.0); // 1 + 9
+    }
+
+    #[test]
+    fn from_coo_summing_merges_and_validates() {
+        let entries = vec![
+            Entry { row: 0, col: 0, val: 1.0 },
+            Entry { row: 0, col: 0, val: 9.0 }, // duplicate: summed
+            Entry { row: 1, col: 2, val: 2.0 },
+        ];
+        let m = TriMat::from_coo_summing(2, 3, entries).unwrap();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.to_dense()[0], 10.0);
+        // Typed errors, not panics, on hostile material.
+        let oob = vec![Entry { row: 5, col: 0, val: 1.0 }];
+        assert!(TriMat::from_coo_summing(2, 3, oob).is_err());
+        assert!(TriMat::from_coo_summing(0, 3, vec![]).is_err());
+        let inf = vec![
+            Entry { row: 0, col: 0, val: f64::MAX },
+            Entry { row: 0, col: 0, val: f64::MAX }, // sums to +inf
+        ];
+        assert!(TriMat::from_coo_summing(2, 3, inf).is_err());
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Typed COO delta batches — the mutation half of the versioned-matrix
+//! subsystem (`engine::version`). A [`DeltaBatch`] is a reservoir of
+//! insert/update/delete tuples against one matrix generation; applying
+//! it yields the canonical (row-major-sorted) post-delta reservoir, so
+//! the new generation's fingerprint — and therefore every downstream
+//! bit-identity contract — is deterministic regardless of the order the
+//! caller recorded the ops in.
+//!
+//! # Semantics
+//!
+//! * **Insert** requires the coordinate to be absent from the target
+//!   matrix; **Update** and **Delete** require it present. Violations
+//!   are typed [`ForelemError::InvalidMatrix`] errors, per the engine's
+//!   error taxonomy — a delta never silently no-ops.
+//! * Several ops on the **same coordinate within one batch** resolve
+//!   last-write-wins on the value (an `Insert` followed by an `Update`
+//!   is an insert of the later value), **except** a batch that mixes a
+//!   `Delete` with an `Insert`/`Update` on one coordinate: that is a
+//!   genuinely conflicting pair (did the caller want the entry gone or
+//!   present?) and resolution fails with a typed error instead of
+//!   guessing.
+//! * Values must be finite; indices must be in bounds; the batch's
+//!   declared shape must match the target matrix exactly.
+
+use std::collections::HashMap;
+
+use crate::error::ForelemError;
+use crate::matrix::{Entry, TriMat};
+
+/// The three delta kinds a batch can carry per coordinate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaOp {
+    /// Add a coordinate that is absent from the target matrix.
+    Insert,
+    /// Replace the value at a coordinate present in the target matrix.
+    Update,
+    /// Remove a coordinate present in the target matrix.
+    Delete,
+}
+
+/// One resolved or recorded delta tuple. For `Delete` the value is
+/// ignored (kept at 0.0 by the builders).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeltaEntry {
+    pub row: u32,
+    pub col: u32,
+    pub val: f64,
+    pub op: DeltaOp,
+}
+
+/// A batch of typed COO deltas against one matrix generation.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaBatch {
+    pub nrows: usize,
+    pub ncols: usize,
+    entries: Vec<DeltaEntry>,
+}
+
+impl DeltaBatch {
+    /// Empty batch against an `nrows × ncols` generation.
+    pub fn new(nrows: usize, ncols: usize) -> DeltaBatch {
+        DeltaBatch { nrows, ncols, entries: Vec::new() }
+    }
+
+    pub fn insert(&mut self, row: usize, col: usize, val: f64) {
+        self.push(row, col, val, DeltaOp::Insert);
+    }
+
+    pub fn update(&mut self, row: usize, col: usize, val: f64) {
+        self.push(row, col, val, DeltaOp::Update);
+    }
+
+    pub fn delete(&mut self, row: usize, col: usize) {
+        self.push(row, col, 0.0, DeltaOp::Delete);
+    }
+
+    fn push(&mut self, row: usize, col: usize, val: f64, op: DeltaOp) {
+        debug_assert!(row < self.nrows && col < self.ncols, "delta out of bounds");
+        self.entries.push(DeltaEntry { row: row as u32, col: col as u32, val, op });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The recorded ops, in insertion order (unresolved).
+    pub fn entries(&self) -> &[DeltaEntry] {
+        &self.entries
+    }
+
+    /// Resolve the batch to at most one op per coordinate, sorted by
+    /// `(row, col)` — the form the per-format `SparseOps::repair`
+    /// implementations and [`DeltaBatch::apply`] consume.
+    ///
+    /// Last-write-wins on the value; the resolved kind is `Delete` if
+    /// only deletes touched the coordinate, `Insert` if any insert did,
+    /// `Update` otherwise. Mixing `Delete` with `Insert`/`Update` on
+    /// one coordinate is a conflict.
+    ///
+    /// # Errors
+    ///
+    /// [`ForelemError::InvalidMatrix`] on an out-of-bounds index, a
+    /// non-finite insert/update value, or a conflicting
+    /// insert+delete (or update+delete) pair on one coordinate.
+    pub fn resolved(&self) -> Result<Vec<DeltaEntry>, ForelemError> {
+        let bad = |reason: String| Err(ForelemError::InvalidMatrix(reason));
+        let mut by_coord: HashMap<u64, DeltaEntry> = HashMap::new();
+        for e in &self.entries {
+            if e.row as usize >= self.nrows || e.col as usize >= self.ncols {
+                return bad(format!(
+                    "delta ({}, {}) out of bounds for {}x{}",
+                    e.row, e.col, self.nrows, self.ncols
+                ));
+            }
+            if e.op != DeltaOp::Delete && !e.val.is_finite() {
+                return bad(format!("non-finite delta value at ({}, {})", e.row, e.col));
+            }
+            let key = ((e.row as u64) << 32) | e.col as u64;
+            match by_coord.entry(key) {
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(*e);
+                }
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    let prev = *o.get();
+                    let deleting = e.op == DeltaOp::Delete;
+                    let deleted = prev.op == DeltaOp::Delete;
+                    if deleting != deleted {
+                        return bad(format!(
+                            "conflicting insert+delete pair at ({}, {}): one batch both \
+                             removes and sets the coordinate",
+                            e.row, e.col
+                        ));
+                    }
+                    // Last write wins on the value; an Insert anywhere
+                    // in the run keeps the resolved kind Insert (the
+                    // coordinate is absent from the target either way).
+                    let op = if prev.op == DeltaOp::Insert { DeltaOp::Insert } else { e.op };
+                    o.insert(DeltaEntry { op, ..*e });
+                }
+            }
+        }
+        let mut out: Vec<DeltaEntry> = by_coord.into_values().collect();
+        out.sort_unstable_by_key(|e| (e.row, e.col));
+        Ok(out)
+    }
+
+    /// Apply the batch to `m`, producing the canonical
+    /// (row-major-sorted) post-delta reservoir. The result is exactly
+    /// the `TriMat` a from-scratch caller would build, so its
+    /// fingerprint — and every storage assembled from it — is the
+    /// reference the repair paths must match bit for bit.
+    ///
+    /// # Errors
+    ///
+    /// [`ForelemError::InvalidMatrix`] when the batch shape does not
+    /// match `m`, on any resolution error ([`DeltaBatch::resolved`]),
+    /// on an `Insert` of a coordinate already present, or an
+    /// `Update`/`Delete` of a coordinate absent from `m`.
+    pub fn apply(&self, m: &TriMat) -> Result<TriMat, ForelemError> {
+        let bad = |reason: String| Err(ForelemError::InvalidMatrix(reason));
+        if m.nrows != self.nrows || m.ncols != self.ncols {
+            return bad(format!(
+                "delta batch is {}x{} but the matrix is {}x{}",
+                self.nrows, self.ncols, m.nrows, m.ncols
+            ));
+        }
+        let resolved = self.resolved()?;
+        let mut delta_at: HashMap<u64, DeltaEntry> = HashMap::with_capacity(resolved.len());
+        for e in &resolved {
+            delta_at.insert(((e.row as u64) << 32) | e.col as u64, *e);
+        }
+        let mut out: Vec<Entry> = Vec::with_capacity(m.entries.len() + resolved.len());
+        let mut touched = 0usize;
+        for e in &m.entries {
+            let key = ((e.row as u64) << 32) | e.col as u64;
+            match delta_at.get(&key) {
+                None => out.push(*e),
+                Some(d) => {
+                    touched += 1;
+                    match d.op {
+                        DeltaOp::Insert => {
+                            return bad(format!(
+                                "insert at ({}, {}) but the coordinate is already present \
+                                 (use update)",
+                                e.row, e.col
+                            ));
+                        }
+                        DeltaOp::Update => {
+                            out.push(Entry { row: e.row, col: e.col, val: d.val })
+                        }
+                        DeltaOp::Delete => {}
+                    }
+                }
+            }
+        }
+        if touched != resolved.iter().filter(|d| d.op != DeltaOp::Insert).count() {
+            // Some Update/Delete never met a stored entry.
+            for d in &resolved {
+                if d.op == DeltaOp::Insert {
+                    continue;
+                }
+                let present = m
+                    .entries
+                    .iter()
+                    .any(|e| e.row == d.row && e.col == d.col);
+                if !present {
+                    return bad(format!(
+                        "{} at ({}, {}) but the coordinate is absent (use insert)",
+                        if d.op == DeltaOp::Update { "update" } else { "delete" },
+                        d.row,
+                        d.col
+                    ));
+                }
+            }
+        }
+        for d in &resolved {
+            if d.op == DeltaOp::Insert {
+                out.push(Entry { row: d.row, col: d.col, val: d.val });
+            }
+        }
+        let mut m2 = TriMat::with_entries(m.nrows, m.ncols, out);
+        m2.sort_row_major();
+        m2.validate()?;
+        Ok(m2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TriMat {
+        let mut m = TriMat::new(3, 3);
+        m.push(0, 0, 1.0);
+        m.push(1, 1, 2.0);
+        m.push(2, 0, 3.0);
+        m
+    }
+
+    #[test]
+    fn apply_is_canonical_and_deterministic() {
+        let m = small();
+        let mut b = DeltaBatch::new(3, 3);
+        b.insert(0, 2, 5.0);
+        b.update(1, 1, -2.0);
+        b.delete(2, 0);
+        let m2 = b.apply(&m).expect("clean batch");
+        assert_eq!(m2.nnz(), 3);
+        let mut want = TriMat::new(3, 3);
+        want.push(0, 0, 1.0);
+        want.push(0, 2, 5.0);
+        want.push(1, 1, -2.0);
+        assert_eq!(m2.fingerprint(), want.fingerprint(), "canonical order drifted");
+    }
+
+    #[test]
+    fn last_write_wins_within_a_batch() {
+        let m = small();
+        let mut b = DeltaBatch::new(3, 3);
+        b.insert(0, 2, 5.0);
+        b.update(0, 2, 7.0); // same coordinate, later op: value 7 wins, kind stays Insert
+        b.update(1, 1, 4.0);
+        b.update(1, 1, 6.0);
+        let r = b.resolved().expect("no conflict");
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0], DeltaEntry { row: 0, col: 2, val: 7.0, op: DeltaOp::Insert });
+        assert_eq!(r[1], DeltaEntry { row: 1, col: 1, val: 6.0, op: DeltaOp::Update });
+        let m2 = b.apply(&m).expect("applies");
+        assert!(m2.entries.iter().any(|e| e.row == 0 && e.col == 2 && e.val == 7.0));
+        assert!(m2.entries.iter().any(|e| e.row == 1 && e.col == 1 && e.val == 6.0));
+    }
+
+    #[test]
+    fn insert_delete_pair_is_a_typed_conflict() {
+        let mut b = DeltaBatch::new(3, 3);
+        b.insert(0, 2, 5.0);
+        b.delete(0, 2);
+        match b.resolved() {
+            Err(ForelemError::InvalidMatrix(msg)) => {
+                assert!(msg.contains("conflicting insert+delete"), "{msg}");
+            }
+            other => panic!("expected a typed conflict, got {other:?}"),
+        }
+        // Delete-then-update is the same ambiguity.
+        let mut b2 = DeltaBatch::new(3, 3);
+        b2.delete(1, 1);
+        b2.update(1, 1, 9.0);
+        assert!(b2.resolved().is_err());
+    }
+
+    #[test]
+    fn presence_is_validated_per_op_kind() {
+        let m = small();
+        let mut ins = DeltaBatch::new(3, 3);
+        ins.insert(0, 0, 9.0); // already present
+        assert!(matches!(ins.apply(&m), Err(ForelemError::InvalidMatrix(_))));
+        let mut upd = DeltaBatch::new(3, 3);
+        upd.update(2, 2, 9.0); // absent
+        assert!(matches!(upd.apply(&m), Err(ForelemError::InvalidMatrix(_))));
+        let mut del = DeltaBatch::new(3, 3);
+        del.delete(0, 1); // absent
+        assert!(matches!(del.apply(&m), Err(ForelemError::InvalidMatrix(_))));
+    }
+
+    #[test]
+    fn shape_mismatch_and_nonfinite_are_typed() {
+        let m = small();
+        let b = DeltaBatch::new(4, 3);
+        assert!(matches!(b.apply(&m), Err(ForelemError::InvalidMatrix(_))));
+        let mut nf = DeltaBatch::new(3, 3);
+        nf.update(1, 1, f64::NAN);
+        assert!(nf.resolved().is_err());
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op_generation() {
+        let m = small();
+        let b = DeltaBatch::new(3, 3);
+        let m2 = b.apply(&m).expect("empty batch applies");
+        // Canonicalization may reorder, but `small()` is already
+        // row-major, so the fingerprint is preserved exactly.
+        assert_eq!(m2.fingerprint(), m.fingerprint());
+    }
+}

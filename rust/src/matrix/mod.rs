@@ -3,6 +3,7 @@
 //! 20-matrix evaluation suite.
 
 pub mod coo;
+pub mod delta;
 pub mod gen;
 pub mod mmio;
 pub mod stats;

@@ -612,6 +612,88 @@ pub fn batch_decision(
     })
 }
 
+/// Re-plan margin at generation 0: a fresh plan must be predicted this
+/// fraction faster than the incumbent before `apply_delta` re-runs the
+/// full compile pipeline. The margin *decays* as deltas accumulate
+/// (`/ (1 + deltas_applied / 8)`): a matrix that has drifted through
+/// many generations is increasingly likely to have left the stats
+/// neighborhood its plan was chosen in, so the threshold for paying the
+/// re-plan loosens deterministically.
+pub const REPLAN_BASE_MARGIN: f64 = 0.25;
+
+/// Serves a re-plan's prepare cost is amortized over: re-planning must
+/// win back the rebuild within this many invocations of the kernel.
+pub const REPLAN_AMORTIZE_SERVES: f64 = 64.0;
+
+/// What `Engine::apply_delta` should do with the storage generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaAction {
+    /// Splice the delta into the existing storage (`SparseOps::repair`).
+    Repair,
+    /// Rebuild the same plan's storage from the post-delta tuples.
+    Rebuild,
+    /// Re-run the full predict→measure compile on the new stats.
+    Replan,
+}
+
+/// The repair-vs-rebuild-vs-re-plan verdict for one delta application,
+/// with the predicted costs behind it (auditable in `BENCH_delta.json`).
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaDecision {
+    pub action: DeltaAction,
+    /// Predicted seconds to splice the delta into the current storage.
+    pub repair_secs: f64,
+    /// Predicted seconds to rebuild the current plan's storage from the
+    /// post-delta tuple reservoir.
+    pub rebuild_secs: f64,
+    /// Predicted per-serve seconds a re-plan would recover
+    /// (`current − best` on the post-delta stats, floored at 0).
+    pub replan_gain_secs: f64,
+}
+
+/// Decide how `Engine::apply_delta` transitions the storage generation.
+///
+/// `current_predicted_secs` / `best_predicted_secs` are the incumbent
+/// plan's and the shortlist winner's predicted serve times **on the
+/// post-delta stats** (the caller re-ranks with [`rank_execs`] — this
+/// function stays a pure arithmetic policy). Re-planning wins when the
+/// predicted gain clears the accumulation-decayed margin *and* pays for
+/// the rebuild within [`REPLAN_AMORTIZE_SERVES`] serves; otherwise the
+/// cheaper of repair (when the format supports this batch) and rebuild
+/// is taken. Deterministic: same inputs, same verdict.
+pub fn delta_decision(
+    new_stats: &MatrixStats,
+    delta_nnz: usize,
+    repair_supported: bool,
+    current_predicted_secs: f64,
+    best_predicted_secs: f64,
+    deltas_applied: u64,
+    p: &CostParams,
+) -> DeltaDecision {
+    let n = new_stats.nrows.max(1) as f64;
+    let nnz = new_stats.nnz as f64;
+    let w = p.weights[F_STREAM];
+    // Rebuild re-sorts the tuple reservoir and writes the storage out:
+    // about one read + one write of the structure's byte volume.
+    let rebuild_secs = 2.0 * (nnz * 16.0 + n * 8.0) * w;
+    // Repair streams the existing structure once (the splice copy) plus
+    // per-op merge work — cheap for small batches, worse than a rebuild
+    // once the delta is a sizable fraction of the matrix.
+    let repair_secs = (nnz * 12.0 + n * 4.0 + delta_nnz as f64 * 64.0) * w;
+    let gain = (current_predicted_secs - best_predicted_secs).max(0.0);
+    let margin = REPLAN_BASE_MARGIN / (1.0 + deltas_applied as f64 / 8.0);
+    let action = if gain > margin * best_predicted_secs.max(1e-12)
+        && gain * REPLAN_AMORTIZE_SERVES > rebuild_secs
+    {
+        DeltaAction::Replan
+    } else if repair_supported && repair_secs < rebuild_secs {
+        DeltaAction::Repair
+    } else {
+        DeltaAction::Rebuild
+    };
+    DeltaDecision { action, repair_secs, rebuild_secs, replan_gain_secs: gain }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -992,6 +1074,52 @@ mod tests {
         assert_eq!(f8.0[F_HEADERS], fs.0[F_HEADERS] / 4.0);
         // …but the gather count still amortizes over all 8 lanes.
         assert!(f8.0[F_GATHER_LANES] < fw.0[F_GATHER_LANES]);
+    }
+
+    /// Small batches splice, missing capability rebuilds, and a delta
+    /// comparable to the matrix makes the splice pass costlier than a
+    /// from-tuples rebuild.
+    #[test]
+    fn delta_decision_picks_repair_rebuild_by_cost() {
+        let p = CostParams::host_small();
+        let stats = MatrixStats::synthetic(100_000, 100_000, 10.0, 4.0, 20, 50_000);
+        let t = 1e-3;
+        let small = delta_decision(&stats, 64, true, t, t, 0, &p);
+        assert_eq!(small.action, DeltaAction::Repair);
+        assert!(small.repair_secs < small.rebuild_secs);
+        assert_eq!(small.replan_gain_secs, 0.0);
+        let unsupported = delta_decision(&stats, 64, false, t, t, 0, &p);
+        assert_eq!(unsupported.action, DeltaAction::Rebuild);
+        let huge = delta_decision(&stats, 2_000_000, true, t, t, 0, &p);
+        assert_eq!(huge.action, DeltaAction::Rebuild);
+        assert!(huge.repair_secs > huge.rebuild_secs);
+    }
+
+    /// A big predicted gain on the post-delta stats re-plans; the same
+    /// drift with no gain never does.
+    #[test]
+    fn delta_decision_replans_on_predicted_gain() {
+        let p = CostParams::host_small();
+        let stats = MatrixStats::synthetic(100_000, 100_000, 10.0, 4.0, 20, 50_000);
+        let d = delta_decision(&stats, 64, true, 1e-3, 2e-4, 0, &p);
+        assert_eq!(d.action, DeltaAction::Replan);
+        assert!((d.replan_gain_secs - 8e-4).abs() < 1e-12);
+        // Incumbent already best: stays on the cheap structural path.
+        let no_gain = delta_decision(&stats, 64, true, 2e-4, 2e-4, 0, &p);
+        assert_eq!(no_gain.action, DeltaAction::Repair);
+    }
+
+    /// The accumulation decay: a gain below the generation-0 margin
+    /// clears it after enough deltas have piled onto the generation.
+    #[test]
+    fn delta_decision_margin_decays_with_accumulated_deltas() {
+        let p = CostParams::host_small();
+        let stats = MatrixStats::synthetic(100_000, 100_000, 10.0, 4.0, 20, 50_000);
+        let (current, best) = (1.1e-3, 1.0e-3); // 10% gain < 25% margin
+        let fresh = delta_decision(&stats, 64, true, current, best, 0, &p);
+        assert_eq!(fresh.action, DeltaAction::Repair);
+        let drifted = delta_decision(&stats, 64, true, current, best, 100, &p);
+        assert_eq!(drifted.action, DeltaAction::Replan);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! `CsrAos` is the same chain *without* structure splitting: the flat
 //! sequence stores localized `⟨col, val⟩` pairs.
 
+use crate::matrix::delta::{DeltaEntry, DeltaOp};
 use crate::matrix::TriMat;
 
 /// Split (SoA) CSR: `row_ptr`, `cols`, `vals`.
@@ -70,6 +71,65 @@ impl Csr {
 
     pub fn bytes(&self) -> usize {
         self.row_ptr.len() * 4 + self.cols.len() * 4 + self.vals.len() * 8
+    }
+
+    /// Row splicing — the in-place-repair path of the versioned-matrix
+    /// subsystem. `delta` must be resolved and `(row, col)`-sorted
+    /// ([`crate::matrix::delta::DeltaBatch::resolved`]) and already
+    /// validated against the source matrix. Each touched row is merged
+    /// with its ops (both sides ascending by column) and spliced into
+    /// fresh arrays; untouched rows are copied verbatim.
+    ///
+    /// Contract (pinned by `tests/delta.rs`): the result is
+    /// **bit-identical** to `Csr::from_tuples` on the post-delta
+    /// reservoir — both produce ascending-column rows carrying the
+    /// exact value bits, so repair vs rebuild is unobservable
+    /// downstream.
+    pub fn repaired(&self, delta: &[DeltaEntry]) -> Csr {
+        let grow = delta.iter().filter(|d| d.op == DeltaOp::Insert).count();
+        let mut row_ptr = Vec::with_capacity(self.nrows + 1);
+        let mut cols = Vec::with_capacity(self.cols.len() + grow);
+        let mut vals = Vec::with_capacity(self.vals.len() + grow);
+        row_ptr.push(0u32);
+        let mut d = 0usize;
+        for i in 0..self.nrows {
+            let (rc, rv) = self.row(i);
+            let d0 = d;
+            while d < delta.len() && delta[d].row as usize == i {
+                d += 1;
+            }
+            let ops = &delta[d0..d];
+            if ops.is_empty() {
+                cols.extend_from_slice(rc);
+                vals.extend_from_slice(rv);
+            } else {
+                let (mut a, mut b) = (0usize, 0usize);
+                while a < rc.len() || b < ops.len() {
+                    if b >= ops.len() || (a < rc.len() && rc[a] < ops[b].col) {
+                        cols.push(rc[a]);
+                        vals.push(rv[a]);
+                        a += 1;
+                    } else if a >= rc.len() || ops[b].col < rc[a] {
+                        // Absent column: a validated delta here is an
+                        // insert.
+                        cols.push(ops[b].col);
+                        vals.push(ops[b].val);
+                        b += 1;
+                    } else {
+                        // Present column: update replaces the value,
+                        // delete drops the slot.
+                        if ops[b].op != DeltaOp::Delete {
+                            cols.push(rc[a]);
+                            vals.push(ops[b].val);
+                        }
+                        a += 1;
+                        b += 1;
+                    }
+                }
+            }
+            row_ptr.push(cols.len() as u32);
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, row_ptr, cols, vals }
     }
 }
 

@@ -11,6 +11,7 @@
 //! — the classic ITPACK layout, and the MXU/VPU-friendly layout used by
 //! the Pallas kernels in `python/compile/kernels/`).
 
+use crate::matrix::delta::{DeltaEntry, DeltaOp};
 use crate::matrix::TriMat;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -91,6 +92,97 @@ impl Ell {
 
     pub fn bytes(&self) -> usize {
         self.cols.len() * 4 + self.vals.len() * 8 + self.row_len.len() * 4
+    }
+
+    /// Slot rewrites within the padding — the in-place-repair path of
+    /// the versioned-matrix subsystem. `delta` must be resolved,
+    /// `(row, col)`-sorted, and validated against the source matrix.
+    ///
+    /// Returns `None` when the post-delta **global** maximum row length
+    /// differs from `self.k`: a fresh `from_tuples` would then choose a
+    /// different plane width, so no in-padding rewrite can be
+    /// bit-identical to it and the caller must rebuild. Otherwise each
+    /// touched row's slots are rewritten with the merged
+    /// ascending-column list, trailing stale slots re-zeroed to the
+    /// padding convention (`col = 0`, `val = 0.0`), and the result is
+    /// bit-identical to `from_tuples` on the post-delta reservoir.
+    pub fn repaired(&self, delta: &[DeltaEntry]) -> Option<Ell> {
+        // New per-row lengths first: the plane width must survive.
+        let mut row_len = self.row_len.clone();
+        let mut d = 0usize;
+        while d < delta.len() {
+            let i = delta[d].row as usize;
+            match delta[d].op {
+                DeltaOp::Insert => row_len[i] += 1,
+                DeltaOp::Delete => row_len[i] -= 1,
+                DeltaOp::Update => {}
+            }
+            d += 1;
+        }
+        let new_k = row_len.iter().copied().max().unwrap_or(0) as usize;
+        if new_k != self.k {
+            return None;
+        }
+        let mut out = Ell {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            k: self.k,
+            order: self.order,
+            cols: self.cols.clone(),
+            vals: self.vals.clone(),
+            row_len,
+            nnz: self.nnz,
+        };
+        let mut d = 0usize;
+        while d < delta.len() {
+            let i = delta[d].row as usize;
+            let d0 = d;
+            while d < delta.len() && delta[d].row as usize == i {
+                match delta[d].op {
+                    DeltaOp::Insert => out.nnz += 1,
+                    DeltaOp::Delete => out.nnz -= 1,
+                    DeltaOp::Update => {}
+                }
+                d += 1;
+            }
+            let ops = &delta[d0..d];
+            // Merge the old row (slots ascending by column) with its
+            // ops into the rewritten slot list.
+            let old_len = self.row_len[i] as usize;
+            let mut merged: Vec<(u32, f64)> = Vec::with_capacity(self.k);
+            let (mut a, mut b) = (0usize, 0usize);
+            while a < old_len || b < ops.len() {
+                let ac = (a < old_len).then(|| self.cols[self.index(i, a)]);
+                if b >= ops.len() || ac.is_some_and(|c| c < ops[b].col) {
+                    merged.push((self.cols[self.index(i, a)], self.vals[self.index(i, a)]));
+                    a += 1;
+                } else if ac.is_none() || ops[b].col < ac.unwrap_or(u32::MAX) {
+                    merged.push((ops[b].col, ops[b].val));
+                    b += 1;
+                } else {
+                    if ops[b].op != DeltaOp::Delete {
+                        merged.push((ops[b].col, ops[b].val));
+                    }
+                    a += 1;
+                    b += 1;
+                }
+            }
+            for p in 0..self.k {
+                let ix = out.index(i, p);
+                match merged.get(p) {
+                    Some(&(c, v)) => {
+                        out.cols[ix] = c;
+                        out.vals[ix] = v;
+                    }
+                    None => {
+                        out.cols[ix] = 0;
+                        out.vals[ix] = 0.0;
+                    }
+                }
+            }
+            out.row_len[i] = merged.len() as u32;
+        }
+        Some(out)
     }
 }
 

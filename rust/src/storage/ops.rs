@@ -51,8 +51,10 @@
 //! drivers themselves.
 
 use std::ops::Range;
+use std::sync::Arc;
 
 use crate::concretize::layout::{coo_order_slug, Traversal};
+use crate::matrix::delta::DeltaEntry;
 use crate::kernels::levels::LevelSets;
 use crate::kernels::{levels, par, simd, spmm, spmv, trsv};
 use crate::storage::{
@@ -326,6 +328,20 @@ pub trait SparseOps: Send + Sync {
     fn trsv_level(&self, _lv: &LevelSets, b: &[f64], x: &mut [f64], _threads: usize) {
         self.trsv_serial(b, x);
     }
+
+    // ---- versioned-matrix delta repair -----------------------------
+
+    /// In-place structural repair for `Engine::apply_delta`: given a
+    /// resolved, `(row, col)`-sorted delta already validated against
+    /// the matrix this storage was built from, derive a **new** storage
+    /// bit-identical to a fresh build on the post-delta matrix (the old
+    /// one keeps serving in-flight traffic until the generation swap).
+    /// `None` means this format — or this particular batch — cannot be
+    /// repaired and the caller must rebuild from tuples. Default: no
+    /// repair capability.
+    fn repair(&self, _delta: &[DeltaEntry]) -> Option<Arc<dyn SparseOps>> {
+        None
+    }
 }
 
 // ------------------------------------------------------------- COO --
@@ -473,6 +489,11 @@ impl SparseOps for Csr {
     }
     fn trsv_level(&self, lv: &LevelSets, b: &[f64], x: &mut [f64], threads: usize) {
         levels::csr_trsv_level(self, lv, b, x, threads);
+    }
+    fn repair(&self, delta: &[DeltaEntry]) -> Option<Arc<dyn SparseOps>> {
+        // Row splicing handles any delta; level sets / bands are
+        // rebuilt lazily by the fresh `Prepared`'s OnceLocks.
+        Some(Arc::new(Csr::repaired(self, delta)))
     }
 }
 
@@ -625,6 +646,11 @@ impl SparseOps for Ell {
         lanes: usize,
     ) {
         simd::ell_spmv_rows(self, x, y, u0, lanes);
+    }
+    fn repair(&self, delta: &[DeltaEntry]) -> Option<Arc<dyn SparseOps>> {
+        // Slot rewrites within the padding; `None` when the plane
+        // width would change (caller rebuilds).
+        Ell::repaired(self, delta).map(|e| Arc::new(e) as Arc<dyn SparseOps>)
     }
 }
 
@@ -890,6 +916,10 @@ impl SparseOps for SellSigma {
         lanes: usize,
     ) {
         simd::sell_sigma_spmv_range(self, x, y, u0, u1, u0 * self.sigma, lanes);
+    }
+    fn repair(&self, delta: &[DeltaEntry]) -> Option<Arc<dyn SparseOps>> {
+        // Update-only value patches; structural deltas rebuild.
+        SellSigma::repaired(self, delta).map(|s| Arc::new(s) as Arc<dyn SparseOps>)
     }
 }
 

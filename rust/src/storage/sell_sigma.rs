@@ -11,6 +11,7 @@
 //! materialize → nstar_sort` (`concretize::layout` maps the sorted +
 //! row-sliced chain state here, with σ = 8·s).
 
+use crate::matrix::delta::{DeltaEntry, DeltaOp};
 use crate::matrix::TriMat;
 use crate::storage::csr::Csr;
 
@@ -133,6 +134,45 @@ impl SellSigma {
     /// Number of σ windows (the parallel partition units).
     pub fn nwindows(&self) -> usize {
         self.nrows.div_ceil(self.sigma)
+    }
+
+    /// Value-slot rewrites — the in-place-repair path of the
+    /// versioned-matrix subsystem, for **update-only** batches. `delta`
+    /// must be resolved, `(row, col)`-sorted, and validated against the
+    /// source matrix.
+    ///
+    /// Returns `None` if the batch contains any insert or delete: those
+    /// change row lengths, which feed the window sort, the permutation,
+    /// the slice widths and the payload offsets — a fresh `from_tuples`
+    /// could lay the whole structure out differently, so only a rebuild
+    /// is bit-identical. Updates keep every length fixed, so the sorted
+    /// structure is provably unchanged and patching `vals` in place
+    /// reproduces the fresh build exactly.
+    pub fn repaired(&self, delta: &[DeltaEntry]) -> Option<SellSigma> {
+        if delta.iter().any(|d| d.op != DeltaOp::Update) {
+            return None;
+        }
+        // Invert the permutation: original row -> sorted position.
+        let mut inv = vec![0u32; self.nrows];
+        for (q, &orig) in self.perm.iter().enumerate() {
+            inv[orig as usize] = q as u32;
+        }
+        let mut out = self.clone();
+        for d in delta {
+            let q = inv[d.row as usize] as usize;
+            let b = q / self.s;
+            let lo = b * self.s;
+            let rows = ((b + 1) * self.s).min(self.nrows) - lo;
+            let base = self.slice_ptr[b] as usize;
+            for p in 0..self.row_len[q] as usize {
+                let ix = base + p * rows + (q - lo);
+                if self.cols[ix] == d.col {
+                    out.vals[ix] = d.val;
+                    break;
+                }
+            }
+        }
+        Some(out)
     }
 }
 

@@ -1,0 +1,433 @@
+//! Integration suite for the versioned-matrix subsystem
+//! (`matrix::delta` + `engine::version` + `SparseOps::repair`) through
+//! the public API only.
+//!
+//! The contract under test is the one DESIGN.md §"Versioned matrices &
+//! delta repair" states:
+//!
+//! * **Bit identity** — a storage repaired in place for a delta batch
+//!   is bit-for-bit the storage a from-scratch build of the post-delta
+//!   reservoir produces, whenever `repair` claims success (`Some`);
+//!   formats that cannot absorb a batch (ELL plane-width change,
+//!   SELL-σ structural ops) must return `None`, never an approximation.
+//! * **Generation atomicity** — every serve through a
+//!   `VersionedMatrix` names the generation that answered, and those
+//!   bits match that generation's own from-scratch prepare exactly,
+//!   even while `apply_delta` hot-swaps generations under the serves.
+//! * **Lineage** — the `Transition<Fingerprint>` chain stays rooted at
+//!   genesis and always arrives at the live fingerprint.
+//!
+//! (The fault-injection halves — panicking repair degrading to rebuild,
+//! swap faults leaving the generation untouched — live in the chaos
+//! drill: `forelem chaos` arms `delta.repair` and `delta.swap`.)
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use forelem::concretize::{self, Layout, Traversal};
+use forelem::engine::{Engine, VersionedMatrix};
+use forelem::matrix::delta::DeltaBatch;
+use forelem::matrix::{gen, TriMat};
+use forelem::storage::{Ell, EllOrder, SparseOps};
+use forelem::{Arch, Kernel};
+
+fn engine_small() -> Engine {
+    Engine::builder().arch(Arch::HostSmall).profile(false).archive(false).build()
+}
+
+/// A matrix whose odd rows are all empty and whose even rows ramp from
+/// one entry to a long one — the CSR row-splice adversary (splices into
+/// and out of zero-length rows).
+fn with_empty_rows() -> TriMat {
+    let mut m = TriMat::new(16, 16);
+    for r in (0..16).step_by(2) {
+        for c in 0..=r / 2 {
+            m.push(r, c, (r * 16 + c) as f64 * 0.03125 + 1.0);
+        }
+    }
+    m
+}
+
+/// An insert + update + delete batch valid against `m`: updates the
+/// first stored entry, deletes the last, inserts at the first absent
+/// coordinate (exactly-representable values so failures are structural,
+/// never rounding). `lower_only` restricts the insert hunt to strictly
+/// lower coordinates, keeping TrSv reservoirs solvable.
+fn mixed_batch_in(m: &TriMat, lower_only: bool) -> DeltaBatch {
+    let mut b = DeltaBatch::new(m.nrows, m.ncols);
+    let first = m.entries[0];
+    let last = m.entries[m.entries.len() - 1];
+    b.update(first.row as usize, first.col as usize, first.val + 0.625);
+    b.delete(last.row as usize, last.col as usize);
+    'hunt: for r in 0..m.nrows {
+        for c in 0..m.ncols {
+            if lower_only && c >= r {
+                continue;
+            }
+            if !m.entries.iter().any(|e| e.row as usize == r && e.col as usize == c) {
+                b.insert(r, c, 0.4375);
+                break 'hunt;
+            }
+        }
+    }
+    b
+}
+
+fn mixed_batch(m: &TriMat) -> DeltaBatch {
+    mixed_batch_in(m, false)
+}
+
+/// A value-only batch touching `k` distinct stored entries — keeps
+/// every repair-capable format (ELL and SELL-σ included) on the
+/// repair path.
+fn update_batch(m: &TriMat, k: usize, salt: f64) -> DeltaBatch {
+    let mut b = DeltaBatch::new(m.nrows, m.ncols);
+    let stride = (m.entries.len() / k.max(1)).max(1);
+    for e in m.entries.iter().step_by(stride).take(k) {
+        b.update(e.row as usize, e.col as usize, e.val + salt);
+    }
+    b
+}
+
+fn spmv_bits(ops: &dyn SparseOps, t: Traversal, x: &[f64], nrows: usize) -> Vec<u64> {
+    let mut y = vec![0.0; nrows];
+    ops.spmv_serial(t, x, &mut y);
+    y.iter().map(|v| v.to_bits()).collect()
+}
+
+fn probe_vector(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i as f64) * 0.17).sin() + 0.5).collect()
+}
+
+/// Property: for EVERY serial plan in the SpMV pool, on adversarial
+/// shapes, a claimed repair (`Some`) serves exactly the bits a
+/// from-scratch build of the post-delta reservoir serves.
+#[test]
+fn storage_repair_is_bit_identical_to_a_from_scratch_build() {
+    let engine = engine_small();
+    let shapes: Vec<(&str, TriMat)> = vec![
+        ("uniform", gen::uniform_random(40, 40, 320, 4001)),
+        ("empty-rows", with_empty_rows()),
+        ("banded", gen::banded(48, 3, 0.8, 4002)),
+        ("powerlaw", gen::powerlaw(48, 2.2, 24, 4003)),
+    ];
+    let mut repaired_layouts: Vec<String> = Vec::new();
+    for (name, m) in &shapes {
+        let x = probe_vector(m.ncols);
+        for batch in [mixed_batch(m), update_batch(m, 6, 0.8125)] {
+            let resolved = batch.resolved().expect("clean batch");
+            let post = batch.apply(m).expect("clean batch");
+            for plan in engine.plans(Kernel::Spmv) {
+                if !plan.exec.schedule.is_serial() || plan.exec.lanes != 1 {
+                    continue;
+                }
+                let ops = concretize::build_ops(plan.exec.layout, m);
+                let Some(rep) = ops.repair(&resolved) else { continue };
+                let fresh = concretize::build_ops(plan.exec.layout, &post);
+                assert_eq!(
+                    spmv_bits(rep.as_ref(), plan.exec.traversal, &x, post.nrows),
+                    spmv_bits(fresh.as_ref(), plan.exec.traversal, &x, post.nrows),
+                    "{name}/{}: repaired storage drifted from the from-scratch build",
+                    plan.id
+                );
+                repaired_layouts.push(plan.exec.layout.slug());
+            }
+        }
+    }
+    // The suite must actually have exercised the three repair-capable
+    // format families, or the property above is vacuous.
+    for want in ["csr", "ell", "sell"] {
+        assert!(
+            repaired_layouts.iter().any(|s| s.starts_with(want)),
+            "no {want}* plan ever took the repair path (exercised: {repaired_layouts:?})"
+        );
+    }
+}
+
+/// ELL's padding contract: a batch that changes the global maximum row
+/// length changes the plane width, so `repair` must refuse (a fresh
+/// build would lay out differently) — while an in-padding value patch
+/// must succeed and match the fresh build exactly.
+#[test]
+fn ell_padding_overflow_refuses_repair_and_value_patches_do_not() {
+    // Every row holds 3 entries except row 7, the unique longest with
+    // 5 — so the plane width is pinned to exactly one row's fate.
+    let mut m = TriMat::new(16, 16);
+    for r in 0..16 {
+        for c in 0..3 {
+            m.push(r, (r + c) % 16, 1.0 + (r * 16 + c) as f64 * 0.0625);
+        }
+    }
+    m.push(7, 10, 3.5);
+    m.push(7, 11, 3.75);
+    m.sort_row_major();
+    let ell = Ell::from_tuples(&m, EllOrder::ColMajor);
+
+    // Growing the longest row widens the plane: repair must refuse.
+    let mut grow = DeltaBatch::new(m.nrows, m.ncols);
+    grow.insert(7, 0, 1.0);
+    assert!(
+        ell.repaired(&grow.resolved().expect("clean batch")).is_none(),
+        "an insert past the plane width must force a rebuild, not an approximate repair"
+    );
+
+    // Deleting from the unique longest row shrinks the plane: also a
+    // refusal.
+    let mut shrink = DeltaBatch::new(m.nrows, m.ncols);
+    shrink.delete(7, 10);
+    assert!(ell.repaired(&shrink.resolved().expect("clean batch")).is_none());
+
+    // In-padding value rewrites are the repair sweet spot.
+    let patch = update_batch(&m, 5, 0.1875);
+    let resolved = patch.resolved().expect("clean batch");
+    let rep = ell.repaired(&resolved).expect("value patches stay within the plane");
+    let post = patch.apply(&m).expect("clean batch");
+    let fresh = Ell::from_tuples(&post, EllOrder::ColMajor);
+    let x = probe_vector(m.ncols);
+    assert_eq!(
+        spmv_bits(&rep, Traversal::RowWise, &x, post.nrows),
+        spmv_bits(&fresh, Traversal::RowWise, &x, post.nrows),
+        "in-padding ELL repair drifted from the fresh build"
+    );
+
+    // SELL-σ is value-patch-only: structural ops refuse at the trait.
+    let sell = concretize::build_ops(Layout::SellSigma { s: 32, sigma: 256 }, &m);
+    assert!(sell.repair(&grow.resolved().expect("clean batch")).is_none());
+    assert!(sell.repair(&resolved).is_some(), "SELL-σ must absorb pure value patches");
+}
+
+/// Serve the versioned matrix with `kernel` and return
+/// `(fingerprint, bits)`; `k_dense` sizes the SpMM panel.
+fn serve_bits(vm: &VersionedMatrix, kernel: Kernel, k_dense: usize) -> (u64, Vec<u64>) {
+    let m = vm.snapshot();
+    match kernel {
+        Kernel::Spmv => {
+            let x = probe_vector(m.ncols);
+            let mut y = vec![0.0; m.nrows];
+            let fp = vm.spmv(&x, &mut y).expect("spmv requested");
+            (fp.0, y.iter().map(|v| v.to_bits()).collect())
+        }
+        Kernel::Spmm => {
+            let b = probe_vector(m.ncols * k_dense);
+            let mut c = vec![0.0; m.nrows * k_dense];
+            let fp = vm.spmm(&b, &mut c).expect("spmm requested");
+            (fp.0, c.iter().map(|v| v.to_bits()).collect())
+        }
+        Kernel::Trsv => {
+            let b = probe_vector(m.nrows);
+            let mut x = vec![0.0; m.nrows];
+            let fp = vm.trsv(&b, &mut x).expect("trsv requested");
+            (fp.0, x.iter().map(|v| v.to_bits()).collect())
+        }
+    }
+}
+
+/// The answering generation's reference bits: a from-scratch prepare of
+/// its own reservoir under the executable's own plan.
+fn reference_bits(vm: &VersionedMatrix, kernel: Kernel, k_dense: usize) -> Vec<u64> {
+    let exe = vm.executable(kernel).expect("kernel requested");
+    let m = vm.snapshot();
+    let prep = concretize::prepare(exe.plan().exec, &m);
+    match kernel {
+        Kernel::Spmv => {
+            let x = probe_vector(m.ncols);
+            let mut y = vec![0.0; m.nrows];
+            prep.spmv(&x, &mut y);
+            y.iter().map(|v| v.to_bits()).collect()
+        }
+        Kernel::Spmm => {
+            let b = probe_vector(m.ncols * k_dense);
+            let mut c = vec![0.0; m.nrows * k_dense];
+            prep.spmm(&b, k_dense, &mut c);
+            c.iter().map(|v| v.to_bits()).collect()
+        }
+        Kernel::Trsv => {
+            let b = probe_vector(m.nrows);
+            let mut x = vec![0.0; m.nrows];
+            prep.trsv(&b, &mut x);
+            x.iter().map(|v| v.to_bits()).collect()
+        }
+    }
+}
+
+/// Property: across all three kernels, every post-delta generation
+/// serves exactly the bits a from-scratch prepare of its reservoir
+/// serves — whichever route (repair / rebuild / re-plan) `apply_delta`
+/// took — and the lineage chain stays rooted at genesis.
+#[test]
+fn every_generation_serves_its_own_from_scratch_bits_across_kernels() {
+    const K_DENSE: usize = 8;
+    let engine = Engine::builder()
+        .arch(Arch::HostSmall)
+        .profile(false)
+        .archive(false)
+        .spmm_k(K_DENSE)
+        .build();
+
+    for kernel in [Kernel::Spmv, Kernel::Spmm, Kernel::Trsv] {
+        let base = gen::uniform_random(36, 36, 260, 4020);
+        let m = if kernel == Kernel::Trsv { base.strictly_lower() } else { base };
+        let vm = engine.versioned(&m, &[kernel]).expect("valid matrix");
+        let genesis = vm.fingerprint();
+
+        for round in 0..4u32 {
+            let live = vm.snapshot();
+            let batch = match round {
+                // Value patches (the repair fast path), then structural
+                // rounds (splice or rebuild), then a mixed one.
+                0 | 2 => update_batch(&live, 4, 0.25 * f64::from(round + 1)),
+                _ => mixed_batch_in(&live, kernel == Kernel::Trsv),
+            };
+            let report = vm.apply_delta(&batch).expect("clean batch");
+            assert_eq!(report.generation, u64::from(round) + 1);
+            assert_eq!(report.outcomes.len(), 1, "one requested kernel, one route");
+            assert_eq!(*report.chain.from(), genesis, "chain re-rooted away from genesis");
+            assert_eq!(*report.chain.to(), vm.fingerprint());
+
+            let (fp, served) = serve_bits(&vm, kernel, K_DENSE);
+            assert_eq!(fp, vm.fingerprint().0);
+            assert_eq!(
+                served,
+                reference_bits(&vm, kernel, K_DENSE),
+                "{kernel:?} round {round}: generation drifted from its from-scratch prepare"
+            );
+        }
+        assert_eq!(vm.generation(), 4);
+    }
+}
+
+/// TrSv level-set adversary: deletes that cut the dependency chain —
+/// emptying whole levels — must be followed by serves computed on
+/// re-derived level structure, bit-identical to a fresh prepare.
+#[test]
+fn trsv_survives_level_emptying_deletes() {
+    // A strict chain: row i depends only on row i-1 → n-deep levels,
+    // plus a few long-range entries to keep the planner honest.
+    let n = 24;
+    let mut m = TriMat::new(n, n);
+    for i in 1..n {
+        m.push(i, i - 1, 1.0 + i as f64 * 0.0625);
+    }
+    for i in (6..n).step_by(6) {
+        m.push(i, 1, 0.5);
+    }
+    m.sort_row_major();
+
+    let vm = engine_small().versioned(&m, &[Kernel::Trsv]).expect("valid matrix");
+
+    // Cut the chain at its midpoint, then sever rows 1..=3 entirely:
+    // the first levels collapse and later rows jump levels.
+    let mut cut = DeltaBatch::new(n, n);
+    cut.delete(n / 2, n / 2 - 1);
+    cut.delete(1, 0);
+    cut.delete(2, 1);
+    cut.delete(3, 2);
+    let report = vm.apply_delta(&cut).expect("all deleted coordinates are present");
+    assert_eq!(report.ops, 4);
+
+    let (fp, served) = serve_bits(&vm, Kernel::Trsv, 1);
+    assert_eq!(fp, vm.fingerprint().0);
+    assert_eq!(
+        served,
+        reference_bits(&vm, Kernel::Trsv, 1),
+        "level-set re-derivation after chain-cutting deletes drifted"
+    );
+    // And the solve is still the unit-lower solve of the live matrix.
+    let live = vm.snapshot();
+    let b = probe_vector(n);
+    let mut x = vec![0.0; n];
+    vm.trsv(&b, &mut x).expect("trsv requested");
+    let want = live.trsv_unit_lower_ref(&b);
+    for (got, want) in x.iter().zip(&want) {
+        assert!((got - want).abs() <= 1e-8 * want.abs().max(1.0), "{got} vs {want}");
+    }
+}
+
+/// CSR empty-row adversary at the engine level: splicing entries into
+/// previously-empty rows and emptying rows out again, with the old
+/// generation's cache entries retired at the swap.
+#[test]
+fn empty_row_splices_round_trip_and_retire_the_old_generation() {
+    let m = with_empty_rows();
+    let vm = engine_small().versioned(&m, &[Kernel::Spmv]).expect("valid matrix");
+
+    // Fill two empty rows, empty row 0 (its single entry), patch one.
+    let mut b = DeltaBatch::new(m.nrows, m.ncols);
+    b.insert(3, 7, 2.5);
+    b.insert(5, 0, -1.25);
+    b.delete(0, 0);
+    let probe = m.entries[m.entries.len() - 1];
+    b.update(probe.row as usize, probe.col as usize, probe.val + 0.375);
+    let report = vm.apply_delta(&b).expect("clean batch");
+    assert_eq!(report.ops, 4);
+    assert!(
+        report.cache_evicted >= 1,
+        "the genesis compile was cached under the old fingerprint and must retire with it"
+    );
+
+    let (fp, served) = serve_bits(&vm, Kernel::Spmv, 1);
+    assert_eq!(fp, vm.fingerprint().0);
+    assert_eq!(served, reference_bits(&vm, Kernel::Spmv, 1));
+}
+
+/// Hot-swap hammer: serve threads race a stream of delta applications;
+/// every answer must carry a fingerprint of a generation that existed
+/// and exactly that generation's bits — never a torn mix of two.
+#[test]
+fn concurrent_serves_never_observe_a_torn_generation() {
+    const ROUNDS: u32 = 12;
+    const CLIENTS: usize = 4;
+    let m = gen::uniform_random(48, 48, 400, 4040);
+    let vm = engine_small().versioned(&m, &[Kernel::Spmv]).expect("valid matrix");
+    let genesis = vm.fingerprint();
+    let x = probe_vector(m.ncols);
+
+    // fingerprint → that generation's reference bits. Generations are
+    // only ever created by the single mutator below, which records each
+    // one right after its swap; threads only collect and are checked
+    // after the fact, so a serve racing the recording is still judged
+    // against a complete map.
+    let mut expected: HashMap<u64, Vec<u64>> = HashMap::new();
+    expected.insert(vm.fingerprint().0, reference_bits(&vm, Kernel::Spmv, 1));
+
+    let stop = AtomicBool::new(false);
+    let observed: Mutex<Vec<(u64, Vec<u64>)>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..CLIENTS {
+            let vm = &vm;
+            let stop = &stop;
+            let observed = &observed;
+            let x = &x;
+            let nrows = m.nrows;
+            s.spawn(move || {
+                let mut y = vec![0.0; nrows];
+                let mut local = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let fp = vm.spmv(x, &mut y).expect("spmv requested");
+                    local.push((fp.0, y.iter().map(|v| v.to_bits()).collect::<Vec<u64>>()));
+                }
+                observed.lock().unwrap_or_else(|p| p.into_inner()).extend(local);
+            });
+        }
+        for round in 0..ROUNDS {
+            let live = vm.snapshot();
+            let batch = update_batch(&live, 5, 0.125 * f64::from(round + 1));
+            vm.apply_delta(&batch).expect("clean batch");
+            expected.insert(vm.fingerprint().0, reference_bits(&vm, Kernel::Spmv, 1));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    assert_eq!(vm.generation(), u64::from(ROUNDS));
+    assert_eq!(*vm.chain().from(), genesis);
+    assert_eq!(*vm.chain().to(), vm.fingerprint());
+    let observed = observed.into_inner().unwrap_or_else(|p| p.into_inner());
+    assert!(!observed.is_empty(), "the serve threads never got a request through");
+    for (fp, bits) in &observed {
+        let want = expected
+            .get(fp)
+            .unwrap_or_else(|| panic!("serve answered from unknown generation fp{fp:016x}"));
+        assert_eq!(bits, want, "fp{fp:016x}: serve bits are not that generation's bits");
+    }
+}
